@@ -1,0 +1,78 @@
+//! End-to-end validation driver (the repo's headline demo): run the full
+//! three-layer system on both scene datasets, sweep all four detectors
+//! (NMC-TOS/luvHarris, eHarris, eFAST, ARC*), and report the PR-AUC table
+//! plus the simulated hardware cost — the system-level story of the paper
+//! in one binary. Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example corner_detection_e2e
+//! ```
+
+use nmc_tos::coordinator::{Pipeline, PipelineConfig};
+use nmc_tos::datasets::synthetic::SceneConfig;
+use nmc_tos::detectors::{arc::Arc, eharris::EHarris, fast::EFast, EventScorer};
+use nmc_tos::eval::PrCurve;
+use nmc_tos::events::Resolution;
+
+fn main() -> anyhow::Result<()> {
+    let n_events = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000usize);
+
+    for (name, cfg_fn) in [
+        ("shapes_dof", SceneConfig::shapes_dof as fn() -> SceneConfig),
+        ("dynamic_dof", SceneConfig::dynamic_dof as fn() -> SceneConfig),
+    ] {
+        println!("=== {name}: {n_events} events ===");
+        let mut scene = cfg_fn().build(42);
+        let (events, gt) = scene.generate_with_gt(n_events);
+        let labels = gt.label_events(&events, 3.5);
+        let base_rate =
+            labels.iter().filter(|&&l| l).count() as f64 / labels.len() as f64;
+        println!("corner-event base rate: {:.3}", base_rate);
+
+        // --- the paper's system -----------------------------------------
+        let t0 = std::time::Instant::now();
+        let mut pipe = Pipeline::new(PipelineConfig::davis240())?;
+        let report = pipe.run(&events)?;
+        let scored = report.scored_events(&gt, 3.5);
+        let auc = PrCurve::from_scores(&scored, 101).auc();
+        println!(
+            "{:<14} AUC {:.3}   (host {:.2}s, sim busy {:.1} ms, sim energy {:.1} µJ)",
+            "NMC-TOS",
+            auc,
+            t0.elapsed().as_secs_f64(),
+            report.nmc.busy_ns / 1e6,
+            report.nmc.energy_pj / 1e6,
+        );
+
+        // --- baselines (per-event scorers on the raw stream) -------------
+        let mut baselines: Vec<Box<dyn EventScorer>> = vec![
+            Box::new(EHarris::new(Resolution::DAVIS240)),
+            Box::new(EFast::new(Resolution::DAVIS240)),
+            Box::new(Arc::new(Resolution::DAVIS240)),
+        ];
+        for det in &mut baselines {
+            let t0 = std::time::Instant::now();
+            let scored: Vec<(f64, bool)> = events
+                .iter()
+                .zip(&labels)
+                .map(|(e, &l)| (det.score(e), l))
+                .collect();
+            let auc = PrCurve::from_scores(&scored, 101).auc();
+            println!(
+                "{:<14} AUC {:.3}   (host {:.2}s, {:.0} ops/event -> {:.2} Meps @500 MHz)",
+                det.name(),
+                auc,
+                t0.elapsed().as_secs_f64(),
+                det.ops_per_event(),
+                nmc_tos::detectors::max_throughput_eps(det.ops_per_event(), 500e6) / 1e6,
+            );
+        }
+        println!();
+    }
+    println!("expected shape (paper Sec. II/V): NMC-TOS ~ eHarris accuracy,");
+    println!("FAST/ARC lower AUC (noise-sensitive), but only NMC-TOS sustains >60 Meps.");
+    Ok(())
+}

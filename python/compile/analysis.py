@@ -1,0 +1,76 @@
+"""L2 performance analysis: inspect the lowered Harris graph.
+
+Produces the evidence behind DESIGN.md §Perf's L2 claims: fusion count,
+op histogram, FLOP estimate and bytes-touched of the AOT artifact — run as
+
+    cd python && python -m compile.analysis [resolution]
+
+and exercised by pytest (`tests/test_analysis.py`).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+
+
+def hlo_text_for(name: str) -> str:
+    """Lower the named resolution and return optimized HLO text."""
+    h, w = model.RESOLUTIONS[name]
+    spec = jax.ShapeDtypeStruct((h, w), jnp.float32)
+    compiled = jax.jit(model.harris_lut).lower(spec).compile()
+    return compiled.as_text()
+
+
+def op_histogram(hlo: str) -> Counter:
+    """Count HLO opcodes (one per instruction line `x = op(...)`)."""
+    ops = Counter()
+    for m in re.finditer(r"=\s+[\w\[\],{}]+\s+([a-z][\w-]*)\(", hlo):
+        ops[m.group(1)] += 1
+    return ops
+
+def analyze(name: str) -> dict:
+    """Summarize the compiled module."""
+    hlo = hlo_text_for(name)
+    ops = op_histogram(hlo)
+    h, w = model.RESOLUTIONS[name]
+    # FLOP estimate of the math: 5 separable 5x5 stencils (2 passes x 5
+    # taps x 2 flops) + 3 products + score (4) + normalize (~3)
+    flops_per_px = 5 * (2 * 5 * 2) + 3 + 4 + 3
+    return {
+        "name": name,
+        "height": h,
+        "width": w,
+        "fusions": ops.get("fusion", 0),
+        "convolutions": ops.get("convolution", 0),
+        "transposes": ops.get("transpose", 0),
+        "reduces": ops.get("reduce", 0),
+        "ops": dict(ops),
+        "est_mflops_per_frame": flops_per_px * h * w / 1e6,
+        "io_bytes_per_frame": 2 * 4 * h * w,  # one f32 frame in, one out
+    }
+
+
+def main() -> None:
+    name = sys.argv[1] if len(sys.argv) > 1 else "davis240"
+    info = analyze(name)
+    print(f"== L2 analysis: {name} ({info['height']}x{info['width']}) ==")
+    print(f"fusion ops        : {info['fusions']}")
+    print(f"convolution ops   : {info['convolutions']} (0 = stencils fused as elementwise)")
+    print(f"transpose ops     : {info['transposes']}")
+    print(f"reduce ops        : {info['reduces']} (min-max normalize)")
+    print(f"est. compute      : {info['est_mflops_per_frame']:.1f} MFLOP/frame")
+    print(f"I/O               : {info['io_bytes_per_frame'] / 1e3:.0f} kB/frame")
+    print(f"arith intensity   : {info['est_mflops_per_frame'] * 1e6 / info['io_bytes_per_frame']:.0f} FLOP/byte")
+    top = sorted(info["ops"].items(), key=lambda kv: -kv[1])[:8]
+    print("op histogram      :", ", ".join(f"{k}x{v}" for k, v in top))
+
+
+if __name__ == "__main__":
+    main()

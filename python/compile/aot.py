@@ -1,0 +1,74 @@
+"""AOT compile path: lower the L2 Harris graph to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the HLO text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py.
+
+Usage (from ``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Produces one ``harris_<name>.hlo.txt`` per entry in ``model.RESOLUTIONS``
+plus ``meta.json`` describing shapes so the Rust runtime can validate its
+inputs without parsing HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_harris(height: int, width: int) -> str:
+    spec = jax.ShapeDtypeStruct((height, width), jnp.float32)
+    lowered = jax.jit(model.harris_lut).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output dir")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    meta: dict = {"artifacts": {}, "format": "hlo-text", "return_tuple": True}
+    for name, (h, w) in model.RESOLUTIONS.items():
+        text = lower_harris(h, w)
+        fname = f"harris_{name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        meta["artifacts"][name] = {
+            "file": fname,
+            "height": h,
+            "width": w,
+            "input": {"shape": [h, w], "dtype": "f32", "semantics": "TOS 0..255"},
+            "output": {"shape": [h, w], "dtype": "f32", "semantics": "Harris LUT 0..1"},
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"wrote {out_dir / fname} ({len(text)} chars)")
+
+    (out_dir / "meta.json").write_text(json.dumps(meta, indent=2) + "\n")
+    print(f"wrote {out_dir / 'meta.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: tiled Harris response over a TOS frame.
+
+The kernel expresses the HBM->VMEM schedule explicitly: the output is
+blocked into row-bands of ``tile_h`` rows (BlockSpec), while the input is
+the zero-padded image held in ANY memory; each grid step loads one
+halo-extended band (``tile_h + 2*HALO`` rows) into registers/VMEM with
+``pl.load`` and computes gradients, the Gaussian-windowed structure tensor
+and the Harris response for its band.
+
+TPU mapping notes (DESIGN.md "Hardware adaptation"): the two chained 5x5
+stencils are computed as separable shifted-adds, which XLA/Mosaic fuse into
+vector ops on the VPU; a band of 16 rows x 248 cols of f32 with its halo is
+~66 KB of VMEM-resident data, comfortably inside a TensorCore's VMEM. The
+kernel is lowered with ``interpret=True`` so the same HLO runs on the CPU
+PJRT client that the Rust coordinator embeds.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import DERIV_5, GAUSS_5, HALO, HARRIS_K, SMOOTH_5
+
+# Pallas kernels cannot capture traced constants; bake the taps in as
+# python floats (they are compile-time constants of the stencil).
+_SMOOTH = tuple(float(v) for v in SMOOTH_5)
+_DERIV = tuple(float(v) for v in DERIV_5)
+_GAUSS = tuple(float(v) for v in GAUSS_5)
+
+
+def _conv1d_rows(x: jnp.ndarray, taps: tuple) -> jnp.ndarray:
+    """Valid 1-D correlation along axis 0 with a 5-tap filter (shifted adds)."""
+    n = len(taps)
+    out = taps[0] * x[0 : x.shape[0] - n + 1, :]
+    for i in range(1, n):
+        out = out + taps[i] * x[i : x.shape[0] - n + 1 + i, :]
+    return out
+
+
+def _conv1d_cols(x: jnp.ndarray, taps: tuple) -> jnp.ndarray:
+    """Valid 1-D correlation along axis 1 with a 5-tap filter (shifted adds)."""
+    n = len(taps)
+    out = taps[0] * x[:, 0 : x.shape[1] - n + 1]
+    for i in range(1, n):
+        out = out + taps[i] * x[:, i : x.shape[1] - n + 1 + i]
+    return out
+
+
+def _sep_conv_valid(x: jnp.ndarray, row_taps, col_taps) -> jnp.ndarray:
+    """Separable 5x5 valid correlation: rows then columns."""
+    return _conv1d_cols(_conv1d_rows(x, row_taps), col_taps)
+
+
+def _harris_band_kernel(img_ref, out_ref, *, tile_h: int, width: int, k: float):
+    """Compute the Harris response for one row-band of the image.
+
+    ``img_ref``: (H + 2*HALO, W + 2*HALO) zero-padded image (ANY memory).
+    ``out_ref``: (tile_h, width) output band (blocked, VMEM).
+    """
+    band = pl.program_id(0)
+    # Load the halo-extended band: rows [band*tile_h, band*tile_h + tile_h + 2*HALO)
+    x = pl.load(
+        img_ref,
+        (pl.dslice(band * tile_h, tile_h + 2 * HALO), pl.dslice(0, width + 2 * HALO)),
+    )
+    # Sobel gradients: valid 5x5 -> (tile_h + 4, width + 4)
+    ix = _sep_conv_valid(x, _SMOOTH, _DERIV)
+    iy = _sep_conv_valid(x, _DERIV, _SMOOTH)
+    # Gaussian-windowed structure tensor: valid 5x5 -> (tile_h, width)
+    sxx = _sep_conv_valid(ix * ix, _GAUSS, _GAUSS)
+    syy = _sep_conv_valid(iy * iy, _GAUSS, _GAUSS)
+    sxy = _sep_conv_valid(ix * iy, _GAUSS, _GAUSS)
+    det = sxx * syy - sxy * sxy
+    tr = sxx + syy
+    out_ref[...] = det - k * tr * tr
+
+
+def _pick_tile_h(h: int) -> int:
+    """Largest divisor of ``h`` that is <= 32 (keeps the band in VMEM)."""
+    for cand in range(min(32, h), 0, -1):
+        if h % cand == 0:
+            return cand
+    return h
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def harris_response(img: jnp.ndarray, k: float = HARRIS_K) -> jnp.ndarray:
+    """Harris response of a single-channel f32 image via the Pallas kernel.
+
+    Zero-pads by HALO on each side so border semantics match
+    ``ref.harris_response_ref`` (which uses SAME/zero padding).
+    """
+    img = img.astype(jnp.float32)
+    h, w = img.shape
+    tile_h = _pick_tile_h(h)
+    padded = jnp.pad(img, ((HALO, HALO), (HALO, HALO)))
+    kernel = functools.partial(_harris_band_kernel, tile_h=tile_h, width=w, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(h // tile_h,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((tile_h, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )(padded)

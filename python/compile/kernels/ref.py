@@ -1,0 +1,117 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the *golden* implementations used by pytest to validate the
+Pallas kernels (``harris.py``, ``tos_update.py``).  They deliberately use a
+different code path (``lax.conv_general_dilated`` instead of shifted adds)
+so that agreement between the two is a meaningful correctness signal.
+
+All functions are pure and jittable.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Filter taps (single source of truth, shared with the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+# 5-tap binomial smoother and central-difference derivative — the separable
+# factors of the 5x5 Sobel operator used by luvHarris.
+SMOOTH_5 = jnp.array([1.0, 4.0, 6.0, 4.0, 1.0], dtype=jnp.float32) / 16.0
+DERIV_5 = jnp.array([-1.0, -2.0, 0.0, 2.0, 1.0], dtype=jnp.float32) / 6.0
+
+# 5-tap Gaussian (sigma ~= 1) used for the structure-tensor window.
+GAUSS_5 = jnp.array([1.0, 4.0, 6.0, 4.0, 1.0], dtype=jnp.float32)
+GAUSS_5 = GAUSS_5 / jnp.sum(GAUSS_5)
+
+HARRIS_K = 0.04
+HALO = 4  # two chained 5x5 stencils => 2+2 pixels of halo per side
+
+
+def _conv2d_valid(x: jnp.ndarray, kern2d: jnp.ndarray) -> jnp.ndarray:
+    """2-D 'valid' correlation of a single-channel image with a 2-D kernel."""
+    x4 = x[None, None, :, :]
+    k4 = kern2d[None, None, :, :]
+    y = lax.conv_general_dilated(
+        x4,
+        k4,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y[0, 0]
+
+
+def sobel_kernels() -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Return the full (non-separated) 5x5 Sobel-x and Sobel-y kernels."""
+    kx = jnp.outer(SMOOTH_5, DERIV_5)  # smooth rows, differentiate cols
+    ky = jnp.outer(DERIV_5, SMOOTH_5)  # differentiate rows, smooth cols
+    return kx, ky
+
+
+def gauss_kernel() -> jnp.ndarray:
+    """Full 5x5 Gaussian window kernel."""
+    return jnp.outer(GAUSS_5, GAUSS_5)
+
+
+def harris_response_ref(img: jnp.ndarray, k: float = HARRIS_K) -> jnp.ndarray:
+    """Reference Harris response map of a single-channel f32 image.
+
+    Matches luvHarris: 5x5 Sobel gradients, 5x5 Gaussian-windowed structure
+    tensor, R = det(M) - k * trace(M)^2.  Border handling: the *image* is
+    zero-padded once by HALO and both stencils are computed 'valid', i.e.
+    gradients are taken of the zero-padded image (identical semantics to
+    the Pallas kernel's single pre-pad — NOT per-stage SAME padding, which
+    would zero the *gradients* outside the image instead).
+    """
+    img = img.astype(jnp.float32)
+    padded = jnp.pad(img, ((HALO, HALO), (HALO, HALO)))
+    kx, ky = sobel_kernels()
+    ix = _conv2d_valid(padded, kx)
+    iy = _conv2d_valid(padded, ky)
+    g = gauss_kernel()
+    sxx = _conv2d_valid(ix * ix, g)
+    syy = _conv2d_valid(iy * iy, g)
+    sxy = _conv2d_valid(ix * iy, g)
+    det = sxx * syy - sxy * sxy
+    tr = sxx + syy
+    return det - k * tr * tr
+
+
+def tos_update_ref(
+    surface: jnp.ndarray,
+    events_xy: jnp.ndarray,
+    patch: int = 7,
+    threshold: int = 224,
+) -> jnp.ndarray:
+    """Reference event-by-event TOS update (paper Algorithm 1).
+
+    ``surface``  : (H, W) int32 TOS in [0, 255].
+    ``events_xy``: (N, 2) int32 (x=col, y=row) coordinates, applied in order.
+    For each event: decrement the P x P patch centred on it, clamp values
+    that fall below ``threshold`` to 0, then set the centre pixel to 255.
+    Patches are clipped at the image border (the hardware simply does not
+    drive out-of-range rows/columns).
+    """
+    half = (patch - 1) // 2
+    h, w = surface.shape
+    ys = jnp.arange(h)[:, None]
+    xs = jnp.arange(w)[None, :]
+
+    def body(i, surf):
+        ex = events_xy[i, 0]
+        ey = events_xy[i, 1]
+        in_patch = (
+            (ys >= ey - half)
+            & (ys <= ey + half)
+            & (xs >= ex - half)
+            & (xs <= ex + half)
+        )
+        dec = jnp.where(in_patch, surf - 1, surf)
+        dec = jnp.where(in_patch & (dec < threshold), 0, dec)
+        dec = jnp.maximum(dec, 0)
+        return dec.at[ey, ex].set(255)
+
+    return lax.fori_loop(0, events_xy.shape[0], body, surface.astype(jnp.int32))

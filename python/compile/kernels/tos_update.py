@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: batched event-by-event TOS update (paper Algorithm 1).
+
+This mirrors what the NMC macro does in hardware — decrement a P x P patch,
+threshold-clamp to zero, write 255 at the event pixel — for a *batch* of
+events applied sequentially to the surface.  It exists for two reasons:
+
+  1. It is the software golden model the paper used for its BER-injection
+     study ("software simulation of the pipeline", SecV-C); the python
+     tests cross-validate it against ``ref.tos_update_ref`` and the Rust
+     golden model validates against the same vectors.
+  2. It exercises integer Pallas semantics (masked scatter-style updates),
+     complementing the float stencil kernel in ``harris.py``.
+
+The events are applied with a ``fori_loop`` *inside* the kernel so the
+surface stays resident in VMEM across the whole batch — the same
+data-locality argument the paper makes for near-memory computing: move the
+update to the memory instead of streaming the patch in and out per event.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tos_batch_kernel(
+    surface_ref, events_ref, out_ref, *, patch: int, threshold: int, height: int, width: int
+):
+    half = (patch - 1) // 2
+    ys = jax.lax.broadcasted_iota(jnp.int32, (height, width), 0)
+    xs = jax.lax.broadcasted_iota(jnp.int32, (height, width), 1)
+    n_events = events_ref.shape[0]
+
+    def body(i, surf):
+        ex = events_ref[i, 0]
+        ey = events_ref[i, 1]
+        in_patch = (
+            (ys >= ey - half)
+            & (ys <= ey + half)
+            & (xs >= ex - half)
+            & (xs <= ex + half)
+        )
+        dec = jnp.where(in_patch, surf - 1, surf)
+        dec = jnp.where(in_patch & (dec < threshold), 0, dec)
+        dec = jnp.maximum(dec, 0)
+        centre = (ys == ey) & (xs == ex)
+        return jnp.where(centre, 255, dec)
+
+    out_ref[...] = jax.lax.fori_loop(0, n_events, body, surface_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("patch", "threshold"))
+def tos_update_batch(
+    surface: jnp.ndarray,
+    events_xy: jnp.ndarray,
+    patch: int = 7,
+    threshold: int = 224,
+) -> jnp.ndarray:
+    """Apply a batch of events to an int32 TOS surface, in order.
+
+    ``surface``: (H, W) int32 in [0, 255]; ``events_xy``: (N, 2) int32
+    (x=col, y=row).  Returns the updated surface.
+    """
+    h, w = surface.shape
+    kernel = functools.partial(
+        _tos_batch_kernel, patch=patch, threshold=threshold, height=h, width=w
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.int32),
+        interpret=True,
+    )(surface.astype(jnp.int32), events_xy.astype(jnp.int32))

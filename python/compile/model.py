@@ -1,0 +1,63 @@
+"""L2: the frame-by-frame Harris-score graph of the corner-detection system.
+
+This is the compute the paper delegates to a "modern CNN chip" (Sec. I):
+given the current TOS frame, produce the Harris response map that the
+coordinator uses as a corner lookup table.  It is written in JAX, calls the
+L1 Pallas kernel for the stencil hot-spot, and is AOT-lowered once per
+resolution by ``aot.py``; Python never runs on the request path.
+
+Graph (matches luvHarris):
+
+    u8 TOS (as f32, 0..255) --/255--> Sobel-5x5 gradients --> structure
+    tensor --Gaussian-5x5--> R = det(M) - k tr(M)^2 --> minmax-normalized
+    response in [0, 1]  (flat frames map to all-zeros).
+
+The normalized map doubles as the "Harris LUT": the Rust side thresholds
+it at a sweep of levels to draw precision-recall curves.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import harris as harris_kernel
+from .kernels.ref import HARRIS_K, harris_response_ref
+
+# Resolutions exported as AOT artifacts. (height, width).
+#   davis240  — the paper's DAVIS240 sensor (two 180x120 NMC blocks);
+#   davis346  — a DAVIS346 for the multi-block scaling study;
+#   test64    — small shape for integration tests.
+RESOLUTIONS = {
+    "davis240": (180, 240),
+    "davis346": (260, 346),
+    "test64": (64, 64),
+}
+
+
+def _normalize01(r: jnp.ndarray) -> jnp.ndarray:
+    """Min-max normalize to [0, 1]; an all-flat response maps to zeros."""
+    lo = jnp.min(r)
+    hi = jnp.max(r)
+    span = hi - lo
+    safe = jnp.where(span > 0, span, 1.0)
+    return jnp.where(span > 0, (r - lo) / safe, jnp.zeros_like(r))
+
+
+def harris_lut(tos_frame: jnp.ndarray, *, use_pallas: bool = True) -> tuple[jnp.ndarray]:
+    """Full FBF Harris LUT computation from a raw TOS frame.
+
+    ``tos_frame``: (H, W) f32 with values in [0, 255] (u8 TOS widened by the
+    caller).  Returns a 1-tuple (AOT lowers with return_tuple=True) of the
+    normalized (H, W) f32 response map in [0, 1].
+    """
+    x = tos_frame.astype(jnp.float32) * (1.0 / 255.0)
+    if use_pallas:
+        r = harris_kernel.harris_response(x, k=HARRIS_K)
+    else:
+        r = harris_response_ref(x, k=HARRIS_K)
+    return (_normalize01(r),)
+
+
+def harris_lut_ref(tos_frame: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Oracle variant of :func:`harris_lut` (pure jnp, no Pallas)."""
+    return harris_lut(tos_frame, use_pallas=False)

@@ -1,0 +1,46 @@
+"""L2 graph-quality gates: the compiled Harris module must stay fused and
+transpose-free (the DESIGN.md §Perf L2 targets, enforced)."""
+
+import pytest
+
+from compile import analysis, model
+
+
+@pytest.fixture(scope="module")
+def info():
+    return analysis.analyze("test64")
+
+
+def test_everything_fuses(info):
+    # the five stencils + score + normalize should collapse into a handful
+    # of fusions — not dozens of loose elementwise ops
+    assert info["fusions"] >= 1
+    assert info["fusions"] <= 24, f"fusion blow-up: {info['ops']}"
+
+
+def test_no_transposes(info):
+    assert info["transposes"] == 0, "layout churn in the lowered module"
+
+
+def test_normalize_reduces_present(info):
+    # min-max normalization contributes the only reduces in the graph
+    assert 1 <= info["reduces"] <= 6
+
+
+def test_flop_estimate_scales_with_resolution():
+    small = analysis.analyze("test64")
+    big = analysis.analyze("davis240")
+    ratio = big["est_mflops_per_frame"] / small["est_mflops_per_frame"]
+    px_ratio = (180 * 240) / (64 * 64)
+    assert abs(ratio - px_ratio) / px_ratio < 1e-6
+
+
+def test_op_histogram_nonempty(info):
+    assert sum(info["ops"].values()) > 0
+    assert info["io_bytes_per_frame"] == 2 * 4 * 64 * 64
+
+
+def test_resolutions_all_analyzable():
+    for name in model.RESOLUTIONS:
+        got = analysis.analyze(name)
+        assert got["est_mflops_per_frame"] > 0

@@ -1,0 +1,99 @@
+"""L1 correctness: Pallas Harris kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps image shapes and value ranges; assert_allclose against
+``ref.harris_response_ref``.  This is the core correctness signal for the
+kernel that ends up inside the AOT artifact.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import harris, ref
+
+settings.register_profile("ci", max_examples=12, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand_img(rng, h, w, scale=1.0):
+    return (rng.random((h, w), dtype=np.float32) * scale).astype(np.float32)
+
+
+@given(
+    h=st.integers(min_value=12, max_value=96),
+    w=st.integers(min_value=12, max_value=96),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_harris_matches_ref_random(h, w, seed):
+    rng = np.random.default_rng(seed)
+    img = _rand_img(rng, h, w)
+    got = np.asarray(harris.harris_response(jnp.asarray(img)))
+    want = np.asarray(ref.harris_response_ref(jnp.asarray(img)))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=2e-3)
+
+
+@given(scale=st.sampled_from([0.0, 1.0, 255.0]))
+def test_harris_matches_ref_scaled(scale):
+    rng = np.random.default_rng(7)
+    img = _rand_img(rng, 36, 60, scale=max(scale, 1.0) if scale else 0.0)
+    if scale == 0.0:
+        img = np.zeros_like(img)
+    got = np.asarray(harris.harris_response(jnp.asarray(img)))
+    want = np.asarray(ref.harris_response_ref(jnp.asarray(img)))
+    atol = 2e-3 * max(scale, 1.0) ** 4  # response scales ~ intensity^4
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=atol)
+
+
+def test_harris_flat_image_zero_response():
+    img = np.full((40, 40), 0.5, dtype=np.float32)
+    got = np.asarray(harris.harris_response(jnp.asarray(img)))
+    interior = got[6:-6, 6:-6]  # away from the zero-pad border
+    np.testing.assert_allclose(interior, 0.0, atol=1e-6)
+
+
+def test_harris_corner_is_local_max():
+    """A bright axis-aligned square: response peaks near its corners."""
+    img = np.zeros((48, 48), dtype=np.float32)
+    img[16:32, 16:32] = 1.0
+    r = np.asarray(harris.harris_response(jnp.asarray(img)))
+    corner = r[16, 16]
+    edge_mid = r[16, 24]
+    flat = r[8, 8]
+    assert corner > edge_mid, "corner response must beat edge response"
+    assert corner > flat, "corner response must beat flat response"
+    assert edge_mid < corner  # edges suppressed by k*tr^2 term
+
+
+def test_harris_dtype_and_shape():
+    img = np.zeros((30, 50), dtype=np.float32)
+    out = harris.harris_response(jnp.asarray(img))
+    assert out.shape == (30, 50)
+    assert out.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("h,w", [(180, 240), (260, 346), (64, 64)])
+def test_harris_exported_resolutions(h, w):
+    """The exact shapes that are AOT-exported must agree with the oracle."""
+    rng = np.random.default_rng(h * 1000 + w)
+    img = rng.random((h, w), dtype=np.float32)
+    got = np.asarray(harris.harris_response(jnp.asarray(img)))
+    want = np.asarray(ref.harris_response_ref(jnp.asarray(img)))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=2e-3)
+
+
+@given(k=st.floats(min_value=0.01, max_value=0.1))
+def test_harris_k_parameter(k):
+    rng = np.random.default_rng(3)
+    img = rng.random((24, 24), dtype=np.float32)
+    got = np.asarray(harris.harris_response(jnp.asarray(img), k=float(k)))
+    want = np.asarray(ref.harris_response_ref(jnp.asarray(img), k=float(k)))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=2e-3)
+
+
+def test_pick_tile_h_divides():
+    for h in range(1, 400):
+        th = harris._pick_tile_h(h)
+        assert h % th == 0
+        assert 1 <= th <= 32

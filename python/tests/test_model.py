@@ -1,0 +1,80 @@
+"""L2 correctness: the full harris_lut graph (Pallas path vs oracle path)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+
+settings.register_profile("ci", max_examples=8, deadline=None)
+settings.load_profile("ci")
+
+
+def _tos_frame(rng, h, w):
+    """Synthesize a TOS-like frame: mostly 0, a few high patches (224..255).
+
+    The patch count scales with the area so small frames keep large empty
+    regions — a frame that is ~uniform has a near-zero Harris response
+    whose min-max normalization would just amplify float noise.
+    """
+    frame = np.zeros((h, w), dtype=np.float32)
+    n = max(1, (h * w) // 800)
+    for _ in range(n):
+        y, x = rng.integers(0, h), rng.integers(0, w)
+        v = rng.integers(224, 256)
+        frame[max(0, y - 3) : y + 4, max(0, x - 3) : x + 4] = v
+    return frame
+
+
+@given(
+    h=st.integers(min_value=16, max_value=80),
+    w=st.integers(min_value=16, max_value=80),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pallas_path_matches_ref_path(h, w, seed):
+    rng = np.random.default_rng(seed)
+    frame = _tos_frame(rng, h, w)
+    (got,) = model.harris_lut(jnp.asarray(frame))
+    (want,) = model.harris_lut_ref(jnp.asarray(frame))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-2, atol=1e-3)
+
+
+def test_output_is_normalized():
+    rng = np.random.default_rng(1)
+    frame = _tos_frame(rng, 64, 64)
+    (lut,) = model.harris_lut(jnp.asarray(frame))
+    lut = np.asarray(lut)
+    assert lut.min() >= 0.0 and lut.max() <= 1.0 + 1e-6
+    assert abs(lut.max() - 1.0) < 1e-5  # min-max normalization hits 1
+
+
+def test_flat_frame_maps_to_zeros():
+    frame = np.zeros((64, 64), dtype=np.float32)
+    (lut,) = model.harris_lut(jnp.asarray(frame))
+    np.testing.assert_allclose(np.asarray(lut), 0.0, atol=1e-7)
+
+    frame = np.full((64, 64), 255.0, dtype=np.float32)
+    (lut,) = model.harris_lut(jnp.asarray(frame))
+    # constant-255 frame: only border effects; normalized output still in [0,1]
+    lut = np.asarray(lut)
+    assert lut.min() >= 0.0 and lut.max() <= 1.0 + 1e-6
+
+
+def test_resolutions_registry():
+    assert model.RESOLUTIONS["davis240"] == (180, 240)
+    assert model.RESOLUTIONS["davis346"] == (260, 346)
+    for h, w in model.RESOLUTIONS.values():
+        assert h >= 16 and w >= 16
+
+
+def test_corner_hotspot_location():
+    """The LUT must light up at geometric corners of a bright square."""
+    frame = np.zeros((64, 64), dtype=np.float32)
+    frame[20:40, 20:40] = 255.0
+    (lut,) = model.harris_lut(jnp.asarray(frame))
+    lut = np.asarray(lut)
+    peak = np.unravel_index(np.argmax(lut), lut.shape)
+    corners = np.array([[20, 20], [20, 39], [39, 20], [39, 39]])
+    d = np.min(np.abs(corners - np.array(peak)).sum(axis=1))
+    assert d <= 4, f"peak {peak} not near any corner"

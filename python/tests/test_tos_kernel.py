@@ -1,0 +1,103 @@
+"""L1 correctness: Pallas batched TOS-update kernel vs the oracle.
+
+Sweeps surface shapes, event batches, patch sizes and thresholds with
+hypothesis; also asserts the paper's Algorithm-1 invariants directly.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref, tos_update
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+def _events(rng, n, h, w):
+    ev = np.stack(
+        [rng.integers(0, w, n), rng.integers(0, h, n)], axis=1
+    ).astype(np.int32)
+    return ev
+
+
+@given(
+    h=st.integers(min_value=10, max_value=48),
+    w=st.integers(min_value=10, max_value=48),
+    n=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_tos_batch_matches_ref(h, w, n, seed):
+    rng = np.random.default_rng(seed)
+    surf = rng.integers(0, 256, (h, w)).astype(np.int32)
+    ev = _events(rng, n, h, w)
+    got = np.asarray(tos_update.tos_update_batch(jnp.asarray(surf), jnp.asarray(ev)))
+    want = np.asarray(ref.tos_update_ref(jnp.asarray(surf), jnp.asarray(ev)))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(
+    patch=st.sampled_from([3, 5, 7, 9]),
+    threshold=st.integers(min_value=200, max_value=250),
+)
+def test_tos_batch_patch_threshold_sweep(patch, threshold):
+    rng = np.random.default_rng(patch * 31 + threshold)
+    surf = rng.integers(0, 256, (32, 32)).astype(np.int32)
+    ev = _events(rng, 24, 32, 32)
+    got = np.asarray(
+        tos_update.tos_update_batch(
+            jnp.asarray(surf), jnp.asarray(ev), patch=patch, threshold=threshold
+        )
+    )
+    want = np.asarray(
+        ref.tos_update_ref(jnp.asarray(surf), jnp.asarray(ev), patch=patch, threshold=threshold)
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_tos_invariants():
+    """Algorithm-1 invariants: range, centre=255, outside-patch untouched."""
+    rng = np.random.default_rng(0)
+    surf = rng.integers(0, 256, (40, 40)).astype(np.int32)
+    ev = np.array([[20, 20]], dtype=np.int32)
+    out = np.asarray(tos_update.tos_update_batch(jnp.asarray(surf), jnp.asarray(ev)))
+    assert out.min() >= 0 and out.max() <= 255
+    assert out[20, 20] == 255
+    # outside the 7x7 patch nothing changed
+    mask = np.ones_like(surf, dtype=bool)
+    mask[17:24, 17:24] = False
+    np.testing.assert_array_equal(out[mask], surf[mask])
+    # inside: decremented or clamped to 0
+    inside = surf[17:24, 17:24] - 1
+    inside = np.where(inside < 224, 0, inside)
+    inside[3, 3] = 255
+    np.testing.assert_array_equal(out[17:24, 17:24], inside)
+
+
+def test_tos_threshold_clamps_to_zero():
+    surf = np.full((16, 16), 224, dtype=np.int32)  # exactly at TH, one decrement kills
+    ev = np.array([[8, 8]], dtype=np.int32)
+    out = np.asarray(tos_update.tos_update_batch(jnp.asarray(surf), jnp.asarray(ev)))
+    assert (out[5:12, 5:12] == 0).sum() == 48  # all but the centre
+    assert out[8, 8] == 255
+
+
+def test_tos_border_clipping():
+    """Events at the image corner must not wrap or crash."""
+    surf = np.full((16, 16), 255, dtype=np.int32)
+    ev = np.array([[0, 0], [15, 15]], dtype=np.int32)
+    out = np.asarray(tos_update.tos_update_batch(jnp.asarray(surf), jnp.asarray(ev)))
+    want = np.asarray(ref.tos_update_ref(jnp.asarray(surf), jnp.asarray(ev)))
+    np.testing.assert_array_equal(out, want)
+    assert out[0, 0] == 255 and out[15, 15] == 255
+
+
+def test_tos_event_order_matters():
+    """Two events at the same pixel: last one wins the 255 write; the first
+    centre gets decremented by the second patch if adjacent."""
+    surf = np.full((16, 16), 255, dtype=np.int32)
+    ev = np.array([[5, 5], [6, 5]], dtype=np.int32)
+    out = np.asarray(tos_update.tos_update_batch(jnp.asarray(surf), jnp.asarray(ev)))
+    assert out[5, 6] == 255  # (x=6,y=5) centre written last
+    assert out[5, 5] == 254  # first centre decremented by second event's patch

@@ -1,0 +1,35 @@
+//! Shared measurement harness for the plain (`harness = false`) benches:
+//! warmup + N timed iterations, reporting median / mean / throughput.
+//! (criterion is unavailable in this offline build; this keeps the same
+//! shape of output so `cargo bench | tee bench_output.txt` stays useful.)
+
+use std::time::Instant;
+
+/// Run `f` repeatedly, returning (median_ns, mean_ns) per iteration.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    (median, mean)
+}
+
+/// Print one bench row: name, median per iter, and items/s throughput.
+pub fn report(name: &str, median_ns: f64, mean_ns: f64, items_per_iter: f64) {
+    let per_item = median_ns / items_per_iter;
+    let throughput = 1e9 / per_item;
+    println!(
+        "{name:<44} median {:>10.1} µs   mean {:>10.1} µs   {:>12.3} M items/s",
+        median_ns / 1e3,
+        mean_ns / 1e3,
+        throughput / 1e6
+    );
+}

@@ -1,0 +1,63 @@
+//! Bench: per-event cost of every detector baseline — the software
+//! reality behind the Fig. 1(b) throughput comparison.
+
+mod common;
+
+use nmc_tos::datasets::synthetic::SceneConfig;
+use nmc_tos::detectors::{arc::Arc, eharris::EHarris, fast::EFast, harris::HarrisDetector, EventScorer};
+use nmc_tos::events::Resolution;
+
+fn main() {
+    println!("== bench: detector baselines (per-event scoring) ==");
+    let mut scene = SceneConfig::shapes_dof().build(7);
+    let events = scene.generate(50_000);
+    let res = Resolution::DAVIS240;
+
+    let mut lut_det = HarrisDetector::new(res);
+    lut_det.refresh(&vec![0.25f32; res.pixels()]);
+    let (med, mean) = common::measure(2, 10, || {
+        for e in &events {
+            std::hint::black_box(lut_det.score(e));
+        }
+    });
+    common::report("detector/luvharris_lut/50k", med, mean, events.len() as f64);
+
+    let mut fast = EFast::new(res);
+    let (med, mean) = common::measure(1, 5, || {
+        for e in &events {
+            std::hint::black_box(fast.score(e));
+        }
+    });
+    common::report("detector/efast/50k", med, mean, events.len() as f64);
+
+    let mut arc = Arc::new(res);
+    let (med, mean) = common::measure(1, 5, || {
+        for e in &events {
+            std::hint::black_box(arc.score(e));
+        }
+    });
+    common::report("detector/arc/50k", med, mean, events.len() as f64);
+
+    let mut eh = EHarris::new(res);
+    let subset = &events[..10_000];
+    let (med, mean) = common::measure(1, 5, || {
+        for e in subset {
+            std::hint::black_box(eh.score(e));
+        }
+    });
+    common::report("detector/eharris/10k", med, mean, subset.len() as f64);
+
+    println!("\nmodelled digital throughput at 500 MHz (Fig. 1b):");
+    for (name, ops) in [
+        ("luvharris_lut", lut_det.ops_per_event()),
+        ("efast", fast.ops_per_event()),
+        ("arc", arc.ops_per_event()),
+        ("eharris", eh.ops_per_event()),
+    ] {
+        println!(
+            "  {name:<16} {:>8.0} ops/event  -> {:>8.3} Meps",
+            ops,
+            nmc_tos::detectors::max_throughput_eps(ops, 500e6) / 1e6
+        );
+    }
+}

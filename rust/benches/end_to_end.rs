@@ -1,0 +1,50 @@
+//! Bench: the full pipeline (STCF + NMC sim + DVFS + PJRT Harris +
+//! tagging) — events/s of the whole system model, sync vs async LUT
+//! refresh. This is the number that gates how large an experiment the
+//! repo can run; EXPERIMENTS.md §Perf tracks it.
+//!
+//! Requires `make artifacts`.
+
+mod common;
+
+use nmc_tos::coordinator::{Pipeline, PipelineConfig};
+use nmc_tos::datasets::synthetic::SceneConfig;
+use nmc_tos::runtime::default_artifact_dir;
+
+fn main() {
+    if !default_artifact_dir().join("meta.json").exists() {
+        println!("SKIP end_to_end: run `make artifacts` first");
+        return;
+    }
+    println!("== bench: full pipeline end-to-end ==");
+    let mut scene = SceneConfig::shapes_dof().build(8);
+    let events = scene.generate(100_000);
+
+    for (label, async_mode, refresh) in [
+        ("sync/refresh2k", false, 2_000usize),
+        ("sync/refresh500", false, 500),
+        ("async", true, 2_000),
+    ] {
+        let mut cfg = PipelineConfig::davis240();
+        cfg.async_refresh = async_mode;
+        cfg.lut_refresh_events = refresh;
+        // construct once: PJRT client + HLO compile are per-process costs,
+        // not per-run costs (the coordinator keeps the executable loaded)
+        let mut pipe = Pipeline::new(cfg).unwrap();
+        let (med, mean) = common::measure(1, 5, || {
+            let r = pipe.run(&events).unwrap();
+            std::hint::black_box(r.corners.len());
+        });
+        common::report(&format!("e2e/{label}/100k_events"), med, mean, events.len() as f64);
+    }
+
+    // engine-less variant isolates the simulator cost from PJRT
+    let mut cfg = PipelineConfig::davis240();
+    cfg.lut_refresh_events = usize::MAX;
+    let mut pipe = Pipeline::new_without_engine(cfg);
+    let (med, mean) = common::measure(1, 5, || {
+        let r = pipe.run(&events).unwrap();
+        std::hint::black_box(r.events_signal);
+    });
+    common::report("e2e/no_fbf/100k_events", med, mean, events.len() as f64);
+}

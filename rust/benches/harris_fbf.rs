@@ -1,0 +1,36 @@
+//! Bench: the FBF Harris LUT path through PJRT — the frame-rate side of
+//! the luvHarris decoupling. The paper argues this side is NOT the
+//! bottleneck (>1 kHz on a CNN accelerator); here we measure what the AOT
+//! CPU artifact sustains, which bounds how fresh the LUT can be.
+//!
+//! Requires `make artifacts`.
+
+mod common;
+
+use nmc_tos::runtime::{default_artifact_dir, HarrisEngine, Manifest};
+use nmc_tos::util::rng::Rng;
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("meta.json").exists() {
+        println!("SKIP harris_fbf: run `make artifacts` first");
+        return;
+    }
+    println!("== bench: FBF Harris via PJRT CPU ==");
+    let manifest = Manifest::load(&dir).unwrap();
+    for name in ["test64", "davis240", "davis346"] {
+        let mut engine = HarrisEngine::load(&manifest, name).unwrap();
+        let mut rng = Rng::seed_from(6);
+        let frame: Vec<f32> =
+            (0..engine.height * engine.width).map(|_| (rng.below(256)) as f32).collect();
+        let (med, mean) = common::measure(3, 20, || {
+            let lut = engine.compute(&frame).unwrap();
+            std::hint::black_box(&lut);
+        });
+        common::report(&format!("harris_fbf/{name}/1_frame"), med, mean, 1.0);
+        println!(
+            "    -> LUT refresh rate: {:.0} Hz (paper's CNN-chip estimate: >1 kHz)",
+            1e9 / med
+        );
+    }
+}

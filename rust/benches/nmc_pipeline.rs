@@ -1,0 +1,63 @@
+//! Bench: the phase-level NMC macro simulator (Fig. 9/10 engine) —
+//! pipelined vs unpipelined, with and without error injection, plus the
+//! simulated-vs-host throughput ratio that gates experiment turnaround.
+
+mod common;
+
+use nmc_tos::events::{Event, Resolution};
+use nmc_tos::nmc::{NmcConfig, NmcMacro};
+use nmc_tos::util::rng::Rng;
+
+fn events(res: Resolution, n: usize) -> Vec<Event> {
+    let mut rng = Rng::seed_from(2);
+    (0..n)
+        .map(|i| {
+            Event::on(
+                rng.below(res.width as u64) as u16,
+                rng.below(res.height as u64) as u16,
+                i as u64,
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== bench: NMC macro simulator ==");
+    let res = Resolution::DAVIS240;
+    let evs = events(res, 50_000);
+
+    for (label, pipelined, inject, vdd) in [
+        ("pipelined/1.2V", true, false, 1.2),
+        ("unpipelined/1.2V", false, false, 1.2),
+        ("pipelined/0.6V+BER", true, true, 0.6),
+    ] {
+        let cfg = NmcConfig {
+            pipelined,
+            inject_errors: inject,
+            vdd,
+            seed: 3,
+            ..NmcConfig::default()
+        };
+        let mut mac = NmcMacro::new(res, cfg);
+        let (med, mean) = common::measure(2, 10, || {
+            mac.process_batch(&evs);
+        });
+        common::report(&format!("nmc_sim/{label}/50k_events"), med, mean, evs.len() as f64);
+    }
+
+    // DVFS voltage retarget cost (happens per switch, not per event)
+    let mut mac = NmcMacro::new(res, NmcConfig::default());
+    let (med, mean) = common::measure(10, 50, || {
+        for mv in [600u32, 800, 1000, 1200] {
+            mac.set_vdd(mv as f64 / 1000.0);
+        }
+    });
+    common::report("nmc_sim/set_vdd/4_switches", med, mean, 4.0);
+
+    // snapshot cost (runs once per LUT refresh)
+    let (med, mean) = common::measure(3, 20, || {
+        let s = mac.snapshot_u8();
+        std::hint::black_box(&s);
+    });
+    common::report("nmc_sim/snapshot_u8/davis240", med, mean, 1.0);
+}

@@ -1,0 +1,65 @@
+//! Bench: STCF denoising filter throughput on clustered vs scattered
+//! streams (branch behaviour differs: clusters exit the support scan
+//! early).
+
+mod common;
+
+use nmc_tos::events::{Event, Resolution};
+use nmc_tos::stcf::{Stcf, StcfConfig};
+use nmc_tos::util::rng::Rng;
+
+fn scattered(res: Resolution, n: usize) -> Vec<Event> {
+    let mut rng = Rng::seed_from(4);
+    (0..n)
+        .map(|i| {
+            Event::on(
+                rng.below(res.width as u64) as u16,
+                rng.below(res.height as u64) as u16,
+                i as u64 * 50,
+            )
+        })
+        .collect()
+}
+
+fn clustered(res: Resolution, n: usize) -> Vec<Event> {
+    let mut rng = Rng::seed_from(5);
+    let mut cx = 120i64;
+    let mut cy = 90i64;
+    (0..n)
+        .map(|i| {
+            if i % 64 == 0 {
+                cx = rng.below(res.width as u64 - 8) as i64 + 4;
+                cy = rng.below(res.height as u64 - 8) as i64 + 4;
+            }
+            Event::on(
+                (cx + rng.range_i64(-2, 2)) as u16,
+                (cy + rng.range_i64(-2, 2)) as u16,
+                i as u64 * 2,
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== bench: STCF filter ==");
+    let res = Resolution::DAVIS240;
+    for (label, evs) in
+        [("scattered", scattered(res, 200_000)), ("clustered", clustered(res, 200_000))]
+    {
+        for radius in [1u16, 2] {
+            let cfg = StcfConfig { radius, ..StcfConfig::default() };
+            let mut f = Stcf::new(res, cfg);
+            let (med, mean) = common::measure(2, 10, || {
+                for e in &evs {
+                    std::hint::black_box(f.check(e));
+                }
+            });
+            common::report(
+                &format!("stcf/{label}/r{radius}/200k_events"),
+                med,
+                mean,
+                evs.len() as f64,
+            );
+        }
+    }
+}

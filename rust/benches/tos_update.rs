@@ -1,0 +1,42 @@
+//! Bench: golden TOS update throughput (the software model of the paper's
+//! hot path) across patch sizes and resolutions. This is the simulator's
+//! own hot loop — EXPERIMENTS.md §Perf tracks it.
+
+mod common;
+
+use nmc_tos::events::{Event, Resolution};
+use nmc_tos::tos::{TosConfig, TosSurface};
+use nmc_tos::util::rng::Rng;
+
+fn events(res: Resolution, n: usize, seed: u64) -> Vec<Event> {
+    let mut rng = Rng::seed_from(seed);
+    (0..n)
+        .map(|i| {
+            Event::on(
+                rng.below(res.width as u64) as u16,
+                rng.below(res.height as u64) as u16,
+                i as u64,
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== bench: golden TOS update ==");
+    for (label, res) in [("davis240", Resolution::DAVIS240), ("hd720", Resolution::HD720)] {
+        for patch in [5u16, 7, 9] {
+            let evs = events(res, 100_000, 1);
+            let cfg = TosConfig { patch, threshold: 225 };
+            let mut surf = TosSurface::new(res, cfg);
+            let (med, mean) = common::measure(2, 10, || {
+                surf.update_batch(&evs);
+            });
+            common::report(
+                &format!("tos_update/{label}/p{patch}/100k_events"),
+                med,
+                mean,
+                evs.len() as f64,
+            );
+        }
+    }
+}

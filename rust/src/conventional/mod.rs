@@ -1,0 +1,168 @@
+//! Conventional digital TOS baseline (paper Sec. I & Fig. 9).
+//!
+//! A synthesized datapath that reads, decrements, thresholds and writes
+//! back one pixel per clock: `O(P^2)` cycles per event at 500 MHz / 1.2 V
+//! (392 ns per 7x7 patch => 2.6 Meps).  Functionally identical to the
+//! golden TOS; only the cost model differs from [`crate::nmc`].
+
+
+
+use crate::events::{Event, Resolution};
+use crate::nmc::calib;
+use crate::nmc::energy::ConventionalEnergy;
+use crate::tos::{TosConfig, TosSurface};
+
+/// Cost/latency model of the conventional implementation at a voltage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConventionalModel {
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// Clock frequency at this voltage (Hz).
+    pub clock_hz: f64,
+    /// Energy model.
+    pub energy: ConventionalEnergy,
+}
+
+impl ConventionalModel {
+    /// Model at a voltage; the clock scales with the same alpha-power-law
+    /// factor as the NMC macro (same process corner).
+    pub fn at(vdd: f64) -> Self {
+        Self {
+            vdd,
+            clock_hz: calib::CONV_CLOCK_NOM_HZ / calib::delay_factor(vdd),
+            energy: ConventionalEnergy::at(vdd),
+        }
+    }
+
+    /// Latency of an event whose clipped patch covers `pixels` pixels (ns).
+    ///
+    /// 4 cycles of address setup + `pixels` read-modify-write cycles —
+    /// 4 + 4*49 = 200... the paper's 392 ns at 500 MHz corresponds to
+    /// `CONV_CYCLES_PER_PATCH` = 196 cycles for the full 49-pixel patch:
+    /// 4 cycles/pixel (RD, DEC+CMP, WR, ptr) at 1 px/cycle *per phase*.
+    #[inline]
+    pub fn event_latency_ns(&self, pixels: usize) -> f64 {
+        let cycles = calib::CONV_CYCLES_PER_PATCH * pixels as f64
+            / (calib::PATCH * calib::PATCH) as f64;
+        cycles / self.clock_hz * 1e9
+    }
+
+    /// Max sustainable event rate with full patches (events/s).
+    pub fn max_event_rate(&self) -> f64 {
+        1e9 / self.event_latency_ns(calib::PATCH * calib::PATCH)
+    }
+}
+
+/// Telemetry of the conventional baseline.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ConvStats {
+    /// Events processed.
+    pub events: u64,
+    /// Total busy time (ns).
+    pub busy_ns: f64,
+    /// Total dynamic energy (pJ).
+    pub energy_pj: f64,
+}
+
+/// The conventional baseline engine: golden TOS + digital cost model.
+#[derive(Debug)]
+pub struct ConventionalTos {
+    surface: TosSurface,
+    model: ConventionalModel,
+    stats: ConvStats,
+}
+
+impl ConventionalTos {
+    /// Build at a resolution / TOS config / voltage.
+    pub fn new(res: Resolution, tos: TosConfig, vdd: f64) -> Self {
+        Self {
+            surface: TosSurface::new(res, tos),
+            model: ConventionalModel::at(vdd),
+            stats: ConvStats::default(),
+        }
+    }
+
+    /// Process one event, returning its latency in ns.
+    pub fn process(&mut self, ev: &Event) -> f64 {
+        let cfg = self.surface.config();
+        let half = cfg.half();
+        let res = self.surface.resolution();
+        let w = ((ev.x as i32 + half).min(res.width as i32 - 1) - (ev.x as i32 - half).max(0) + 1)
+            as usize;
+        let h = ((ev.y as i32 + half).min(res.height as i32 - 1) - (ev.y as i32 - half).max(0) + 1)
+            as usize;
+        self.surface.update(ev);
+        let lat = self.model.event_latency_ns(w * h);
+        let full = (cfg.patch as usize).pow(2);
+        self.stats.events += 1;
+        self.stats.busy_ns += lat;
+        self.stats.energy_pj += self.model.energy.patch_pj * (w * h) as f64 / full as f64;
+        lat
+    }
+
+    /// Underlying surface (identical semantics to the golden model).
+    pub fn surface(&self) -> &TosSurface {
+        &self.surface
+    }
+
+    /// Cost model.
+    pub fn model(&self) -> ConventionalModel {
+        self.model
+    }
+
+    /// Telemetry.
+    pub fn stats(&self) -> ConvStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_anchor_392ns_2p6meps() {
+        let m = ConventionalModel::at(1.2);
+        let lat = m.event_latency_ns(49);
+        assert!((lat - 392.0).abs() < 1e-9, "latency {lat}");
+        let rate = m.max_event_rate() / 1e6;
+        assert!((rate - 2.55).abs() < 0.1, "rate {rate}");
+    }
+
+    #[test]
+    fn scales_with_voltage_like_nmc() {
+        let hi = ConventionalModel::at(1.2);
+        let lo = ConventionalModel::at(0.6);
+        let ratio = lo.event_latency_ns(49) / hi.event_latency_ns(49);
+        assert!((ratio - calib::delay_factor(0.6)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn functional_equivalence_with_golden() {
+        let res = Resolution::TEST64;
+        let mut conv = ConventionalTos::new(res, TosConfig::default(), 1.2);
+        let mut golden = TosSurface::new(res, TosConfig::default());
+        for i in 0..1000u64 {
+            let e = Event::on((i * 23 % 64) as u16, (i * 41 % 64) as u16, i);
+            conv.process(&e);
+            golden.update(&e);
+        }
+        assert_eq!(conv.surface().data(), golden.data());
+    }
+
+    #[test]
+    fn clipped_patches_cost_less() {
+        let mut conv = ConventionalTos::new(Resolution::TEST64, TosConfig::default(), 1.2);
+        let full = conv.process(&Event::on(32, 32, 0));
+        let corner = conv.process(&Event::on(0, 0, 1));
+        assert!(corner < full);
+    }
+
+    #[test]
+    fn nmc_speedup_vs_conventional_is_24_7x() {
+        let conv = ConventionalModel::at(1.2).event_latency_ns(49);
+        let nmc = crate::nmc::timing::TimingModel::at(1.2).patch_latency_pipelined_ns(7);
+        let speedup = conv / nmc;
+        assert!((speedup - 24.7).abs() < 0.2, "speedup {speedup}");
+    }
+}

@@ -1,0 +1,444 @@
+//! The system coordinator: wires STCF -> NMC-TOS -> DVFS -> FBF Harris ->
+//! corner tagging into the full pipeline of paper Fig. 2.
+//!
+//! Two execution modes:
+//!
+//! * **sync** — the Harris LUT is recomputed inline every
+//!   `lut_refresh_events` signal events.  Deterministic; used by the PR /
+//!   BER experiments so AUC comparisons are seed-stable.
+//! * **async** — a worker thread owns its own PJRT engine and recomputes
+//!   the LUT "as fast as possible" from TOS snapshots, exactly the
+//!   luvHarris decoupling: the event path never blocks on the frame path;
+//!   snapshots are dropped (not queued) when the worker is busy.
+//!
+//! Python never appears on either path — the Harris graph was AOT-lowered
+//! at build time and runs through the PJRT CPU client.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::detectors::harris::HarrisDetector;
+use crate::dvfs::{DvfsConfig, DvfsController};
+use crate::events::{Event, Resolution};
+use crate::nmc::{NmcConfig, NmcMacro, NmcStats};
+use crate::runtime::{default_artifact_dir, HarrisEngine, Manifest};
+use crate::stcf::{Stcf, StcfConfig};
+use crate::tos::TosConfig;
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Sensor geometry (must match the artifact).
+    pub res: Resolution,
+    /// Artifact name in `artifacts/meta.json` (e.g. `davis240`).
+    pub artifact: String,
+    /// Artifact directory override (`None` = auto-discover).
+    pub artifact_dir: Option<PathBuf>,
+    /// TOS algorithm parameters.
+    pub tos: TosConfig,
+    /// Use the pipelined NMC schedule.
+    pub pipelined: bool,
+    /// Inject Monte-Carlo read errors (BER tracks the DVFS voltage).
+    pub inject_errors: bool,
+    /// Error-injection seed.
+    pub seed: u64,
+    /// STCF denoising (`None` = bypass).
+    pub stcf: Option<StcfConfig>,
+    /// DVFS (`None` = pinned at `fixed_vdd`).
+    pub dvfs: Option<DvfsConfig>,
+    /// Supply voltage when DVFS is off.
+    pub fixed_vdd: f64,
+    /// Sync mode: recompute the Harris LUT every N signal events.
+    pub lut_refresh_events: usize,
+    /// Use the async (threaded) LUT worker instead of inline refresh.
+    pub async_refresh: bool,
+    /// Score threshold above which an event is tagged a corner.
+    pub corner_threshold: f64,
+}
+
+impl PipelineConfig {
+    /// DAVIS240 defaults matching the paper's system.
+    pub fn davis240() -> Self {
+        Self {
+            res: Resolution::DAVIS240,
+            artifact: "davis240".into(),
+            artifact_dir: None,
+            tos: TosConfig::default(),
+            pipelined: true,
+            inject_errors: false,
+            seed: 0,
+            stcf: Some(StcfConfig::default()),
+            dvfs: Some(DvfsConfig::default()),
+            fixed_vdd: 1.2,
+            lut_refresh_events: 2_000,
+            async_refresh: false,
+            corner_threshold: 0.55,
+        }
+    }
+
+    /// Small config for tests.
+    pub fn test64() -> Self {
+        Self {
+            res: Resolution::TEST64,
+            artifact: "test64".into(),
+            ..Self::davis240()
+        }
+    }
+}
+
+/// Everything a run produces.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Events fed in.
+    pub events_in: usize,
+    /// Events surviving STCF.
+    pub events_signal: usize,
+    /// The surviving events, in order (index-aligned with `scores`).
+    pub signal_events: Vec<Event>,
+    /// Per-signal-event corner score.
+    pub scores: Vec<f64>,
+    /// Indices (into `signal_events`) tagged as corners.
+    pub corners: Vec<usize>,
+    /// NMC macro telemetry (latency/energy totals, bit flips).
+    pub nmc: NmcStats,
+    /// Voltage switches performed by DVFS.
+    pub dvfs_switches: u64,
+    /// Harris LUT refreshes that completed.
+    pub lut_refreshes: u64,
+    /// Wall-clock seconds of the whole run (host side).
+    pub wall_s: f64,
+    /// Final TOS snapshot (for rendering).
+    pub final_tos: Vec<u8>,
+    /// Final LUT snapshot.
+    pub final_lut: Vec<f32>,
+}
+
+impl RunReport {
+    /// `(score, label)` pairs against ground truth, for PR curves.
+    pub fn scored_events(
+        &self,
+        gt: &crate::datasets::gt::GroundTruth,
+        radius_px: f32,
+    ) -> Vec<(f64, bool)> {
+        let labels = gt.label_events(&self.signal_events, radius_px);
+        self.scores.iter().copied().zip(labels).collect()
+    }
+}
+
+/// The assembled pipeline.
+pub struct Pipeline {
+    cfg: PipelineConfig,
+    engine: Option<HarrisEngine>,
+    nmc: NmcMacro,
+    stcf: Option<Stcf>,
+    dvfs: Option<DvfsController>,
+    detector: HarrisDetector,
+    /// Reused frame buffer for the FBF path (no per-refresh allocation).
+    frame: Vec<f32>,
+}
+
+impl std::fmt::Debug for Pipeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pipeline").field("cfg", &self.cfg).finish()
+    }
+}
+
+impl Pipeline {
+    /// Build the pipeline: load + compile the AOT Harris artifact, size
+    /// the NMC macro, STCF and DVFS.
+    pub fn new(cfg: PipelineConfig) -> Result<Pipeline> {
+        let dir = cfg.artifact_dir.clone().unwrap_or_else(default_artifact_dir);
+        let manifest = Manifest::load(&dir)?;
+        let engine = HarrisEngine::load(&manifest, &cfg.artifact)?;
+        anyhow::ensure!(
+            engine.height == cfg.res.height as usize && engine.width == cfg.res.width as usize,
+            "artifact {}x{} does not match sensor {}x{}",
+            engine.height,
+            engine.width,
+            cfg.res.height,
+            cfg.res.width
+        );
+        Ok(Self::with_engine(cfg, Some(engine)))
+    }
+
+    /// Build without a PJRT engine (LUT stays zero unless refreshed
+    /// externally) — used by timing/energy-only experiments and tests
+    /// that don't need corner scores.
+    pub fn new_without_engine(cfg: PipelineConfig) -> Pipeline {
+        Self::with_engine(cfg, None)
+    }
+
+    fn with_engine(cfg: PipelineConfig, engine: Option<HarrisEngine>) -> Pipeline {
+        let nmc_cfg = NmcConfig {
+            tos: cfg.tos,
+            pipelined: cfg.pipelined,
+            vdd: cfg.fixed_vdd,
+            inject_errors: cfg.inject_errors,
+            seed: cfg.seed,
+        };
+        let nmc = NmcMacro::new(cfg.res, nmc_cfg);
+        let stcf = cfg.stcf.map(|c| Stcf::new(cfg.res, c));
+        let dvfs = cfg.dvfs.map(DvfsController::new);
+        let detector = HarrisDetector::new(cfg.res);
+        let frame = vec![0.0f32; cfg.res.pixels()];
+        Pipeline { cfg, engine, nmc, stcf, dvfs, detector, frame }
+    }
+
+    /// Pipeline configuration.
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    /// Run the pipeline over a time-sorted event stream.
+    pub fn run(&mut self, events: &[Event]) -> Result<RunReport> {
+        if self.cfg.async_refresh {
+            self.run_async(events)
+        } else {
+            self.run_sync(events)
+        }
+    }
+
+    /// Synchronous mode: inline LUT refresh every `lut_refresh_events`.
+    fn run_sync(&mut self, events: &[Event]) -> Result<RunReport> {
+        let start = Instant::now();
+        let mut signal_events = Vec::with_capacity(events.len());
+        let mut scores = Vec::with_capacity(events.len());
+        let mut corners = Vec::new();
+        let mut since_refresh = 0usize;
+        let mut dvfs_switches = 0u64;
+
+        for ev in events {
+            // --- DVFS monitors the *raw* event rate (paper Fig. 2) -------
+            if let Some(ctrl) = &mut self.dvfs {
+                if let Some(op) = ctrl.on_event(ev.t) {
+                    self.nmc.set_vdd(op.vdd);
+                    dvfs_switches += 1;
+                }
+            }
+            // --- STCF denoise --------------------------------------------
+            if let Some(f) = &mut self.stcf {
+                if !f.check(ev) {
+                    continue;
+                }
+            }
+            // --- NMC-TOS update (the hot path) ----------------------------
+            self.nmc.process(ev);
+            // --- FBF Harris refresh (inline in sync mode) -----------------
+            since_refresh += 1;
+            if since_refresh >= self.cfg.lut_refresh_events {
+                since_refresh = 0;
+                self.refresh_lut()?;
+            }
+            // --- tag ------------------------------------------------------
+            let score = self.detector.score_at(ev.x, ev.y);
+            if score >= self.cfg.corner_threshold {
+                corners.push(signal_events.len());
+            }
+            scores.push(score);
+            signal_events.push(*ev);
+        }
+
+        Ok(RunReport {
+            events_in: events.len(),
+            events_signal: signal_events.len(),
+            signal_events,
+            scores,
+            corners,
+            nmc: self.nmc.stats(),
+            dvfs_switches,
+            lut_refreshes: self.detector.refreshes,
+            wall_s: start.elapsed().as_secs_f64(),
+            final_tos: self.nmc.snapshot_u8(),
+            final_lut: self.detector.lut().to_vec(),
+        })
+    }
+
+    /// Asynchronous mode: the LUT worker owns its own engine and consumes
+    /// TOS snapshots through a depth-1 channel; busy -> snapshot dropped.
+    fn run_async(&mut self, events: &[Event]) -> Result<RunReport> {
+        let start = Instant::now();
+        let dir = self.cfg.artifact_dir.clone().unwrap_or_else(default_artifact_dir);
+        let artifact = self.cfg.artifact.clone();
+
+        let (snap_tx, snap_rx) = mpsc::sync_channel::<Vec<u8>>(1);
+        let (lut_tx, lut_rx) = mpsc::channel::<Vec<f32>>();
+        let worker = std::thread::spawn(move || -> Result<u64> {
+            let manifest = Manifest::load(&dir)?;
+            let mut engine = HarrisEngine::load(&manifest, &artifact)?;
+            let mut refreshes = 0u64;
+            while let Ok(tos) = snap_rx.recv() {
+                let lut = engine.compute_u8(&tos)?;
+                refreshes += 1;
+                if lut_tx.send(lut).is_err() {
+                    break;
+                }
+            }
+            Ok(refreshes)
+        });
+
+        let mut signal_events = Vec::with_capacity(events.len());
+        let mut scores = Vec::with_capacity(events.len());
+        let mut corners = Vec::new();
+        let mut dvfs_switches = 0u64;
+        let mut since_snapshot = 0usize;
+        // offer a snapshot at least this often (events); the worker decides
+        // the actual refresh rate by how fast it drains the channel.
+        let offer_every = (self.cfg.lut_refresh_events / 4).max(1);
+
+        for ev in events {
+            if let Some(ctrl) = &mut self.dvfs {
+                if let Some(op) = ctrl.on_event(ev.t) {
+                    self.nmc.set_vdd(op.vdd);
+                    dvfs_switches += 1;
+                }
+            }
+            if let Some(f) = &mut self.stcf {
+                if !f.check(ev) {
+                    continue;
+                }
+            }
+            self.nmc.process(ev);
+
+            // non-blocking LUT pickup
+            while let Ok(lut) = lut_rx.try_recv() {
+                self.detector.refresh(&lut);
+            }
+            since_snapshot += 1;
+            if since_snapshot >= offer_every {
+                since_snapshot = 0;
+                // drop the snapshot if the worker is busy (luvHarris "as
+                // fast as possible" semantics, no backpressure onto events)
+                let _ = snap_tx.try_send(self.nmc.snapshot_u8());
+            }
+
+            let score = self.detector.score_at(ev.x, ev.y);
+            if score >= self.cfg.corner_threshold {
+                corners.push(signal_events.len());
+            }
+            scores.push(score);
+            signal_events.push(*ev);
+        }
+
+        drop(snap_tx);
+        // drain remaining LUTs
+        while let Ok(lut) = lut_rx.try_recv() {
+            self.detector.refresh(&lut);
+        }
+        let worker_refreshes =
+            worker.join().map_err(|_| anyhow::anyhow!("LUT worker panicked"))??;
+
+        Ok(RunReport {
+            events_in: events.len(),
+            events_signal: signal_events.len(),
+            signal_events,
+            scores,
+            corners,
+            nmc: self.nmc.stats(),
+            dvfs_switches,
+            lut_refreshes: worker_refreshes,
+            wall_s: start.elapsed().as_secs_f64(),
+            final_tos: self.nmc.snapshot_u8(),
+            final_lut: self.detector.lut().to_vec(),
+        })
+    }
+
+    /// Inline LUT refresh (sync mode).
+    fn refresh_lut(&mut self) -> Result<()> {
+        let Some(engine) = &mut self.engine else {
+            return Ok(()); // engine-less pipelines skip the FBF stage
+        };
+        let tos = self.nmc.snapshot_u8();
+        for (f, &v) in self.frame.iter_mut().zip(&tos) {
+            *f = v as f32;
+        }
+        let lut = engine.compute(&self.frame).context("FBF Harris refresh")?;
+        self.detector.refresh(&lut);
+        Ok(())
+    }
+
+    /// Direct access to the macro (experiments).
+    pub fn nmc(&self) -> &NmcMacro {
+        &self.nmc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synthetic::SceneConfig;
+
+    // engine-less tests here; full-engine integration tests live in
+    // rust/tests/ (they need `make artifacts` to have run).
+
+    #[test]
+    fn engineless_pipeline_runs_and_filters() {
+        let mut cfg = PipelineConfig::test64();
+        cfg.dvfs = None;
+        let mut pipe = Pipeline::new_without_engine(cfg);
+        let mut scene = SceneConfig::test64().build(1);
+        let events = scene.generate(20_000);
+        let report = pipe.run(&events).unwrap();
+        assert_eq!(report.events_in, 20_000);
+        assert!(report.events_signal < report.events_in, "STCF must drop noise");
+        assert!(report.events_signal > report.events_in / 4, "STCF too aggressive");
+        assert_eq!(report.scores.len(), report.events_signal);
+        // without an engine the LUT is all zeros -> no corners tagged
+        assert!(report.corners.is_empty());
+        assert!(report.nmc.events as usize == report.events_signal);
+    }
+
+    #[test]
+    fn dvfs_reacts_to_synthetic_stream() {
+        let mut cfg = PipelineConfig::test64();
+        cfg.stcf = None;
+        let mut pipe = Pipeline::new_without_engine(cfg);
+        let mut scene = SceneConfig::test64().build(2);
+        let events = scene.generate(50_000);
+        let report = pipe.run(&events).unwrap();
+        // test64 scene rate (~124 keps) is far below 4.9 Meps -> DVFS
+        // settles at 0.6 V after the first window
+        assert!(report.dvfs_switches >= 1);
+        assert!((pipe.nmc().vdd() - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stcf_disabled_passes_everything() {
+        let mut cfg = PipelineConfig::test64();
+        cfg.stcf = None;
+        cfg.dvfs = None;
+        let mut pipe = Pipeline::new_without_engine(cfg);
+        let mut scene = SceneConfig::test64().build(3);
+        let events = scene.generate(5_000);
+        let report = pipe.run(&events).unwrap();
+        assert_eq!(report.events_signal, 5_000);
+    }
+
+    #[test]
+    fn ber_injection_flips_bits_at_low_voltage() {
+        let mut cfg = PipelineConfig::test64();
+        cfg.stcf = None;
+        cfg.dvfs = None;
+        cfg.fixed_vdd = 0.6;
+        cfg.inject_errors = true;
+        let mut pipe = Pipeline::new_without_engine(cfg);
+        let mut scene = SceneConfig::test64().build(4);
+        let events = scene.generate(30_000);
+        let report = pipe.run(&events).unwrap();
+        assert!(report.nmc.flipped_bits > 0);
+    }
+
+    #[test]
+    fn report_scored_events_alignment() {
+        let mut cfg = PipelineConfig::test64();
+        cfg.dvfs = None;
+        let mut pipe = Pipeline::new_without_engine(cfg);
+        let mut scene = SceneConfig::test64().build(5);
+        let (events, gt) = scene.generate_with_gt(10_000);
+        let report = pipe.run(&events).unwrap();
+        let scored = report.scored_events(&gt, 3.0);
+        assert_eq!(scored.len(), report.events_signal);
+    }
+}

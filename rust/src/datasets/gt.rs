@@ -1,0 +1,141 @@
+//! Corner ground truth: vertex trajectories of the synthetic scenes and
+//! event labeling against them.
+//!
+//! A detection experiment needs, per event, a binary label "is this event
+//! at a real corner?".  The synthetic scenes know exactly where their
+//! polygon vertices project at every instant, so the label is: the event
+//! lies within `radius_px` of any vertex position interpolated at the
+//! event's timestamp.  This mirrors how luvHarris scores detectors against
+//! hand-labelled ground truth, but with perfect labels.
+
+use crate::events::Event;
+
+/// One corner's trajectory: time-ordered (t_us, x, y) samples.
+#[derive(Debug, Clone, Default)]
+pub struct CornerTrack {
+    /// Sample timestamps (µs), ascending.
+    pub t_us: Vec<u64>,
+    /// Sub-pixel x per sample.
+    pub x: Vec<f32>,
+    /// Sub-pixel y per sample.
+    pub y: Vec<f32>,
+}
+
+impl CornerTrack {
+    /// Interpolated position at `t` (clamped at the ends); `None` if the
+    /// track is empty or `t` is outside the track by more than `slack_us`.
+    pub fn position_at(&self, t: u64, slack_us: u64) -> Option<(f32, f32)> {
+        if self.t_us.is_empty() {
+            return None;
+        }
+        let first = self.t_us[0];
+        let last = *self.t_us.last().unwrap();
+        if t + slack_us < first || t > last + slack_us {
+            return None;
+        }
+        let i = match self.t_us.binary_search(&t) {
+            Ok(i) => return Some((self.x[i], self.y[i])),
+            Err(i) => i,
+        };
+        if i == 0 {
+            return Some((self.x[0], self.y[0]));
+        }
+        if i >= self.t_us.len() {
+            return Some((*self.x.last().unwrap(), *self.y.last().unwrap()));
+        }
+        let (t0, t1) = (self.t_us[i - 1], self.t_us[i]);
+        let f = if t1 > t0 { (t - t0) as f32 / (t1 - t0) as f32 } else { 0.0 };
+        Some((
+            self.x[i - 1] + f * (self.x[i] - self.x[i - 1]),
+            self.y[i - 1] + f * (self.y[i] - self.y[i - 1]),
+        ))
+    }
+}
+
+/// Full ground truth of a scene: all corner tracks.
+#[derive(Debug, Clone, Default)]
+pub struct GroundTruth {
+    /// One track per polygon vertex.
+    pub tracks: Vec<CornerTrack>,
+}
+
+impl GroundTruth {
+    /// Is there a true corner within `radius_px` of `(x, y)` at time `t`?
+    pub fn near_corner(&self, x: f32, y: f32, t: u64, radius_px: f32) -> bool {
+        let r2 = radius_px * radius_px;
+        self.tracks.iter().any(|tr| {
+            tr.position_at(t, 2_000)
+                .map(|(cx, cy)| {
+                    let dx = cx - x;
+                    let dy = cy - y;
+                    dx * dx + dy * dy <= r2
+                })
+                .unwrap_or(false)
+        })
+    }
+
+    /// Label a batch of events: `true` = corner event.
+    pub fn label_events(&self, events: &[Event], radius_px: f32) -> Vec<bool> {
+        events
+            .iter()
+            .map(|e| self.near_corner(e.x as f32, e.y as f32, e.t, radius_px))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn track() -> CornerTrack {
+        CornerTrack {
+            t_us: vec![0, 1000, 2000],
+            x: vec![10.0, 20.0, 30.0],
+            y: vec![5.0, 5.0, 15.0],
+        }
+    }
+
+    #[test]
+    fn interpolates_linearly() {
+        let tr = track();
+        let (x, y) = tr.position_at(500, 0).unwrap();
+        assert!((x - 15.0).abs() < 1e-5 && (y - 5.0).abs() < 1e-5);
+        let (x, y) = tr.position_at(1500, 0).unwrap();
+        assert!((x - 25.0).abs() < 1e-5 && (y - 10.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn exact_sample_hit() {
+        let tr = track();
+        assert_eq!(tr.position_at(1000, 0).unwrap(), (20.0, 5.0));
+    }
+
+    #[test]
+    fn clamps_within_slack_rejects_beyond() {
+        let tr = track();
+        assert_eq!(tr.position_at(2100, 500).unwrap(), (30.0, 15.0));
+        assert!(tr.position_at(10_000, 500).is_none());
+    }
+
+    #[test]
+    fn near_corner_radius() {
+        let gt = GroundTruth { tracks: vec![track()] };
+        assert!(gt.near_corner(10.5, 5.0, 0, 1.0));
+        assert!(!gt.near_corner(14.0, 5.0, 0, 1.0));
+        assert!(gt.near_corner(14.0, 5.0, 0, 5.0));
+    }
+
+    #[test]
+    fn label_events_matches_near_corner() {
+        let gt = GroundTruth { tracks: vec![track()] };
+        let evs = vec![Event::on(10, 5, 0), Event::on(60, 60, 0), Event::on(20, 5, 1000)];
+        assert_eq!(gt.label_events(&evs, 2.0), vec![true, false, true]);
+    }
+
+    #[test]
+    fn empty_ground_truth_labels_all_false() {
+        let gt = GroundTruth::default();
+        let evs = vec![Event::on(1, 1, 0)];
+        assert_eq!(gt.label_events(&evs, 3.0), vec![false]);
+    }
+}

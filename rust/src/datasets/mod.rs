@@ -1,0 +1,161 @@
+//! Dataset substrate: synthetic stand-ins for the event-camera recordings
+//! the paper evaluates on (none of which ship with silicon papers).
+//!
+//! Two generator families (see DESIGN.md substitution table):
+//!
+//! * [`synthetic`] — *scene* generators: moving polygons rendered into
+//!   event streams with **exact corner ground truth** (the vertices).
+//!   Stand-ins for `shapes_dof` / `dynamic_dof` (Mueggler et al.), used by
+//!   the PR/AUC experiments (Fig. 11).
+//! * [`profiles`] — *rate-profile* generators reproducing the published
+//!   statistics (max rate, event count, duration) of the Prophesee
+//!   `driving`, `laser` and `spinner` recordings, used by the DVFS/power
+//!   experiments (Fig. 8, Table I) where only the rate time-series
+//!   matters.
+
+pub mod gt;
+pub mod profiles;
+pub mod synthetic;
+
+use crate::events::Resolution;
+
+/// The five datasets of the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DatasetKind {
+    /// Mueggler `shapes_6dof`: B&W geometric shapes, moderate motion.
+    ShapesDof,
+    /// Mueggler `dynamic_6dof`: office scene with a moving person.
+    DynamicDof,
+    /// Prophesee `driving`: car-mounted HD sensor.
+    Driving,
+    /// Prophesee `laser`: laser-pointer spot, very high instantaneous rate.
+    Laser,
+    /// Prophesee `spinner`: rotating disk.
+    Spinner,
+}
+
+impl DatasetKind {
+    /// All five, in the paper's Table I order.
+    pub const ALL: [DatasetKind; 5] = [
+        DatasetKind::Driving,
+        DatasetKind::Laser,
+        DatasetKind::Spinner,
+        DatasetKind::DynamicDof,
+        DatasetKind::ShapesDof,
+    ];
+
+    /// Display name matching the paper.
+    pub fn name(self) -> &'static str {
+        match self {
+            DatasetKind::ShapesDof => "shapes_dof",
+            DatasetKind::DynamicDof => "dynamic_dof",
+            DatasetKind::Driving => "driving",
+            DatasetKind::Laser => "laser",
+            DatasetKind::Spinner => "spinner",
+        }
+    }
+
+    /// Published stream statistics this generator must reproduce
+    /// (Table I: max event rate in Meps, total events in M; duration is
+    /// derived from the power-model fit, see DESIGN.md).
+    pub fn spec(self) -> DatasetSpec {
+        match self {
+            DatasetKind::Driving => DatasetSpec {
+                kind: self,
+                res: Resolution::HD720,
+                duration_s: 12.5,
+                peak_rate: 25.9e6,
+                events: 111.4e6,
+            },
+            DatasetKind::Laser => DatasetSpec {
+                kind: self,
+                res: Resolution::HD720,
+                duration_s: 1.5,
+                peak_rate: 39.5e6,
+                events: 57.6e6,
+            },
+            DatasetKind::Spinner => DatasetSpec {
+                kind: self,
+                res: Resolution::HD720,
+                duration_s: 5.0,
+                peak_rate: 11.4e6,
+                events: 54.1e6,
+            },
+            DatasetKind::DynamicDof => DatasetSpec {
+                kind: self,
+                res: Resolution::DAVIS240,
+                duration_s: 61.0,
+                peak_rate: 4.5e6,
+                events: 57.1e6,
+            },
+            DatasetKind::ShapesDof => DatasetSpec {
+                kind: self,
+                res: Resolution::DAVIS240,
+                duration_s: 62.5,
+                peak_rate: 1.9e6,
+                events: 18.0e6,
+            },
+        }
+    }
+}
+
+/// Published statistics of one dataset.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DatasetSpec {
+    /// Which dataset.
+    pub kind: DatasetKind,
+    /// Sensor resolution.
+    pub res: Resolution,
+    /// Recording length (s).
+    pub duration_s: f64,
+    /// Peak event rate (events/s) over 10 ms windows.
+    pub peak_rate: f64,
+    /// Total events in the recording.
+    pub events: f64,
+}
+
+impl DatasetSpec {
+    /// Mean event rate (events/s).
+    pub fn mean_rate(&self) -> f64 {
+        self.events / self.duration_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_match_table1() {
+        let d = DatasetKind::Driving.spec();
+        assert_eq!(d.events, 111.4e6);
+        assert_eq!(d.peak_rate, 25.9e6);
+        let l = DatasetKind::Laser.spec();
+        assert_eq!(l.events, 57.6e6);
+        let s = DatasetKind::ShapesDof.spec();
+        assert_eq!(s.events, 18.0e6);
+        assert_eq!(s.peak_rate, 1.9e6);
+    }
+
+    #[test]
+    fn mean_rate_below_peak() {
+        for kind in DatasetKind::ALL {
+            let s = kind.spec();
+            assert!(
+                s.mean_rate() <= s.peak_rate * 1.001,
+                "{}: mean {} > peak {}",
+                kind.name(),
+                s.mean_rate(),
+                s.peak_rate
+            );
+        }
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut names: Vec<_> = DatasetKind::ALL.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 5);
+    }
+}

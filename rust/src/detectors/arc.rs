@@ -1,0 +1,147 @@
+//! ARC* baseline (Alzugaray & Chli 2018): arc-angle test on the SAE.
+//!
+//! Like eFAST it inspects the radius-3 Bresenham circle, but instead of a
+//! fixed segment-length window it finds the *longest* contiguous arc of
+//! pixels newer than all others and classifies the event as a corner when
+//! that arc subtends an angle in [A_min, 180°] (the paper's ~90° rule:
+//! a corner's wavefront covers about a quarter-to-half of the circle;
+//! a passing edge covers more than half, noise covers less).
+
+use crate::events::{Event, Resolution};
+
+use super::fast::CIRCLE3;
+use super::sae::Sae;
+use super::EventScorer;
+
+/// ARC* detector.
+#[derive(Debug)]
+pub struct Arc {
+    sae: Sae,
+    /// Minimum arc length (pixels of the 16-px circle) to call a corner.
+    pub min_arc: usize,
+    /// Maximum arc length.
+    pub max_arc: usize,
+}
+
+impl Arc {
+    /// Defaults: arcs of 4..8 sixteenths, i.e. 90°..180°.
+    pub fn new(res: Resolution) -> Self {
+        Self { sae: Sae::new(res), min_arc: 4, max_arc: 8 }
+    }
+
+    /// Length of the longest contiguous arc that strictly dominates (is
+    /// newer than) every pixel outside it; 0 if none exists.
+    pub fn longest_dominant_arc(ts: &[Option<u64>]) -> usize {
+        let n = ts.len();
+        let mut best = 0usize;
+        for len in (1..n).rev() {
+            'start: for s in 0..n {
+                let mut min_in = u64::MAX;
+                for k in 0..len {
+                    match ts[(s + k) % n] {
+                        Some(t) => min_in = min_in.min(t),
+                        None => continue 'start,
+                    }
+                }
+                for (k, t) in ts.iter().enumerate() {
+                    let inside = (k + n - s) % n < len;
+                    if !inside {
+                        if let Some(t) = t {
+                            if *t >= min_in {
+                                continue 'start;
+                            }
+                        }
+                    }
+                }
+                best = len;
+                return best;
+            }
+        }
+        best
+    }
+}
+
+impl EventScorer for Arc {
+    fn score(&mut self, ev: &Event) -> f64 {
+        self.sae.update(ev);
+        let ts: Vec<Option<u64>> = CIRCLE3
+            .iter()
+            .map(|&(dx, dy)| self.sae.last_t(ev.x as i32 + dx, ev.y as i32 + dy, ev.p))
+            .collect();
+        let arc = Self::longest_dominant_arc(&ts);
+        if (self.min_arc..=self.max_arc).contains(&arc) {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "ARC*"
+    }
+
+    fn ops_per_event(&self) -> f64 {
+        // 16 SAE loads + longest-arc scan (~16 starts * 16 compares * ~8 lens)
+        16.0 + 16.0 * 16.0 * 8.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn circle_with_newest(positions: &[usize]) -> Vec<Option<u64>> {
+        let mut ts = vec![Some(10u64); 16];
+        for (i, &p) in positions.iter().enumerate() {
+            ts[p] = Some(100 + i as u64);
+        }
+        ts
+    }
+
+    #[test]
+    fn longest_arc_simple() {
+        let ts = circle_with_newest(&[0, 1, 2, 3]);
+        assert_eq!(Arc::longest_dominant_arc(&ts), 4);
+    }
+
+    #[test]
+    fn longest_arc_wrapping() {
+        let ts = circle_with_newest(&[14, 15, 0, 1, 2]);
+        assert_eq!(Arc::longest_dominant_arc(&ts), 5);
+    }
+
+    #[test]
+    fn no_arc_when_flat_or_empty() {
+        assert_eq!(Arc::longest_dominant_arc(&vec![Some(5u64); 16]), 0);
+        assert_eq!(Arc::longest_dominant_arc(&vec![None; 16]), 0);
+    }
+
+    #[test]
+    fn edge_like_arc_rejected_corner_arc_accepted() {
+        let res = Resolution::TEST64;
+        let mut d = Arc::new(res);
+        // corner-ish: 5 of 16 newest
+        let ts = circle_with_newest(&[0, 1, 2, 3, 4]);
+        let arc = Arc::longest_dominant_arc(&ts);
+        assert!((d.min_arc..=d.max_arc).contains(&arc));
+        // edge-like: 12 of 16 newest -> rejected
+        let ts = circle_with_newest(&[0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11]);
+        let arc = Arc::longest_dominant_arc(&ts);
+        assert!(arc > d.max_arc);
+        // noise-like: 2 newest -> rejected
+        let ts = circle_with_newest(&[0, 1]);
+        let arc = Arc::longest_dominant_arc(&ts);
+        assert!(arc < d.min_arc);
+        // plumb through score() once for the state machinery
+        let _ = d.score(&Event::on(30, 30, 1));
+    }
+
+    #[test]
+    fn score_is_binary() {
+        let mut d = Arc::new(Resolution::TEST64);
+        for i in 0..50u64 {
+            let s = d.score(&Event::on((i % 60) as u16, (i % 40) as u16, i));
+            assert!(s == 0.0 || s == 1.0);
+        }
+    }
+}

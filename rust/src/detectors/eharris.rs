@@ -1,0 +1,195 @@
+//! eHarris baseline (Vasco et al. 2016): a full Harris score computed *per
+//! event* over a binary surface of the most recent events.
+//!
+//! Accuracy is good, but the per-event cost — two 5x5 Sobel stencils plus
+//! a windowed structure tensor over an LxL neighbourhood — is what caps
+//! its throughput at well under 1 Meps in Fig. 1(b).
+
+use std::collections::VecDeque;
+
+use crate::events::{Event, Resolution};
+
+use super::EventScorer;
+
+/// Window size of the binary surface neighbourhood (9x9 as in the paper's
+/// reference implementation: 5x5 Sobel valid over a 9x9 patch leaves a 5x5
+/// gradient patch for the structure tensor).
+const L: usize = 9;
+/// Gradient patch side after valid 5x5 Sobel.
+const G: usize = L - 4;
+
+/// 5x5 Sobel taps (binomial smooth x central difference), row-major.
+fn sobel5() -> ([[f32; 5]; 5], [[f32; 5]; 5]) {
+    let smooth = [1.0f32, 4.0, 6.0, 4.0, 1.0];
+    let deriv = [-1.0f32, -2.0, 0.0, 2.0, 1.0];
+    let mut kx = [[0.0; 5]; 5];
+    let mut ky = [[0.0; 5]; 5];
+    for r in 0..5 {
+        for c in 0..5 {
+            kx[r][c] = smooth[r] / 16.0 * deriv[c] / 6.0;
+            ky[r][c] = deriv[r] / 6.0 * smooth[c] / 16.0;
+        }
+    }
+    (kx, ky)
+}
+
+/// eHarris detector state: binary surface of the last `window` events.
+#[derive(Debug)]
+pub struct EHarris {
+    res: Resolution,
+    /// Per-pixel flag: is this pixel among the most recent `window` events?
+    surface: Vec<u8>,
+    /// FIFO of the active pixels.
+    fifo: VecDeque<usize>,
+    /// Number of events kept on the binary surface.
+    window: usize,
+    kx: [[f32; 5]; 5],
+    ky: [[f32; 5]; 5],
+    /// Harris k.
+    k: f32,
+}
+
+impl EHarris {
+    /// Detector with the standard 2000-event binary surface.
+    pub fn new(res: Resolution) -> Self {
+        let (kx, ky) = sobel5();
+        Self {
+            res,
+            surface: vec![0; res.pixels()],
+            fifo: VecDeque::with_capacity(2001),
+            window: 2000,
+            kx,
+            ky,
+            k: 0.04,
+        }
+    }
+
+    /// Harris response at `(ex, ey)` over the binary surface.
+    fn harris_at(&self, ex: i32, ey: i32) -> f64 {
+        let half = (L as i32 - 1) / 2;
+        // gather the LxL binary patch (zeros outside the sensor)
+        let mut patch = [[0.0f32; L]; L];
+        for (r, row) in patch.iter_mut().enumerate() {
+            for (c, v) in row.iter_mut().enumerate() {
+                let x = ex - half + c as i32;
+                let y = ey - half + r as i32;
+                if self.res.contains(x, y) {
+                    *v = self.surface[self.res.index(x as u16, y as u16)] as f32;
+                }
+            }
+        }
+        // valid 5x5 Sobel -> GxG gradients
+        let mut ix = [[0.0f32; G]; G];
+        let mut iy = [[0.0f32; G]; G];
+        for r in 0..G {
+            for c in 0..G {
+                let mut sx = 0.0;
+                let mut sy = 0.0;
+                for kr in 0..5 {
+                    for kc in 0..5 {
+                        let v = patch[r + kr][c + kc];
+                        sx += v * self.kx[kr][kc];
+                        sy += v * self.ky[kr][kc];
+                    }
+                }
+                ix[r][c] = sx;
+                iy[r][c] = sy;
+            }
+        }
+        // structure tensor over the whole GxG patch (uniform window)
+        let (mut sxx, mut syy, mut sxy) = (0.0f32, 0.0f32, 0.0f32);
+        for r in 0..G {
+            for c in 0..G {
+                sxx += ix[r][c] * ix[r][c];
+                syy += iy[r][c] * iy[r][c];
+                sxy += ix[r][c] * iy[r][c];
+            }
+        }
+        (sxx * syy - sxy * sxy - self.k * (sxx + syy) * (sxx + syy)) as f64
+    }
+}
+
+impl EventScorer for EHarris {
+    fn score(&mut self, ev: &Event) -> f64 {
+        let i = self.res.index(ev.x, ev.y);
+        if self.surface[i] == 0 {
+            self.surface[i] = 1;
+            self.fifo.push_back(i);
+            if self.fifo.len() > self.window {
+                let old = self.fifo.pop_front().unwrap();
+                self.surface[old] = 0;
+            }
+        }
+        self.harris_at(ev.x as i32, ev.y as i32)
+    }
+
+    fn name(&self) -> &'static str {
+        "eHarris"
+    }
+
+    fn ops_per_event(&self) -> f64 {
+        // Sobel: G*G*(2*25 MACs) = 25*50; tensor: G*G*3 MACs + score ~ 10.
+        let sobel = (G * G) as f64 * 50.0;
+        let tensor = (G * G) as f64 * 3.0;
+        2.0 * sobel / 2.0 + sobel + tensor + 10.0 // gather + 2 stencils + tensor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corner_scores_above_edge_and_noise() {
+        let mut d = EHarris::new(Resolution::TEST64);
+        // draw an L-corner: horizontal + vertical strokes meeting at (30,30)
+        for i in 0..12u16 {
+            d.score(&Event::on(30 - i, 30, i as u64));
+            d.score(&Event::on(30, 30 - i, 100 + i as u64));
+        }
+        let corner = d.score(&Event::on(30, 30, 1000));
+        let edge = d.score(&Event::on(24, 30, 1001));
+        let flat = d.score(&Event::on(50, 50, 1002));
+        assert!(corner > edge, "corner {corner} <= edge {edge}");
+        assert!(corner > flat, "corner {corner} <= flat {flat}");
+    }
+
+    #[test]
+    fn window_evicts_oldest() {
+        let mut d = EHarris::new(Resolution::TEST64);
+        d.window = 3;
+        d.score(&Event::on(1, 1, 0));
+        d.score(&Event::on(2, 2, 1));
+        d.score(&Event::on(3, 3, 2));
+        d.score(&Event::on(4, 4, 3)); // evicts (1,1)
+        assert_eq!(d.surface[d.res.index(1, 1)], 0);
+        assert_eq!(d.surface[d.res.index(4, 4)], 1);
+        assert_eq!(d.fifo.len(), 3);
+    }
+
+    #[test]
+    fn duplicate_pixel_not_double_counted() {
+        let mut d = EHarris::new(Resolution::TEST64);
+        d.score(&Event::on(5, 5, 0));
+        d.score(&Event::on(5, 5, 1));
+        assert_eq!(d.fifo.len(), 1);
+    }
+
+    #[test]
+    fn throughput_well_below_conventional_luvharris() {
+        // Fig. 1(b): eHarris max throughput is far below the 2.6 Meps of
+        // the conventional TOS update.
+        let d = EHarris::new(Resolution::DAVIS240);
+        let t = super::super::max_throughput_eps(d.ops_per_event(), 500e6);
+        assert!(t < 1.0e6, "eHarris throughput {t}");
+        assert!(t > 0.05e6, "implausibly slow {t}");
+    }
+
+    #[test]
+    fn border_events_do_not_panic() {
+        let mut d = EHarris::new(Resolution::TEST64);
+        for (x, y) in [(0, 0), (63, 63), (0, 63), (63, 0)] {
+            d.score(&Event::on(x, y, 0));
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! The luvHarris-style LUT corner detector (paper Fig. 1(a)): events are
+//! tagged by looking up the last frame-by-frame Harris response map, which
+//! a decoupled worker recomputes "as fast as possible" from the TOS.
+//!
+//! The lookup takes the 3x3 neighbourhood max so that an event landing one
+//! pixel off a response peak (sub-pixel corner motion between LUT
+//! refreshes) still scores high — the same trick luvHarris uses.
+
+use crate::events::{Event, Resolution};
+
+use super::EventScorer;
+
+/// Scoring LUT + per-event tagger.
+#[derive(Debug, Clone)]
+pub struct HarrisDetector {
+    res: Resolution,
+    /// Latest Harris response map in [0,1] (row-major), all-zero until the
+    /// first refresh.
+    lut: Vec<f32>,
+    /// LUT refreshes seen.
+    pub refreshes: u64,
+    /// Events scored.
+    pub scored: u64,
+}
+
+impl HarrisDetector {
+    /// Detector with an all-zero LUT.
+    pub fn new(res: Resolution) -> Self {
+        Self { res, lut: vec![0.0; res.pixels()], refreshes: 0, scored: 0 }
+    }
+
+    /// Install a freshly computed response map.
+    pub fn refresh(&mut self, lut: &[f32]) {
+        assert_eq!(lut.len(), self.res.pixels(), "LUT size mismatch");
+        self.lut.copy_from_slice(lut);
+        self.refreshes += 1;
+    }
+
+    /// Current LUT (for rendering / inspection).
+    pub fn lut(&self) -> &[f32] {
+        &self.lut
+    }
+
+    /// Score = 3x3 neighbourhood max of the LUT at the event pixel.
+    #[inline]
+    pub fn score_at(&self, x: u16, y: u16) -> f64 {
+        let w = self.res.width as i32;
+        let h = self.res.height as i32;
+        let mut best = 0.0f32;
+        for dy in -1i32..=1 {
+            let yy = y as i32 + dy;
+            if yy < 0 || yy >= h {
+                continue;
+            }
+            let row = yy as usize * w as usize;
+            for dx in -1i32..=1 {
+                let xx = x as i32 + dx;
+                if xx < 0 || xx >= w {
+                    continue;
+                }
+                best = best.max(self.lut[row + xx as usize]);
+            }
+        }
+        best as f64
+    }
+}
+
+impl EventScorer for HarrisDetector {
+    fn score(&mut self, ev: &Event) -> f64 {
+        self.scored += 1;
+        self.score_at(ev.x, ev.y)
+    }
+
+    fn name(&self) -> &'static str {
+        "luvHarris-LUT"
+    }
+
+    fn ops_per_event(&self) -> f64 {
+        // 9 loads + 9 max ops: the tag path is trivially cheap — the cost
+        // of luvHarris is the *TOS update*, which is exactly the paper's
+        // point.
+        18.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_lut_scores_zero() {
+        let mut d = HarrisDetector::new(Resolution::TEST64);
+        assert_eq!(d.score(&Event::on(10, 10, 0)), 0.0);
+    }
+
+    #[test]
+    fn neighbourhood_max_lookup() {
+        let mut d = HarrisDetector::new(Resolution::TEST64);
+        let mut lut = vec![0.0f32; 64 * 64];
+        lut[20 * 64 + 20] = 0.8;
+        d.refresh(&lut);
+        // exact hit
+        assert!((d.score_at(20, 20) - 0.8).abs() < 1e-6);
+        // one pixel off still sees the peak
+        assert!((d.score_at(21, 20) - 0.8).abs() < 1e-6);
+        assert!((d.score_at(21, 21) - 0.8).abs() < 1e-6);
+        // two pixels off does not
+        assert_eq!(d.score_at(22, 22), 0.0);
+    }
+
+    #[test]
+    fn border_lookup_is_safe() {
+        let mut d = HarrisDetector::new(Resolution::TEST64);
+        let mut lut = vec![0.0f32; 64 * 64];
+        lut[0] = 0.5;
+        d.refresh(&lut);
+        assert!((d.score_at(0, 0) - 0.5).abs() < 1e-6);
+        assert!((d.score_at(63, 63) - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn refresh_replaces_lut() {
+        let mut d = HarrisDetector::new(Resolution::TEST64);
+        d.refresh(&vec![0.3f32; 64 * 64]);
+        d.refresh(&vec![0.6f32; 64 * 64]);
+        assert_eq!(d.refreshes, 2);
+        assert!((d.score_at(5, 5) - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "LUT size mismatch")]
+    fn refresh_validates_size() {
+        let mut d = HarrisDetector::new(Resolution::TEST64);
+        d.refresh(&[0.0; 10]);
+    }
+}

@@ -1,0 +1,56 @@
+//! Event-camera corner detectors: the paper's luvHarris-style LUT detector
+//! plus every baseline it is compared against (Sec. II-B).
+//!
+//! * [`harris`]  — the system under study: per-event lookup into the last
+//!   FBF-computed Harris response map of the TOS.
+//! * [`eharris`] — Vasco et al.: full Harris computed *per event* on a
+//!   binary surface (accurate, prohibitively slow — the Fig. 1(b) anchor).
+//! * [`fast`]    — Mueggler et al. eFAST: circular-segment test on the SAE.
+//! * [`arc`]     — Alzugaray & Chli ARC*: arc-angle test on the SAE.
+//!
+//! All detectors implement [`EventScorer`] so the PR harness can sweep them
+//! uniformly.
+
+pub mod arc;
+pub mod eharris;
+pub mod fast;
+pub mod harris;
+pub mod sae;
+
+use crate::events::Event;
+
+/// A detector that assigns each event a continuous corner score.
+///
+/// Binary detectors (FAST/ARC) return {0, 1}; continuous ones return the
+/// Harris response.  Higher = more corner-like.
+pub trait EventScorer {
+    /// Process the event (update internal surfaces) and return its score.
+    fn score(&mut self, ev: &Event) -> f64;
+
+    /// Detector name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Estimated datapath operations per event (drives the Fig. 1(b)
+    /// throughput model for software/digital implementations).
+    fn ops_per_event(&self) -> f64;
+}
+
+/// Throughput model for a digital/software implementation executing
+/// `ops_per_event` at `clock_hz` with one op per cycle (the conservative
+/// single-issue model the paper's Fig. 1(b) uses for eHarris/luvHarris).
+pub fn max_throughput_eps(ops_per_event: f64, clock_hz: f64) -> f64 {
+    clock_hz / ops_per_event.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_model_sanity() {
+        // 196 ops at 500 MHz = 2.55 Meps (conventional luvHarris TOS anchor)
+        let t = max_throughput_eps(196.0, 500e6);
+        assert!((t / 1e6 - 2.55).abs() < 0.01);
+        assert_eq!(max_throughput_eps(0.0, 500e6), 500e6);
+    }
+}

@@ -1,0 +1,133 @@
+//! Surface of Active Events (SAE): per-pixel last-event timestamps, split
+//! by polarity — the substrate of the eFAST / ARC baselines and the
+//! Fig. 11(a) visualization.
+
+use crate::events::{Event, Polarity, Resolution};
+
+/// Polarity-split timestamp surface.
+#[derive(Debug, Clone)]
+pub struct Sae {
+    res: Resolution,
+    /// Last ON timestamp + 1 per pixel (0 = never).
+    on: Vec<u64>,
+    /// Last OFF timestamp + 1 per pixel (0 = never).
+    off: Vec<u64>,
+}
+
+impl Sae {
+    /// Fresh surface.
+    pub fn new(res: Resolution) -> Self {
+        Self { res, on: vec![0; res.pixels()], off: vec![0; res.pixels()] }
+    }
+
+    /// Sensor geometry.
+    pub fn resolution(&self) -> Resolution {
+        self.res
+    }
+
+    /// Record an event.
+    #[inline]
+    pub fn update(&mut self, ev: &Event) {
+        let i = self.res.index(ev.x, ev.y);
+        match ev.p {
+            Polarity::On => self.on[i] = ev.t + 1,
+            Polarity::Off => self.off[i] = ev.t + 1,
+        }
+    }
+
+    /// Timestamp of the most recent event of `pol` at `(x, y)`;
+    /// `None` if that pixel never fired with that polarity.
+    #[inline]
+    pub fn last_t(&self, x: i32, y: i32, pol: Polarity) -> Option<u64> {
+        if !self.res.contains(x, y) {
+            return None;
+        }
+        let i = self.res.index(x as u16, y as u16);
+        let v = match pol {
+            Polarity::On => self.on[i],
+            Polarity::Off => self.off[i],
+        };
+        if v == 0 {
+            None
+        } else {
+            Some(v - 1)
+        }
+    }
+
+    /// Timestamp of the most recent event of either polarity.
+    #[inline]
+    pub fn last_t_any(&self, x: i32, y: i32) -> Option<u64> {
+        if !self.res.contains(x, y) {
+            return None;
+        }
+        let i = self.res.index(x as u16, y as u16);
+        let v = self.on[i].max(self.off[i]);
+        if v == 0 {
+            None
+        } else {
+            Some(v - 1)
+        }
+    }
+
+    /// Render the any-polarity SAE as an 8-bit image: newest = 255, pixels
+    /// older than `window_us` (or never fired) = 0 (Fig. 11(a)).
+    pub fn render_u8(&self, now_us: u64, window_us: u64) -> Vec<u8> {
+        let (w, h) = (self.res.width as usize, self.res.height as usize);
+        let mut out = vec![0u8; w * h];
+        for y in 0..h {
+            for x in 0..w {
+                if let Some(t) = self.last_t_any(x as i32, y as i32) {
+                    let age = now_us.saturating_sub(t);
+                    if age < window_us {
+                        let v = 255.0 * (1.0 - age as f64 / window_us as f64);
+                        out[y * w + x] = v as u8;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_per_polarity() {
+        let mut s = Sae::new(Resolution::TEST64);
+        s.update(&Event::on(3, 4, 100));
+        s.update(&Event::off(3, 4, 200));
+        assert_eq!(s.last_t(3, 4, Polarity::On), Some(100));
+        assert_eq!(s.last_t(3, 4, Polarity::Off), Some(200));
+        assert_eq!(s.last_t_any(3, 4), Some(200));
+        assert_eq!(s.last_t(5, 5, Polarity::On), None);
+    }
+
+    #[test]
+    fn t_zero_event_is_recorded() {
+        let mut s = Sae::new(Resolution::TEST64);
+        s.update(&Event::on(0, 0, 0));
+        assert_eq!(s.last_t(0, 0, Polarity::On), Some(0));
+    }
+
+    #[test]
+    fn out_of_bounds_returns_none() {
+        let s = Sae::new(Resolution::TEST64);
+        assert_eq!(s.last_t(-1, 0, Polarity::On), None);
+        assert_eq!(s.last_t(64, 0, Polarity::On), None);
+        assert_eq!(s.last_t_any(0, 64), None);
+    }
+
+    #[test]
+    fn render_fades_with_age() {
+        let mut s = Sae::new(Resolution::TEST64);
+        s.update(&Event::on(1, 1, 0));
+        s.update(&Event::on(2, 2, 90_000));
+        let img = s.render_u8(100_000, 100_000);
+        let old = img[64 + 1];
+        let new = img[2 * 64 + 2];
+        assert!(new > old, "new {new} old {old}");
+        assert_eq!(img[0], 0);
+    }
+}

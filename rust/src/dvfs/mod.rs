@@ -1,0 +1,320 @@
+//! Dynamic Voltage & Frequency Scaling — paper Sec. III-B & Fig. 2(b).
+//!
+//! A moving-window event-rate monitor built from **three round-robin
+//! counters**: each counter integrates events for `TW_DVFS / 2`; the
+//! pointer advances circularly (`ptr <- (ptr + 1) mod 3`), so at any time
+//! one counter is filling while the other two hold the last two completed
+//! half-windows — their sum is the event count of the trailing `TW_DVFS`
+//! window with 50 % stride, exactly the paper's scheme.
+//!
+//! The measured rate indexes a voltage/frequency LUT derived from the NMC
+//! timing model: the controller picks the *lowest* voltage whose maximum
+//! sustainable event rate still exceeds the measured rate by a headroom
+//! factor.
+
+
+
+
+use crate::nmc::timing::TimingModel;
+
+/// DVFS parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DvfsConfig {
+    /// Moving window TW_DVFS (µs). Paper: 10 ms for driving datasets.
+    pub tw_us: u64,
+    /// Counter bit width (counters saturate). Paper: 20 bits.
+    pub counter_bits: u32,
+    /// Headroom factor: required `max_rate(V) >= headroom * measured`.
+    pub headroom: f64,
+    /// Voltage grid (ascending), defaults to 0.6..=1.2 V in 50 mV steps.
+    pub grid_mv: [u32; 13],
+}
+
+impl Default for DvfsConfig {
+    fn default() -> Self {
+        Self {
+            tw_us: 10_000,
+            counter_bits: 20,
+            headroom: 1.2,
+            grid_mv: [600, 650, 700, 750, 800, 850, 900, 950, 1000, 1050, 1100, 1150, 1200],
+        }
+    }
+}
+
+/// One LUT row: measured-rate ceiling -> operating point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatingPoint {
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// NMC clock at this voltage (Hz).
+    pub clock_hz: f64,
+    /// Max sustainable event rate at this voltage (events/s).
+    pub max_rate: f64,
+}
+
+/// Build the V/f LUT from the timing model (ascending voltage).
+pub fn build_lut(cfg: &DvfsConfig) -> Vec<OperatingPoint> {
+    cfg.grid_mv
+        .iter()
+        .map(|&mv| {
+            let vdd = mv as f64 / 1000.0;
+            let t = TimingModel::at(vdd);
+            OperatingPoint { vdd, clock_hz: t.clock_hz(), max_rate: t.max_event_rate() }
+        })
+        .collect()
+}
+
+/// The three-counter round-robin rate monitor + LUT controller.
+#[derive(Debug, Clone)]
+pub struct DvfsController {
+    cfg: DvfsConfig,
+    lut: Vec<OperatingPoint>,
+    counters: [u32; 3],
+    /// Which counter is currently filling.
+    ptr: usize,
+    /// End time (µs) of the current half-window.
+    half_end_us: u64,
+    /// Completed half-window counts (the two not pointed at are valid
+    /// after two rotations).
+    rotations: u64,
+    /// Currently selected operating point (index into lut).
+    current: usize,
+    /// Voltage switches performed (telemetry).
+    pub switches: u64,
+}
+
+impl DvfsController {
+    /// Controller starting at the highest voltage (safe default until the
+    /// first full window completes).
+    pub fn new(cfg: DvfsConfig) -> Self {
+        let lut = build_lut(&cfg);
+        let current = lut.len() - 1;
+        Self {
+            half_end_us: cfg.tw_us / 2,
+            cfg,
+            lut,
+            counters: [0; 3],
+            ptr: 0,
+            rotations: 0,
+            current,
+            switches: 0,
+        }
+    }
+
+    /// The LUT (for reporting).
+    pub fn lut(&self) -> &[OperatingPoint] {
+        &self.lut
+    }
+
+    /// Currently selected operating point.
+    #[inline]
+    pub fn operating_point(&self) -> OperatingPoint {
+        self.lut[self.current]
+    }
+
+    /// Estimated event rate (events/s) from the last two completed
+    /// half-windows; `None` until two rotations have happened.
+    pub fn estimated_rate(&self) -> Option<f64> {
+        if self.rotations < 2 {
+            return None;
+        }
+        let a = self.counters[(self.ptr + 1) % 3] as f64;
+        let b = self.counters[(self.ptr + 2) % 3] as f64;
+        Some((a + b) / (self.cfg.tw_us as f64 * 1e-6))
+    }
+
+    /// Feed one event timestamp (µs). Returns `Some(new_point)` when the
+    /// controller switches voltage.
+    pub fn on_event(&mut self, t_us: u64) -> Option<OperatingPoint> {
+        let mut switched = None;
+        // close any half-windows the stream has moved past
+        while t_us >= self.half_end_us {
+            self.rotate();
+            if let Some(op) = self.retarget() {
+                switched = Some(op);
+            }
+        }
+        let max = (1u64 << self.cfg.counter_bits) - 1;
+        let c = &mut self.counters[self.ptr];
+        if (*c as u64) < max {
+            *c += 1;
+        }
+        switched
+    }
+
+    /// Bulk path for profile-driven integration (Table I scale): account
+    /// `count` events in the current half-window, then rotate past every
+    /// half-window boundary up to `t_end_us`.  Equivalent to feeding the
+    /// events one by one when they all fall within the current half-window
+    /// — which is how [`crate::power::integrate`] steps time.
+    pub fn advance_window(&mut self, t_end_us: u64, count: u64) -> Option<OperatingPoint> {
+        let max = (1u64 << self.cfg.counter_bits) - 1;
+        let c = &mut self.counters[self.ptr];
+        *c = (*c as u64).saturating_add(count).min(max) as u32;
+        let mut switched = None;
+        while self.half_end_us <= t_end_us {
+            self.rotate();
+            if let Some(op) = self.retarget() {
+                switched = Some(op);
+            }
+        }
+        switched
+    }
+
+    /// Advance the round-robin pointer (a half-window boundary).
+    fn rotate(&mut self) {
+        self.ptr = (self.ptr + 1) % 3;
+        self.counters[self.ptr] = 0;
+        self.half_end_us += self.cfg.tw_us / 2;
+        self.rotations += 1;
+    }
+
+    /// Pick the lowest voltage sustaining the estimated rate with headroom.
+    fn retarget(&mut self) -> Option<OperatingPoint> {
+        let rate = self.estimated_rate()?;
+        let need = rate * self.cfg.headroom;
+        let idx = self
+            .lut
+            .iter()
+            .position(|op| op.max_rate >= need)
+            .unwrap_or(self.lut.len() - 1);
+        if idx != self.current {
+            self.current = idx;
+            self.switches += 1;
+            return Some(self.lut[idx]);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_is_monotone() {
+        let lut = build_lut(&DvfsConfig::default());
+        assert_eq!(lut.len(), 13);
+        for w in lut.windows(2) {
+            assert!(w[0].vdd < w[1].vdd);
+            assert!(w[0].max_rate < w[1].max_rate);
+            assert!(w[0].clock_hz < w[1].clock_hz);
+        }
+        // endpoints match the paper
+        assert!((lut[0].max_rate / 1e6 - 4.93).abs() < 0.1);
+        assert!((lut[12].max_rate / 1e6 - 63.1).abs() < 0.2);
+    }
+
+    #[test]
+    fn starts_at_nominal_voltage() {
+        let c = DvfsController::new(DvfsConfig::default());
+        assert!((c.operating_point().vdd - 1.2).abs() < 1e-9);
+        assert!(c.estimated_rate().is_none());
+    }
+
+    #[test]
+    fn estimates_constant_rate() {
+        let mut c = DvfsController::new(DvfsConfig::default());
+        // 1 event / 100 µs = 10 keps for 50 ms
+        for i in 0..500u64 {
+            c.on_event(i * 100);
+        }
+        let est = c.estimated_rate().unwrap();
+        assert!((est - 10_000.0).abs() / 10_000.0 < 0.05, "est {est}");
+    }
+
+    #[test]
+    fn low_rate_drops_voltage_to_minimum() {
+        let mut c = DvfsController::new(DvfsConfig::default());
+        for i in 0..1000u64 {
+            c.on_event(i * 1000); // 1 keps
+        }
+        assert!((c.operating_point().vdd - 0.6).abs() < 1e-9);
+        assert!(c.switches >= 1);
+    }
+
+    #[test]
+    fn high_rate_keeps_high_voltage() {
+        let mut c = DvfsController::new(DvfsConfig::default());
+        // 50 Meps: one event every 0.02 µs -> bursts of 50 per µs
+        let mut t = 0u64;
+        for _ in 0..2_000_000u64 {
+            c.on_event(t / 50);
+            t += 1;
+        }
+        assert!(c.operating_point().vdd > 1.1, "vdd {}", c.operating_point().vdd);
+    }
+
+    #[test]
+    fn rate_step_triggers_switch_within_one_window() {
+        let cfg = DvfsConfig::default();
+        let mut c = DvfsController::new(cfg);
+        // quiet phase: 1 keps for 100 ms -> minimum voltage
+        let mut t = 0u64;
+        for _ in 0..100 {
+            c.on_event(t);
+            t += 1000;
+        }
+        assert!((c.operating_point().vdd - 0.6).abs() < 1e-9);
+        // burst: 20 Meps
+        let mut last_switch_t = None;
+        for i in 0..400_000u64 {
+            if c.on_event(t).is_some() {
+                last_switch_t = Some(t);
+            }
+            if i % 20 == 0 {
+                t += 1; // 20 events per µs = 20 Meps
+            }
+        }
+        let up_t = last_switch_t.expect("must switch up");
+        assert!(c.operating_point().vdd >= 0.9);
+        // switch happened within ~1.5 windows of burst onset
+        assert!(up_t - 100_000 <= 15_000 + cfg.tw_us * 3 / 2, "switch at {up_t}");
+    }
+
+    #[test]
+    fn advance_window_equivalent_to_event_feed() {
+        // constant 10 keps: window path and event path settle on the same
+        // operating point and rate estimate
+        let mut by_event = DvfsController::new(DvfsConfig::default());
+        for i in 0..2000u64 {
+            by_event.on_event(i * 100);
+        }
+        let mut by_window = DvfsController::new(DvfsConfig::default());
+        let half = DvfsConfig::default().tw_us / 2;
+        let mut t = 0u64;
+        while t < 200_000 {
+            by_window.advance_window(t + half, 50); // 50 events / 5 ms
+            t += half;
+        }
+        assert_eq!(
+            by_event.operating_point().vdd,
+            by_window.operating_point().vdd
+        );
+        let (a, b) = (by_event.estimated_rate().unwrap(), by_window.estimated_rate().unwrap());
+        assert!((a - b).abs() / a < 0.05, "{a} vs {b}");
+    }
+
+    #[test]
+    fn counters_saturate_not_wrap() {
+        let cfg = DvfsConfig { counter_bits: 4, ..Default::default() };
+        let mut c = DvfsController::new(cfg);
+        for _ in 0..100 {
+            c.on_event(0);
+        }
+        assert_eq!(c.counters[c.ptr], 15);
+    }
+
+    #[test]
+    fn round_robin_pointer_rotates_mod_3() {
+        let mut c = DvfsController::new(DvfsConfig::default());
+        let tw = c.cfg.tw_us;
+        assert_eq!(c.ptr, 0);
+        c.on_event(tw / 2); // first half-window boundary
+        assert_eq!(c.ptr, 1);
+        c.on_event(tw); // second
+        assert_eq!(c.ptr, 2);
+        c.on_event(tw * 3 / 2); // third -> wraps
+        assert_eq!(c.ptr, 0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Detection-quality evaluation: precision-recall curves and AUC over
+//! threshold sweeps (paper Sec. V-C / Fig. 11(d,e), following luvHarris).
+//!
+//! Input: per-event `(score, is_true_corner)` pairs — the detector's
+//! continuous score and the ground-truth label.  Sweeping a threshold over
+//! the score produces the PR curve; the area under it (trapezoid over
+//! recall) is the headline AUC metric whose degradation under BER the
+//! paper reports.
+
+/// One point of a PR curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrPoint {
+    /// Score threshold that produced this point.
+    pub threshold: f64,
+    /// Precision TP/(TP+FP); 1.0 when nothing is detected.
+    pub precision: f64,
+    /// Recall TP/(TP+FN).
+    pub recall: f64,
+    /// True/false positives and false negatives at this threshold.
+    pub tp: u64,
+    /// False positives.
+    pub fp: u64,
+    /// False negatives.
+    pub fn_: u64,
+}
+
+/// A full precision-recall curve (thresholds descending, recall ascending).
+#[derive(Debug, Clone, Default)]
+pub struct PrCurve {
+    /// Curve points.
+    pub points: Vec<PrPoint>,
+}
+
+impl PrCurve {
+    /// Build a PR curve from `(score, label)` pairs by sweeping
+    /// `n_thresholds` equally spaced quantiles of the score distribution.
+    pub fn from_scores(scored: &[(f64, bool)], n_thresholds: usize) -> PrCurve {
+        assert!(n_thresholds >= 2);
+        if scored.is_empty() {
+            return PrCurve::default();
+        }
+        let positives = scored.iter().filter(|(_, l)| *l).count() as u64;
+        // sort scores descending once; sweep thresholds down the sorted list
+        let mut sorted: Vec<(f64, bool)> = scored.to_vec();
+        sorted.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        let lo = sorted.last().unwrap().0;
+        let hi = sorted[0].0;
+        let mut points = Vec::with_capacity(n_thresholds);
+        let mut idx = 0usize;
+        let mut tp = 0u64;
+        let mut fp = 0u64;
+        for k in 0..n_thresholds {
+            // thresholds from hi down to lo inclusive
+            let th = hi - (hi - lo) * k as f64 / (n_thresholds - 1) as f64;
+            while idx < sorted.len() && sorted[idx].0 >= th {
+                if sorted[idx].1 {
+                    tp += 1;
+                } else {
+                    fp += 1;
+                }
+                idx += 1;
+            }
+            let det = tp + fp;
+            let precision = if det == 0 { 1.0 } else { tp as f64 / det as f64 };
+            let recall = if positives == 0 { 0.0 } else { tp as f64 / positives as f64 };
+            points.push(PrPoint { threshold: th, precision, recall, tp, fp, fn_: positives - tp });
+        }
+        PrCurve { points }
+    }
+
+    /// Area under the PR curve (trapezoid over recall).
+    pub fn auc(&self) -> f64 {
+        if self.points.len() < 2 {
+            return 0.0;
+        }
+        let mut area = 0.0;
+        for w in self.points.windows(2) {
+            let dr = w[1].recall - w[0].recall;
+            area += dr * 0.5 * (w[0].precision + w[1].precision);
+        }
+        area
+    }
+
+    /// Best F1 over the curve (secondary metric for the ablations).
+    pub fn best_f1(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|p| {
+                if p.precision + p.recall == 0.0 {
+                    0.0
+                } else {
+                    2.0 * p.precision * p.recall / (p.precision + p.recall)
+                }
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn perfect_classifier_auc_one() {
+        let mut scored = Vec::new();
+        for i in 0..500 {
+            scored.push((1.0 + i as f64 * 1e-3, true));
+            scored.push((-1.0 - i as f64 * 1e-3, false));
+        }
+        let curve = PrCurve::from_scores(&scored, 101);
+        assert!(curve.auc() > 0.99, "auc {}", curve.auc());
+        assert!(curve.best_f1() > 0.99);
+    }
+
+    #[test]
+    fn random_classifier_auc_near_base_rate() {
+        let mut rng = Rng::seed_from(1);
+        let base = 0.2;
+        let scored: Vec<(f64, bool)> =
+            (0..20_000).map(|_| (rng.f64(), rng.chance(base))).collect();
+        let auc = PrCurve::from_scores(&scored, 101).auc();
+        assert!((auc - base).abs() < 0.05, "auc {auc}");
+    }
+
+    #[test]
+    fn recall_monotone_as_threshold_drops() {
+        let mut rng = Rng::seed_from(2);
+        let scored: Vec<(f64, bool)> =
+            (0..5_000).map(|_| (rng.f64(), rng.chance(0.3))).collect();
+        let curve = PrCurve::from_scores(&scored, 51);
+        for w in curve.points.windows(2) {
+            assert!(w[1].recall >= w[0].recall - 1e-12);
+            assert!(w[1].threshold <= w[0].threshold);
+        }
+        // final point captures everything
+        let last = curve.points.last().unwrap();
+        assert!((last.recall - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degraded_scores_lower_auc() {
+        // a noisy version of a good classifier must not beat the original
+        let mut rng = Rng::seed_from(3);
+        let mut clean = Vec::new();
+        for _ in 0..5000 {
+            let label = rng.chance(0.3);
+            let score = if label { rng.normal(1.0, 0.5) } else { rng.normal(-1.0, 0.5) };
+            clean.push((score, label));
+        }
+        let noisy: Vec<(f64, bool)> =
+            clean.iter().map(|&(s, l)| (s + rng.normal(0.0, 2.0), l)).collect();
+        let a_clean = PrCurve::from_scores(&clean, 101).auc();
+        let a_noisy = PrCurve::from_scores(&noisy, 101).auc();
+        assert!(a_clean > a_noisy + 0.05, "clean {a_clean} noisy {a_noisy}");
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        assert_eq!(PrCurve::from_scores(&[], 11).points.len(), 0);
+        let all_same = vec![(0.5, true), (0.5, false)];
+        let c = PrCurve::from_scores(&all_same, 11);
+        assert!(!c.points.is_empty());
+        assert!(c.auc().is_finite());
+    }
+
+    #[test]
+    fn counts_are_consistent() {
+        let scored =
+            vec![(0.9, true), (0.8, false), (0.7, true), (0.2, false), (0.1, true)];
+        let curve = PrCurve::from_scores(&scored, 21);
+        for p in &curve.points {
+            assert_eq!(p.tp + p.fn_, 3, "positives preserved");
+            assert!(p.tp + p.fp <= 5);
+        }
+    }
+}

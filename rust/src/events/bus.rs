@@ -1,0 +1,157 @@
+//! AER bus model: the sensor-to-accelerator link with finite bandwidth
+//! (the DAVIS240 line in Fig. 1(b)) and a bounded FIFO — quantifies the
+//! *event loss* that motivates the whole paper when the consumer is
+//! slower than the stream.
+
+use super::Event;
+
+/// A finite-bandwidth, finite-FIFO AER link feeding a consumer with a
+/// fixed per-event service time.
+#[derive(Debug, Clone)]
+pub struct AerBus {
+    /// Peak transfer rate of the link (events/s).
+    pub bandwidth_eps: f64,
+    /// FIFO depth (events buffered between link and consumer).
+    pub fifo_depth: usize,
+}
+
+/// Outcome of replaying a stream through the bus into a consumer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BusReport {
+    /// Events offered.
+    pub offered: usize,
+    /// Events delivered to the consumer.
+    pub delivered: usize,
+    /// Events dropped (FIFO overflow).
+    pub dropped: usize,
+    /// Worst observed FIFO occupancy.
+    pub max_occupancy: usize,
+    /// Mean queueing delay of delivered events (µs).
+    pub mean_delay_us: f64,
+}
+
+impl AerBus {
+    /// DAVIS240-class link: 12 Meps, shallow on-sensor FIFO.
+    pub fn davis240() -> Self {
+        Self { bandwidth_eps: 12.0e6, fifo_depth: 1024 }
+    }
+
+    /// Replay `events` into a consumer with `service_ns` per event
+    /// (e.g. the conventional TOS at 392 ns, or the NMC at ~16 ns).
+    pub fn replay(&self, events: &[Event], service_ns: f64) -> BusReport {
+        let link_gap_us = 1e6 / self.bandwidth_eps;
+        let service_us = service_ns * 1e-3;
+        let mut fifo: std::collections::VecDeque<f64> = Default::default();
+        let mut link_free = 0.0f64; // next time the link can push
+        let mut consumer_free = 0.0f64;
+        let mut delivered = 0usize;
+        let mut dropped = 0usize;
+        let mut max_occ = 0usize;
+        let mut delay_sum = 0.0f64;
+
+        for ev in events {
+            let t = ev.t as f64;
+            // the link transfers this event when it is free
+            let push_t = link_free.max(t);
+            // consumer drains the FIFO while the link works
+            while let Some(&arrived) = fifo.front() {
+                let start = consumer_free.max(arrived);
+                if start + service_us <= push_t {
+                    consumer_free = start + service_us;
+                    delay_sum += consumer_free - arrived;
+                    delivered += 1;
+                    fifo.pop_front();
+                } else {
+                    break;
+                }
+            }
+            link_free = push_t + link_gap_us;
+            if fifo.len() >= self.fifo_depth {
+                dropped += 1;
+            } else {
+                fifo.push_back(push_t);
+                max_occ = max_occ.max(fifo.len());
+            }
+        }
+        // drain the tail
+        while let Some(arrived) = fifo.pop_front() {
+            let start = consumer_free.max(arrived);
+            consumer_free = start + service_us;
+            delay_sum += consumer_free - arrived;
+            delivered += 1;
+        }
+        BusReport {
+            offered: events.len(),
+            delivered,
+            dropped,
+            max_occupancy: max_occ,
+            mean_delay_us: if delivered > 0 { delay_sum / delivered as f64 } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::Polarity;
+
+    fn burst(n: usize, gap_us: u64) -> Vec<Event> {
+        (0..n).map(|i| Event::new(1, 1, i as u64 * gap_us, Polarity::On)).collect()
+    }
+
+    #[test]
+    fn slow_consumer_drops_under_sustained_overrate() {
+        // 5 Meps sustained: a 16 ns consumer keeps up, a 3.9 µs one cannot
+        let bus = AerBus { bandwidth_eps: 12e6, fifo_depth: 64 };
+        let evs: Vec<Event> = (0..100_000)
+            .map(|i| Event::new(1, 1, i as u64 / 5, Polarity::On))
+            .collect();
+        let fast = bus.replay(&evs, 16.0);
+        let slow = bus.replay(&evs, 3920.0);
+        assert_eq!(fast.dropped + fast.delivered, fast.offered);
+        assert_eq!(fast.dropped, 0, "fast consumer dropped {}", fast.dropped);
+        assert!(
+            slow.dropped as f64 > 0.5 * slow.offered as f64,
+            "slow dropped only {}",
+            slow.dropped
+        );
+    }
+
+    #[test]
+    fn nmc_sustains_davis240_line_rate_conventional_does_not() {
+        // stream at the DAVIS240 line rate: 12 Meps sustained
+        let evs = burst(200_000, 0).iter().enumerate()
+            .map(|(i, e)| Event::new(e.x, e.y, (i as f64 / 12.0) as u64, e.p))
+            .collect::<Vec<_>>();
+        let bus = AerBus::davis240();
+        // NMC at 15.85 ns/event: no loss
+        let nmc = bus.replay(&evs, 15.85);
+        assert_eq!(nmc.dropped, 0, "NMC dropped {}", nmc.dropped);
+        // conventional at 392 ns/event (2.55 Meps) cannot keep up
+        let conv = bus.replay(&evs, 392.0);
+        assert!(
+            conv.dropped as f64 > 0.5 * conv.offered as f64,
+            "conventional dropped only {}",
+            conv.dropped
+        );
+    }
+
+    #[test]
+    fn quiet_stream_no_loss_either_way() {
+        // 0.5 Meps: both consumers keep up
+        let evs = burst(10_000, 2);
+        let bus = AerBus::davis240();
+        assert_eq!(bus.replay(&evs, 392.0).dropped, 0);
+        assert_eq!(bus.replay(&evs, 15.85).dropped, 0);
+    }
+
+    #[test]
+    fn accounting_balances() {
+        let evs = burst(5_000, 0);
+        let bus = AerBus { bandwidth_eps: 5e6, fifo_depth: 16 };
+        let r = bus.replay(&evs, 1000.0);
+        assert_eq!(r.delivered + r.dropped, r.offered);
+        assert!(r.max_occupancy <= 16);
+        assert!(r.mean_delay_us >= 0.0);
+    }
+}

@@ -1,0 +1,179 @@
+//! Binary + text codecs for event streams.
+//!
+//! * **Binary**: a fixed 13-byte little-endian record
+//!   `x:u16 | y:u16 | t:u64 | p:u8` with an `"NMCTOSEV"` + version header —
+//!   a stand-in for AEDAT/EVT that keeps dataset files self-describing.
+//! * **Text**: `t x y p` per line (the format used by the Mueggler et al.
+//!   event-camera dataset the paper evaluates on), for interop with
+//!   published tooling.
+
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use super::{Event, Polarity};
+
+const MAGIC: &[u8; 8] = b"NMCTOSEV";
+const VERSION: u8 = 1;
+const RECORD_BYTES: usize = 13;
+
+/// Write a stream of events in the binary container format.
+pub fn write_binary<W: Write>(w: W, events: &[Event]) -> Result<()> {
+    let mut w = BufWriter::new(w);
+    w.write_all(MAGIC)?;
+    w.write_all(&[VERSION])?;
+    w.write_all(&(events.len() as u64).to_le_bytes())?;
+    for e in events {
+        w.write_all(&e.x.to_le_bytes())?;
+        w.write_all(&e.y.to_le_bytes())?;
+        w.write_all(&e.t.to_le_bytes())?;
+        w.write_all(&[e.p.bit()])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a stream of events from the binary container format.
+pub fn read_binary<R: Read>(r: R) -> Result<Vec<Event>> {
+    let mut r = BufReader::new(r);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("truncated header")?;
+    if &magic != MAGIC {
+        bail!("bad magic: {:?}", magic);
+    }
+    let mut ver = [0u8; 1];
+    r.read_exact(&mut ver)?;
+    if ver[0] != VERSION {
+        bail!("unsupported version {}", ver[0]);
+    }
+    let mut len = [0u8; 8];
+    r.read_exact(&mut len)?;
+    let n = u64::from_le_bytes(len) as usize;
+    let mut buf = vec![0u8; n * RECORD_BYTES];
+    r.read_exact(&mut buf).context("truncated records")?;
+    let mut events = Vec::with_capacity(n);
+    for rec in buf.chunks_exact(RECORD_BYTES) {
+        events.push(Event {
+            x: u16::from_le_bytes([rec[0], rec[1]]),
+            y: u16::from_le_bytes([rec[2], rec[3]]),
+            t: u64::from_le_bytes(rec[4..12].try_into().unwrap()),
+            p: Polarity::from_bit(rec[12]),
+        });
+    }
+    Ok(events)
+}
+
+/// Write events as `t_seconds x y p` lines (Mueggler dataset layout).
+pub fn write_text<W: Write>(w: W, events: &[Event]) -> Result<()> {
+    let mut w = BufWriter::new(w);
+    for e in events {
+        writeln!(w, "{:.6} {} {} {}", e.t as f64 * 1e-6, e.x, e.y, e.p.bit())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read events from `t_seconds x y p` lines.
+pub fn read_text<R: Read>(r: R) -> Result<Vec<Event>> {
+    let r = BufReader::new(r);
+    let mut events = Vec::new();
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_ascii_whitespace();
+        let parse = |tok: Option<&str>, what: &str| -> Result<f64> {
+            tok.with_context(|| format!("line {}: missing {what}", lineno + 1))?
+                .parse::<f64>()
+                .with_context(|| format!("line {}: bad {what}", lineno + 1))
+        };
+        let t = parse(it.next(), "t")?;
+        let x = parse(it.next(), "x")? as u16;
+        let y = parse(it.next(), "y")? as u16;
+        let p = parse(it.next(), "p")? as u8;
+        events.push(Event::new(x, y, (t * 1e6).round() as u64, Polarity::from_bit(p)));
+    }
+    Ok(events)
+}
+
+/// Convenience: binary round-trip through a file path.
+pub fn save(path: &std::path::Path, events: &[Event]) -> Result<()> {
+    write_binary(std::fs::File::create(path)?, events)
+}
+
+/// Convenience: load a binary event file.
+pub fn load(path: &std::path::Path) -> Result<Vec<Event>> {
+    read_binary(std::fs::File::open(path)?)
+}
+
+/// Errors in this module are [`anyhow::Error`]; keep an io alias for callers.
+pub type IoResult<T> = io::Result<T>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Event> {
+        vec![
+            Event::on(0, 0, 0),
+            Event::off(239, 179, 1_000_000),
+            Event::on(120, 90, u64::MAX / 2),
+        ]
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let mut buf = Vec::new();
+        write_binary(&mut buf, &sample()).unwrap();
+        let back = read_binary(&buf[..]).unwrap();
+        assert_eq!(back, sample());
+    }
+
+    #[test]
+    fn binary_rejects_bad_magic() {
+        let mut buf = Vec::new();
+        write_binary(&mut buf, &sample()).unwrap();
+        buf[0] = b'X';
+        assert!(read_binary(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn binary_rejects_truncation() {
+        let mut buf = Vec::new();
+        write_binary(&mut buf, &sample()).unwrap();
+        buf.truncate(buf.len() - 1);
+        assert!(read_binary(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let evs = vec![Event::on(10, 20, 1_500_000), Event::off(30, 40, 2_000_000)];
+        let mut buf = Vec::new();
+        write_text(&mut buf, &evs).unwrap();
+        let back = read_text(&buf[..]).unwrap();
+        assert_eq!(back, evs);
+    }
+
+    #[test]
+    fn text_skips_comments_and_blanks() {
+        let input = "# comment\n\n0.000001 1 2 1\n";
+        let evs = read_text(input.as_bytes()).unwrap();
+        assert_eq!(evs, vec![Event::on(1, 2, 1)]);
+    }
+
+    #[test]
+    fn text_reports_bad_line() {
+        let err = read_text("0.5 nope 2 1\n".as_bytes()).unwrap_err();
+        assert!(format!("{err}").contains("line 1"));
+    }
+
+    #[test]
+    fn empty_streams() {
+        let mut buf = Vec::new();
+        write_binary(&mut buf, &[]).unwrap();
+        assert!(read_binary(&buf[..]).unwrap().is_empty());
+        assert!(read_text("".as_bytes()).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,163 @@
+//! AER event primitives: events, polarities, sensor geometry, streams and
+//! a simple binary/text codec.
+//!
+//! Every event-camera subsystem in the crate speaks [`Event`]: a pixel
+//! coordinate, a microsecond timestamp and a polarity — the Address Event
+//! Representation (AER) of the paper's Sec. II-A.
+
+pub mod bus;
+pub mod codec;
+pub mod stream;
+
+
+
+/// Contrast-change polarity of an event (Sec. II-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Polarity {
+    /// Brightness increased.
+    On,
+    /// Brightness decreased.
+    Off,
+}
+
+impl Polarity {
+    /// Encode as a single bit (ON = 1).
+    #[inline]
+    pub fn bit(self) -> u8 {
+        match self {
+            Polarity::On => 1,
+            Polarity::Off => 0,
+        }
+    }
+
+    /// Decode from a bit; any non-zero value is ON.
+    #[inline]
+    pub fn from_bit(b: u8) -> Self {
+        if b != 0 {
+            Polarity::On
+        } else {
+            Polarity::Off
+        }
+    }
+}
+
+/// A single AER event `v = (x, y, p, t)`.
+///
+/// `t` is in microseconds from stream start — the native resolution of the
+/// DAVIS/Prophesee sensors the paper evaluates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Column (0-based, increases rightward).
+    pub x: u16,
+    /// Row (0-based, increases downward).
+    pub y: u16,
+    /// Timestamp in microseconds.
+    pub t: u64,
+    /// Contrast-change polarity.
+    pub p: Polarity,
+}
+
+impl Event {
+    /// Construct an event.
+    #[inline]
+    pub fn new(x: u16, y: u16, t: u64, p: Polarity) -> Self {
+        Self { x, y, t, p }
+    }
+
+    /// ON-polarity shorthand (most synthetic scenes emit both).
+    #[inline]
+    pub fn on(x: u16, y: u16, t: u64) -> Self {
+        Self::new(x, y, t, Polarity::On)
+    }
+
+    /// OFF-polarity shorthand.
+    #[inline]
+    pub fn off(x: u16, y: u16, t: u64) -> Self {
+        Self::new(x, y, t, Polarity::Off)
+    }
+}
+
+/// Sensor pixel-array geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Resolution {
+    /// Pixels per row.
+    pub width: u16,
+    /// Rows.
+    pub height: u16,
+}
+
+impl Resolution {
+    /// DAVIS240: 240 x 180 — the sensor the paper sizes its macro for
+    /// (two 180x120 NMC blocks).
+    pub const DAVIS240: Resolution = Resolution { width: 240, height: 180 };
+    /// DAVIS346: 346 x 260 — used for the multi-block scaling study.
+    pub const DAVIS346: Resolution = Resolution { width: 346, height: 260 };
+    /// Prophesee IMX636-class HD sensor (1280 x 720), the "high resolution
+    /// EBC" whose event rate motivates the paper.
+    pub const HD720: Resolution = Resolution { width: 1280, height: 720 };
+    /// Small resolution for tests.
+    pub const TEST64: Resolution = Resolution { width: 64, height: 64 };
+
+    /// Construct a resolution.
+    pub const fn new(width: u16, height: u16) -> Self {
+        Self { width, height }
+    }
+
+    /// Total pixel count.
+    #[inline]
+    pub const fn pixels(&self) -> usize {
+        self.width as usize * self.height as usize
+    }
+
+    /// Is `(x, y)` inside the array?
+    #[inline]
+    pub fn contains(&self, x: i32, y: i32) -> bool {
+        x >= 0 && y >= 0 && (x as u32) < self.width as u32 && (y as u32) < self.height as u32
+    }
+
+    /// Row-major linear index of `(x, y)`.
+    #[inline]
+    pub fn index(&self, x: u16, y: u16) -> usize {
+        y as usize * self.width as usize + x as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn polarity_bit_roundtrip() {
+        assert_eq!(Polarity::from_bit(Polarity::On.bit()), Polarity::On);
+        assert_eq!(Polarity::from_bit(Polarity::Off.bit()), Polarity::Off);
+        assert_eq!(Polarity::from_bit(7), Polarity::On);
+    }
+
+    #[test]
+    fn event_constructors() {
+        let e = Event::on(3, 4, 100);
+        assert_eq!((e.x, e.y, e.t, e.p), (3, 4, 100, Polarity::On));
+        let e = Event::off(1, 2, 5);
+        assert_eq!(e.p, Polarity::Off);
+    }
+
+    #[test]
+    fn resolution_contains_and_index() {
+        let r = Resolution::DAVIS240;
+        assert_eq!(r.pixels(), 240 * 180);
+        assert!(r.contains(0, 0));
+        assert!(r.contains(239, 179));
+        assert!(!r.contains(240, 0));
+        assert!(!r.contains(0, 180));
+        assert!(!r.contains(-1, 5));
+        assert_eq!(r.index(0, 1), 240);
+        assert_eq!(r.index(5, 0), 5);
+    }
+
+    #[test]
+    fn known_sensor_geometries() {
+        assert_eq!(Resolution::DAVIS240.pixels(), 43_200);
+        assert_eq!(Resolution::DAVIS346.pixels(), 89_960);
+        assert_eq!(Resolution::HD720.pixels(), 921_600);
+    }
+}

@@ -1,0 +1,193 @@
+//! Event-stream utilities: rate statistics, windowed iteration, merging and
+//! validation — the pieces every experiment harness shares.
+
+use super::{Event, Resolution};
+
+/// Summary statistics of an event stream (drives Table I / Fig. 8).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamStats {
+    /// Total number of events.
+    pub count: usize,
+    /// Stream duration in seconds (last t − first t).
+    pub duration_s: f64,
+    /// Mean event rate in events/s.
+    pub mean_rate: f64,
+    /// Peak event rate in events/s, measured over `window_s` windows.
+    pub peak_rate: f64,
+    /// Window length used for the peak measurement.
+    pub window_s: f64,
+}
+
+/// Compute stream statistics with a fixed-window peak-rate estimate.
+pub fn stats(events: &[Event], window_s: f64) -> StreamStats {
+    if events.is_empty() {
+        return StreamStats { count: 0, duration_s: 0.0, mean_rate: 0.0, peak_rate: 0.0, window_s };
+    }
+    let t0 = events.first().unwrap().t;
+    let t1 = events.last().unwrap().t;
+    let duration_s = ((t1 - t0) as f64 * 1e-6).max(1e-9);
+    let mean_rate = events.len() as f64 / duration_s;
+    let win_us = (window_s * 1e6) as u64;
+    let mut peak = 0usize;
+    let mut lo = 0usize;
+    for hi in 0..events.len() {
+        while events[hi].t - events[lo].t > win_us {
+            lo += 1;
+        }
+        peak = peak.max(hi - lo + 1);
+    }
+    StreamStats {
+        count: events.len(),
+        duration_s,
+        mean_rate,
+        peak_rate: peak as f64 / window_s,
+        window_s,
+    }
+}
+
+/// Iterate a stream in fixed-duration windows (non-overlapping).
+///
+/// Yields `(window_start_us, &[Event])` slices; empty windows are skipped.
+pub struct Windows<'a> {
+    events: &'a [Event],
+    window_us: u64,
+    cursor: usize,
+}
+
+impl<'a> Windows<'a> {
+    /// Create a window iterator over a time-sorted stream.
+    pub fn new(events: &'a [Event], window_us: u64) -> Self {
+        assert!(window_us > 0, "window must be positive");
+        Self { events, window_us, cursor: 0 }
+    }
+}
+
+impl<'a> Iterator for Windows<'a> {
+    type Item = (u64, &'a [Event]);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.cursor >= self.events.len() {
+            return None;
+        }
+        let start_t = self.events[self.cursor].t;
+        let win_start = (start_t / self.window_us) * self.window_us;
+        let end_t = win_start + self.window_us;
+        let begin = self.cursor;
+        while self.cursor < self.events.len() && self.events[self.cursor].t < end_t {
+            self.cursor += 1;
+        }
+        Some((win_start, &self.events[begin..self.cursor]))
+    }
+}
+
+/// Merge two time-sorted streams into one time-sorted stream (stable).
+pub fn merge(a: &[Event], b: &[Event]) -> Vec<Event> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        if a[i].t <= b[j].t {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
+}
+
+/// Validate that a stream is time-sorted and within the sensor array.
+pub fn validate(events: &[Event], res: Resolution) -> Result<(), String> {
+    let mut last_t = 0u64;
+    for (i, e) in events.iter().enumerate() {
+        if e.t < last_t {
+            return Err(format!("event {i} out of order: t={} after {}", e.t, last_t));
+        }
+        if !res.contains(e.x as i32, e.y as i32) {
+            return Err(format!("event {i} out of bounds: ({}, {})", e.x, e.y));
+        }
+        last_t = e.t;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::Polarity;
+
+    fn ramp(n: usize, dt: u64) -> Vec<Event> {
+        (0..n).map(|i| Event::new((i % 64) as u16, (i % 48) as u16, i as u64 * dt, Polarity::On)).collect()
+    }
+
+    #[test]
+    fn stats_uniform_rate() {
+        // 1000 events spaced 1 ms apart => ~1 keps mean and peak.
+        let evs = ramp(1000, 1000);
+        let s = stats(&evs, 0.01);
+        assert_eq!(s.count, 1000);
+        assert!((s.mean_rate - 1000.0).abs() / 1000.0 < 0.01, "mean {}", s.mean_rate);
+        assert!((s.peak_rate - 1100.0).abs() <= 101.0, "peak {}", s.peak_rate);
+    }
+
+    #[test]
+    fn stats_empty() {
+        let s = stats(&[], 0.01);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.peak_rate, 0.0);
+    }
+
+    #[test]
+    fn stats_burst_peak_exceeds_mean() {
+        let mut evs = ramp(100, 10_000); // slow background
+        let burst: Vec<Event> = (0..500).map(|i| Event::on(1, 1, 500_000 + i)).collect();
+        evs = merge(&evs, &burst);
+        let s = stats(&evs, 0.001);
+        assert!(s.peak_rate > 10.0 * s.mean_rate);
+    }
+
+    #[test]
+    fn windows_partition_stream() {
+        let evs = ramp(100, 1000); // 1 event per ms, 100 ms total
+        let wins: Vec<_> = Windows::new(&evs, 10_000).collect();
+        assert_eq!(wins.len(), 10);
+        let total: usize = wins.iter().map(|(_, w)| w.len()).sum();
+        assert_eq!(total, 100);
+        for (start, w) in &wins {
+            for e in *w {
+                assert!(e.t >= *start && e.t < start + 10_000);
+            }
+        }
+    }
+
+    #[test]
+    fn windows_skip_empty_gaps() {
+        let mut evs = ramp(5, 100);
+        let late: Vec<Event> = (0..5).map(|i| Event::on(0, 0, 1_000_000 + i * 100)).collect();
+        evs = merge(&evs, &late);
+        let wins: Vec<_> = Windows::new(&evs, 1000).collect();
+        assert_eq!(wins.len(), 2);
+        assert_eq!(wins[1].0, 1_000_000);
+    }
+
+    #[test]
+    fn merge_keeps_order() {
+        let a = ramp(50, 200);
+        let b: Vec<Event> = (0..50).map(|i| Event::off(2, 2, 100 + i * 200)).collect();
+        let m = merge(&a, &b);
+        assert_eq!(m.len(), 100);
+        assert!(m.windows(2).all(|w| w[0].t <= w[1].t));
+    }
+
+    #[test]
+    fn validate_catches_disorder_and_bounds() {
+        let ok = ramp(10, 100);
+        assert!(validate(&ok, Resolution::TEST64).is_ok());
+        let bad = vec![Event::on(0, 0, 10), Event::on(0, 0, 5)];
+        assert!(validate(&bad, Resolution::TEST64).is_err());
+        let oob = vec![Event::on(64, 0, 0)];
+        assert!(validate(&oob, Resolution::TEST64).is_err());
+    }
+}

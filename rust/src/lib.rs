@@ -1,0 +1,60 @@
+//! # nmc-tos
+//!
+//! Full-system reproduction of *"Near-Memory Architecture for
+//! Threshold-Ordinal Surface-Based Corner Detection of Event Cameras"*
+//! (Shang et al., CS.AR 2025).
+//!
+//! The crate simulates the complete corner-detection system of the paper's
+//! Fig. 2 — STCF denoising, the NMC-TOS near-memory macro (phase-level
+//! timing + energy + Monte-Carlo bit errors), DVFS, and the frame-by-frame
+//! Harris lookup-table detector — together with every baseline the paper
+//! compares against (conventional digital TOS, eHarris, FAST, ARC).
+//!
+//! Layering (see DESIGN.md):
+//! * **L3 (this crate)** — event-by-event coordination, circuit simulation,
+//!   datasets, evaluation, CLI.
+//! * **L2/L1 (python, build-time only)** — the Harris-score graph + Pallas
+//!   stencil kernel, AOT-lowered to `artifacts/*.hlo.txt` and executed
+//!   from [`runtime`] through the PJRT CPU client. Python never runs on
+//!   the event path.
+//!
+//! Quickstart:
+//! ```no_run
+//! use nmc_tos::prelude::*;
+//!
+//! let mut scene = nmc_tos::datasets::synthetic::SceneConfig::shapes_dof().build(42);
+//! let events = scene.generate(200_000);
+//! let mut pipe = nmc_tos::coordinator::Pipeline::new(
+//!     nmc_tos::coordinator::PipelineConfig::davis240(),
+//! ).unwrap();
+//! let report = pipe.run(&events).unwrap();
+//! println!("corners: {}", report.corners.len());
+//! ```
+
+pub mod conventional;
+pub mod util;
+pub mod coordinator;
+pub mod datasets;
+pub mod detectors;
+pub mod dvfs;
+pub mod eval;
+pub mod events;
+pub mod nmc;
+pub mod power;
+pub mod runtime;
+pub mod stcf;
+pub mod tos;
+
+/// Convenient glob-import of the most used types.
+pub mod prelude {
+    pub use crate::conventional::ConventionalTos;
+    pub use crate::coordinator::{Pipeline, PipelineConfig, RunReport};
+    pub use crate::datasets::{synthetic::SceneConfig, DatasetKind};
+    pub use crate::detectors::harris::HarrisDetector;
+    pub use crate::dvfs::{DvfsController, DvfsConfig};
+    pub use crate::events::{Event, Polarity, Resolution};
+    pub use crate::eval::{PrCurve, PrPoint};
+    pub use crate::nmc::{calib, NmcMacro, NmcConfig};
+    pub use crate::stcf::{Stcf, StcfConfig};
+    pub use crate::tos::{TosConfig, TosSurface};
+}

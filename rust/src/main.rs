@@ -1,0 +1,602 @@
+//! `nmc-tos` — leader binary: end-to-end runs plus one subcommand per
+//! table/figure of the paper (see DESIGN.md experiment index).
+//!
+//! ```text
+//! nmc-tos fig1b                      # throughput comparison (Fig. 1b)
+//! nmc-tos fig8   [--dataset driving] # DVFS trace (Fig. 8)
+//! nmc-tos table1                     # power w/ vs w/o DVFS (Table I)
+//! nmc-tos fig9                       # latency/energy vs Vdd (Fig. 9)
+//! nmc-tos fig10                      # breakdowns + power vs rate (Fig. 10)
+//! nmc-tos ber    [--reads N]         # Monte-Carlo BER sweep (Sec. V-C)
+//! nmc-tos fig11  [--events N]        # PR curves + AUC deltas (Fig. 11)
+//! nmc-tos run    [--events N] [--async] # end-to-end demo on shapes_dof
+//! nmc-tos lut                        # DVFS V/f lookup table
+//! ```
+//!
+//! Every command prints the paper-comparable rows and (with `--json PATH`)
+//! dumps machine-readable results.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use nmc_tos::conventional::ConventionalModel;
+use nmc_tos::coordinator::{Pipeline, PipelineConfig};
+use nmc_tos::datasets::{profiles::RateProfile, synthetic::SceneConfig, DatasetKind};
+use nmc_tos::detectors::{self, eharris::EHarris, EventScorer};
+use nmc_tos::dvfs::DvfsConfig;
+use nmc_tos::eval::PrCurve;
+use nmc_tos::events::Resolution;
+use nmc_tos::nmc::{calib, energy::EnergyModel, montecarlo, timing::TimingModel};
+use nmc_tos::power;
+use nmc_tos::util::json::Json;
+
+/// Minimal flag parser: positional command + `--key value` / `--flag`.
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut flags = HashMap::new();
+        let mut key: Option<String> = None;
+        for a in it {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(k) = key.take() {
+                    flags.insert(k, "true".into());
+                }
+                key = Some(stripped.to_string());
+            } else if let Some(k) = key.take() {
+                flags.insert(k, a);
+            }
+        }
+        if let Some(k) = key.take() {
+            flags.insert(k, "true".into());
+        }
+        Args { cmd, flags }
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn num(&self, k: &str, default: f64) -> f64 {
+        self.get(k).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    fn flag(&self, k: &str) -> bool {
+        self.get(k).is_some()
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let json_out = args.get("json").map(|s| s.to_string());
+    let result = match args.cmd.as_str() {
+        "fig1b" => cmd_fig1b(),
+        "fig8" => cmd_fig8(&args),
+        "table1" => cmd_table1(),
+        "fig9" => cmd_fig9(),
+        "fig10" => cmd_fig10(),
+        "ber" => cmd_ber(&args),
+        "fig11" => cmd_fig11(&args),
+        "run" => cmd_run(&args),
+        "lut" => cmd_lut(),
+        "ablate" => cmd_ablate(&args),
+        "waveform" => cmd_waveform(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(Json::Null)
+        }
+        other => bail!("unknown command `{other}` — try `nmc-tos help`"),
+    }?;
+    if let Some(path) = json_out {
+        std::fs::write(&path, result.render()).with_context(|| format!("writing {path}"))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+const HELP: &str = "nmc-tos — NMC-TOS full-system reproduction
+commands: fig1b fig8 table1 fig9 fig10 ber fig11 run lut ablate waveform gen-data
+common flags: --json PATH (dump machine-readable results)
+see DESIGN.md for the experiment index";
+
+// ---------------------------------------------------------------------------
+
+/// Fig. 1(b): max throughput of eHarris / conventional luvHarris /
+/// NMC-TOS, against the DAVIS240 bus bandwidth.
+fn cmd_fig1b() -> Result<Json> {
+    let eh = EHarris::new(Resolution::DAVIS240);
+    let eharris = detectors::max_throughput_eps(eh.ops_per_event(), calib::CONV_CLOCK_NOM_HZ);
+    let conv = ConventionalModel::at(1.2).max_event_rate();
+    let nmc = TimingModel::at(1.2).max_event_rate();
+    let bw = calib::DAVIS240_BANDWIDTH_EPS;
+
+    println!("== Fig. 1(b): max supported event rate (Meps) ==");
+    println!("{:<28}{:>12}", "method", "Meps");
+    println!("{:<28}{:>12.2}", "eHarris (500 MHz digital)", eharris / 1e6);
+    println!("{:<28}{:>12.2}", "luvHarris conventional TOS", conv / 1e6);
+    println!("{:<28}{:>12.2}", "NMC-TOS @1.2 V (ours)", nmc / 1e6);
+    println!("{:<28}{:>12.2}", "DAVIS240 bus bandwidth", bw / 1e6);
+    println!(
+        "-> only NMC-TOS exceeds the sensor bandwidth ({}x the conventional TOS)",
+        (nmc / conv).round()
+    );
+    Ok(Json::obj(vec![
+        ("eharris_meps", Json::Num(eharris / 1e6)),
+        ("conventional_meps", Json::Num(conv / 1e6)),
+        ("nmc_meps", Json::Num(nmc / 1e6)),
+        ("davis240_bw_meps", Json::Num(bw / 1e6)),
+    ]))
+}
+
+/// Fig. 8: DVFS trace over the driving dataset.
+fn cmd_fig8(args: &Args) -> Result<Json> {
+    let kind = match args.get("dataset").unwrap_or("driving") {
+        "driving" => DatasetKind::Driving,
+        "laser" => DatasetKind::Laser,
+        "spinner" => DatasetKind::Spinner,
+        "dynamic_dof" => DatasetKind::DynamicDof,
+        "shapes_dof" => DatasetKind::ShapesDof,
+        other => bail!("unknown dataset {other}"),
+    };
+    let profile = RateProfile::for_dataset(kind);
+    let report = power::integrate(&profile, DvfsConfig::default(), 25);
+
+    println!("== Fig. 8: DVFS trace on `{}` ==", report.dataset);
+    println!("{:>8} {:>12} {:>8} {:>14}", "t (s)", "rate (Meps)", "Vdd", "capacity(Meps)");
+    for &(t, rate, vdd, cap) in &report.trace {
+        let bar_len = (rate / 64e6 * 40.0) as usize;
+        println!(
+            "{:>8.2} {:>12.2} {:>8.2} {:>14.1}  |{}",
+            t,
+            rate / 1e6,
+            vdd,
+            cap / 1e6,
+            "#".repeat(bar_len)
+        );
+    }
+    println!(
+        "events {:.1}M  peak {:.1} Meps  switches {}  event loss: {}",
+        report.events / 1e6,
+        report.peak_rate / 1e6,
+        report.switches,
+        if report.no_event_loss { "none" } else { "YES" }
+    );
+    Ok(Json::obj(vec![
+        ("dataset", Json::Str(report.dataset.into())),
+        ("peak_meps", Json::Num(report.peak_rate / 1e6)),
+        ("switches", Json::Num(report.switches as f64)),
+        ("no_event_loss", Json::Bool(report.no_event_loss)),
+        (
+            "trace",
+            Json::Arr(
+                report
+                    .trace
+                    .iter()
+                    .map(|&(t, r, v, c)| {
+                        Json::Arr(vec![Json::Num(t), Json::Num(r), Json::Num(v), Json::Num(c)])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]))
+}
+
+/// Table I: power with vs without DVFS on all five datasets.
+fn cmd_table1() -> Result<Json> {
+    println!("== Table I: power improvement using DVFS ==");
+    println!(
+        "{:<14}{:>14}{:>12}{:>16}{:>17}{:>9}",
+        "dataset", "max rate Meps", "events M", "P w/ DVFS mW", "P w/o DVFS mW", "saving"
+    );
+    let mut rows = Vec::new();
+    for kind in DatasetKind::ALL {
+        let p = RateProfile::for_dataset(kind);
+        let r = power::integrate(&p, DvfsConfig::default(), 64);
+        println!(
+            "{:<14}{:>14.1}{:>12.1}{:>16.3}{:>17.3}{:>8.1}x",
+            r.dataset,
+            r.peak_rate / 1e6,
+            r.events / 1e6,
+            r.power_dvfs_mw,
+            r.power_fixed_mw,
+            r.power_fixed_mw / r.power_dvfs_mw
+        );
+        rows.push(Json::obj(vec![
+            ("dataset", Json::Str(r.dataset.into())),
+            ("peak_meps", Json::Num(r.peak_rate / 1e6)),
+            ("events_m", Json::Num(r.events / 1e6)),
+            ("power_dvfs_mw", Json::Num(r.power_dvfs_mw)),
+            ("power_fixed_mw", Json::Num(r.power_fixed_mw)),
+        ]));
+    }
+    println!("(paper: driving 0.44/1.24, laser 3.90/5.37, spinner 0.38/1.50,");
+    println!("        dynamic_dof 0.02/0.13, shapes_dof 0.01/0.04 mW)");
+    Ok(Json::Arr(rows))
+}
+
+/// Fig. 9: latency & energy vs voltage, plus the headline ratios.
+fn cmd_fig9() -> Result<Json> {
+    println!("== Fig. 9(a): 7x7 patch update latency & energy vs Vdd ==");
+    println!(
+        "{:>6} {:>14} {:>14} {:>14} {:>14}",
+        "Vdd", "NMC lat (ns)", "NMC E (pJ)", "conv lat (ns)", "conv E (pJ)"
+    );
+    let mut rows = Vec::new();
+    for mv in (600..=1200).step_by(100) {
+        let v = mv as f64 / 1000.0;
+        let t = TimingModel::at(v);
+        let e = EnergyModel::at(v);
+        let c = ConventionalModel::at(v);
+        let nmc_lat = t.patch_latency_pipelined_ns(calib::PATCH);
+        let conv_lat = c.event_latency_ns(49);
+        println!(
+            "{:>6.2} {:>14.1} {:>14.1} {:>14.1} {:>14.1}",
+            v, nmc_lat, e.patch_pj, conv_lat, c.energy.patch_pj
+        );
+        rows.push(Json::obj(vec![
+            ("vdd", Json::Num(v)),
+            ("nmc_latency_ns", Json::Num(nmc_lat)),
+            ("nmc_energy_pj", Json::Num(e.patch_pj)),
+            ("conv_latency_ns", Json::Num(conv_lat)),
+            ("conv_energy_pj", Json::Num(c.energy.patch_pj)),
+        ]));
+    }
+
+    let conv = ConventionalModel::at(1.2).event_latency_ns(49);
+    let t12 = TimingModel::at(1.2);
+    let x_nopipe = conv / t12.patch_latency_unpipelined_ns(calib::PATCH);
+    let x_pipe = conv / t12.patch_latency_pipelined_ns(calib::PATCH);
+    println!("\n== Fig. 9(b): latency reduction @1.2 V ==");
+    println!("conventional -> NMC          : {x_nopipe:.1}x   (paper: 13.0x)");
+    println!("conventional -> NMC+pipeline : {x_pipe:.1}x   (paper: 24.7x)");
+
+    let e_conv = ConventionalModel::at(1.2).energy.patch_pj;
+    let e_nmc = EnergyModel::at(1.2).patch_pj;
+    let e_dvfs = EnergyModel::at(0.6).patch_pj;
+    println!("\n== Fig. 9(c): energy reduction ==");
+    println!("conventional -> NMC @1.2 V   : {:.2}x   (paper: 1.2x)", e_conv / e_nmc);
+    println!("conventional -> NMC+DVFS 0.6V: {:.1}x   (paper: 6.6x)", e_conv / e_dvfs);
+
+    Ok(Json::obj(vec![
+        ("sweep", Json::Arr(rows)),
+        ("latency_reduction_nmc", Json::Num(x_nopipe)),
+        ("latency_reduction_pipeline", Json::Num(x_pipe)),
+        ("energy_reduction_nmc", Json::Num(e_conv / e_nmc)),
+        ("energy_reduction_dvfs", Json::Num(e_conv / e_dvfs)),
+    ]))
+}
+
+/// Fig. 10: breakdowns, power vs rate, latency/throughput vs Vdd.
+fn cmd_fig10() -> Result<Json> {
+    println!("== Fig. 10(a): energy breakdown @1.2 V ==");
+    let e = EnergyModel::at(1.2);
+    let parts = e.breakdown_pj();
+    let total: f64 = parts.iter().sum();
+    let mut breakdown = Vec::new();
+    for (label, pj) in calib::ENERGY_SHARE_LABELS.iter().zip(parts) {
+        println!("{:<12} {:>8.1} pJ  {:>5.1} %", label, pj, pj / total * 100.0);
+        breakdown.push(Json::obj(vec![
+            ("module", Json::Str((*label).into())),
+            ("energy_pj", Json::Num(pj)),
+        ]));
+    }
+
+    println!("\n== Fig. 10(b): power vs event rate (mW) ==");
+    println!("{:>12} {:>14} {:>12} {:>12}", "rate Meps", "conventional", "NMC", "NMC+DVFS");
+    let rates: Vec<f64> = (1..=13).map(|i| i as f64 * 5e6).collect();
+    let mut pvr = Vec::new();
+    for (r, conv, fixed, dvfs) in power::power_vs_rate(&rates) {
+        println!("{:>12.0} {:>14.2} {:>12.2} {:>12.2}", r / 1e6, conv, fixed, dvfs);
+        pvr.push(Json::Arr(vec![
+            Json::Num(r / 1e6),
+            Json::Num(conv),
+            Json::Num(fixed),
+            Json::Num(dvfs),
+        ]));
+    }
+
+    println!("\n== Fig. 10(c): phase delay breakdown @0.6 V ==");
+    let t06 = TimingModel::at(0.6);
+    let mut phases = Vec::new();
+    let row: f64 = nmc_tos::nmc::timing::Phase::ALL.iter().map(|&p| t06.phase_ns(p)).sum();
+    for p in nmc_tos::nmc::timing::Phase::ALL {
+        println!(
+            "{:<5} {:>8.1} ns  {:>5.1} %",
+            p.label(),
+            t06.phase_ns(p),
+            t06.phase_ns(p) / row * 100.0
+        );
+        phases.push(Json::obj(vec![
+            ("phase", Json::Str(p.label().into())),
+            ("delay_ns", Json::Num(t06.phase_ns(p))),
+        ]));
+    }
+
+    println!("\n== Fig. 10(d): per-event latency & max throughput vs Vdd ==");
+    println!("{:>6} {:>14} {:>16} {:>18}", "Vdd", "NMC lat (ns)", "NMC+pipe (Meps)", "conv (Meps)");
+    let mut sweep = Vec::new();
+    for mv in (600..=1200).step_by(50) {
+        let v = mv as f64 / 1000.0;
+        let t = TimingModel::at(v);
+        let conv = ConventionalModel::at(v);
+        println!(
+            "{:>6.2} {:>14.1} {:>16.1} {:>18.2}",
+            v,
+            t.patch_latency_pipelined_ns(calib::PATCH),
+            t.max_event_rate() / 1e6,
+            conv.max_event_rate() / 1e6
+        );
+        sweep.push(Json::Arr(vec![
+            Json::Num(v),
+            Json::Num(t.patch_latency_pipelined_ns(calib::PATCH)),
+            Json::Num(t.max_event_rate() / 1e6),
+            Json::Num(conv.max_event_rate() / 1e6),
+        ]));
+    }
+    Ok(Json::obj(vec![
+        ("breakdown", Json::Arr(breakdown)),
+        ("power_vs_rate", Json::Arr(pvr)),
+        ("phases", Json::Arr(phases)),
+        ("sweep", Json::Arr(sweep)),
+    ]))
+}
+
+/// Monte-Carlo BER sweep (Sec. V-C).
+fn cmd_ber(args: &Args) -> Result<Json> {
+    let reads = args.num("reads", 200_000.0) as u64;
+    let voltages = [0.58, 0.59, 0.60, 0.61, 0.62, 0.63, 0.65, 0.70];
+    println!("== Monte-Carlo BER vs Vdd ({reads} reads/point) ==");
+    println!("{:>6} {:>12} {:>12} {:>12}", "Vdd", "errors", "BER", "model BER");
+    let pts = montecarlo::ber_sweep(&voltages, reads, 0xBE12);
+    let mut rows = Vec::new();
+    for p in &pts {
+        println!("{:>6.2} {:>12} {:>12.5} {:>12.2e}", p.vdd, p.errors, p.ber, p.model_ber);
+        rows.push(Json::obj(vec![
+            ("vdd", Json::Num(p.vdd)),
+            ("ber", Json::Num(p.ber)),
+            ("model_ber", Json::Num(p.model_ber)),
+        ]));
+    }
+    println!("(paper: 2.5% @0.60 V, 0.2% @0.61 V, zero at/above 0.62 V)");
+    Ok(Json::Arr(rows))
+}
+
+/// Fig. 11: PR curves + AUC deltas under BER for both scene datasets.
+fn cmd_fig11(args: &Args) -> Result<Json> {
+    let n_events = args.num("events", 400_000.0) as usize;
+    let radius = args.num("radius", 3.5) as f32;
+    let render = args.flag("render");
+    let mut out = Vec::new();
+    for (name, cfg_fn) in [
+        ("shapes_dof", SceneConfig::shapes_dof as fn() -> SceneConfig),
+        ("dynamic_dof", SceneConfig::dynamic_dof as fn() -> SceneConfig),
+    ] {
+        println!("== Fig. 11: {name} ({n_events} events) ==");
+        let mut scene = cfg_fn().build(42);
+        let (events, gt) = scene.generate_with_gt(n_events);
+
+        let mut aucs = Vec::new();
+        for (label, vdd, inject) in
+            [("error-free @1.2 V", 1.2, false), ("BER 0.2% @0.61 V", 0.61, true), ("BER 2.5% @0.6 V", 0.6, true)]
+        {
+            let mut cfg = PipelineConfig::davis240();
+            cfg.dvfs = None; // pin the voltage for a controlled BER level
+            cfg.fixed_vdd = vdd;
+            cfg.inject_errors = inject;
+            cfg.seed = 7;
+            let mut pipe = Pipeline::new(cfg)?;
+            let report = pipe.run(&events)?;
+            let scored = report.scored_events(&gt, radius);
+            let curve = PrCurve::from_scores(&scored, 101);
+            let auc = curve.auc();
+            println!(
+                "{:<20} AUC {:.3}  (signal events {}, LUT refreshes {}, flipped bits {})",
+                label, auc, report.events_signal, report.lut_refreshes, report.nmc.flipped_bits
+            );
+            if render && vdd == 1.2 {
+                render_ascii(&report.final_tos, 240, 16);
+            }
+            aucs.push((label, auc));
+        }
+        let base = aucs[0].1;
+        for (label, auc) in &aucs[1..] {
+            println!("  dAUC {label}: {:+.3}", auc - base);
+        }
+        println!("(paper: dAUC -0.027 shapes_dof, -0.015 dynamic_dof at BER 2.5%)\n");
+        out.push(Json::obj(vec![
+            ("dataset", Json::Str(name.into())),
+            (
+                "aucs",
+                Json::Arr(
+                    aucs.iter()
+                        .map(|(l, a)| {
+                            Json::obj(vec![("config", Json::Str((*l).into())), ("auc", Json::Num(*a))])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    Ok(Json::Arr(out))
+}
+
+/// ASCII-render a TOS snapshot (Fig. 11(b) stand-in for headless runs).
+fn render_ascii(tos: &[u8], width: usize, rows_shown: usize) {
+    let height = tos.len() / width;
+    let step_y = (height / rows_shown).max(1);
+    let step_x = (width / 80).max(1);
+    let ramp = b" .:-=+*#%@";
+    for y in (0..height).step_by(step_y) {
+        let mut line = String::new();
+        for x in (0..width).step_by(step_x) {
+            let v = tos[y * width + x] as usize;
+            line.push(ramp[v * (ramp.len() - 1) / 255] as char);
+        }
+        println!("{line}");
+    }
+}
+
+/// End-to-end demo: full pipeline (STCF + NMC + DVFS + PJRT Harris) on the
+/// shapes_dof scene, optionally with the async LUT worker.
+fn cmd_run(args: &Args) -> Result<Json> {
+    let n_events = args.num("events", 200_000.0) as usize;
+    let mut cfg = PipelineConfig::davis240();
+    cfg.async_refresh = args.flag("async");
+    let mut scene = SceneConfig::shapes_dof().build(args.num("seed", 42.0) as u64);
+    let (events, gt) = scene.generate_with_gt(n_events);
+    let mut pipe = Pipeline::new(cfg)?;
+    let report = pipe.run(&events)?;
+    let scored = report.scored_events(&gt, 3.5);
+    let auc = PrCurve::from_scores(&scored, 101).auc();
+    println!("== end-to-end run (shapes_dof scene) ==");
+    println!("events in            : {}", report.events_in);
+    println!("signal after STCF    : {}", report.events_signal);
+    println!("corners tagged       : {}", report.corners.len());
+    println!("LUT refreshes        : {}", report.lut_refreshes);
+    println!("DVFS switches        : {}", report.dvfs_switches);
+    println!("PR-AUC vs ground truth: {auc:.3}");
+    println!("simulated NMC busy   : {:.3} ms", report.nmc.busy_ns / 1e6);
+    println!("simulated NMC energy : {:.3} µJ", report.nmc.energy_pj / 1e6);
+    println!("wall time            : {:.2} s ({:.0} keps)",
+        report.wall_s, report.events_in as f64 / report.wall_s / 1e3);
+    Ok(Json::obj(vec![
+        ("events_in", Json::Num(report.events_in as f64)),
+        ("events_signal", Json::Num(report.events_signal as f64)),
+        ("corners", Json::Num(report.corners.len() as f64)),
+        ("lut_refreshes", Json::Num(report.lut_refreshes as f64)),
+        ("auc", Json::Num(auc)),
+        ("wall_s", Json::Num(report.wall_s)),
+    ]))
+}
+
+/// Print the DVFS V/f LUT.
+fn cmd_lut() -> Result<Json> {
+    let lut = nmc_tos::dvfs::build_lut(&DvfsConfig::default());
+    println!("== DVFS V/f lookup table ==");
+    println!("{:>6} {:>12} {:>16}", "Vdd", "clock MHz", "max rate Meps");
+    let mut rows = Vec::new();
+    for op in &lut {
+        println!("{:>6.2} {:>12.0} {:>16.1}", op.vdd, op.clock_hz / 1e6, op.max_rate / 1e6);
+        rows.push(Json::Arr(vec![
+            Json::Num(op.vdd),
+            Json::Num(op.clock_hz),
+            Json::Num(op.max_rate),
+        ]));
+    }
+    Ok(Json::Arr(rows))
+}
+
+/// Ablation grid (DESIGN.md §Extensions): pipeline x DVFS x patch size x
+/// threshold x STCF — which design choices buy what.
+fn cmd_ablate(args: &Args) -> Result<Json> {
+    use nmc_tos::nmc::floorplan::CircuitInventory;
+    let n_events = args.num("events", 120_000.0) as usize;
+
+    println!("== ablation: pipeline x voltage (7x7 patch latency, ns) ==");
+    println!("{:>6} {:>14} {:>14} {:>10}", "Vdd", "pipelined", "unpipelined", "gain");
+    for mv in [600u32, 800, 1000, 1200] {
+        let t = TimingModel::at(mv as f64 / 1000.0);
+        let a = t.patch_latency_pipelined_ns(calib::PATCH);
+        let b = t.patch_latency_unpipelined_ns(calib::PATCH);
+        println!("{:>6.2} {:>14.1} {:>14.1} {:>9.2}x", mv as f64 / 1000.0, a, b, b / a);
+    }
+
+    println!("\n== ablation: patch size (throughput @1.2 V, Meps) ==");
+    println!("{:>8} {:>14} {:>14}", "patch", "NMC+pipe", "conventional");
+    for p in [3usize, 5, 7, 9, 11] {
+        let t = TimingModel::at(1.2);
+        let nmc = 1e9 / t.patch_latency_pipelined_ns(p);
+        let conv_cycles = calib::CONV_CYCLES_PER_PATCH * (p * p) as f64 / 49.0;
+        let conv = calib::CONV_CLOCK_NOM_HZ / conv_cycles;
+        println!("{:>7}px {:>14.1} {:>14.2}", p, nmc / 1e6, conv / 1e6);
+    }
+
+    println!("\n== ablation: area — simplified MOL/CMP vs 28T full adders ==");
+    for (name, res) in [("DAVIS240", Resolution::DAVIS240), ("HD720", Resolution::HD720)] {
+        let inv = CircuitInventory::for_resolution(res);
+        println!(
+            "{:<10} ours {:>7.3} mm2   28T-FA {:>7.3} mm2   array fraction {:>4.1} %",
+            name,
+            inv.area_mm2(),
+            inv.area_mm2_with_28t_fas(),
+            inv.array_fraction() * 100.0
+        );
+    }
+
+    // STCF + detection-quality ablation needs the engine
+    println!("\n== ablation: STCF & TOS threshold (AUC on shapes_dof scene) ==");
+    let mut scene = SceneConfig::shapes_dof().build(42);
+    let (events, gt) = scene.generate_with_gt(n_events);
+    println!("{:>22} {:>8} {:>10}", "config", "AUC", "signal");
+    let mut rows = Vec::new();
+    for (label, stcf_on, threshold) in [
+        ("stcf=on  th=225", true, 225u8),
+        ("stcf=off th=225", false, 225),
+        ("stcf=on  th=235", true, 235),
+        ("stcf=on  th=245", true, 245),
+    ] {
+        let mut cfg = PipelineConfig::davis240();
+        cfg.dvfs = None;
+        if !stcf_on {
+            cfg.stcf = None;
+        }
+        cfg.tos.threshold = threshold;
+        let mut pipe = Pipeline::new(cfg)?;
+        let report = pipe.run(&events)?;
+        let auc = PrCurve::from_scores(&report.scored_events(&gt, 3.5), 101).auc();
+        println!("{:>22} {:>8.3} {:>10}", label, auc, report.events_signal);
+        rows.push(Json::obj(vec![
+            ("config", Json::Str(label.into())),
+            ("auc", Json::Num(auc)),
+            ("signal", Json::Num(report.events_signal as f64)),
+        ]));
+    }
+    Ok(Json::Arr(rows))
+}
+
+/// Render the Fig. 7 control-signal waveform at a voltage.
+fn cmd_waveform(args: &Args) -> Result<Json> {
+    let vdd = args.num("vdd", 1.2);
+    let w = nmc_tos::nmc::waveform::row_waveform(vdd);
+    println!("== Fig. 7: one-row control waveform @ {vdd} V (row = {:.2} ns) ==", w.row_ns);
+    print!("{}", w.render_ascii(72));
+    w.check_contracts().map_err(|e| anyhow::anyhow!(e))?;
+    println!("timing contracts: OK; next row may start at {:.2} ns (pipelined)",
+        w.next_row_offset_ns());
+    Ok(Json::obj(vec![
+        ("vdd", Json::Num(vdd)),
+        ("row_ns", Json::Num(w.row_ns)),
+        ("next_row_offset_ns", Json::Num(w.next_row_offset_ns())),
+    ]))
+}
+
+/// Generate + save a synthetic dataset to disk (binary AER container).
+fn cmd_gen_data(args: &Args) -> Result<Json> {
+    let n = args.num("events", 1_000_000.0) as usize;
+    let seed = args.num("seed", 42.0) as u64;
+    let which = args.get("scene").unwrap_or("shapes_dof");
+    let out = args.get("out").unwrap_or("results/events.bin").to_string();
+    let cfg = match which {
+        "shapes_dof" => SceneConfig::shapes_dof(),
+        "dynamic_dof" => SceneConfig::dynamic_dof(),
+        other => bail!("unknown scene {other}"),
+    };
+    let mut scene = cfg.build(seed);
+    let events = scene.generate(n);
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    nmc_tos::events::codec::save(std::path::Path::new(&out), &events)?;
+    println!("wrote {n} events ({which}, seed {seed}) to {out}");
+    Ok(Json::obj(vec![
+        ("out", Json::Str(out)),
+        ("events", Json::Num(n as f64)),
+    ]))
+}

@@ -1,0 +1,98 @@
+//! Comparison (CMP) module — paper Fig. 6.
+//!
+//! Two rows of type-B 8T SRAM hold the MOL result (`SUM = TOS-1`) and the
+//! threshold `TH`.  Discharging both rows onto a private read bitline
+//! implements a per-bit NOR: `RBL_i` stays high iff `SUM_i = TH_i = 0`.
+//! The inverter readout gives `(SUM_i, TH_i, NOR_i)` triples from which a
+//! chain of *customized* full adders computes the carry of `SUM + ~TH + 1`,
+//! i.e. the predicate `SUM >= TH` that decides clamp-to-zero.
+//!
+//! The model is bit/gate-accurate so tests can verify the NOR-based
+//! comparator against plain integer comparison for every input pair.
+
+use super::calib::BITS_PER_WORD;
+
+/// Per-bit signals the CMP array produces (for waveform-level tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CmpBit {
+    /// Stored SUM bit.
+    pub sum: bool,
+    /// Stored TH bit.
+    pub th: bool,
+    /// The NOR-computed bitline state: `!(sum | th)`.
+    pub nor: bool,
+}
+
+/// Output of the CMP stage for one word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CmpOutput {
+    /// `SUM >= TH` — carry-out of `SUM + ~TH + 1`.
+    pub geq: bool,
+    /// Per-bit signals (LSB first).
+    pub bits: [CmpBit; BITS_PER_WORD],
+}
+
+/// Evaluate the CMP module on a 5-bit `sum` and 5-bit `th`.
+///
+/// The customized FA exploits that per bit only three input patterns are
+/// distinguishable from the NOR readout — `(0,0)`, `(1,0)/(0,1)`, `(1,1)`:
+/// carry propagation is `c_{i+1} = sum_i` when bits differ, `c_{i+1} = c_i`
+/// when equal (standard borrow-lookahead identity for `sum >= th`).
+pub fn compare_geq(sum: u8, th: u8) -> CmpOutput {
+    debug_assert!(sum < (1 << BITS_PER_WORD) && th < (1 << BITS_PER_WORD));
+    let mut bits = [CmpBit { sum: false, th: false, nor: false }; BITS_PER_WORD];
+    let mut carry = true; // +1 of the two's complement
+    for i in 0..BITS_PER_WORD {
+        let s = (sum >> i) & 1 == 1;
+        let t = (th >> i) & 1 == 1;
+        bits[i] = CmpBit { sum: s, th: t, nor: !(s | t) };
+        // full adder on (s, !t, carry): carry-out = maj(s, !t, carry)
+        let nt = !t;
+        carry = (s && nt) || (s && carry) || (nt && carry);
+    }
+    CmpOutput { geq: carry, bits }
+}
+
+/// Gate depth of the customized-FA carry chain (one mux per bit).
+pub const CMP_DEPTH_GATES: usize = BITS_PER_WORD;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_integer_comparison_exhaustively() {
+        for s in 0u8..32 {
+            for t in 0u8..32 {
+                let out = compare_geq(s, t);
+                assert_eq!(out.geq, s >= t, "s={s} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn nor_bitline_semantics() {
+        let out = compare_geq(0b01010, 0b00110);
+        for (i, b) in out.bits.iter().enumerate() {
+            let s = (0b01010 >> i) & 1 == 1;
+            let t = (0b00110 >> i) & 1 == 1;
+            assert_eq!(b.nor, !(s | t), "bit {i}");
+        }
+    }
+
+    #[test]
+    fn equal_inputs_are_geq() {
+        for v in 0u8..32 {
+            assert!(compare_geq(v, v).geq);
+        }
+    }
+
+    #[test]
+    fn rbl_full_swing_only_when_both_zero() {
+        // the paper's point: RBL stays high (nor=1) only for (0,0) bits
+        let out = compare_geq(0, 0);
+        assert!(out.bits.iter().all(|b| b.nor));
+        let out = compare_geq(0x1F, 0x1F);
+        assert!(out.bits.iter().all(|b| !b.nor));
+    }
+}

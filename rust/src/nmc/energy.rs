@@ -1,0 +1,145 @@
+//! Energy + power model of the NMC macro.
+//!
+//! Per-patch dynamic energy follows the calibrated `E(V) = E_nom (V/1.2)^γ`
+//! law of [`calib`]; the static (leakage) component is a small
+//! voltage-dependent floor.  The module also exposes the Fig. 10(a)
+//! per-module breakdown and the Fig. 10(b) power-vs-event-rate curves.
+
+
+
+use super::calib;
+
+/// Leakage power at nominal voltage (mW). SRAM-macro scale leakage in
+/// 65 nm: a few µW — small against dynamic power at Meps rates but keeps
+/// idle power non-zero in Table I.
+pub const LEAK_NOM_MW: f64 = 0.004;
+
+/// Energy model at a fixed supply voltage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyModel {
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// Dynamic energy of one full-P patch update (pJ).
+    pub patch_pj: f64,
+    /// Leakage power (mW).
+    pub leak_mw: f64,
+}
+
+impl EnergyModel {
+    /// Build the model at a voltage.
+    pub fn at(vdd: f64) -> Self {
+        let patch_pj = calib::PATCH_ENERGY_NOM_PJ * calib::energy_factor(vdd);
+        // Leakage scales roughly linearly with Vdd (DIBL-dominated region).
+        let leak_mw = LEAK_NOM_MW * vdd / calib::VDD_NOM;
+        Self { vdd, patch_pj, leak_mw }
+    }
+
+    /// Energy of a patch that touches `pixels` of the full `P*P` patch
+    /// (border-clipped patches switch fewer bitlines).
+    #[inline]
+    pub fn patch_energy_pj(&self, pixels: usize) -> f64 {
+        let full = (calib::PATCH * calib::PATCH) as f64;
+        self.patch_pj * pixels as f64 / full
+    }
+
+    /// Average power at a sustained event rate (mW).
+    pub fn power_mw(&self, events_per_s: f64) -> f64 {
+        self.patch_pj * 1e-12 * events_per_s * 1e3 + self.leak_mw
+    }
+
+    /// Per-module energy breakdown of one full patch (pJ), in
+    /// [`calib::ENERGY_SHARE_LABELS`] order.
+    pub fn breakdown_pj(&self) -> [f64; 4] {
+        let mut out = [0.0; 4];
+        for (o, s) in out.iter_mut().zip(calib::ENERGY_SHARE) {
+            *o = self.patch_pj * s;
+        }
+        out
+    }
+}
+
+/// Conventional-digital energy model (for Fig. 9(c)/10(b) baselines).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConventionalEnergy {
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// Dynamic energy of one patch (pJ).
+    pub patch_pj: f64,
+    /// Leakage power (mW). A synthesized digital datapath leaks a bit more
+    /// than a dense SRAM macro.
+    pub leak_mw: f64,
+}
+
+impl ConventionalEnergy {
+    /// Build the conventional-baseline model at a voltage.
+    pub fn at(vdd: f64) -> Self {
+        let patch_pj =
+            calib::CONV_ENERGY_RATIO * calib::PATCH_ENERGY_NOM_PJ * calib::energy_factor(vdd);
+        Self { vdd, patch_pj, leak_mw: 1.5 * LEAK_NOM_MW * vdd / calib::VDD_NOM }
+    }
+
+    /// Average power at a sustained event rate (mW).
+    pub fn power_mw(&self, events_per_s: f64) -> f64 {
+        self.patch_pj * 1e-12 * events_per_s * 1e3 + self.leak_mw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors() {
+        assert!((EnergyModel::at(1.2).patch_pj - 139.0).abs() < 1e-9);
+        assert!((EnergyModel::at(0.6).patch_pj - 26.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clipped_patch_scales_energy() {
+        let e = EnergyModel::at(1.2);
+        assert!((e.patch_energy_pj(49) - 139.0).abs() < 1e-9);
+        let corner = e.patch_energy_pj(16); // 4x4 corner clip
+        assert!((corner - 139.0 * 16.0 / 49.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_matches_fig10a() {
+        let b = EnergyModel::at(1.2).breakdown_pj();
+        let total: f64 = b.iter().sum();
+        assert!((b[0] / total - 0.459).abs() < 1e-6); // peripheral
+        assert!((b[1] / total - 0.319).abs() < 1e-6); // array
+        assert!((b[2] / total - 0.116).abs() < 1e-6); // driver
+        assert!((b[3] / total - 0.106).abs() < 1e-6); // SA
+    }
+
+    #[test]
+    fn power_at_45meps_matches_fig10b_ratio() {
+        // Paper: at 45 Meps NMC cuts power 1.2x vs conventional.
+        let nmc = EnergyModel::at(1.2).power_mw(45e6);
+        let conv = ConventionalEnergy::at(1.2).power_mw(45e6);
+        let ratio = conv / nmc;
+        assert!((ratio - 1.23).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn energy_reduction_6p6x_conventional_to_nmc_dvfs() {
+        let conv = ConventionalEnergy::at(1.2).patch_pj;
+        let nmc_low = EnergyModel::at(0.6).patch_pj;
+        let r = conv / nmc_low;
+        assert!((r - 6.6).abs() < 0.05, "{r}");
+    }
+
+    #[test]
+    fn leakage_small_but_positive() {
+        let e = EnergyModel::at(0.6);
+        assert!(e.leak_mw > 0.0 && e.leak_mw < 0.01);
+        assert!(e.power_mw(0.0) == e.leak_mw);
+    }
+
+    #[test]
+    fn power_monotone_in_rate_and_voltage() {
+        let e = EnergyModel::at(1.0);
+        assert!(e.power_mw(2e6) < e.power_mw(4e6));
+        assert!(EnergyModel::at(0.8).power_mw(1e6) < EnergyModel::at(1.2).power_mw(1e6));
+    }
+}

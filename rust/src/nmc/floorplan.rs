@@ -1,0 +1,141 @@
+//! Area / floorplan model of the NMC-TOS macro in the paper's 65 nm
+//! process: transistor counts per circuit block scaled by standard 65 nm
+//! layout densities.  Not a paper table per se, but the area story is what
+//! makes "near-memory" credible for an edge device, and the ablation
+//! harness uses it to cost alternative configurations (e.g. 28T FAs vs
+//! the simplified MOL, or 6T storage without the pipeline).
+
+use super::calib::{BITS_PER_WORD, BLOCK_COLS_PX, BLOCK_ROWS};
+use crate::events::Resolution;
+use super::sram::BlockGrid;
+
+/// Approximate layout area of one minimum transistor in a 65 nm SRAM-style
+/// layout (µm²), calibrated so a 6T bitcell lands at the published 65 nm
+/// bitcell area of ~0.52 µm².
+pub const UM2_PER_SRAM_TRANSISTOR: f64 = 0.52 / 6.0;
+/// Logic transistors lay out looser than bitcells.
+pub const UM2_PER_LOGIC_TRANSISTOR: f64 = 0.23;
+
+/// Transistor counts of the circuit blocks (paper Figs. 4-6).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CircuitInventory {
+    /// Type-A cells (8T) in the storage array.
+    pub type_a_cells: usize,
+    /// Type-B cells (8T) in the CMP module (2 rows per block).
+    pub type_b_cells: usize,
+    /// Sense amps (one per column pair of 5-bit word => per bit column).
+    pub sense_amps: usize,
+    /// Simplified MOL slices (per bit column).
+    pub mol_slices: usize,
+    /// Customized FA slices in the CMP chain (per bit column).
+    pub cmp_fa_slices: usize,
+    /// Write-back DFF+mux slices (per bit column).
+    pub wr_slices: usize,
+}
+
+/// Per-slice transistor counts.
+const T_PER_8T_CELL: usize = 8;
+const T_PER_SA: usize = 12; // latched SA
+const T_PER_MOL: usize = 10; // XNOR + OR vs 28T FA
+const T_PER_28T_FA: usize = 28;
+const T_PER_CMP_FA: usize = 16; // customized FA + inverter readout
+const T_PER_WR: usize = 22; // DFF (16T) + 3:1 mux
+
+impl CircuitInventory {
+    /// Inventory for a sensor resolution (tiled into 180x120 blocks).
+    pub fn for_resolution(res: Resolution) -> Self {
+        let grid = BlockGrid::for_resolution(res);
+        let blocks = grid.block_count();
+        let bit_cols = BLOCK_COLS_PX * BITS_PER_WORD; // 600 per block
+        Self {
+            type_a_cells: blocks * BLOCK_ROWS * bit_cols,
+            type_b_cells: blocks * 2 * bit_cols,
+            sense_amps: blocks * bit_cols,
+            mol_slices: blocks * bit_cols,
+            cmp_fa_slices: blocks * bit_cols,
+            wr_slices: blocks * bit_cols,
+        }
+    }
+
+    /// Total transistors.
+    pub fn transistors(&self) -> usize {
+        self.type_a_cells * T_PER_8T_CELL
+            + self.type_b_cells * T_PER_8T_CELL
+            + self.sense_amps * T_PER_SA
+            + self.mol_slices * T_PER_MOL
+            + self.cmp_fa_slices * T_PER_CMP_FA
+            + self.wr_slices * T_PER_WR
+    }
+
+    /// Estimated area (mm²): array at bitcell density, periphery at logic
+    /// density.
+    pub fn area_mm2(&self) -> f64 {
+        let array_t = (self.type_a_cells + self.type_b_cells) * T_PER_8T_CELL;
+        let peri_t = self.transistors() - array_t;
+        (array_t as f64 * UM2_PER_SRAM_TRANSISTOR + peri_t as f64 * UM2_PER_LOGIC_TRANSISTOR)
+            / 1e6
+    }
+
+    /// Area of the hypothetical design that keeps 28T FAs everywhere
+    /// instead of the simplified MOL + customized CMP FA (the ablation the
+    /// paper's Figs. 5(b)/6(b) argue against).
+    pub fn area_mm2_with_28t_fas(&self) -> f64 {
+        let array_t = (self.type_a_cells + self.type_b_cells) * T_PER_8T_CELL;
+        let peri_t = self.sense_amps * T_PER_SA
+            + self.mol_slices * T_PER_28T_FA
+            + self.cmp_fa_slices * T_PER_28T_FA
+            + self.wr_slices * T_PER_WR;
+        (array_t as f64 * UM2_PER_SRAM_TRANSISTOR + peri_t as f64 * UM2_PER_LOGIC_TRANSISTOR)
+            / 1e6
+    }
+
+    /// Array fraction of total area (the "near-memory" figure of merit:
+    /// most silicon is the memory itself).
+    pub fn array_fraction(&self) -> f64 {
+        let array_t = ((self.type_a_cells + self.type_b_cells) * T_PER_8T_CELL) as f64
+            * UM2_PER_SRAM_TRANSISTOR;
+        array_t / 1e6 / self.area_mm2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn davis240_inventory_matches_fig3() {
+        let inv = CircuitInventory::for_resolution(Resolution::DAVIS240);
+        // 2 blocks x 180 rows x 600 bit-columns
+        assert_eq!(inv.type_a_cells, 2 * 180 * 600);
+        assert_eq!(inv.type_b_cells, 2 * 2 * 600);
+        assert_eq!(inv.sense_amps, 2 * 600);
+    }
+
+    #[test]
+    fn area_is_sub_mm2_for_davis240() {
+        // a 216-kbit macro + periphery in 65 nm must land well below 2 mm²
+        let inv = CircuitInventory::for_resolution(Resolution::DAVIS240);
+        let a = inv.area_mm2();
+        assert!(a > 0.05 && a < 2.0, "area {a} mm2");
+    }
+
+    #[test]
+    fn array_dominates_area() {
+        let inv = CircuitInventory::for_resolution(Resolution::DAVIS240);
+        assert!(inv.array_fraction() > 0.35, "array fraction {}", inv.array_fraction());
+    }
+
+    #[test]
+    fn simplified_logic_saves_area() {
+        let inv = CircuitInventory::for_resolution(Resolution::DAVIS240);
+        assert!(inv.area_mm2() < inv.area_mm2_with_28t_fas());
+    }
+
+    #[test]
+    fn area_scales_with_resolution() {
+        let small = CircuitInventory::for_resolution(Resolution::DAVIS240).area_mm2();
+        let big = CircuitInventory::for_resolution(Resolution::HD720).area_mm2();
+        // 44 blocks vs 2 blocks
+        assert!(big / small > 15.0 && big / small < 30.0, "ratio {}", big / small);
+    }
+}

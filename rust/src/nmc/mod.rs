@@ -1,0 +1,260 @@
+//! The NMC-TOS macro: the paper's core hardware contribution, simulated at
+//! phase level.
+//!
+//! [`NmcMacro`] owns the type-A SRAM blocks covering the sensor, the
+//! timing/energy models at the current DVFS voltage, and (optionally) the
+//! Monte-Carlo read-error injector.  Feeding it an event stream yields a
+//! TOS identical to the golden software model at nominal voltage, plus the
+//! latency/energy telemetry every Fig. 9/10 harness consumes.
+
+pub mod calib;
+pub mod cmp;
+pub mod energy;
+pub mod floorplan;
+pub mod mol;
+pub mod montecarlo;
+pub mod pipeline;
+pub mod sram;
+pub mod timing;
+pub mod waveform;
+pub mod wr;
+
+
+
+use crate::events::{Event, Resolution};
+use crate::tos::TosConfig;
+
+use energy::EnergyModel;
+use montecarlo::ErrorInjector;
+use pipeline::{process_event, PatchCost, WbTable};
+use sram::TypeAArray;
+use timing::TimingModel;
+
+/// Configuration of the macro instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NmcConfig {
+    /// Algorithm parameters (patch size, threshold).
+    pub tos: TosConfig,
+    /// Use the 8T read/write-decoupled pipeline schedule (paper Fig. 4(b)).
+    pub pipelined: bool,
+    /// Initial supply voltage (V).
+    pub vdd: f64,
+    /// Inject Monte-Carlo read errors (BER follows the voltage).
+    pub inject_errors: bool,
+    /// RNG seed for error injection.
+    pub seed: u64,
+}
+
+impl Default for NmcConfig {
+    fn default() -> Self {
+        Self {
+            tos: TosConfig::default(),
+            pipelined: true,
+            vdd: calib::VDD_NOM,
+            inject_errors: false,
+            seed: 0,
+        }
+    }
+}
+
+/// Cumulative telemetry of a macro instance.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NmcStats {
+    /// Events processed.
+    pub events: u64,
+    /// Total busy time (ns).
+    pub busy_ns: f64,
+    /// Total dynamic energy (pJ).
+    pub energy_pj: f64,
+    /// Total pixels updated.
+    pub pixels: u64,
+    /// Bits corrupted by the injector.
+    pub flipped_bits: u64,
+}
+
+/// Phase-level simulator of the NMC-TOS macro.
+#[derive(Debug)]
+pub struct NmcMacro {
+    cfg: NmcConfig,
+    array: TypeAArray,
+    timing: TimingModel,
+    energy: EnergyModel,
+    injector: Option<ErrorInjector>,
+    /// Memoized gate-level write-back datapath (fixed per threshold).
+    wb_table: WbTable,
+    stats: NmcStats,
+}
+
+impl NmcMacro {
+    /// Build a macro covering `res`.
+    pub fn new(res: Resolution, cfg: NmcConfig) -> Self {
+        cfg.tos.validate().expect("invalid TOS config");
+        assert!(cfg.tos.threshold >= 225, "5-bit datapath requires TH >= 225");
+        Self {
+            cfg,
+            array: TypeAArray::new(res),
+            timing: TimingModel::at(cfg.vdd),
+            energy: EnergyModel::at(cfg.vdd),
+            injector: cfg
+                .inject_errors
+                .then(|| ErrorInjector::new_sized(cfg.vdd, cfg.seed, res.pixels())),
+            wb_table: WbTable::build(cfg.tos.threshold),
+            stats: NmcStats::default(),
+        }
+    }
+
+    /// Current supply voltage (V).
+    #[inline]
+    pub fn vdd(&self) -> f64 {
+        self.timing.vdd
+    }
+
+    /// Retarget the voltage (DVFS transition). Timing, energy and BER all
+    /// move together.
+    pub fn set_vdd(&mut self, vdd: f64) {
+        self.timing = TimingModel::at(vdd);
+        self.energy = EnergyModel::at(vdd);
+        if let Some(inj) = &mut self.injector {
+            inj.set_vdd(vdd);
+        }
+    }
+
+    /// Max sustainable event rate at the current voltage (events/s).
+    #[inline]
+    pub fn max_event_rate(&self) -> f64 {
+        if self.cfg.pipelined {
+            self.timing.max_event_rate()
+        } else {
+            1e9 / self.timing.patch_latency_unpipelined_ns(calib::PATCH)
+        }
+    }
+
+    /// Process one event; returns the latency/energy record.
+    pub fn process(&mut self, ev: &Event) -> PatchCost {
+        let cost = process_event(
+            &mut self.array,
+            ev,
+            self.cfg.tos.patch,
+            self.cfg.tos.threshold,
+            self.cfg.pipelined,
+            &self.timing,
+            &self.energy,
+            self.injector.as_mut(),
+            Some(&self.wb_table),
+        );
+        self.stats.events += 1;
+        self.stats.busy_ns += cost.latency_ns;
+        self.stats.energy_pj += cost.energy_pj;
+        self.stats.pixels += cost.pixels as u64;
+        if let Some(inj) = &self.injector {
+            self.stats.flipped_bits = inj.flipped_bits;
+        }
+        cost
+    }
+
+    /// Process a batch of events in order.
+    pub fn process_batch(&mut self, events: &[Event]) {
+        for e in events {
+            self.process(e);
+        }
+    }
+
+    /// Snapshot the TOS as an 8-bit image (for the FBF Harris stage).
+    pub fn snapshot_u8(&self) -> Vec<u8> {
+        self.array.snapshot_u8()
+    }
+
+    /// Cumulative telemetry.
+    #[inline]
+    pub fn stats(&self) -> NmcStats {
+        self.stats
+    }
+
+    /// Sensor geometry.
+    #[inline]
+    pub fn resolution(&self) -> Resolution {
+        self.array.grid().res
+    }
+
+    /// Number of SRAM blocks (paper: 2 for DAVIS240).
+    #[inline]
+    pub fn block_count(&self) -> usize {
+        self.array.grid().block_count()
+    }
+
+    /// Reset surface and telemetry.
+    pub fn reset(&mut self) {
+        self.array.clear();
+        self.stats = NmcStats::default();
+        let vdd = self.vdd();
+        let n = self.resolution().pixels();
+        if let Some(inj) = &mut self.injector {
+            *inj = ErrorInjector::new_sized(vdd, self.cfg.seed, n);
+            self.stats.flipped_bits = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tos::TosSurface;
+
+    #[test]
+    fn equals_golden_model_at_nominal() {
+        let res = Resolution::TEST64;
+        let mut mac = NmcMacro::new(res, NmcConfig::default());
+        let mut golden = TosSurface::new(res, TosConfig::default());
+        for i in 0..3000u64 {
+            let e = Event::on((i * 31 % 64) as u16, (i * 11 % 64) as u16, i);
+            mac.process(&e);
+            golden.update(&e);
+        }
+        assert_eq!(mac.snapshot_u8(), golden.data().to_vec());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut mac = NmcMacro::new(Resolution::TEST64, NmcConfig::default());
+        mac.process(&Event::on(30, 30, 0));
+        mac.process(&Event::on(0, 0, 1));
+        let s = mac.stats();
+        assert_eq!(s.events, 2);
+        assert_eq!(s.pixels, 49 + 16);
+        assert!(s.busy_ns > 0.0 && s.energy_pj > 0.0);
+    }
+
+    #[test]
+    fn dvfs_retarget_scales_latency() {
+        let mut mac = NmcMacro::new(Resolution::TEST64, NmcConfig::default());
+        let hi = mac.process(&Event::on(30, 30, 0)).latency_ns;
+        mac.set_vdd(0.6);
+        let lo = mac.process(&Event::on(30, 30, 1)).latency_ns;
+        assert!((lo / hi - calib::delay_factor(0.6)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_rate_matches_paper_endpoints() {
+        let mut mac = NmcMacro::new(Resolution::DAVIS240, NmcConfig::default());
+        assert!((mac.max_event_rate() / 1e6 - 63.1).abs() < 0.2);
+        mac.set_vdd(0.6);
+        assert!((mac.max_event_rate() / 1e6 - 4.93).abs() < 0.1);
+        assert_eq!(mac.block_count(), 2);
+    }
+
+    #[test]
+    fn reset_restores_initial_state() {
+        let mut mac = NmcMacro::new(Resolution::TEST64, NmcConfig::default());
+        mac.process(&Event::on(5, 5, 0));
+        mac.reset();
+        assert_eq!(mac.stats().events, 0);
+        assert!(mac.snapshot_u8().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "TH >= 225")]
+    fn rejects_low_threshold() {
+        let cfg = NmcConfig { tos: TosConfig { patch: 7, threshold: 200 }, ..Default::default() };
+        NmcMacro::new(Resolution::TEST64, cfg);
+    }
+}

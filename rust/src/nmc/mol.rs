@@ -1,0 +1,81 @@
+//! Simplified Minus-One Logic (MOL) — paper Fig. 5.
+//!
+//! The MO module adds the constant −1 (all-ones in two's complement) to the
+//! 5-bit word read out of the type-A array.  Because the addend is fixed,
+//! the 28T full adder collapses to a borrow-ripple of inverter + AND gates
+//! (the truth table of Fig. 5(c)); this module models it *gate by gate* so
+//! the test suite can check the simplification against plain arithmetic,
+//! and so the logic-depth accounting used in DESIGN.md §Perf is grounded.
+
+use super::calib::BITS_PER_WORD;
+
+/// Result of the minus-one stage for one word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MolOutput {
+    /// The 5-bit difference `A - 1` (wraps if A == 0, as hardware does).
+    pub sum: u8,
+    /// Carry-out of the MSB position: 1 unless the input was 0
+    /// (i.e. borrow did not propagate past the MSB).
+    pub cout: bool,
+}
+
+/// Gate-level simplified minus-one over a 5-bit word.
+///
+/// Per bit *i* (with `b0 = 1` the initial borrow):
+/// `s_i = a_i XNOR b_i` is what a full adder with addend-bit 1 degenerates
+/// to: `s_i = a_i XOR 1 XOR c_i`; the carry chain `c_{i+1} = a_i OR
+/// (1 AND c_i)`… with all addend bits 1, `c_{i+1} = a_i | c_i`? — no:
+/// `c_{i+1} = majority(a_i, 1, c_i) = a_i | c_i`. Starting carry c_0 = 0
+/// for A + 0b11111: s_i = a_i ^ 1 ^ c_i, c_{i+1} = a_i | c_i.
+pub fn minus_one_gate(a: u8) -> MolOutput {
+    debug_assert!(a < (1 << BITS_PER_WORD));
+    let mut carry = false; // c_0
+    let mut sum = 0u8;
+    for i in 0..BITS_PER_WORD {
+        let ai = (a >> i) & 1 == 1;
+        // full adder with constant addend bit 1:
+        let s = ai ^ true ^ carry;
+        let c_next = ai || carry; // maj(ai, 1, carry)
+        if s {
+            sum |= 1 << i;
+        }
+        carry = c_next;
+    }
+    MolOutput { sum, cout: carry }
+}
+
+/// Logic depth (in gate stages) of the simplified MOL ripple — used by the
+/// perf model to justify the MO-phase share relative to a 28T-FA ripple.
+pub const MOL_DEPTH_GATES: usize = BITS_PER_WORD; // one OR per bit on the carry path
+
+/// Logic depth of the conventional 28T full-adder ripple it replaces
+/// (two gate stages per bit on the carry path).
+pub const FA28T_DEPTH_GATES: usize = 2 * BITS_PER_WORD;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_arithmetic_for_all_words() {
+        for a in 0u8..(1 << BITS_PER_WORD) {
+            let out = minus_one_gate(a);
+            let want = a.wrapping_sub(1) & 0x1F;
+            assert_eq!(out.sum, want, "a={a}");
+            // carry-out is 1 iff no borrow past MSB, i.e. a != 0
+            assert_eq!(out.cout, a != 0, "a={a}");
+        }
+    }
+
+    #[test]
+    fn zero_wraps_like_hardware() {
+        let out = minus_one_gate(0);
+        assert_eq!(out.sum, 0x1F);
+        assert!(!out.cout);
+    }
+
+    #[test]
+    fn simplification_halves_carry_depth() {
+        assert!(MOL_DEPTH_GATES * 2 == FA28T_DEPTH_GATES);
+    }
+}

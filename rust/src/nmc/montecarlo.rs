@@ -1,0 +1,284 @@
+//! Monte-Carlo variation model: sense-amp offset + bitcell read-current
+//! mismatch -> read bit errors at low supply voltage (paper Sec. V-C).
+//!
+//! Physical picture: during the MO phase the RBL develops a differential
+//! swing proportional to the cell read current over the SA strobe window;
+//! the latched SA resolves correctly iff the developed swing exceeds its
+//! input offset.  Both the per-read swing and the per-read offset carry
+//! Gaussian mismatch, so the upset probability of one bit-read is
+//! `Q((V - V0)/sigma)` with `(V0, sigma)` fitted in [`calib::ber_params`]
+//! to the paper's published BER points.
+//!
+//! The module provides (a) a Monte-Carlo *measurement* harness that
+//! estimates BER by simulating individual reads — this regenerates the
+//! paper's MC table — and (b) a fast error-injection sampler used by the
+//! system-level pipeline for the Fig. 11 study.
+
+use crate::util::rng::Rng;
+
+
+use super::calib;
+
+/// One voltage point of the Monte-Carlo sweep.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BerPoint {
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// Bit reads simulated.
+    pub reads: u64,
+    /// Upsets observed.
+    pub errors: u64,
+    /// Measured bit error rate.
+    pub ber: f64,
+    /// Analytic model value, for reference.
+    pub model_ber: f64,
+}
+
+/// Simulate `reads` single-bit reads at `vdd` and count upsets.
+///
+/// Each read draws the developed swing margin `m ~ N(V - V0, sigma)`; the
+/// SA resolves wrongly when `m < 0`.
+pub fn measure_ber(vdd: f64, reads: u64, seed: u64) -> BerPoint {
+    let (v0, sigma) = calib::ber_params();
+    let mut rng = Rng::seed_from(seed);
+    let mean = vdd - v0;
+    let mut errors = 0u64;
+    for _ in 0..reads {
+        let m = rng.normal(mean, sigma);
+        if m < 0.0 {
+            errors += 1;
+        }
+    }
+    BerPoint {
+        vdd,
+        reads,
+        errors,
+        ber: errors as f64 / reads as f64,
+        model_ber: calib::bit_error_probability(vdd),
+    }
+}
+
+/// Sweep BER over a voltage range (the paper's MC table).
+pub fn ber_sweep(voltages: &[f64], reads: u64, seed: u64) -> Vec<BerPoint> {
+    voltages
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| measure_ber(v, reads, seed ^ (i as u64).wrapping_mul(0x9E37_79B9)))
+        .collect()
+}
+
+/// Static-fault error injector for the system pipeline.
+///
+/// Monte-Carlo mismatch is *per device*, not per access: a given SA/cell
+/// pair either has enough margin at a voltage or it does not.  So the
+/// injector derives, deterministically from `(seed, cell, bit)`, a margin
+/// percentile `u ~ U(0,1)`; the bit is faulty at voltage `V` iff
+/// `u < p_bit(V)` — the worst cells fail first, and the faulty set at
+/// 0.61 V is a subset of the one at 0.60 V, exactly like silicon.  A
+/// faulty bit reads *stuck* at a (deterministic) random value.
+#[derive(Debug, Clone)]
+pub struct ErrorInjector {
+    /// Per-bit fault probability at the current voltage.
+    p_bit: f64,
+    seed: u64,
+    /// Precomputed per-cell fault map at the current voltage:
+    /// `(mask, stuck)` per cell — faulty bits in `mask` read as the
+    /// corresponding bits of `stuck`. Rebuilt on DVFS retarget (rare);
+    /// turns the hot-path corrupt() into two byte ops
+    /// (EXPERIMENTS.md §Perf iteration 7).
+    map: Vec<(u8, u8)>,
+    /// Total corrupted word reads so far (telemetry).
+    pub flipped_bits: u64,
+    /// Total word reads seen (telemetry).
+    pub word_reads: u64,
+}
+
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    // splitmix64 finalizer: cheap, stateless, well distributed
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl ErrorInjector {
+    /// Injector at a fixed supply voltage covering `n_cells` pixels.
+    pub fn new_sized(vdd: f64, seed: u64, n_cells: usize) -> Self {
+        let mut inj = Self {
+            p_bit: calib::bit_error_probability(vdd),
+            seed,
+            map: Vec::new(),
+            flipped_bits: 0,
+            word_reads: 0,
+        };
+        inj.rebuild_map(n_cells);
+        inj
+    }
+
+    /// Injector with a lazily-unsized map (tests / ad-hoc use): the map is
+    /// grown on demand in `corrupt`.
+    pub fn new(vdd: f64, seed: u64) -> Self {
+        Self::new_sized(vdd, seed, 0)
+    }
+
+    /// Derive the (mask, stuck) pair of one cell at the current threshold.
+    fn cell_faults(&self, cell: usize) -> (u8, u8) {
+        let mut mask = 0u8;
+        let mut stuck = 0u8;
+        for bit in 0..calib::BITS_PER_WORD {
+            let h = mix(self.seed ^ ((cell as u64) << 3) ^ bit as u64);
+            let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            if u < self.p_bit {
+                mask |= 1 << bit;
+                stuck |= (((h >> 7) & 1) as u8) << bit;
+            }
+        }
+        (mask, stuck)
+    }
+
+    fn rebuild_map(&mut self, n_cells: usize) {
+        self.map.clear();
+        self.map.reserve(n_cells);
+        for cell in 0..n_cells {
+            let f = self.cell_faults(cell);
+            self.map.push(f);
+        }
+    }
+
+    /// Retarget the injector when DVFS moves the voltage (the fault *map*
+    /// is fixed silicon; only the margin threshold moves, so the map is
+    /// re-derived for the new threshold).
+    pub fn set_vdd(&mut self, vdd: f64) {
+        self.p_bit = calib::bit_error_probability(vdd);
+        let n = self.map.len();
+        self.rebuild_map(n);
+    }
+
+    /// Current per-bit fault probability.
+    #[inline]
+    pub fn p_bit(&self) -> f64 {
+        self.p_bit
+    }
+
+    /// Corrupt the 5-bit word read from cell index `cell` (a stable
+    /// per-pixel identifier). Stuck bits override the stored value.
+    #[inline]
+    pub fn corrupt(&mut self, word: u8, cell: usize) -> u8 {
+        self.word_reads += 1;
+        if self.p_bit <= 0.0 {
+            return word;
+        }
+        if cell >= self.map.len() {
+            // grow on demand (tests); system paths size the map up front
+            for c in self.map.len()..=cell {
+                let f = self.cell_faults(c);
+                self.map.push(f);
+            }
+        }
+        let (mask, stuck) = self.map[cell];
+        let out = (word & !mask) | (stuck & mask);
+        if out != word {
+            self.flipped_bits += 1;
+        }
+        out
+    }
+
+    /// Fraction of bits faulty at the current voltage over `n` cells
+    /// (diagnostics; converges to `p_bit`).
+    pub fn fault_fraction(&self, n_cells: usize) -> f64 {
+        let mut faulty = 0usize;
+        for cell in 0..n_cells {
+            for bit in 0..calib::BITS_PER_WORD {
+                let h = mix(self.seed ^ ((cell as u64) << 3) ^ bit as u64);
+                let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+                if u < self.p_bit {
+                    faulty += 1;
+                }
+            }
+        }
+        faulty as f64 / (n_cells * calib::BITS_PER_WORD) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mc_reproduces_published_points() {
+        let p = measure_ber(0.60, 200_000, 42);
+        assert!((p.ber - 0.025).abs() < 0.003, "ber@0.6 {}", p.ber);
+        let p = measure_ber(0.61, 500_000, 43);
+        assert!((p.ber - 0.002).abs() < 0.0006, "ber@0.61 {}", p.ber);
+        let p = measure_ber(0.63, 100_000, 44);
+        assert_eq!(p.errors, 0, "expected zero errors at 0.63 V");
+    }
+
+    #[test]
+    fn mc_matches_analytic_model() {
+        for &v in &[0.60, 0.605, 0.61] {
+            let p = measure_ber(v, 400_000, 7);
+            let rel = (p.ber - p.model_ber).abs() / p.model_ber;
+            assert!(rel < 0.25, "v={v} mc={} model={}", p.ber, p.model_ber);
+        }
+    }
+
+    #[test]
+    fn sweep_is_monotone_modulo_noise() {
+        let pts = ber_sweep(&[0.58, 0.60, 0.62], 100_000, 1);
+        assert!(pts[0].ber > pts[1].ber);
+        assert!(pts[1].ber >= pts[2].ber);
+    }
+
+    #[test]
+    fn injector_zero_at_nominal() {
+        let mut inj = ErrorInjector::new(1.2, 5);
+        for w in 0u8..32 {
+            assert_eq!(inj.corrupt(w, w as usize), w);
+        }
+        assert_eq!(inj.flipped_bits, 0);
+    }
+
+    #[test]
+    fn injector_fault_fraction_tracks_p_bit() {
+        let inj = ErrorInjector::new(0.6, 11);
+        let frac = inj.fault_fraction(100_000);
+        assert!((frac - inj.p_bit()).abs() / inj.p_bit() < 0.1, "{frac}");
+    }
+
+    #[test]
+    fn injector_faults_are_static_per_cell() {
+        let mut inj = ErrorInjector::new(0.6, 13);
+        // the same cell reads the same (possibly corrupted) value every time
+        for cell in 0..500usize {
+            let a = inj.corrupt(0x15, cell);
+            let b = inj.corrupt(0x15, cell);
+            assert_eq!(a, b, "cell {cell} not deterministic");
+        }
+    }
+
+    #[test]
+    fn injector_fault_sets_nest_with_voltage() {
+        // every bit faulty at 0.61 V is also faulty at 0.60 V
+        let mut hi = ErrorInjector::new(0.61, 17);
+        let mut lo = ErrorInjector::new(0.60, 17);
+        let mut nested = true;
+        for cell in 0..20_000usize {
+            let a = hi.corrupt(0x0A, cell);
+            let b = lo.corrupt(0x0A, cell);
+            // every bit corrupted at 0.61 V must be corrupted identically
+            // at 0.60 V (0.60 V may corrupt *additional* bits)
+            nested &= (a ^ b) & (a ^ 0x0A) == 0;
+        }
+        assert!(nested);
+        assert!(lo.flipped_bits >= hi.flipped_bits);
+    }
+
+    #[test]
+    fn injector_voltage_retarget() {
+        let mut inj = ErrorInjector::new(1.2, 3);
+        assert_eq!(inj.p_bit(), inj.p_bit().max(0.0)); // ~0
+        inj.set_vdd(0.6);
+        assert!(inj.p_bit() > 0.02);
+    }
+}

@@ -1,0 +1,278 @@
+//! Per-event patch schedule: drives one event through the PCH/MO/CMP/WR
+//! phases row by row (paper Fig. 4(b) & Fig. 7) against the type-A array,
+//! with optional pipelining and read-error injection.
+//!
+//! The functional outcome is bit-exact Algorithm 1 (verified against
+//! [`crate::tos::TosSurface`] by property tests); the *timing* and
+//! *energy* of the traversal come from [`super::timing`] / [`super::energy`].
+
+use crate::events::Event;
+
+use super::cmp::compare_geq;
+use super::energy::EnergyModel;
+use super::mol::minus_one_gate;
+use super::montecarlo::ErrorInjector;
+use super::sram::TypeAArray;
+use super::timing::TimingModel;
+use super::wr::{write_back, WriteBack};
+
+/// Memoized write-back datapath: for a fixed threshold, the outcome of
+/// MOL -> CMP -> WR for a non-centre pixel is a pure function of the 5-bit
+/// stored word.  The table is built by evaluating the *gate-level* models
+/// once per word (so it is the same datapath, not a reimplementation) and
+/// turns three bit-ripple loops per pixel into one load on the hot path
+/// (EXPERIMENTS.md §Perf iteration 6).
+#[derive(Debug, Clone, Copy)]
+pub struct WbTable {
+    /// `entry[stored] = Some(bits_to_write)` or `None` for write-disabled.
+    entry: [Option<u8>; 32],
+}
+
+impl WbTable {
+    /// Build from the gate-level MOL/CMP/WR models for a threshold.
+    pub fn build(threshold: u8) -> Self {
+        debug_assert!(threshold >= 225);
+        let th5 = threshold & 0x1F;
+        let mut entry = [None; 32];
+        for stored in 0u8..32 {
+            let mol = minus_one_gate(stored);
+            let cmp = compare_geq(mol.sum, th5);
+            entry[stored as usize] = match write_back(stored, mol, cmp, false) {
+                WriteBack::Disabled => None,
+                WriteBack::Value(v) => Some(v),
+            };
+        }
+        Self { entry }
+    }
+
+    /// Write-back outcome for a non-centre pixel.
+    #[inline]
+    pub fn lookup(&self, stored: u8) -> Option<u8> {
+        self.entry[stored as usize]
+    }
+}
+
+/// Cost record of one event's patch update.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PatchCost {
+    /// Latency of the update (ns) at the voltage it ran at.
+    pub latency_ns: f64,
+    /// Dynamic energy spent (pJ).
+    pub energy_pj: f64,
+    /// SRAM rows touched (after border clipping).
+    pub rows: usize,
+    /// Pixels touched (after border clipping).
+    pub pixels: usize,
+}
+
+/// Run one event through the macro datapath.
+///
+/// `patch`/`threshold` are the Algorithm-1 parameters (threshold in the
+/// 8-bit domain, `>= 225`); `pipelined` selects the Fig. 4(b) schedule;
+/// `injector` (if any) corrupts every word read per the BER model.
+#[allow(clippy::too_many_arguments)]
+pub fn process_event(
+    array: &mut TypeAArray,
+    ev: &Event,
+    patch: u16,
+    threshold: u8,
+    pipelined: bool,
+    timing: &TimingModel,
+    energy: &EnergyModel,
+    mut injector: Option<&mut ErrorInjector>,
+    table: Option<&WbTable>,
+) -> PatchCost {
+    debug_assert!(threshold >= 225, "5-bit datapath requires TH >= 225");
+    let owned_table;
+    let table = match table {
+        Some(t) => t,
+        None => {
+            owned_table = WbTable::build(threshold);
+            &owned_table
+        }
+    };
+    let res = array.grid().res;
+    let half = (patch as i32 - 1) / 2;
+    let ex = ev.x as i32;
+    let ey = ev.y as i32;
+    let x0 = (ex - half).max(0) as u16;
+    let x1 = (ex + half).min(res.width as i32 - 1) as u16;
+    let y0 = (ey - half).max(0) as u16;
+    let y1 = (ey + half).min(res.height as i32 - 1) as u16;
+
+    let width = res.width as usize;
+    let mut pixels = 0usize;
+    for y in y0..=y1 {
+        for x in x0..=x1 {
+            // --- MO phase: read + minus-one -------------------------------
+            let raw = array.read(x, y);
+            let stored = match injector.as_deref_mut() {
+                Some(inj) => inj.corrupt(raw, y as usize * width + x as usize),
+                None => raw,
+            };
+            let is_centre = x as i32 == ex && y as i32 == ey;
+            // --- CMP + WR phases via the memoized gate-level datapath ------
+            // Error containment (paper Sec. V-C): "when the value stored in
+            // the original TOS memory is 0, the write-back is disabled" —
+            // the gate looks at the *cell state*, so a stuck-at bit on an
+            // erased pixel cannot resurrect it.
+            if is_centre {
+                array.write(x, y, 0x1F);
+            } else if raw == 0 {
+                // write port not driven
+            } else if stored == 0 {
+                // a live cell whose read was corrupted to all-zeros: the
+                // MOL wraps (no carry-out), so the WR mux selects the erase
+                // value — the pixel dies early, it does not wrap to 255.
+                array.write(x, y, 0);
+            } else if let Some(bits) = table.lookup(stored) {
+                array.write(x, y, bits);
+            }
+            pixels += 1;
+        }
+    }
+
+    let rows = (y1 - y0 + 1) as usize;
+    let latency_ns = if pipelined {
+        timing.patch_latency_pipelined_ns(rows)
+    } else {
+        timing.patch_latency_unpipelined_ns(rows)
+    };
+    PatchCost { latency_ns, energy_pj: energy.patch_energy_pj(pixels), rows, pixels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wb_table_matches_gate_level_exhaustively() {
+        for threshold in [225u8, 230, 240, 250] {
+            let table = WbTable::build(threshold);
+            let th5 = threshold & 0x1F;
+            for stored in 0u8..32 {
+                let mol = minus_one_gate(stored);
+                let cmp = compare_geq(mol.sum, th5);
+                let gate = match write_back(stored, mol, cmp, false) {
+                    WriteBack::Disabled => None,
+                    WriteBack::Value(v) => Some(v),
+                };
+                assert_eq!(table.lookup(stored), gate, "TH {threshold} stored {stored}");
+            }
+        }
+    }
+    use crate::events::{Event, Resolution};
+    use crate::tos::{TosConfig, TosSurface};
+
+    fn run_both(events: &[Event]) -> (Vec<u8>, Vec<u8>) {
+        let res = Resolution::TEST64;
+        let cfg = TosConfig::default();
+        let mut golden = TosSurface::new(res, cfg);
+        let mut array = TypeAArray::new(res);
+        let timing = TimingModel::at(1.2);
+        let energy = EnergyModel::at(1.2);
+        for e in events {
+            golden.update(e);
+            process_event(&mut array, e, cfg.patch, cfg.threshold, true, &timing, &energy, None, None);
+        }
+        (golden.data().to_vec(), array.snapshot_u8())
+    }
+
+    #[test]
+    fn matches_golden_tos_simple() {
+        let evs = vec![Event::on(10, 10, 0), Event::on(12, 10, 1), Event::on(11, 11, 2)];
+        let (g, n) = run_both(&evs);
+        assert_eq!(g, n);
+    }
+
+    #[test]
+    fn matches_golden_tos_dense_stream() {
+        let evs: Vec<Event> = (0..2000)
+            .map(|i| Event::on((i * 17 % 64) as u16, (i * 29 % 64) as u16, i as u64))
+            .collect();
+        let (g, n) = run_both(&evs);
+        assert_eq!(g, n);
+    }
+
+    #[test]
+    fn matches_golden_at_borders() {
+        let evs = vec![
+            Event::on(0, 0, 0),
+            Event::on(63, 0, 1),
+            Event::on(0, 63, 2),
+            Event::on(63, 63, 3),
+            Event::on(1, 1, 4),
+        ];
+        let (g, n) = run_both(&evs);
+        assert_eq!(g, n);
+    }
+
+    #[test]
+    fn cost_accounts_for_clipping() {
+        let res = Resolution::TEST64;
+        let mut array = TypeAArray::new(res);
+        let timing = TimingModel::at(1.2);
+        let energy = EnergyModel::at(1.2);
+        let full = process_event(
+            &mut array, &Event::on(30, 30, 0), 7, 225, true, &timing, &energy, None, None,
+        );
+        assert_eq!((full.rows, full.pixels), (7, 49));
+        let corner = process_event(
+            &mut array, &Event::on(0, 0, 1), 7, 225, true, &timing, &energy, None, None,
+        );
+        assert_eq!((corner.rows, corner.pixels), (4, 16));
+        assert!(corner.latency_ns < full.latency_ns);
+        assert!(corner.energy_pj < full.energy_pj);
+    }
+
+    #[test]
+    fn pipelined_is_faster() {
+        let res = Resolution::TEST64;
+        let mut array = TypeAArray::new(res);
+        let timing = TimingModel::at(0.8);
+        let energy = EnergyModel::at(0.8);
+        let a = process_event(&mut array, &Event::on(30, 30, 0), 7, 225, true, &timing, &energy, None, None);
+        let b = process_event(&mut array, &Event::on(30, 30, 1), 7, 225, false, &timing, &energy, None, None);
+        assert!(a.latency_ns < b.latency_ns);
+        let ratio = b.latency_ns / a.latency_ns;
+        assert!(ratio > 1.8 && ratio < 2.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn injector_at_nominal_is_transparent() {
+        let res = Resolution::TEST64;
+        let cfg = TosConfig::default();
+        let mut golden = TosSurface::new(res, cfg);
+        let mut array = TypeAArray::new(res);
+        let timing = TimingModel::at(1.2);
+        let energy = EnergyModel::at(1.2);
+        let mut inj = ErrorInjector::new(1.2, 9);
+        for i in 0..500u64 {
+            let e = Event::on((i * 13 % 64) as u16, (i * 7 % 64) as u16, i);
+            golden.update(&e);
+            process_event(
+                &mut array, &e, cfg.patch, cfg.threshold, true, &timing, &energy, Some(&mut inj), None,
+            );
+        }
+        assert_eq!(golden.data().to_vec(), array.snapshot_u8());
+        assert_eq!(inj.flipped_bits, 0);
+    }
+
+    #[test]
+    fn injector_at_low_vdd_corrupts_some_values() {
+        let res = Resolution::TEST64;
+        let mut array = TypeAArray::new(res);
+        let timing = TimingModel::at(0.6);
+        let energy = EnergyModel::at(0.6);
+        let mut inj = ErrorInjector::new(0.6, 13);
+        for i in 0..2000u64 {
+            let e = Event::on((i * 13 % 64) as u16, (i * 7 % 64) as u16, i);
+            process_event(&mut array, &e, 7, 225, true, &timing, &energy, Some(&mut inj), None);
+        }
+        assert!(inj.flipped_bits > 0, "expected corrupted reads at 0.6 V");
+        // all snapshot values are still in the representable domain
+        for &v in &array.snapshot_u8() {
+            assert!(crate::tos::encoding::representable(v), "value {v}");
+        }
+    }
+}

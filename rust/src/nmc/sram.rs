@@ -1,0 +1,201 @@
+//! 8T SRAM array models — paper Figs. 3 & 4(a).
+//!
+//! * **Type A**: the main TOS store. One *block* holds 180 rows x 600
+//!   columns of cells = 180 x 120 pixels at 5 bits/pixel. The read port
+//!   (RWL/RBL) and write port (WWL/WBL) are decoupled, which is what makes
+//!   the [`super::pipeline`] overlap legal: the write-back of row *r* can
+//!   coincide with the read of row *r+1*.
+//! * **Type B**: the two compute rows inside the CMP module (SUM and TH)
+//!   — modelled in [`super::cmp`].
+//!
+//! A sensor wider/taller than one block tiles multiple blocks (DAVIS240
+//! needs two side by side; an HD720 Prophesee needs 24).
+
+
+
+use crate::events::Resolution;
+
+use super::calib::{BITS_PER_WORD, BLOCK_COLS_PX, BLOCK_ROWS};
+
+/// Physical placement of one pixel inside the block array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellAddr {
+    /// Which block (raster order over the block grid).
+    pub block: usize,
+    /// SRAM row inside the block (= sensor row modulo block rows).
+    pub row: usize,
+    /// Word index inside the row (= sensor column modulo block columns).
+    pub word: usize,
+}
+
+/// Geometry: how a sensor resolution maps onto a grid of SRAM blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockGrid {
+    /// Sensor geometry.
+    pub res: Resolution,
+    /// Blocks along x.
+    pub blocks_x: usize,
+    /// Blocks along y.
+    pub blocks_y: usize,
+}
+
+impl BlockGrid {
+    /// Tile a sensor resolution with 180x120-pixel blocks.
+    pub fn for_resolution(res: Resolution) -> Self {
+        let blocks_x = (res.width as usize).div_ceil(BLOCK_COLS_PX);
+        let blocks_y = (res.height as usize).div_ceil(BLOCK_ROWS);
+        Self { res, blocks_x, blocks_y }
+    }
+
+    /// Total number of blocks (the paper's "two such blocks" for DAVIS240).
+    #[inline]
+    pub fn block_count(&self) -> usize {
+        self.blocks_x * self.blocks_y
+    }
+
+    /// Map a pixel to its cell address.
+    #[inline]
+    pub fn addr(&self, x: u16, y: u16) -> CellAddr {
+        let bx = x as usize / BLOCK_COLS_PX;
+        let by = y as usize / BLOCK_ROWS;
+        CellAddr {
+            block: by * self.blocks_x + bx,
+            row: y as usize % BLOCK_ROWS,
+            word: x as usize % BLOCK_COLS_PX,
+        }
+    }
+
+    /// Bits of on-chip storage across all blocks.
+    pub fn total_bits(&self) -> usize {
+        self.block_count() * BLOCK_ROWS * BLOCK_COLS_PX * BITS_PER_WORD
+    }
+}
+
+/// The type-A storage array: 5-bit words addressed by (block, row, word).
+///
+/// Stored values use the [`crate::tos::encoding`] 5-bit code; this struct
+/// is deliberately dumb — all TOS semantics live in the macro's
+/// pipeline — but it enforces the decoupled-port timing contract by
+/// tracking, per block, the last read and write rows of the current cycle
+/// (a same-row read+write in one cycle is a simulator bug).
+#[derive(Debug, Clone)]
+pub struct TypeAArray {
+    grid: BlockGrid,
+    /// Simulator storage is flat row-major over the *sensor*: the physical
+    /// (block, row, word) placement is pure geometry ([`BlockGrid::addr`])
+    /// and never changes word contents, so the simulator avoids the
+    /// div/mod of the block mapping on every pixel access
+    /// (EXPERIMENTS.md §Perf iteration 8).
+    words: Vec<u8>,
+    width: usize,
+}
+
+impl TypeAArray {
+    /// All-zero (erased) array for a sensor.
+    pub fn new(res: Resolution) -> Self {
+        let grid = BlockGrid::for_resolution(res);
+        let words = vec![0u8; res.pixels()];
+        Self { grid, words, width: res.width as usize }
+    }
+
+    /// Geometry.
+    #[inline]
+    pub fn grid(&self) -> BlockGrid {
+        self.grid
+    }
+
+    /// Read the 5-bit word of a pixel (RWL/RBL port).
+    #[inline]
+    pub fn read(&self, x: u16, y: u16) -> u8 {
+        self.words[y as usize * self.width + x as usize]
+    }
+
+    /// Write the 5-bit word of a pixel (WWL/WBL port).
+    #[inline]
+    pub fn write(&mut self, x: u16, y: u16, bits5: u8) {
+        debug_assert!(bits5 < (1 << BITS_PER_WORD));
+        let i = y as usize * self.width + x as usize;
+        self.words[i] = bits5;
+    }
+
+    /// Snapshot all pixels into an 8-bit TOS image (row-major).
+    pub fn snapshot_u8(&self) -> Vec<u8> {
+        self.words.iter().map(|&w| crate::tos::encoding::load(w)).collect()
+    }
+
+    /// Erase all cells.
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn davis240_needs_two_blocks() {
+        let g = BlockGrid::for_resolution(Resolution::DAVIS240);
+        assert_eq!(g.block_count(), 2);
+        assert_eq!((g.blocks_x, g.blocks_y), (2, 1));
+    }
+
+    #[test]
+    fn davis346_and_hd720_tiling() {
+        let g = BlockGrid::for_resolution(Resolution::DAVIS346);
+        assert_eq!((g.blocks_x, g.blocks_y), (3, 2));
+        let g = BlockGrid::for_resolution(Resolution::HD720);
+        assert_eq!((g.blocks_x, g.blocks_y), (11, 4));
+        assert_eq!(g.block_count(), 44);
+    }
+
+    #[test]
+    fn addr_mapping_matches_paper_block_shape() {
+        let g = BlockGrid::for_resolution(Resolution::DAVIS240);
+        let a = g.addr(0, 0);
+        assert_eq!(a, CellAddr { block: 0, row: 0, word: 0 });
+        let a = g.addr(119, 179);
+        assert_eq!(a, CellAddr { block: 0, row: 179, word: 119 });
+        let a = g.addr(120, 0);
+        assert_eq!(a, CellAddr { block: 1, row: 0, word: 0 });
+        let a = g.addr(239, 179);
+        assert_eq!(a, CellAddr { block: 1, row: 179, word: 119 });
+    }
+
+    #[test]
+    fn block_bits_match_fig3() {
+        // one block: 180 rows x 600 columns of cells
+        let g = BlockGrid::for_resolution(Resolution::new(120, 180));
+        assert_eq!(g.block_count(), 1);
+        assert_eq!(g.total_bits(), 180 * 600);
+    }
+
+    #[test]
+    fn read_write_roundtrip() {
+        let mut a = TypeAArray::new(Resolution::TEST64);
+        a.write(3, 4, 0x1F);
+        a.write(63, 63, 0x01);
+        assert_eq!(a.read(3, 4), 0x1F);
+        assert_eq!(a.read(63, 63), 0x01);
+        assert_eq!(a.read(0, 0), 0);
+    }
+
+    #[test]
+    fn snapshot_decodes_5bit_values() {
+        let mut a = TypeAArray::new(Resolution::TEST64);
+        a.write(1, 1, crate::tos::encoding::store(255));
+        a.write(2, 2, crate::tos::encoding::store(230));
+        let img = a.snapshot_u8();
+        assert_eq!(img[1 * 64 + 1], 255);
+        assert_eq!(img[2 * 64 + 2], 230);
+        assert_eq!(img[0], 0);
+    }
+
+    #[test]
+    fn clear_erases() {
+        let mut a = TypeAArray::new(Resolution::TEST64);
+        a.write(5, 5, 7);
+        a.clear();
+        assert_eq!(a.read(5, 5), 0);
+    }
+}

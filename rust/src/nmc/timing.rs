@@ -1,0 +1,180 @@
+//! Timing model of the NMC macro: per-phase delays vs supply voltage and
+//! the pipelined / unpipelined row schedules of paper Fig. 4(b).
+//!
+//! One patch update touches up to `P` rows; each row passes through four
+//! phases — precharge (PCH, t1), minus-one (MO, t2), compare (CMP, t3) and
+//! write-back (WR, t4).  With the read/write-decoupled 8T cell the next
+//! row's PCH+MO can overlap the previous row's CMP+WR:
+//!
+//! * unpipelined patch latency: `rows * (t1 + t2 + t3 + t4)`
+//! * pipelined   patch latency: `rows * (t1 + t2) + t3 + t4`
+//!
+//! All absolute numbers derive from [`calib`].
+
+
+
+use super::calib;
+
+/// The four phases of one row operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Precharge the read bitlines of the type-A array.
+    Pch,
+    /// Sense + minus-one logic.
+    Mo,
+    /// NOR-compare against TH in the type-B rows + custom FA.
+    Cmp,
+    /// Write-back (TOS-1 / 0 / 255) through the decoupled write port.
+    Wr,
+}
+
+impl Phase {
+    /// All phases in schedule order.
+    pub const ALL: [Phase; 4] = [Phase::Pch, Phase::Mo, Phase::Cmp, Phase::Wr];
+
+    /// Display label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Pch => "PCH",
+            Phase::Mo => "MO",
+            Phase::Cmp => "CMP",
+            Phase::Wr => "WR",
+        }
+    }
+
+    /// Index into [`calib::PHASE_SHARE`].
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Phase::Pch => 0,
+            Phase::Mo => 1,
+            Phase::Cmp => 2,
+            Phase::Wr => 3,
+        }
+    }
+}
+
+/// Timing model at a fixed supply voltage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingModel {
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// Full row time t1+t2+t3+t4 (ns).
+    pub row_ns: f64,
+}
+
+impl TimingModel {
+    /// Build the model at a voltage; all delays scale with the
+    /// alpha-power-law factor from [`calib`].
+    pub fn at(vdd: f64) -> Self {
+        // Pipelined patch latency at this voltage for the calibration
+        // patch size P: rows*(s1+s2)*T + (s3+s4)*T = anchor * factor.
+        let patch_ns = calib::PATCH_LATENCY_NOM_NS * calib::delay_factor(vdd);
+        let p = calib::PATCH as f64;
+        let s12 = calib::PHASE_SHARE[0] + calib::PHASE_SHARE[1];
+        let s34 = calib::PHASE_SHARE[2] + calib::PHASE_SHARE[3];
+        let row_ns = patch_ns / (p * s12 + s34);
+        Self { vdd, row_ns }
+    }
+
+    /// Delay of one phase (ns).
+    #[inline]
+    pub fn phase_ns(&self, phase: Phase) -> f64 {
+        calib::PHASE_SHARE[phase.index()] * self.row_ns
+    }
+
+    /// Pipelined latency of a patch touching `rows` SRAM rows (ns).
+    #[inline]
+    pub fn patch_latency_pipelined_ns(&self, rows: usize) -> f64 {
+        let s12 = calib::PHASE_SHARE[0] + calib::PHASE_SHARE[1];
+        let s34 = calib::PHASE_SHARE[2] + calib::PHASE_SHARE[3];
+        (rows as f64 * s12 + s34) * self.row_ns
+    }
+
+    /// Unpipelined latency of a patch touching `rows` rows (ns).
+    #[inline]
+    pub fn patch_latency_unpipelined_ns(&self, rows: usize) -> f64 {
+        rows as f64 * self.row_ns
+    }
+
+    /// Maximum sustainable event rate with pipelining, full `P`-row
+    /// patches (events/s).
+    pub fn max_event_rate(&self) -> f64 {
+        1e9 / self.patch_latency_pipelined_ns(calib::PATCH)
+    }
+
+    /// NMC clock frequency: the clock period is set by the slowest phase
+    /// (MO), which is one cycle (Hz).
+    pub fn clock_hz(&self) -> f64 {
+        let t_cyc_ns = self.phase_ns(Phase::Mo);
+        1e9 / t_cyc_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchor_latencies_reproduced() {
+        let t = TimingModel::at(calib::VDD_NOM);
+        let l = t.patch_latency_pipelined_ns(calib::PATCH);
+        assert!((l - calib::PATCH_LATENCY_NOM_NS).abs() < 1e-9, "{l}");
+        let t = TimingModel::at(calib::VDD_MIN);
+        let l = t.patch_latency_pipelined_ns(calib::PATCH);
+        assert!((l - calib::PATCH_LATENCY_MIN_NS).abs() < 1e-6, "{l}");
+    }
+
+    #[test]
+    fn pipeline_beats_unpipelined_by_about_2x() {
+        let t = TimingModel::at(1.2);
+        let pipe = t.patch_latency_pipelined_ns(7);
+        let nopipe = t.patch_latency_unpipelined_ns(7);
+        let ratio = nopipe / pipe;
+        assert!(ratio > 1.8 && ratio < 2.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn paper_speedup_ratios() {
+        // Fig. 9(b): conventional -> NMC (no pipe) = 13.0x, -> +pipe = 24.7x.
+        let conv_ns = calib::CONV_CYCLES_PER_PATCH / calib::CONV_CLOCK_NOM_HZ * 1e9;
+        let t = TimingModel::at(1.2);
+        let x_nopipe = conv_ns / t.patch_latency_unpipelined_ns(7);
+        let x_pipe = conv_ns / t.patch_latency_pipelined_ns(7);
+        assert!((x_pipe - 24.7).abs() < 0.2, "pipe {x_pipe}");
+        assert!((x_nopipe - 12.9).abs() < 0.5, "nopipe {x_nopipe}");
+    }
+
+    #[test]
+    fn max_event_rates_match_paper() {
+        // 63.1 Meps @1.2 V, 4.9 Meps @0.6 V.
+        let hi = TimingModel::at(1.2).max_event_rate() / 1e6;
+        let lo = TimingModel::at(0.6).max_event_rate() / 1e6;
+        assert!((hi - 63.1).abs() < 0.2, "hi {hi}");
+        assert!((lo - 4.93).abs() < 0.1, "lo {lo}");
+    }
+
+    #[test]
+    fn phase_shares_at_0v6_match_fig10c() {
+        let t = TimingModel::at(0.6);
+        let total: f64 = Phase::ALL.iter().map(|&p| t.phase_ns(p)).sum();
+        let share = |p: Phase| t.phase_ns(p) / total;
+        assert!((share(Phase::Mo) - 0.306 / 1.001).abs() < 0.01);
+        assert!((share(Phase::Pch) - 0.139 / 1.001).abs() < 0.01);
+    }
+
+    #[test]
+    fn fewer_rows_is_faster() {
+        let t = TimingModel::at(0.8);
+        assert!(t.patch_latency_pipelined_ns(4) < t.patch_latency_pipelined_ns(7));
+        assert!(t.patch_latency_pipelined_ns(1) > 0.0);
+    }
+
+    #[test]
+    fn clock_scales_with_voltage() {
+        let f_hi = TimingModel::at(1.2).clock_hz();
+        let f_lo = TimingModel::at(0.6).clock_hz();
+        assert!(f_hi > 5.0 * f_lo);
+        assert!(f_hi > 100e6 && f_hi < 2e9, "f_hi {f_hi}");
+    }
+}

@@ -1,0 +1,256 @@
+//! Signal-level waveform generator: the control-signal timeline of one row
+//! operation (paper Fig. 7), derived from the calibrated phase delays.
+//!
+//! Beyond documentation value, the waveform model enforces the *timing
+//! contracts* the circuit description states — SA clock strobes after the
+//! RBL has developed, the CMP precharge overlaps the MO phase, write-back
+//! never overlaps a read of the same row — and the tests check those
+//! contracts at every supply voltage, which is what "the pipeline is
+//! legal" means at circuit level.
+
+use super::timing::{Phase, TimingModel};
+
+/// One control signal's activity window within a row operation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Pulse {
+    /// Signal name (paper Fig. 7 labels).
+    pub signal: Signal,
+    /// Assertion time relative to row start (ns).
+    pub t_start: f64,
+    /// De-assertion time (ns).
+    pub t_end: f64,
+}
+
+/// The control signals of Fig. 7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Signal {
+    /// Active-low precharge of the type-A read bitlines.
+    PreB,
+    /// Read word line of the selected type-A row.
+    Rwl,
+    /// Sense-amp strobe (latches the RBL differential).
+    SaCk,
+    /// Write word line of the CMP module's SUM row.
+    WwlCmp,
+    /// Active-low precharge of the CMP module's bitlines.
+    PreCmpB,
+    /// CMP evaluate enable (active low in the paper).
+    CmpEnB,
+    /// DFF clock latching the write-back value.
+    WrCk,
+    /// Write word line of the type-A array (write-back).
+    Wwl,
+}
+
+impl Signal {
+    /// Display label matching Fig. 7.
+    pub fn label(self) -> &'static str {
+        match self {
+            Signal::PreB => "PRE_b",
+            Signal::Rwl => "RWL",
+            Signal::SaCk => "SA_CK",
+            Signal::WwlCmp => "WWL_CMP",
+            Signal::PreCmpB => "PRE_CMP_b",
+            Signal::CmpEnB => "CMP_ENb",
+            Signal::WrCk => "WR_CK",
+            Signal::Wwl => "WWL",
+        }
+    }
+}
+
+/// The full waveform of one row operation at a voltage.
+#[derive(Debug, Clone)]
+pub struct RowWaveform {
+    /// Supply voltage.
+    pub vdd: f64,
+    /// All pulses, in assertion order.
+    pub pulses: Vec<Pulse>,
+    /// Total row time (ns).
+    pub row_ns: f64,
+}
+
+/// SA setup margin as a fraction of the MO phase: the strobe arrives this
+/// far into the phase so the bitline has developed ("SA clock arrives
+/// slightly later to ensure setup time").
+const SA_SETUP_FRAC: f64 = 0.6;
+
+/// Generate the Fig. 7 waveform for one row at a voltage.
+pub fn row_waveform(vdd: f64) -> RowWaveform {
+    let t = TimingModel::at(vdd);
+    let t1 = t.phase_ns(Phase::Pch);
+    let t2 = t.phase_ns(Phase::Mo);
+    let t3 = t.phase_ns(Phase::Cmp);
+    let t4 = t.phase_ns(Phase::Wr);
+    let mo_start = t1;
+    let cmp_start = t1 + t2;
+    let wr_start = t1 + t2 + t3;
+    let row_ns = t1 + t2 + t3 + t4;
+    let pulses = vec![
+        // PCH: active-low precharge pulse over the whole first phase
+        Pulse { signal: Signal::PreB, t_start: 0.0, t_end: t1 },
+        // MO: read word line up for the whole MO phase
+        Pulse { signal: Signal::Rwl, t_start: mo_start, t_end: cmp_start },
+        // SA strobes after the bitline developed
+        Pulse {
+            signal: Signal::SaCk,
+            t_start: mo_start + SA_SETUP_FRAC * t2,
+            t_end: cmp_start,
+        },
+        // the MO result is written into the CMP SUM row while MO completes
+        Pulse {
+            signal: Signal::WwlCmp,
+            t_start: mo_start + SA_SETUP_FRAC * t2,
+            t_end: cmp_start,
+        },
+        // CMP bitline precharge overlaps MO (it has its own bitlines)
+        Pulse { signal: Signal::PreCmpB, t_start: mo_start, t_end: mo_start + 0.5 * t2 },
+        // CMP evaluation
+        Pulse { signal: Signal::CmpEnB, t_start: cmp_start, t_end: wr_start },
+        // WR: DFF latches, then the type-A write port drives
+        Pulse { signal: Signal::WrCk, t_start: wr_start, t_end: wr_start + 0.2 * t4 },
+        Pulse { signal: Signal::Wwl, t_start: wr_start + 0.2 * t4, t_end: row_ns },
+    ];
+    RowWaveform { vdd, pulses, row_ns }
+}
+
+impl RowWaveform {
+    /// Find a signal's pulse.
+    pub fn pulse(&self, s: Signal) -> Pulse {
+        *self.pulses.iter().find(|p| p.signal == s).expect("signal present")
+    }
+
+    /// Render an ASCII timing diagram (Fig. 7 stand-in), `cols` wide.
+    pub fn render_ascii(&self, cols: usize) -> String {
+        let mut out = String::new();
+        for p in &self.pulses {
+            let a = (p.t_start / self.row_ns * cols as f64) as usize;
+            let b = ((p.t_end / self.row_ns * cols as f64) as usize).min(cols);
+            let mut line = format!("{:<10}", p.signal.label());
+            for i in 0..cols {
+                line.push(if i >= a && i < b { '#' } else { '_' });
+            }
+            line.push('\n');
+            out.push_str(&line);
+        }
+        out
+    }
+
+    /// Check the circuit timing contracts; returns a violation description
+    /// or `Ok(())`.
+    pub fn check_contracts(&self) -> Result<(), String> {
+        let pre = self.pulse(Signal::PreB);
+        let rwl = self.pulse(Signal::Rwl);
+        let sa = self.pulse(Signal::SaCk);
+        let wwl_cmp = self.pulse(Signal::WwlCmp);
+        let pre_cmp = self.pulse(Signal::PreCmpB);
+        let cmp_en = self.pulse(Signal::CmpEnB);
+        let wr_ck = self.pulse(Signal::WrCk);
+        let wwl = self.pulse(Signal::Wwl);
+
+        // 1. precharge must fully precede the read
+        if pre.t_end > rwl.t_start + 1e-12 {
+            return Err("PRE overlaps RWL".into());
+        }
+        // 2. SA strobe must come strictly after RWL rises (setup time)
+        if sa.t_start <= rwl.t_start {
+            return Err("SA_CK has no setup margin".into());
+        }
+        // 3. the CMP SUM row write happens while its precharge is done
+        if wwl_cmp.t_start < pre_cmp.t_end {
+            return Err("WWL_CMP collides with CMP precharge".into());
+        }
+        // 4. CMP evaluates only after the SUM row was written
+        if cmp_en.t_start < wwl_cmp.t_end - 1e-12 {
+            return Err("CMP_ENb before SUM write completed".into());
+        }
+        // 5. write-back value is latched before WWL drives the array
+        if wwl.t_start < wr_ck.t_end - 1e-12 {
+            return Err("WWL before WR_CK latched".into());
+        }
+        // 6. read and write ports of type A never overlap within one row op
+        if wwl.t_start < rwl.t_end {
+            return Err("type-A write overlaps its read".into());
+        }
+        Ok(())
+    }
+
+    /// The pipeline legality condition (Fig. 4): the next row's PCH+MO may
+    /// overlap this row's CMP+WR because they touch disjoint resources
+    /// (read port + SA vs CMP block + write port). Returns the earliest
+    /// legal start offset of the next row (ns).
+    pub fn next_row_offset_ns(&self) -> f64 {
+        // next row may begin once the SA has latched this row's value,
+        // i.e. after PCH+MO
+        self.pulse(Signal::Rwl).t_end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nmc::calib;
+
+    #[test]
+    fn contracts_hold_across_voltage_range() {
+        let mut v = 0.6;
+        while v <= 1.201 {
+            let w = row_waveform(v);
+            w.check_contracts().unwrap_or_else(|e| panic!("{e} at {v} V"));
+            v += 0.01;
+        }
+    }
+
+    #[test]
+    fn pipeline_offset_matches_phase_split() {
+        let w = row_waveform(1.2);
+        let t = TimingModel::at(1.2);
+        let expect = t.phase_ns(Phase::Pch) + t.phase_ns(Phase::Mo);
+        assert!((w.next_row_offset_ns() - expect).abs() < 1e-9);
+        // and P rows pipelined at this offset reproduce the patch latency
+        let p = calib::PATCH as f64;
+        let total = (p - 1.0) * w.next_row_offset_ns()
+            + w.row_ns;
+        let anchor = t.patch_latency_pipelined_ns(calib::PATCH);
+        assert!((total - anchor).abs() < 1e-9, "{total} vs {anchor}");
+    }
+
+    #[test]
+    fn waveform_scales_with_voltage() {
+        let hi = row_waveform(1.2);
+        let lo = row_waveform(0.6);
+        let ratio = lo.row_ns / hi.row_ns;
+        assert!((ratio - calib::delay_factor(0.6)).abs() < 1e-9);
+        // pulse order identical at both voltages
+        let order = |w: &RowWaveform| w.pulses.iter().map(|p| p.signal).collect::<Vec<_>>();
+        assert_eq!(order(&hi), order(&lo));
+    }
+
+    #[test]
+    fn ascii_render_has_all_signals() {
+        let w = row_waveform(0.8);
+        let art = w.render_ascii(60);
+        for s in [
+            Signal::PreB,
+            Signal::Rwl,
+            Signal::SaCk,
+            Signal::WwlCmp,
+            Signal::PreCmpB,
+            Signal::CmpEnB,
+            Signal::WrCk,
+            Signal::Wwl,
+        ] {
+            assert!(art.contains(s.label()), "{} missing", s.label());
+        }
+        assert_eq!(art.lines().count(), 8);
+    }
+
+    #[test]
+    fn sa_strobe_has_setup_margin() {
+        let w = row_waveform(1.0);
+        let rwl = w.pulse(Signal::Rwl);
+        let sa = w.pulse(Signal::SaCk);
+        let margin = sa.t_start - rwl.t_start;
+        let t2 = TimingModel::at(1.0).phase_ns(Phase::Mo);
+        assert!((margin / t2 - SA_SETUP_FRAC).abs() < 1e-9);
+    }
+}

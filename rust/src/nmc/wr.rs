@@ -1,0 +1,112 @@
+//! Write-back (WR) module — the DFF + mux that selects what goes back into
+//! the type-A array (paper Sec. IV-D).
+//!
+//! The value latched by the DFF is one of `TOS-1`, `0`, or `255`, selected
+//! by the MOL carry-out and the CMP result:
+//!
+//! * stored word was 0 (erased pixel)      -> write **disabled** (the
+//!   paper's error-containment property: BER can only corrupt pixels that
+//!   hold valid values);
+//! * pixel is the event centre             -> write 255 (stored 0x1F);
+//! * `TOS-1 >= TH`                         -> write `TOS-1`;
+//! * otherwise                             -> write 0 (erase).
+
+use super::cmp::CmpOutput;
+use super::mol::MolOutput;
+
+/// What the WR stage decided for one pixel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriteBack {
+    /// Write port not driven; cell keeps its value.
+    Disabled,
+    /// Drive the 5-bit word onto WBL.
+    Value(u8),
+}
+
+/// Evaluate the write-back mux for one pixel of the patch.
+///
+/// `stored` is the 5-bit word read in the MO phase, `mol`/`cmp` the
+/// outputs of the two compute stages, `is_centre` whether this pixel is
+/// the event location.
+pub fn write_back(stored: u8, mol: MolOutput, cmp: CmpOutput, is_centre: bool) -> WriteBack {
+    if is_centre {
+        // centre always becomes 255 (stored 0x1F), even if it was erased
+        return WriteBack::Value(0x1F);
+    }
+    if stored == 0 {
+        // erased pixel: 0-1 would wrap; hardware gates WWL off instead.
+        return WriteBack::Disabled;
+    }
+    debug_assert!(mol.cout, "non-zero stored word must produce carry-out");
+    if cmp.geq {
+        WriteBack::Value(mol.sum)
+    } else {
+        WriteBack::Value(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nmc::{cmp::compare_geq, mol::minus_one_gate};
+
+    const TH5: u8 = 1; // TH = 225 in 5-bit space
+
+    fn step(stored: u8, centre: bool) -> WriteBack {
+        let mol = minus_one_gate(stored);
+        let cmp = compare_geq(mol.sum, TH5);
+        write_back(stored, mol, cmp, centre)
+    }
+
+    #[test]
+    fn centre_always_writes_255() {
+        assert_eq!(step(0, true), WriteBack::Value(0x1F));
+        assert_eq!(step(0x10, true), WriteBack::Value(0x1F));
+    }
+
+    #[test]
+    fn erased_pixel_write_disabled() {
+        assert_eq!(step(0, false), WriteBack::Disabled);
+    }
+
+    #[test]
+    fn live_pixel_decrements() {
+        // stored 31 (=255) -> 30 (=254)
+        assert_eq!(step(0x1F, false), WriteBack::Value(0x1E));
+        // stored 2 (=226) -> 1 (=225), still >= TH
+        assert_eq!(step(2, false), WriteBack::Value(1));
+    }
+
+    #[test]
+    fn below_threshold_clamps_to_zero() {
+        // stored 1 (=225) -> 0 (=224) < TH -> erase
+        assert_eq!(step(1, false), WriteBack::Value(0));
+    }
+
+    #[test]
+    fn matches_golden_8bit_semantics_exhaustively() {
+        // For every representable TOS value, the 5-bit datapath must agree
+        // with the 8-bit golden update rule.
+        for v in 0u16..=255 {
+            let v = v as u8;
+            if !crate::tos::encoding::representable(v) {
+                continue;
+            }
+            let stored = crate::tos::encoding::store(v);
+            let golden = {
+                let d = v.saturating_sub(1);
+                if d < 225 {
+                    0
+                } else {
+                    d
+                }
+            };
+            match step(stored, false) {
+                WriteBack::Disabled => assert_eq!(golden, 0, "v={v}"),
+                WriteBack::Value(bits) => {
+                    assert_eq!(crate::tos::encoding::load(bits), golden, "v={v}")
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! PJRT runtime: load the AOT-compiled Harris graph (`artifacts/*.hlo.txt`)
+//! and execute it from the frame-by-frame path.
+//!
+//! This is the only place the crate touches XLA.  The artifact was lowered
+//! by `python/compile/aot.py` (jax -> StableHLO -> HLO *text*; text is the
+//! interchange format because xla_extension 0.5.1 rejects jax >= 0.5's
+//! 64-bit-id protos).  Compilation happens once at load; execution is a
+//! buffer-in/buffer-out call with no Python anywhere near it.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Description of one artifact from `artifacts/meta.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    /// Logical name (e.g. `davis240`).
+    pub name: String,
+    /// HLO text file (relative to the artifact dir).
+    pub file: String,
+    /// Input/output frame height.
+    pub height: usize,
+    /// Input/output frame width.
+    pub width: usize,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Artifact directory.
+    pub dir: PathBuf,
+    /// All artifacts by name.
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `meta.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json — run `make artifacts`", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+        if j.get("format").and_then(|f| f.as_str()) != Some("hlo-text") {
+            bail!("unsupported artifact format");
+        }
+        let arts = j.get("artifacts").context("meta.json missing `artifacts`")?;
+        let mut artifacts = Vec::new();
+        for name in arts.keys().context("`artifacts` not an object")? {
+            let a = arts.get(name).unwrap();
+            artifacts.push(ArtifactInfo {
+                name: name.to_string(),
+                file: a
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .context("artifact missing file")?
+                    .to_string(),
+                height: a.get("height").and_then(|v| v.as_f64()).context("missing height")? as usize,
+                width: a.get("width").and_then(|v| v.as_f64()).context("missing width")? as usize,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find an artifact by name.
+    pub fn find(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact `{name}` not in manifest"))
+    }
+}
+
+/// A compiled Harris engine: one PJRT executable per model variant.
+pub struct HarrisEngine {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// Frame height.
+    pub height: usize,
+    /// Frame width.
+    pub width: usize,
+    /// Executions performed (telemetry).
+    pub executions: u64,
+}
+
+impl std::fmt::Debug for HarrisEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HarrisEngine")
+            .field("height", &self.height)
+            .field("width", &self.width)
+            .field("executions", &self.executions)
+            .finish()
+    }
+}
+
+impl HarrisEngine {
+    /// Load + compile an artifact by name from a manifest.
+    pub fn load(manifest: &Manifest, name: &str) -> Result<HarrisEngine> {
+        let info = manifest.find(name)?;
+        let path = manifest.dir.join(&info.file);
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO")?;
+        Ok(HarrisEngine { client, exe, height: info.height, width: info.width, executions: 0 })
+    }
+
+    /// Compute the Harris LUT of one TOS frame.
+    ///
+    /// `frame` is row-major `height*width` f32 in `[0, 255]`; returns the
+    /// normalized response map in `[0, 1]`.
+    pub fn compute(&mut self, frame: &[f32]) -> Result<Vec<f32>> {
+        if frame.len() != self.height * self.width {
+            bail!("frame size {} != {}x{}", frame.len(), self.height, self.width);
+        }
+        let input = xla::Literal::vec1(frame)
+            .reshape(&[self.height as i64, self.width as i64])
+            .context("reshaping input literal")?;
+        let result = self.exe.execute::<xla::Literal>(&[input]).context("executing")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True -> unwrap the 1-tuple
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let values = out.to_vec::<f32>().context("reading result values")?;
+        self.executions += 1;
+        Ok(values)
+    }
+
+    /// Convenience: compute from a u8 TOS snapshot.
+    pub fn compute_u8(&mut self, tos: &[u8]) -> Result<Vec<f32>> {
+        let frame: Vec<f32> = tos.iter().map(|&v| v as f32).collect();
+        self.compute(&frame)
+    }
+
+    /// PJRT platform string (telemetry / sanity).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Locate the artifact directory: `$NMC_TOS_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("NMC_TOS_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // try cwd and its parents (tests run from target subdirs)
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("meta.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: engine-level integration tests (load + execute + numerics
+    // against the golden CPU implementation) live in rust/tests/ because
+    // they need the artifacts built; these unit tests cover the manifest
+    // parser and dir discovery logic.
+
+    #[test]
+    fn manifest_parses_generated_meta() {
+        let dir = default_artifact_dir();
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let d = m.find("davis240").unwrap();
+        assert_eq!((d.height, d.width), (180, 240));
+        let t = m.find("test64").unwrap();
+        assert_eq!((t.height, t.width), (64, 64));
+        assert!(m.find("nonexistent").is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_bad_format() {
+        let tmp = std::env::temp_dir().join(format!("nmc_tos_meta_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("meta.json"), r#"{"format":"protobuf","artifacts":{}}"#).unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn missing_meta_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

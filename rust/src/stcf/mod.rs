@@ -1,0 +1,190 @@
+//! Spatio-Temporal Correlation Filter (STCF) denoising — paper Sec. III-A,
+//! after Guo & Delbruck's low-cost background-activity filter.
+//!
+//! Background-activity (BA) noise events are temporally/spatially isolated;
+//! signal events arrive in correlated clumps.  The filter keeps, per pixel,
+//! the timestamp of the most recent event; an incoming event is *signal*
+//! iff at least `support` pixels in its `(2r+1)^2` neighbourhood (centre
+//! excluded) fired within the trailing window `tw_us`.
+
+
+
+use crate::events::{Event, Resolution};
+
+/// STCF parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StcfConfig {
+    /// Correlation time window TW_STCF (µs).
+    pub tw_us: u64,
+    /// Neighbourhood radius (1 => 3x3).
+    pub radius: u16,
+    /// Supporting neighbours required to classify as signal.
+    pub support: u32,
+    /// Count both polarities as support (the paper's filter does).
+    pub any_polarity: bool,
+}
+
+impl Default for StcfConfig {
+    fn default() -> Self {
+        // Paper example: "if enough supporting events (e.g., 2) are present"
+        Self { tw_us: 5_000, radius: 1, support: 2, any_polarity: true }
+    }
+}
+
+/// Filter telemetry.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StcfStats {
+    /// Events seen.
+    pub seen: u64,
+    /// Events passed as signal.
+    pub passed: u64,
+}
+
+/// The streaming STCF filter.
+#[derive(Debug, Clone)]
+pub struct Stcf {
+    cfg: StcfConfig,
+    res: Resolution,
+    /// Last event time per pixel, +1 so that 0 means "never fired".
+    last_t: Vec<u64>,
+    stats: StcfStats,
+}
+
+impl Stcf {
+    /// Fresh filter for a sensor.
+    pub fn new(res: Resolution, cfg: StcfConfig) -> Self {
+        Self { cfg, res, last_t: vec![0; res.pixels()], stats: StcfStats::default() }
+    }
+
+    /// Classify an event as signal (`true`) or BA noise (`false`), and
+    /// record it in the timestamp map either way.
+    pub fn check(&mut self, ev: &Event) -> bool {
+        self.stats.seen += 1;
+        let r = self.cfg.radius as i32;
+        let (w, h) = (self.res.width as i32, self.res.height as i32);
+        let (ex, ey) = (ev.x as i32, ev.y as i32);
+        let mut support = 0u32;
+        let x0 = (ex - r).max(0);
+        let x1 = (ex + r).min(w - 1);
+        let y0 = (ey - r).max(0);
+        let y1 = (ey + r).min(h - 1);
+        'outer: for y in y0..=y1 {
+            let row = y as usize * w as usize;
+            for x in x0..=x1 {
+                if x == ex && y == ey {
+                    continue;
+                }
+                let t = self.last_t[row + x as usize];
+                if t != 0 {
+                    let t = t - 1;
+                    if ev.t.saturating_sub(t) <= self.cfg.tw_us {
+                        support += 1;
+                        if support >= self.cfg.support {
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+        }
+        self.last_t[self.res.index(ev.x, ev.y)] = ev.t + 1;
+        let signal = support >= self.cfg.support;
+        if signal {
+            self.stats.passed += 1;
+        }
+        signal
+    }
+
+    /// Filter a whole stream, returning only the signal events.
+    pub fn filter(&mut self, events: &[Event]) -> Vec<Event> {
+        events.iter().filter(|e| self.check(e)).copied().collect()
+    }
+
+    /// Telemetry.
+    pub fn stats(&self) -> StcfStats {
+        self.stats
+    }
+
+    /// Fraction of seen events classified as signal.
+    pub fn pass_rate(&self) -> f64 {
+        if self.stats.seen == 0 {
+            return 0.0;
+        }
+        self.stats.passed as f64 / self.stats.seen as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filt() -> Stcf {
+        Stcf::new(Resolution::TEST64, StcfConfig::default())
+    }
+
+    #[test]
+    fn isolated_event_is_noise() {
+        let mut f = filt();
+        assert!(!f.check(&Event::on(30, 30, 1000)));
+    }
+
+    #[test]
+    fn correlated_cluster_passes() {
+        let mut f = filt();
+        // two neighbours fire first
+        f.check(&Event::on(30, 30, 1000));
+        f.check(&Event::on(31, 30, 1010));
+        // third event next to both has 2 supporters -> signal
+        assert!(f.check(&Event::on(30, 31, 1020)));
+    }
+
+    #[test]
+    fn support_threshold_enforced() {
+        let mut f = filt();
+        f.check(&Event::on(30, 30, 1000));
+        // only ONE supporter in window -> still noise with support=2
+        assert!(!f.check(&Event::on(31, 30, 1010)));
+    }
+
+    #[test]
+    fn stale_neighbours_do_not_support() {
+        let mut f = filt();
+        f.check(&Event::on(30, 30, 0));
+        f.check(&Event::on(31, 30, 10));
+        // window is 5 ms; 10 ms later the neighbours are stale
+        assert!(!f.check(&Event::on(30, 31, 10_020)));
+    }
+
+    #[test]
+    fn border_events_handled() {
+        let mut f = filt();
+        f.check(&Event::on(0, 0, 0));
+        f.check(&Event::on(1, 0, 5));
+        assert!(f.check(&Event::on(0, 1, 10)));
+    }
+
+    #[test]
+    fn pass_rate_tracks_noise_fraction() {
+        let mut f = filt();
+        // dense cluster at (10,10): mostly passes after warmup
+        for i in 0..100u64 {
+            f.check(&Event::on(10 + (i % 2) as u16, 10 + ((i / 2) % 2) as u16, i * 10));
+        }
+        // isolated scatter: all rejected
+        for i in 0..100u64 {
+            f.check(&Event::on((i * 7 % 60) as u16 , (i * 11 % 60) as u16, 1_000_000 + i * 100_000));
+        }
+        let s = f.stats();
+        assert_eq!(s.seen, 200);
+        assert!(s.passed > 80 && s.passed < 120, "passed {}", s.passed);
+    }
+
+    #[test]
+    fn filter_batch_matches_check() {
+        let evs: Vec<Event> = (0..50).map(|i| Event::on(20, 20 + (i % 3) as u16, i * 100)).collect();
+        let mut a = filt();
+        let va = a.filter(&evs);
+        let mut b = filt();
+        let vb: Vec<Event> = evs.iter().filter(|e| b.check(e)).copied().collect();
+        assert_eq!(va, vb);
+    }
+}

@@ -1,0 +1,306 @@
+//! Golden software model of the Threshold-Ordinal Surface (paper
+//! Algorithm 1 / luvHarris Sec. III).
+//!
+//! The TOS is an `H x W` map of 8-bit "novelty" values.  Per event:
+//! decrement the `P x P` patch around the event, clamp anything that falls
+//! below `TH` to zero, then write 255 at the event pixel.  This module is
+//! the bit-exact reference against which both the NMC macro simulator
+//! ([`crate::nmc`]) and the Pallas batch kernel (python tests) are checked.
+
+
+
+use crate::events::{Event, Resolution};
+
+/// TOS algorithm parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TosConfig {
+    /// Patch side length `P` (odd).
+    pub patch: u16,
+    /// Threshold `TH` below which decremented values clamp to zero.
+    /// The paper stores only 5 bits because `TH` "typically does not go
+    /// below ~225"; `TH >= 225` also makes the 5-bit encoding injective
+    /// (stored 0 uniquely means an erased pixel).
+    pub threshold: u8,
+}
+
+impl Default for TosConfig {
+    fn default() -> Self {
+        // Paper: 7x7 patch, TH ~ 225 (=> 5-bit on-chip storage).
+        Self { patch: 7, threshold: 225 }
+    }
+}
+
+impl TosConfig {
+    /// Half patch extent `(P-1)/2`.
+    #[inline]
+    pub fn half(&self) -> i32 {
+        (self.patch as i32 - 1) / 2
+    }
+
+    /// Validate config invariants (odd patch, sane threshold).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.patch % 2 == 0 || self.patch < 3 {
+            return Err(format!("patch must be odd and >= 3, got {}", self.patch));
+        }
+        Ok(())
+    }
+}
+
+/// The Threshold-Ordinal Surface: an 8-bit novelty map.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TosSurface {
+    res: Resolution,
+    cfg: TosConfig,
+    data: Vec<u8>,
+}
+
+impl TosSurface {
+    /// Fresh all-zero surface.
+    pub fn new(res: Resolution, cfg: TosConfig) -> Self {
+        cfg.validate().expect("invalid TOS config");
+        Self { res, cfg, data: vec![0; res.pixels()] }
+    }
+
+    /// Sensor geometry.
+    #[inline]
+    pub fn resolution(&self) -> Resolution {
+        self.res
+    }
+
+    /// Algorithm parameters.
+    #[inline]
+    pub fn config(&self) -> TosConfig {
+        self.cfg
+    }
+
+    /// Raw row-major pixel data.
+    #[inline]
+    pub fn data(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Mutable raw access (used by the BER-injection study).
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [u8] {
+        &mut self.data
+    }
+
+    /// Pixel accessor.
+    #[inline]
+    pub fn get(&self, x: u16, y: u16) -> u8 {
+        self.data[self.res.index(x, y)]
+    }
+
+    /// Pixel mutator (tests / error injection).
+    #[inline]
+    pub fn set(&mut self, x: u16, y: u16, v: u8) {
+        let i = self.res.index(x, y);
+        self.data[i] = v;
+    }
+
+    /// Apply one event (Algorithm 1). Patches are clipped at the borders.
+    ///
+    /// This is the *hot path* of the whole system model; it is kept
+    /// allocation-free and branch-light (see EXPERIMENTS.md §Perf).
+    #[inline]
+    pub fn update(&mut self, ev: &Event) {
+        let half = self.cfg.half();
+        let th = self.cfg.threshold;
+        let w = self.res.width as i32;
+        let h = self.res.height as i32;
+        let ex = ev.x as i32;
+        let ey = ev.y as i32;
+        let x0 = (ex - half).max(0);
+        let x1 = (ex + half).min(w - 1);
+        let y0 = (ey - half).max(0);
+        let y1 = (ey + half).min(h - 1);
+        for y in y0..=y1 {
+            let row = y as usize * w as usize;
+            let slice = &mut self.data[row + x0 as usize..=row + x1 as usize];
+            for v in slice.iter_mut() {
+                let d = v.saturating_sub(1);
+                *v = if d < th { 0 } else { d };
+            }
+        }
+        self.data[self.res.index(ev.x, ev.y)] = 255;
+    }
+
+    /// Apply a batch of events in order.
+    pub fn update_batch(&mut self, events: &[Event]) {
+        for e in events {
+            self.update(e);
+        }
+    }
+
+    /// Copy the surface into an `f32` frame (the Harris graph's input).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Copy into a caller-provided f32 buffer (no allocation on the FBF path).
+    pub fn write_f32_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.data.len());
+        for (o, &v) in out.iter_mut().zip(&self.data) {
+            *o = v as f32;
+        }
+    }
+
+    /// Count of pixels currently holding "novel" (non-zero) values.
+    pub fn active_pixels(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0).count()
+    }
+
+    /// Reset to all zeros.
+    pub fn clear(&mut self) {
+        self.data.fill(0);
+    }
+}
+
+/// The 5-bit on-chip encoding (paper Sec. IV-A): since `TH >= 225`, live
+/// values sit in `[225, 255]`, whose low 5 bits are `v - 224` in `[1, 31]`;
+/// the high 3 bits (`0b111`) are implicit. Stored `0` uniquely encodes an
+/// erased pixel (`TOS = 0`), which is what lets the write-back circuit
+/// gate on "stored value is 0" without a separate valid flag.
+pub mod encoding {
+    /// Encode an 8-bit TOS value (0 or >= 225) into the 5 stored bits.
+    #[inline]
+    pub fn store(v: u8) -> u8 {
+        debug_assert!(representable(v), "unrepresentable TOS value {v}");
+        v & 0x1F
+    }
+
+    /// Decode the 5 stored bits back into the 8-bit domain.
+    #[inline]
+    pub fn load(bits5: u8) -> u8 {
+        if bits5 == 0 {
+            0
+        } else {
+            0xE0 | (bits5 & 0x1F)
+        }
+    }
+
+    /// Values the TOS can actually hold with `TH >= 225`.
+    #[inline]
+    pub fn representable(v: u8) -> bool {
+        v == 0 || v >= 225
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::Polarity;
+
+    fn surface() -> TosSurface {
+        TosSurface::new(Resolution::TEST64, TosConfig::default())
+    }
+
+    #[test]
+    fn single_event_writes_255() {
+        let mut s = surface();
+        s.update(&Event::on(10, 12, 0));
+        assert_eq!(s.get(10, 12), 255);
+        // rest of patch was 0 and stays 0 (0-1 clamps)
+        assert_eq!(s.get(9, 12), 0);
+        assert_eq!(s.active_pixels(), 1);
+    }
+
+    #[test]
+    fn neighbours_decrement_until_threshold() {
+        let mut s = surface();
+        s.update(&Event::on(20, 20, 0));
+        // 30 more events at a neighbouring pixel: the first pixel decays
+        for i in 0..30 {
+            s.update(&Event::on(21, 20, i + 1));
+        }
+        // 255 - 30 = 225 = TH, still alive
+        assert_eq!(s.get(20, 20), 225);
+        s.update(&Event::on(21, 20, 100));
+        // one more decrement: 224 < TH -> 0
+        assert_eq!(s.get(20, 20), 0);
+    }
+
+    #[test]
+    fn border_clipping() {
+        let mut s = surface();
+        s.update(&Event::on(0, 0, 0));
+        s.update(&Event::on(63, 63, 1));
+        assert_eq!(s.get(0, 0), 255);
+        assert_eq!(s.get(63, 63), 255);
+    }
+
+    #[test]
+    fn values_stay_in_valid_domain() {
+        // After arbitrary updates every value is 0 or >= TH (it's the
+        // invariant that justifies the 5-bit storage).
+        let mut s = surface();
+        for i in 0..500u64 {
+            s.update(&Event::on((i * 7 % 64) as u16, (i * 13 % 64) as u16, i));
+        }
+        for &v in s.data() {
+            assert!(v == 0 || v >= s.config().threshold || v == 255);
+        }
+    }
+
+    #[test]
+    fn update_batch_equals_sequential() {
+        let evs: Vec<Event> =
+            (0..100).map(|i| Event::new((i % 60) as u16, (i % 50) as u16, i as u64, Polarity::On)).collect();
+        let mut a = surface();
+        let mut b = surface();
+        a.update_batch(&evs);
+        for e in &evs {
+            b.update(e);
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn to_f32_matches_data() {
+        let mut s = surface();
+        s.update(&Event::on(5, 5, 0));
+        let f = s.to_f32();
+        assert_eq!(f[s.resolution().index(5, 5)], 255.0);
+        let mut buf = vec![0f32; s.data().len()];
+        s.write_f32_into(&mut buf);
+        assert_eq!(f, buf);
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(TosConfig { patch: 6, threshold: 224 }.validate().is_err());
+        assert!(TosConfig { patch: 1, threshold: 224 }.validate().is_err());
+        assert!(TosConfig { patch: 9, threshold: 200 }.validate().is_ok());
+    }
+
+    #[test]
+    fn encoding_roundtrip() {
+        for v in 0u16..=255 {
+            let v = v as u8;
+            if encoding::representable(v) {
+                assert_eq!(encoding::load(encoding::store(v)), v, "value {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn encoding_is_injective_over_domain() {
+        let mut seen = std::collections::HashMap::new();
+        for v in 0u16..=255 {
+            let v = v as u8;
+            if encoding::representable(v) {
+                if let Some(prev) = seen.insert(encoding::store(v), v) {
+                    panic!("collision: {prev} and {v} both store as {}", encoding::store(v));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut s = surface();
+        s.update(&Event::on(1, 1, 0));
+        s.clear();
+        assert_eq!(s.active_pixels(), 0);
+    }
+}

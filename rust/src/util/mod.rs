@@ -1,0 +1,7 @@
+//! Small in-tree utilities that replace external crates in this offline
+//! build: a fast deterministic PRNG with Gaussian/Poisson samplers, a JSON
+//! emitter for experiment outputs, and a randomized property-test harness.
+
+pub mod json;
+pub mod proptest;
+pub mod rng;

@@ -1,0 +1,75 @@
+//! Tiny randomized property-test harness (offline stand-in for `proptest`).
+//!
+//! `check(seed, cases, f)` runs `f` against `cases` independently seeded
+//! RNGs; on failure it retries with the same sub-seed to confirm and then
+//! panics with the reproducing seed, so failures are one-line reproducible:
+//! `check_one(SEED, f)`.
+
+use super::rng::Rng;
+
+/// Run a randomized property `cases` times. The closure receives a fresh
+/// deterministic RNG per case and should panic (assert) on violation.
+pub fn check<F: Fn(&mut Rng)>(seed: u64, cases: u32, f: F) {
+    for case in 0..cases {
+        let sub = sub_seed(seed, case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::seed_from(sub);
+            f(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed on case {case} (reproduce with check_one({sub:#x}, ..)): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported sub-seed.
+pub fn check_one<F: Fn(&mut Rng)>(sub_seed: u64, f: F) {
+    let mut rng = Rng::seed_from(sub_seed);
+    f(&mut rng);
+}
+
+/// Derive the per-case seed (stable across runs).
+pub fn sub_seed(seed: u64, case: u32) -> u64 {
+    seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u32;
+        // interior mutability via a Cell to count invocations
+        let cell = std::cell::Cell::new(0u32);
+        check(7, 25, |rng| {
+            let _ = rng.f64();
+            cell.set(cell.get() + 1);
+        });
+        count += cell.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed on case")]
+    fn failing_property_reports_seed() {
+        check(7, 50, |rng| {
+            // fails whenever the draw is below 0.5 — quickly
+            assert!(rng.f64() >= 0.5, "draw too small");
+        });
+    }
+
+    #[test]
+    fn sub_seed_is_stable_and_distinct() {
+        assert_eq!(sub_seed(1, 0), sub_seed(1, 0));
+        assert_ne!(sub_seed(1, 0), sub_seed(1, 1));
+        assert_ne!(sub_seed(1, 5), sub_seed(2, 5));
+    }
+}

@@ -1,0 +1,156 @@
+//! End-to-end integration tests of the full pipeline: scene -> STCF ->
+//! NMC-TOS -> DVFS -> PJRT Harris -> corner tagging -> PR evaluation.
+//!
+//! These are the system-level claims of the paper reproduced at test
+//! scale: corner detection works, BER at 0.6 V degrades AUC only mildly,
+//! and the async (decoupled) LUT worker agrees with the sync path.
+
+use nmc_tos::coordinator::{Pipeline, PipelineConfig};
+use nmc_tos::datasets::synthetic::SceneConfig;
+use nmc_tos::eval::PrCurve;
+use nmc_tos::runtime::default_artifact_dir;
+
+fn artifacts_available() -> bool {
+    let ok = default_artifact_dir().join("meta.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+    }
+    ok
+}
+
+fn test_cfg() -> PipelineConfig {
+    let mut cfg = PipelineConfig::test64();
+    cfg.dvfs = None; // deterministic voltage for AUC comparisons
+    cfg.lut_refresh_events = 1_000;
+    cfg
+}
+
+#[test]
+fn detects_corners_better_than_chance() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut scene = SceneConfig::test64().build(21);
+    let (events, gt) = scene.generate_with_gt(60_000);
+    let mut pipe = Pipeline::new(test_cfg()).unwrap();
+    let report = pipe.run(&events).unwrap();
+    assert!(report.lut_refreshes > 10);
+    let scored = report.scored_events(&gt, 3.5);
+    let base_rate =
+        scored.iter().filter(|(_, l)| *l).count() as f64 / scored.len() as f64;
+    let auc = PrCurve::from_scores(&scored, 101).auc();
+    // the 64x64 test sensor has a high corner-event base rate (shapes
+    // cover much of the frame), so require a solid absolute margin
+    assert!(
+        auc > base_rate + 0.12,
+        "detector AUC {auc} not better than chance {base_rate}"
+    );
+    assert!(!report.corners.is_empty(), "no corners tagged");
+}
+
+#[test]
+fn ber_degrades_auc_only_mildly() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut scene = SceneConfig::test64().build(33);
+    let (events, gt) = scene.generate_with_gt(60_000);
+
+    let run = |vdd: f64, inject: bool| -> f64 {
+        let mut cfg = test_cfg();
+        cfg.fixed_vdd = vdd;
+        cfg.inject_errors = inject;
+        cfg.seed = 5;
+        let mut pipe = Pipeline::new(cfg).unwrap();
+        let report = pipe.run(&events).unwrap();
+        PrCurve::from_scores(&report.scored_events(&gt, 3.5), 101).auc()
+    };
+
+    let clean = run(1.2, false);
+    let ber_061 = run(0.61, true);
+    let ber_060 = run(0.60, true);
+    // paper Fig. 11: 0.2% BER ~unchanged; 2.5% BER costs ~0.03 AUC
+    assert!((clean - ber_061).abs() < 0.05, "0.61 V moved AUC: {clean} -> {ber_061}");
+    assert!(clean - ber_060 < 0.12, "0.6 V degraded too much: {clean} -> {ber_060}");
+    assert!(ber_060 > 0.5 * clean, "0.6 V destroyed detection: {clean} -> {ber_060}");
+}
+
+#[test]
+fn async_and_sync_modes_agree() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut scene = SceneConfig::test64().build(44);
+    let (events, gt) = scene.generate_with_gt(40_000);
+
+    let mut sync_cfg = test_cfg();
+    sync_cfg.async_refresh = false;
+    let mut pipe = Pipeline::new(sync_cfg).unwrap();
+    let sync_report = pipe.run(&events).unwrap();
+
+    let mut async_cfg = test_cfg();
+    async_cfg.async_refresh = true;
+    let mut pipe = Pipeline::new(async_cfg).unwrap();
+    let async_report = pipe.run(&events).unwrap();
+
+    // identical event path: the worker NEVER back-pressures events, so the
+    // TOS must be bit-identical regardless of scheduling
+    assert_eq!(sync_report.events_signal, async_report.events_signal);
+    assert_eq!(sync_report.final_tos, async_report.final_tos);
+    assert!(async_report.lut_refreshes > 0, "worker never refreshed");
+
+    // Scoring quality in async mode depends on host scheduling (on a
+    // loaded single core the worker may lag the whole run — that IS the
+    // luvHarris semantics), so the deterministic quality check is: both
+    // runs' final surfaces produce the same LUT through the engine.
+    let _ = &gt;
+    let dir = default_artifact_dir();
+    let manifest = nmc_tos::runtime::Manifest::load(&dir).unwrap();
+    let mut engine = nmc_tos::runtime::HarrisEngine::load(&manifest, "test64").unwrap();
+    let lut_a = engine.compute_u8(&sync_report.final_tos).unwrap();
+    let lut_b = engine.compute_u8(&async_report.final_tos).unwrap();
+    assert_eq!(lut_a, lut_b);
+}
+
+#[test]
+fn dvfs_pipeline_runs_with_engine() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut cfg = PipelineConfig::test64();
+    cfg.lut_refresh_events = 2_000;
+    let mut scene = SceneConfig::test64().build(55);
+    let events = scene.generate(40_000);
+    let mut pipe = Pipeline::new(cfg).unwrap();
+    let report = pipe.run(&events).unwrap();
+    assert!(report.dvfs_switches >= 1, "DVFS never acted");
+    assert!(report.lut_refreshes > 0);
+}
+
+#[test]
+fn resolution_mismatch_is_rejected() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut cfg = PipelineConfig::test64();
+    cfg.artifact = "davis240".into(); // wrong artifact for 64x64 sensor
+    assert!(Pipeline::new(cfg).is_err());
+}
+
+#[test]
+fn deterministic_reports_per_seed() {
+    if !artifacts_available() {
+        return;
+    }
+    let run = || {
+        let mut scene = SceneConfig::test64().build(66);
+        let events = scene.generate(20_000);
+        let mut pipe = Pipeline::new(test_cfg()).unwrap();
+        pipe.run(&events).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.scores, b.scores);
+    assert_eq!(a.corners, b.corners);
+    assert_eq!(a.final_tos, b.final_tos);
+}

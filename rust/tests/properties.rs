@@ -1,0 +1,228 @@
+//! Randomized property tests over the simulator's core invariants, run
+//! with the in-tree `util::proptest` harness (offline stand-in for the
+//! proptest crate; failures print a one-line reproducing seed).
+
+use nmc_tos::conventional::ConventionalTos;
+use nmc_tos::datasets::synthetic::SceneConfig;
+use nmc_tos::dvfs::{DvfsConfig, DvfsController};
+use nmc_tos::events::{stream, Event, Polarity, Resolution};
+use nmc_tos::nmc::{calib, NmcConfig, NmcMacro};
+use nmc_tos::stcf::{Stcf, StcfConfig};
+use nmc_tos::tos::{encoding, TosConfig, TosSurface};
+use nmc_tos::util::proptest::check;
+use nmc_tos::util::rng::Rng;
+
+fn random_events(rng: &mut Rng, n: usize, res: Resolution) -> Vec<Event> {
+    let mut t = 0u64;
+    (0..n)
+        .map(|_| {
+            t += rng.below(200);
+            Event::new(
+                rng.below(res.width as u64) as u16,
+                rng.below(res.height as u64) as u16,
+                t,
+                if rng.chance(0.5) { Polarity::On } else { Polarity::Off },
+            )
+        })
+        .collect()
+}
+
+/// PROPERTY: the NMC macro (5-bit datapath, gate-level MOL/CMP/WR) is
+/// bit-identical to the golden 8-bit TOS for any event stream at any
+/// error-free voltage.
+#[test]
+fn prop_nmc_equals_golden_tos() {
+    check(0xA11CE, 25, |rng| {
+        let res = Resolution::TEST64;
+        let patch = [3u16, 5, 7, 9][rng.below(4) as usize];
+        let threshold = 225 + rng.below(20) as u8;
+        let tos_cfg = TosConfig { patch, threshold };
+        let vdd = rng.range_f64(0.63, 1.2); // error-free region
+        let cfg = NmcConfig {
+            tos: tos_cfg,
+            pipelined: rng.chance(0.5),
+            vdd,
+            inject_errors: true, // injector active but p(err)=0 above 0.63 V
+            seed: rng.next_u64(),
+        };
+        let mut mac = NmcMacro::new(res, cfg);
+        let mut golden = TosSurface::new(res, tos_cfg);
+        for e in random_events(rng, 1500, res) {
+            mac.process(&e);
+            golden.update(&e);
+        }
+        assert_eq!(mac.snapshot_u8(), golden.data().to_vec());
+    });
+}
+
+/// PROPERTY: every value the golden TOS ever holds is representable in the
+/// 5-bit encoding (the invariant that justifies dropping 3 bits on-chip).
+#[test]
+fn prop_tos_values_always_representable() {
+    check(0xB0B, 20, |rng| {
+        let res = Resolution::TEST64;
+        let threshold = 225 + rng.below(25) as u8;
+        let mut surf = TosSurface::new(res, TosConfig { patch: 7, threshold });
+        for e in random_events(rng, 2000, res) {
+            surf.update(&e);
+            debug_assert!(true);
+        }
+        for &v in surf.data() {
+            assert!(
+                v == 0 || v >= threshold,
+                "value {v} below TH {threshold} survived"
+            );
+            assert!(encoding::representable(v) || v >= 225, "unrepresentable {v}");
+        }
+    });
+}
+
+/// PROPERTY: conventional baseline and NMC macro produce identical
+/// surfaces (they implement the same Algorithm 1; only cost models differ).
+#[test]
+fn prop_conventional_equals_nmc_functionally() {
+    check(0xC0DE, 15, |rng| {
+        let res = Resolution::TEST64;
+        let cfg = TosConfig::default();
+        let mut conv = ConventionalTos::new(res, cfg, 1.2);
+        let mut mac = NmcMacro::new(res, NmcConfig::default());
+        for e in random_events(rng, 1000, res) {
+            conv.process(&e);
+            mac.process(&e);
+        }
+        assert_eq!(conv.surface().data(), &mac.snapshot_u8()[..]);
+    });
+}
+
+/// PROPERTY: NMC latency/energy accounting is consistent — totals equal
+/// the sum of per-event costs, and pipelined latency is strictly less than
+/// unpipelined for the same stream.
+#[test]
+fn prop_cost_accounting_consistent() {
+    check(0xFEE, 15, |rng| {
+        let res = Resolution::TEST64;
+        let events = random_events(rng, 500, res);
+        let run = |pipelined: bool| {
+            let mut mac = NmcMacro::new(
+                res,
+                NmcConfig { pipelined, ..NmcConfig::default() },
+            );
+            let mut sum_lat = 0.0;
+            let mut sum_e = 0.0;
+            for e in &events {
+                let c = mac.process(e);
+                sum_lat += c.latency_ns;
+                sum_e += c.energy_pj;
+            }
+            let s = mac.stats();
+            assert!((s.busy_ns - sum_lat).abs() < 1e-6);
+            assert!((s.energy_pj - sum_e).abs() < 1e-6);
+            s
+        };
+        let piped = run(true);
+        let unpiped = run(false);
+        assert!(piped.busy_ns < unpiped.busy_ns);
+        assert_eq!(piped.energy_pj, unpiped.energy_pj, "pipeline must not change energy");
+    });
+}
+
+/// PROPERTY: the DVFS rate estimate converges to the true rate of a
+/// constant stream within 10 %, and the chosen operating point always has
+/// capacity >= estimate (with headroom) unless pinned at max.
+#[test]
+fn prop_dvfs_estimate_and_capacity() {
+    check(0xD7F5, 15, |rng| {
+        let rate_eps = rng.range_f64(5e3, 40e6);
+        let cfg = DvfsConfig::default();
+        let mut ctrl = DvfsController::new(cfg);
+        let dt_ns = (1e9 / rate_eps) as u64;
+        let mut t_ns = 0u64;
+        // run for 6 windows
+        let end_ns = 6 * cfg.tw_us * 1000;
+        while t_ns < end_ns {
+            ctrl.on_event(t_ns / 1000);
+            t_ns += dt_ns.max(1);
+        }
+        let est = ctrl.estimated_rate().expect("estimate after 6 windows");
+        assert!(
+            (est - rate_eps).abs() / rate_eps < 0.10,
+            "estimate {est} vs true {rate_eps}"
+        );
+        let op = ctrl.operating_point();
+        let need = est * cfg.headroom;
+        let max_op = 63.2e6;
+        assert!(
+            op.max_rate >= need || op.max_rate > max_op * 0.99,
+            "capacity {} below need {need}",
+            op.max_rate
+        );
+    });
+}
+
+/// PROPERTY: STCF is deterministic, order-preserving, and never *creates*
+/// events; disabling it (support=0) passes everything.
+#[test]
+fn prop_stcf_filters_subset_in_order() {
+    check(0x57CF, 15, |rng| {
+        let res = Resolution::TEST64;
+        let events = random_events(rng, 1500, res);
+        let cfg = StcfConfig {
+            tw_us: 1 + rng.below(20_000),
+            radius: 1 + rng.below(2) as u16,
+            support: 1 + rng.below(3) as u32,
+            any_polarity: true,
+        };
+        let mut f = Stcf::new(res, cfg);
+        let out = f.filter(&events);
+        assert!(out.len() <= events.len());
+        // subset & order: every output event appears in input order
+        let mut idx = 0usize;
+        for oe in &out {
+            while idx < events.len() && events[idx] != *oe {
+                idx += 1;
+            }
+            assert!(idx < events.len(), "filtered event not found in order");
+            idx += 1;
+        }
+        // support=0 passes everything
+        let mut f0 = Stcf::new(res, StcfConfig { support: 0, ..cfg });
+        assert_eq!(f0.filter(&events).len(), events.len());
+    });
+}
+
+/// PROPERTY: synthetic scene streams are valid (sorted, in-bounds) and
+/// deterministic per seed for any config draw.
+#[test]
+fn prop_scene_streams_valid() {
+    check(0x5CE4E, 8, |rng| {
+        let mut cfg = SceneConfig::test64();
+        cfg.shapes = 1 + rng.below(5) as usize;
+        cfg.signal_rate = rng.range_f64(2e4, 4e5);
+        cfg.noise_rate = rng.range_f64(0.0, 5e4);
+        let seed = rng.next_u64();
+        let mut scene = cfg.clone().build(seed);
+        let n = 4_000 + rng.below(10_000) as usize;
+        let evs = scene.generate(n);
+        assert_eq!(evs.len(), n);
+        stream::validate(&evs, cfg.res).unwrap();
+        let mut scene2 = cfg.build(seed);
+        assert_eq!(scene2.generate(n), evs, "not deterministic");
+    });
+}
+
+/// PROPERTY: the alpha-power timing model is internally consistent for any
+/// voltage in range: pipelined < unpipelined < conventional-per-event,
+/// and throughput * latency == 1.
+#[test]
+fn prop_timing_model_consistency() {
+    check(0x71E, 30, |rng| {
+        let v = rng.range_f64(0.6, 1.2);
+        let t = nmc_tos::nmc::timing::TimingModel::at(v);
+        let piped = t.patch_latency_pipelined_ns(calib::PATCH);
+        let unpiped = t.patch_latency_unpipelined_ns(calib::PATCH);
+        let conv = nmc_tos::conventional::ConventionalModel::at(v).event_latency_ns(49);
+        assert!(piped < unpiped && unpiped < conv, "{piped} {unpiped} {conv} @ {v}");
+        let rate = t.max_event_rate();
+        assert!((rate * piped * 1e-9 - 1.0).abs() < 1e-9);
+    });
+}

@@ -1,0 +1,198 @@
+//! Integration tests over the PJRT runtime: load the AOT artifacts, run
+//! the Harris graph, and cross-check numerics against an independent Rust
+//! implementation of the same operator.
+//!
+//! Requires `make artifacts` (skipped gracefully otherwise — CI runs
+//! `make test` which builds them first).
+
+use nmc_tos::events::Resolution;
+use nmc_tos::runtime::{default_artifact_dir, HarrisEngine, Manifest};
+use nmc_tos::tos::{TosConfig, TosSurface};
+use nmc_tos::util::rng::Rng;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    let dir = default_artifact_dir();
+    if !dir.join("meta.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(&dir).expect("manifest parses"))
+}
+
+/// Independent golden Harris (plain Rust, same math as python ref.py):
+/// pad-by-4 + two valid separable 5x5 stencils + min-max normalize.
+fn harris_golden(frame: &[f32], h: usize, w: usize) -> Vec<f32> {
+    let smooth = [1.0f64 / 16.0, 4.0 / 16.0, 6.0 / 16.0, 4.0 / 16.0, 1.0 / 16.0];
+    let deriv = [-1.0f64 / 6.0, -2.0 / 6.0, 0.0, 2.0 / 6.0, 1.0 / 6.0];
+    let gauss = smooth; // same binomial taps, normalized
+    let ph = h + 8;
+    let pw = w + 8;
+    let mut img = vec![0.0f64; ph * pw];
+    for y in 0..h {
+        for x in 0..w {
+            img[(y + 4) * pw + (x + 4)] = frame[y * w + x] as f64 / 255.0;
+        }
+    }
+    let conv_valid = |src: &[f32], sh: usize, sw: usize, kr: &[f64; 5], kc: &[f64; 5]| -> Vec<f32> {
+        // rows then cols, f32 accumulation to mirror the XLA kernel
+        let oh = sh - 4;
+        let mut tmp = vec![0.0f32; oh * sw];
+        for y in 0..oh {
+            for x in 0..sw {
+                let mut s = 0.0f32;
+                for (k, &t) in kr.iter().enumerate() {
+                    s += t as f32 * src[(y + k) * sw + x];
+                }
+                tmp[y * sw + x] = s;
+            }
+        }
+        let ow = sw - 4;
+        let mut out = vec![0.0f32; oh * ow];
+        for y in 0..oh {
+            for x in 0..ow {
+                let mut s = 0.0f32;
+                for (k, &t) in kc.iter().enumerate() {
+                    s += t as f32 * tmp[y * sw + x + k];
+                }
+                out[y * ow + x] = s;
+            }
+        }
+        out
+    };
+    let img32: Vec<f32> = img.iter().map(|&v| v as f32).collect();
+    let ix = conv_valid(&img32, ph, pw, &smooth, &deriv);
+    let iy = conv_valid(&img32, ph, pw, &deriv, &smooth);
+    let gh = ph - 4;
+    let gw = pw - 4;
+    let mul = |a: &[f32], b: &[f32]| -> Vec<f32> { a.iter().zip(b).map(|(x, y)| x * y).collect() };
+    let sxx = conv_valid(&mul(&ix, &ix), gh, gw, &gauss, &gauss);
+    let syy = conv_valid(&mul(&iy, &iy), gh, gw, &gauss, &gauss);
+    let sxy = conv_valid(&mul(&ix, &iy), gh, gw, &gauss, &gauss);
+    let mut r = vec![0.0f32; h * w];
+    for i in 0..h * w {
+        let det = sxx[i] * syy[i] - sxy[i] * sxy[i];
+        let tr = sxx[i] + syy[i];
+        r[i] = det - 0.04 * tr * tr;
+    }
+    let lo = r.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = r.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if hi > lo {
+        for v in &mut r {
+            *v = (*v - lo) / (hi - lo);
+        }
+    } else {
+        r.fill(0.0);
+    }
+    r
+}
+
+#[test]
+fn engine_loads_and_reports_shape() {
+    let Some(m) = manifest_or_skip() else { return };
+    let engine = HarrisEngine::load(&m, "test64").unwrap();
+    assert_eq!((engine.height, engine.width), (64, 64));
+    assert_eq!(engine.platform(), "cpu");
+}
+
+#[test]
+fn engine_numerics_match_independent_golden() {
+    let Some(m) = manifest_or_skip() else { return };
+    let mut engine = HarrisEngine::load(&m, "test64").unwrap();
+    let mut rng = Rng::seed_from(11);
+    for case in 0..3 {
+        // TOS-like frame: sparse blocks of 225..255
+        let mut frame = vec![0.0f32; 64 * 64];
+        for _ in 0..6 {
+            let cx = rng.below(64) as usize;
+            let cy = rng.below(64) as usize;
+            let v = 225 + rng.below(31) as usize;
+            for y in cy.saturating_sub(3)..(cy + 4).min(64) {
+                for x in cx.saturating_sub(3)..(cx + 4).min(64) {
+                    frame[y * 64 + x] = v as f32;
+                }
+            }
+        }
+        let got = engine.compute(&frame).unwrap();
+        let want = harris_golden(&frame, 64, 64);
+        let max_diff = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 2e-2, "case {case}: max diff {max_diff}");
+        // the engine's peak must be a near-peak of the golden map too
+        // (exact argmax can swap between near-ties under f32 reordering)
+        let am = |v: &[f32]| {
+            v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+        };
+        let got_peak_in_want = want[am(&got)];
+        let want_peak = want[am(&want)];
+        assert!(
+            (want_peak - got_peak_in_want).abs() < 3e-2,
+            "case {case}: engine peak is not a golden near-peak ({got_peak_in_want} vs {want_peak})"
+        );
+    }
+    assert_eq!(engine.executions, 3);
+}
+
+#[test]
+fn engine_flat_frame_yields_zero_lut() {
+    let Some(m) = manifest_or_skip() else { return };
+    let mut engine = HarrisEngine::load(&m, "test64").unwrap();
+    let lut = engine.compute(&vec![0.0f32; 64 * 64]).unwrap();
+    assert!(lut.iter().all(|&v| v.abs() < 1e-6));
+}
+
+#[test]
+fn engine_rejects_wrong_size() {
+    let Some(m) = manifest_or_skip() else { return };
+    let mut engine = HarrisEngine::load(&m, "test64").unwrap();
+    assert!(engine.compute(&vec![0.0f32; 100]).is_err());
+}
+
+#[test]
+fn engine_highlights_tos_corners() {
+    // Feed a real TOS (from the golden surface) and check the LUT peaks
+    // near the TOS structure corners.
+    let Some(m) = manifest_or_skip() else { return };
+    let mut engine = HarrisEngine::load(&m, "test64").unwrap();
+    let mut surf = TosSurface::new(Resolution::TEST64, TosConfig::default());
+    // draw an L: two strokes of events meeting at (32, 32)
+    let mut t = 0u64;
+    for i in 0..16u16 {
+        surf.update(&nmc_tos::events::Event::on(32 - i, 32, t));
+        t += 1;
+        surf.update(&nmc_tos::events::Event::on(32, 32 - i, t));
+        t += 1;
+    }
+    let lut = engine.compute_u8(surf.data()).unwrap();
+    let (mut best, mut bx, mut by) = (0.0f32, 0usize, 0usize);
+    for y in 0..64 {
+        for x in 0..64 {
+            if lut[y * 64 + x] > best {
+                best = lut[y * 64 + x];
+                bx = x;
+                by = y;
+            }
+        }
+    }
+    let d = (bx as i32 - 32).abs() + (by as i32 - 32).abs();
+    assert!(d <= 6, "LUT peak at ({bx},{by}) not near the L-corner (32,32)");
+}
+
+#[test]
+fn davis240_engine_full_resolution() {
+    let Some(m) = manifest_or_skip() else { return };
+    let mut engine = HarrisEngine::load(&m, "davis240").unwrap();
+    assert_eq!((engine.height, engine.width), (180, 240));
+    let mut frame = vec![0.0f32; 180 * 240];
+    for y in 60..100 {
+        for x in 100..160 {
+            frame[y * 240 + x] = 255.0;
+        }
+    }
+    let lut = engine.compute(&frame).unwrap();
+    assert_eq!(lut.len(), 180 * 240);
+    let hi = lut.iter().cloned().fold(0.0f32, f32::max);
+    assert!((hi - 1.0).abs() < 1e-5, "normalized max {hi}");
+}
