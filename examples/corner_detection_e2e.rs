@@ -43,8 +43,8 @@ fn main() -> anyhow::Result<()> {
             "NMC-TOS",
             auc,
             t0.elapsed().as_secs_f64(),
-            report.nmc.busy_ns / 1e6,
-            report.nmc.energy_pj / 1e6,
+            report.backend.busy_ns / 1e6,
+            report.backend.energy_pj / 1e6,
         );
 
         // --- baselines (per-event scorers on the raw stream) -------------

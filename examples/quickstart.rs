@@ -26,8 +26,8 @@ fn main() -> anyhow::Result<()> {
     println!("corners tagged      : {}", report.corners.len());
     println!("Harris LUT refreshes: {}", report.lut_refreshes);
     println!("DVFS switches       : {}", report.dvfs_switches);
-    println!("NMC busy (simulated): {:.2} ms", report.nmc.busy_ns / 1e6);
-    println!("NMC energy          : {:.2} µJ", report.nmc.energy_pj / 1e6);
+    println!("busy (simulated)    : {:.2} ms", report.backend.busy_ns / 1e6);
+    println!("energy (simulated)  : {:.2} µJ", report.backend.energy_pj / 1e6);
 
     // 4. quality against ground truth
     let auc = PrCurve::from_scores(&report.scored_events(&gt, 3.5), 101).auc();

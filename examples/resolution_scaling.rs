@@ -59,7 +59,7 @@ fn main() {
     // Simulated sanity check: events spread over an HD sensor exercise all
     // 44 blocks and the clipped-patch accounting still balances.
     println!("\n=== HD720 smoke run (400k events over 44 blocks) ===");
-    let mut mac = NmcMacro::new(Resolution::HD720, NmcConfig::default());
+    let mut mac = NmcMacro::new(Resolution::HD720, NmcConfig::default()).expect("valid default config");
     let mut rng = Rng::seed_from(9);
     let t0 = std::time::Instant::now();
     for i in 0..400_000u64 {

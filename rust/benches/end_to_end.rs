@@ -41,7 +41,7 @@ fn main() {
     // engine-less variant isolates the simulator cost from PJRT
     let mut cfg = PipelineConfig::davis240();
     cfg.lut_refresh_events = usize::MAX;
-    let mut pipe = Pipeline::new_without_engine(cfg);
+    let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
     let (med, mean) = common::measure(1, 5, || {
         let r = pipe.run(&events).unwrap();
         std::hint::black_box(r.events_signal);

@@ -38,7 +38,7 @@ fn main() {
             seed: 3,
             ..NmcConfig::default()
         };
-        let mut mac = NmcMacro::new(res, cfg);
+        let mut mac = NmcMacro::new(res, cfg).unwrap();
         let (med, mean) = common::measure(2, 10, || {
             mac.process_batch(&evs);
         });
@@ -46,7 +46,7 @@ fn main() {
     }
 
     // DVFS voltage retarget cost (happens per switch, not per event)
-    let mut mac = NmcMacro::new(res, NmcConfig::default());
+    let mut mac = NmcMacro::new(res, NmcConfig::default()).unwrap();
     let (med, mean) = common::measure(10, 50, || {
         for mv in [600u32, 800, 1000, 1200] {
             mac.set_vdd(mv as f64 / 1000.0);

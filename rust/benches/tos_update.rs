@@ -1,11 +1,12 @@
 //! Bench: golden TOS update throughput (the software model of the paper's
-//! hot path) across patch sizes and resolutions. This is the simulator's
-//! own hot loop — EXPERIMENTS.md §Perf tracks it.
+//! hot path) across patch sizes and resolutions, plus the sharded parallel
+//! software backend against the single-threaded golden model. This is the
+//! simulator's own hot loop — EXPERIMENTS.md §Perf tracks it.
 
 mod common;
 
 use nmc_tos::events::{Event, Resolution};
-use nmc_tos::tos::{TosConfig, TosSurface};
+use nmc_tos::tos::{ShardedTos, TosConfig, TosSurface};
 use nmc_tos::util::rng::Rng;
 
 fn events(res: Resolution, n: usize, seed: u64) -> Vec<Event> {
@@ -27,7 +28,7 @@ fn main() {
         for patch in [5u16, 7, 9] {
             let evs = events(res, 100_000, 1);
             let cfg = TosConfig { patch, threshold: 225 };
-            let mut surf = TosSurface::new(res, cfg);
+            let mut surf = TosSurface::new(res, cfg).unwrap();
             let (med, mean) = common::measure(2, 10, || {
                 surf.update_batch(&evs);
             });
@@ -39,4 +40,46 @@ fn main() {
             );
         }
     }
+
+    // The acceptance stream of the sharded backend: 200k events over a
+    // DAVIS240 plane, batched through the row-band workers.
+    println!("\n== bench: sharded vs golden (200k-event DAVIS240 stream) ==");
+    for (label, res) in [("davis240", Resolution::DAVIS240), ("hd720", Resolution::HD720)] {
+        let cfg = TosConfig::default();
+        let evs = events(res, 200_000, 3);
+        let mut golden = TosSurface::new(res, cfg).unwrap();
+        let (golden_med, golden_mean) = common::measure(2, 10, || {
+            golden.update_batch(&evs);
+        });
+        common::report(
+            &format!("tos_update/{label}/golden/200k_events"),
+            golden_med,
+            golden_mean,
+            evs.len() as f64,
+        );
+        for shards in [2usize, 4, 8] {
+            let mut sharded = ShardedTos::new(res, cfg, shards).unwrap();
+            let (med, mean) = common::measure(2, 10, || {
+                sharded.process_batch(&evs);
+            });
+            common::report(
+                &format!("tos_update/{label}/sharded{shards}/200k_events"),
+                med,
+                mean,
+                evs.len() as f64,
+            );
+            println!("    -> {:.2}x vs golden", golden_med / med);
+        }
+    }
+
+    // bit-exactness spot check on the exact bench stream (the full sweep
+    // lives in rust/tests/properties.rs)
+    let cfg = TosConfig::default();
+    let evs = events(Resolution::DAVIS240, 200_000, 3);
+    let mut a = TosSurface::new(Resolution::DAVIS240, cfg).unwrap();
+    a.update_batch(&evs);
+    let mut b = ShardedTos::new(Resolution::DAVIS240, cfg, 4).unwrap();
+    b.process_batch(&evs);
+    assert_eq!(a.data(), b.data(), "sharded output diverged from golden");
+    println!("\nsharded output bit-exact vs golden on the 200k stream: OK");
 }

@@ -5,12 +5,11 @@
 //! (392 ns per 7x7 patch => 2.6 Meps).  Functionally identical to the
 //! golden TOS; only the cost model differs from [`crate::nmc`].
 
-
-
 use crate::events::{Event, Resolution};
 use crate::nmc::calib;
 use crate::nmc::energy::ConventionalEnergy;
-use crate::tos::{TosConfig, TosSurface};
+use crate::tos::backend::{BackendStats, TosBackend};
+use crate::tos::{TosConfig, TosConfigError, TosSurface};
 
 /// Cost/latency model of the conventional implementation at a voltage.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -53,51 +52,44 @@ impl ConventionalModel {
     }
 }
 
-/// Telemetry of the conventional baseline.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
-pub struct ConvStats {
-    /// Events processed.
-    pub events: u64,
-    /// Total busy time (ns).
-    pub busy_ns: f64,
-    /// Total dynamic energy (pJ).
-    pub energy_pj: f64,
-}
-
 /// The conventional baseline engine: golden TOS + digital cost model.
+///
+/// Event/pixel counters live in the inner surface (one source of truth);
+/// this struct only accumulates what the cost model adds on top.
 #[derive(Debug)]
 pub struct ConventionalTos {
     surface: TosSurface,
     model: ConventionalModel,
-    stats: ConvStats,
+    busy_ns: f64,
+    energy_pj: f64,
 }
 
 impl ConventionalTos {
     /// Build at a resolution / TOS config / voltage.
-    pub fn new(res: Resolution, tos: TosConfig, vdd: f64) -> Self {
-        Self {
-            surface: TosSurface::new(res, tos),
+    pub fn new(res: Resolution, tos: TosConfig, vdd: f64) -> Result<Self, TosConfigError> {
+        Ok(Self {
+            surface: TosSurface::new(res, tos)?,
             model: ConventionalModel::at(vdd),
-            stats: ConvStats::default(),
-        }
+            busy_ns: 0.0,
+            energy_pj: 0.0,
+        })
     }
 
     /// Process one event, returning its latency in ns.
     pub fn process(&mut self, ev: &Event) -> f64 {
         let cfg = self.surface.config();
-        let half = cfg.half();
-        let res = self.surface.resolution();
-        let w = ((ev.x as i32 + half).min(res.width as i32 - 1) - (ev.x as i32 - half).max(0) + 1)
-            as usize;
-        let h = ((ev.y as i32 + half).min(res.height as i32 - 1) - (ev.y as i32 - half).max(0) + 1)
-            as usize;
-        self.surface.update(ev);
-        let lat = self.model.event_latency_ns(w * h);
+        let pixels = self.surface.update(ev);
+        let lat = self.model.event_latency_ns(pixels);
         let full = (cfg.patch as usize).pow(2);
-        self.stats.events += 1;
-        self.stats.busy_ns += lat;
-        self.stats.energy_pj += self.model.energy.patch_pj * (w * h) as f64 / full as f64;
+        self.busy_ns += lat;
+        self.energy_pj += self.model.energy.patch_pj * pixels as f64 / full as f64;
         lat
+    }
+
+    /// Retarget the supply voltage (DVFS transition): clock and energy
+    /// scale together, exactly as for the NMC macro.
+    pub fn set_vdd(&mut self, vdd: f64) {
+        self.model = ConventionalModel::at(vdd);
     }
 
     /// Underlying surface (identical semantics to the golden model).
@@ -110,9 +102,46 @@ impl ConventionalTos {
         self.model
     }
 
-    /// Telemetry.
-    pub fn stats(&self) -> ConvStats {
-        self.stats
+    /// Telemetry: unified [`BackendStats`] — event/pixel counters come
+    /// from the inner surface, cost totals from the model.
+    pub fn stats(&self) -> BackendStats {
+        BackendStats {
+            busy_ns: self.busy_ns,
+            energy_pj: self.energy_pj,
+            ..TosBackend::stats(&self.surface)
+        }
+    }
+}
+
+impl TosBackend for ConventionalTos {
+    fn name(&self) -> &'static str {
+        "conventional-tos"
+    }
+
+    fn resolution(&self) -> Resolution {
+        self.surface.resolution()
+    }
+
+    fn process(&mut self, ev: &Event) {
+        ConventionalTos::process(self, ev);
+    }
+
+    fn snapshot_u8(&self) -> Vec<u8> {
+        self.surface.data().to_vec()
+    }
+
+    fn set_vdd(&mut self, vdd: f64) {
+        ConventionalTos::set_vdd(self, vdd);
+    }
+
+    fn stats(&self) -> BackendStats {
+        ConventionalTos::stats(self)
+    }
+
+    fn reset(&mut self) {
+        self.surface.clear();
+        self.busy_ns = 0.0;
+        self.energy_pj = 0.0;
     }
 }
 
@@ -140,8 +169,8 @@ mod tests {
     #[test]
     fn functional_equivalence_with_golden() {
         let res = Resolution::TEST64;
-        let mut conv = ConventionalTos::new(res, TosConfig::default(), 1.2);
-        let mut golden = TosSurface::new(res, TosConfig::default());
+        let mut conv = ConventionalTos::new(res, TosConfig::default(), 1.2).unwrap();
+        let mut golden = TosSurface::new(res, TosConfig::default()).unwrap();
         for i in 0..1000u64 {
             let e = Event::on((i * 23 % 64) as u16, (i * 41 % 64) as u16, i);
             conv.process(&e);
@@ -152,10 +181,22 @@ mod tests {
 
     #[test]
     fn clipped_patches_cost_less() {
-        let mut conv = ConventionalTos::new(Resolution::TEST64, TosConfig::default(), 1.2);
+        let mut conv =
+            ConventionalTos::new(Resolution::TEST64, TosConfig::default(), 1.2).unwrap();
         let full = conv.process(&Event::on(32, 32, 0));
         let corner = conv.process(&Event::on(0, 0, 1));
         assert!(corner < full);
+        assert_eq!(conv.stats().pixels, 49 + 16);
+    }
+
+    #[test]
+    fn dvfs_retarget_scales_latency() {
+        let mut conv =
+            ConventionalTos::new(Resolution::TEST64, TosConfig::default(), 1.2).unwrap();
+        let hi = conv.process(&Event::on(30, 30, 0));
+        conv.set_vdd(0.6);
+        let lo = conv.process(&Event::on(30, 30, 1));
+        assert!((lo / hi - calib::delay_factor(0.6)).abs() < 1e-9);
     }
 
     #[test]

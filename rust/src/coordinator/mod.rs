@@ -1,5 +1,13 @@
-//! The system coordinator: wires STCF -> NMC-TOS -> DVFS -> FBF Harris ->
-//! corner tagging into the full pipeline of paper Fig. 2.
+//! The system coordinator: wires STCF -> TOS backend -> DVFS -> FBF Harris
+//! -> corner tagging into the full pipeline of paper Fig. 2.
+//!
+//! [`Pipeline`] is generic over the TOS backend (`B:`
+//! [`TosBackend`]) and the per-event detector (`D:` [`EventScorer`]), so
+//! every cross-implementation experiment of the paper — NM-TOS macro vs.
+//! conventional digital datapath vs. pure software (Figs. 1, 9, 10) and
+//! luvHarris-LUT vs. eHarris/eFAST/ARC* (Sec. II-B) — runs through one
+//! code path. [`Pipeline::from_config`] builds any backend x detector
+//! combination chosen at runtime (the CLI's `--backend` / `--detector`).
 //!
 //! Two execution modes:
 //!
@@ -11,22 +19,116 @@
 //!   luvHarris decoupling: the event path never blocks on the frame path;
 //!   snapshots are dropped (not queued) when the worker is busy.
 //!
-//! Python never appears on either path — the Harris graph was AOT-lowered
-//! at build time and runs through the PJRT CPU client.
+//! SAE-based detectors don't consume LUTs, so for them the FBF stage (and
+//! the PJRT engine) is skipped entirely. Python never appears on any path
+//! — the Harris graph was AOT-lowered at build time and runs through the
+//! PJRT CPU client.
 
 use std::path::PathBuf;
+use std::str::FromStr;
 use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::conventional::ConventionalTos;
+use crate::detectors::arc::Arc as ArcDetector;
+use crate::detectors::eharris::EHarris;
+use crate::detectors::fast::EFast;
 use crate::detectors::harris::HarrisDetector;
+use crate::detectors::EventScorer;
 use crate::dvfs::{DvfsConfig, DvfsController};
 use crate::events::{Event, Resolution};
-use crate::nmc::{NmcConfig, NmcMacro, NmcStats};
+use crate::nmc::{NmcConfig, NmcMacro};
 use crate::runtime::{default_artifact_dir, HarrisEngine, Manifest};
 use crate::stcf::{Stcf, StcfConfig};
-use crate::tos::TosConfig;
+use crate::tos::{BackendStats, ShardedTos, TosBackend, TosConfig, TosSurface};
+
+/// Which TOS implementation the pipeline drives (`--backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The paper's near-memory macro (phase-level timing/energy/BER model).
+    Nmc,
+    /// Conventional digital datapath baseline (golden surface + cost model).
+    Conventional,
+    /// Golden single-threaded software model (no cost model).
+    Golden,
+    /// Row-band sharded parallel software model.
+    Sharded,
+}
+
+impl BackendKind {
+    /// All variants, in CLI order.
+    pub const ALL: [BackendKind; 4] =
+        [BackendKind::Nmc, BackendKind::Conventional, BackendKind::Golden, BackendKind::Sharded];
+
+    /// CLI spelling.
+    pub fn label(self) -> &'static str {
+        match self {
+            BackendKind::Nmc => "nmc",
+            BackendKind::Conventional => "conventional",
+            BackendKind::Golden => "golden",
+            BackendKind::Sharded => "sharded",
+        }
+    }
+}
+
+impl FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "nmc" => Ok(BackendKind::Nmc),
+            "conventional" | "conv" => Ok(BackendKind::Conventional),
+            "golden" => Ok(BackendKind::Golden),
+            "sharded" => Ok(BackendKind::Sharded),
+            other => anyhow::bail!("unknown backend `{other}` (nmc|conventional|golden|sharded)"),
+        }
+    }
+}
+
+/// Which per-event corner detector scores events (`--detector`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DetectorKind {
+    /// luvHarris-style LUT lookup (needs the FBF Harris engine).
+    Harris,
+    /// Vasco et al. per-event full Harris on a binary surface.
+    EHarris,
+    /// Mueggler et al. eFAST segment test on the SAE.
+    Fast,
+    /// Alzugaray & Chli ARC* arc-angle test on the SAE.
+    Arc,
+}
+
+impl DetectorKind {
+    /// All variants, in CLI order.
+    pub const ALL: [DetectorKind; 4] =
+        [DetectorKind::Harris, DetectorKind::EHarris, DetectorKind::Fast, DetectorKind::Arc];
+
+    /// CLI spelling.
+    pub fn label(self) -> &'static str {
+        match self {
+            DetectorKind::Harris => "harris",
+            DetectorKind::EHarris => "eharris",
+            DetectorKind::Fast => "fast",
+            DetectorKind::Arc => "arc",
+        }
+    }
+}
+
+impl FromStr for DetectorKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "harris" | "luvharris" => Ok(DetectorKind::Harris),
+            "eharris" => Ok(DetectorKind::EHarris),
+            "fast" | "efast" => Ok(DetectorKind::Fast),
+            "arc" => Ok(DetectorKind::Arc),
+            other => anyhow::bail!("unknown detector `{other}` (harris|eharris|fast|arc)"),
+        }
+    }
+}
 
 /// Pipeline configuration.
 #[derive(Debug, Clone)]
@@ -39,6 +141,12 @@ pub struct PipelineConfig {
     pub artifact_dir: Option<PathBuf>,
     /// TOS algorithm parameters.
     pub tos: TosConfig,
+    /// TOS backend built by [`Pipeline::from_config`].
+    pub backend: BackendKind,
+    /// Detector built by [`Pipeline::from_config`].
+    pub detector: DetectorKind,
+    /// Worker shards for the sharded software backend.
+    pub shards: usize,
     /// Use the pipelined NMC schedule.
     pub pipelined: bool,
     /// Inject Monte-Carlo read errors (BER tracks the DVFS voltage).
@@ -67,6 +175,9 @@ impl PipelineConfig {
             artifact: "davis240".into(),
             artifact_dir: None,
             tos: TosConfig::default(),
+            backend: BackendKind::Nmc,
+            detector: DetectorKind::Harris,
+            shards: 4,
             pipelined: true,
             inject_errors: false,
             seed: 0,
@@ -92,6 +203,10 @@ impl PipelineConfig {
 /// Everything a run produces.
 #[derive(Debug, Clone)]
 pub struct RunReport {
+    /// TOS backend that ran ([`TosBackend::name`]).
+    pub backend_name: &'static str,
+    /// Detector that scored events ([`EventScorer::name`]).
+    pub detector_name: &'static str,
     /// Events fed in.
     pub events_in: usize,
     /// Events surviving STCF.
@@ -102,8 +217,8 @@ pub struct RunReport {
     pub scores: Vec<f64>,
     /// Indices (into `signal_events`) tagged as corners.
     pub corners: Vec<usize>,
-    /// NMC macro telemetry (latency/energy totals, bit flips).
-    pub nmc: NmcStats,
+    /// Unified backend telemetry (latency/energy totals, bit flips).
+    pub backend: BackendStats,
     /// Voltage switches performed by DVFS.
     pub dvfs_switches: u64,
     /// Harris LUT refreshes that completed.
@@ -112,7 +227,7 @@ pub struct RunReport {
     pub wall_s: f64,
     /// Final TOS snapshot (for rendering).
     pub final_tos: Vec<u8>,
-    /// Final LUT snapshot.
+    /// Final LUT snapshot (empty for non-LUT detectors).
     pub final_lut: Vec<f32>,
 }
 
@@ -128,63 +243,158 @@ impl RunReport {
     }
 }
 
-/// The assembled pipeline.
-pub struct Pipeline {
+/// The assembled pipeline, generic over backend x detector.
+pub struct Pipeline<B: TosBackend = NmcMacro, D: EventScorer = HarrisDetector> {
     cfg: PipelineConfig,
     engine: Option<HarrisEngine>,
-    nmc: NmcMacro,
+    backend: B,
     stcf: Option<Stcf>,
     dvfs: Option<DvfsController>,
-    detector: HarrisDetector,
+    detector: D,
     /// Reused frame buffer for the FBF path (no per-refresh allocation).
     frame: Vec<f32>,
 }
 
-impl std::fmt::Debug for Pipeline {
+/// A pipeline whose backend and detector were chosen at runtime.
+pub type DynPipeline = Pipeline<Box<dyn TosBackend>, Box<dyn EventScorer>>;
+
+/// Upper bound on events buffered before a forced backend flush.
+///
+/// The run loops hand the backend *batches* of signal events instead of
+/// one event at a time: nothing observes the surface between snapshot
+/// points (LUT refresh / DVFS retarget / final report), so deferring the
+/// updates to those boundaries is behavior-preserving while letting
+/// batch-optimized backends ([`ShardedTos`]) run their parallel path.
+const BACKEND_BATCH_MAX: usize = 4096;
+
+impl<B: TosBackend, D: EventScorer> std::fmt::Debug for Pipeline<B, D> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Pipeline").field("cfg", &self.cfg).finish()
+        f.debug_struct("Pipeline")
+            .field("cfg", &self.cfg)
+            .field("backend", &self.backend.name())
+            .field("detector", &self.detector.name())
+            .finish()
     }
 }
 
-impl Pipeline {
-    /// Build the pipeline: load + compile the AOT Harris artifact, size
-    /// the NMC macro, STCF and DVFS.
+/// Load and shape-check the AOT Harris engine for a config.
+pub fn load_engine(cfg: &PipelineConfig) -> Result<HarrisEngine> {
+    let dir = cfg.artifact_dir.clone().unwrap_or_else(default_artifact_dir);
+    let manifest = Manifest::load(&dir)?;
+    let engine = HarrisEngine::load(&manifest, &cfg.artifact)?;
+    anyhow::ensure!(
+        engine.height == cfg.res.height as usize && engine.width == cfg.res.width as usize,
+        "artifact {}x{} does not match sensor {}x{}",
+        engine.height,
+        engine.width,
+        cfg.res.height,
+        cfg.res.width
+    );
+    Ok(engine)
+}
+
+/// The NMC macro configuration a pipeline config implies.
+fn nmc_config(cfg: &PipelineConfig) -> NmcConfig {
+    NmcConfig {
+        tos: cfg.tos,
+        pipelined: cfg.pipelined,
+        vdd: cfg.fixed_vdd,
+        inject_errors: cfg.inject_errors,
+        seed: cfg.seed,
+    }
+}
+
+/// Flush buffered signal events into the backend (batch path).
+#[inline]
+fn flush_pending<B: TosBackend>(backend: &mut B, pending: &mut Vec<Event>) {
+    if !pending.is_empty() {
+        backend.process_batch(pending);
+        pending.clear();
+    }
+}
+
+/// Build the backend a config asks for (`cfg.backend`).
+pub fn make_backend(cfg: &PipelineConfig) -> Result<Box<dyn TosBackend>> {
+    Ok(match cfg.backend {
+        BackendKind::Nmc => Box::new(NmcMacro::new(cfg.res, nmc_config(cfg))?),
+        BackendKind::Conventional => {
+            Box::new(ConventionalTos::new(cfg.res, cfg.tos, cfg.fixed_vdd)?)
+        }
+        BackendKind::Golden => Box::new(TosSurface::new(cfg.res, cfg.tos)?),
+        BackendKind::Sharded => Box::new(ShardedTos::new(cfg.res, cfg.tos, cfg.shards)?),
+    })
+}
+
+/// Build the detector a config asks for (`cfg.detector`).
+pub fn make_detector(res: Resolution, kind: DetectorKind) -> Box<dyn EventScorer> {
+    match kind {
+        DetectorKind::Harris => Box::new(HarrisDetector::new(res)),
+        DetectorKind::EHarris => Box::new(EHarris::new(res)),
+        DetectorKind::Fast => Box::new(EFast::new(res)),
+        DetectorKind::Arc => Box::new(ArcDetector::new(res)),
+    }
+}
+
+impl Pipeline<NmcMacro, HarrisDetector> {
+    /// Build the paper's default pipeline (NMC macro + luvHarris LUT
+    /// detector) with the AOT Harris engine loaded and compiled.
     pub fn new(cfg: PipelineConfig) -> Result<Pipeline> {
-        let dir = cfg.artifact_dir.clone().unwrap_or_else(default_artifact_dir);
-        let manifest = Manifest::load(&dir)?;
-        let engine = HarrisEngine::load(&manifest, &cfg.artifact)?;
+        let engine = load_engine(&cfg)?;
+        Self::new_with_engine(cfg, Some(engine))
+    }
+
+    /// Build the default pipeline without a PJRT engine (LUT stays zero
+    /// unless refreshed externally) — used by timing/energy-only
+    /// experiments and tests that don't need corner scores.
+    pub fn new_without_engine(cfg: PipelineConfig) -> Result<Pipeline> {
+        Self::new_with_engine(cfg, None)
+    }
+
+    fn new_with_engine(cfg: PipelineConfig, engine: Option<HarrisEngine>) -> Result<Pipeline> {
+        let backend = NmcMacro::new(cfg.res, nmc_config(&cfg))?;
+        let detector = HarrisDetector::new(cfg.res);
+        Pipeline::with_parts(cfg, backend, detector, engine)
+    }
+
+    /// Build the backend x detector combination the config names
+    /// (`cfg.backend` / `cfg.detector`). The PJRT engine is loaded only
+    /// for LUT-consuming detectors; SAE detectors run fully headless.
+    pub fn from_config(cfg: PipelineConfig) -> Result<DynPipeline> {
+        let backend = make_backend(&cfg)?;
+        let detector = make_detector(cfg.res, cfg.detector);
+        let engine = if detector.wants_lut() { Some(load_engine(&cfg)?) } else { None };
+        DynPipeline::with_parts(cfg, backend, detector, engine)
+    }
+
+    /// Like [`Pipeline::from_config`] but never loads the PJRT engine
+    /// (LUT detectors score zero) — for engine-less tests and harnesses.
+    pub fn from_config_without_engine(cfg: PipelineConfig) -> Result<DynPipeline> {
+        let backend = make_backend(&cfg)?;
+        let detector = make_detector(cfg.res, cfg.detector);
+        DynPipeline::with_parts(cfg, backend, detector, None)
+    }
+}
+
+impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
+    /// Assemble a pipeline from explicit parts (any backend x detector).
+    pub fn with_parts(
+        cfg: PipelineConfig,
+        backend: B,
+        detector: D,
+        engine: Option<HarrisEngine>,
+    ) -> Result<Self> {
         anyhow::ensure!(
-            engine.height == cfg.res.height as usize && engine.width == cfg.res.width as usize,
-            "artifact {}x{} does not match sensor {}x{}",
-            engine.height,
-            engine.width,
-            cfg.res.height,
-            cfg.res.width
+            backend.resolution() == cfg.res,
+            "backend {}x{} does not match configured sensor {}x{}",
+            backend.resolution().width,
+            backend.resolution().height,
+            cfg.res.width,
+            cfg.res.height
         );
-        Ok(Self::with_engine(cfg, Some(engine)))
-    }
-
-    /// Build without a PJRT engine (LUT stays zero unless refreshed
-    /// externally) — used by timing/energy-only experiments and tests
-    /// that don't need corner scores.
-    pub fn new_without_engine(cfg: PipelineConfig) -> Pipeline {
-        Self::with_engine(cfg, None)
-    }
-
-    fn with_engine(cfg: PipelineConfig, engine: Option<HarrisEngine>) -> Pipeline {
-        let nmc_cfg = NmcConfig {
-            tos: cfg.tos,
-            pipelined: cfg.pipelined,
-            vdd: cfg.fixed_vdd,
-            inject_errors: cfg.inject_errors,
-            seed: cfg.seed,
-        };
-        let nmc = NmcMacro::new(cfg.res, nmc_cfg);
         let stcf = cfg.stcf.map(|c| Stcf::new(cfg.res, c));
         let dvfs = cfg.dvfs.map(DvfsController::new);
-        let detector = HarrisDetector::new(cfg.res);
         let frame = vec![0.0f32; cfg.res.pixels()];
-        Pipeline { cfg, engine, nmc, stcf, dvfs, detector, frame }
+        Ok(Pipeline { cfg, engine, backend, stcf, dvfs, detector, frame })
     }
 
     /// Pipeline configuration.
@@ -192,9 +402,23 @@ impl Pipeline {
         &self.cfg
     }
 
+    /// The TOS backend (experiments poke at cost models / voltages).
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    /// The detector.
+    pub fn detector(&self) -> &D {
+        &self.detector
+    }
+
     /// Run the pipeline over a time-sorted event stream.
     pub fn run(&mut self, events: &[Event]) -> Result<RunReport> {
-        if self.cfg.async_refresh {
+        // Async mode only applies when there is an FBF stage to decouple:
+        // a LUT-consuming detector AND an engine (engine-less pipelines
+        // stay headless — the worker must not load artifacts behind the
+        // caller's back).
+        if self.cfg.async_refresh && self.detector.wants_lut() && self.engine.is_some() {
             self.run_async(events)
         } else {
             self.run_sync(events)
@@ -207,14 +431,22 @@ impl Pipeline {
         let mut signal_events = Vec::with_capacity(events.len());
         let mut scores = Vec::with_capacity(events.len());
         let mut corners = Vec::new();
+        let mut pending: Vec<Event> = Vec::new();
         let mut since_refresh = 0usize;
         let mut dvfs_switches = 0u64;
+        let mut lut_refreshes = 0u64;
+        // without an FBF stage there is no refresh boundary — don't cap
+        // the backend batches on a no-op schedule
+        let refresh_enabled = self.engine.is_some() && self.detector.wants_lut();
+        let batching = self.backend.prefers_batching();
 
         for ev in events {
             // --- DVFS monitors the *raw* event rate (paper Fig. 2) -------
             if let Some(ctrl) = &mut self.dvfs {
                 if let Some(op) = ctrl.on_event(ev.t) {
-                    self.nmc.set_vdd(op.vdd);
+                    // settle pending updates at the old voltage first
+                    flush_pending(&mut self.backend, &mut pending);
+                    self.backend.set_vdd(op.vdd);
                     dvfs_switches += 1;
                 }
             }
@@ -224,36 +456,45 @@ impl Pipeline {
                     continue;
                 }
             }
-            // --- NMC-TOS update (the hot path) ----------------------------
-            self.nmc.process(ev);
+            // --- TOS update (the hot path): batch-parallel backends get
+            // events buffered and flushed at snapshot boundaries; per-event
+            // backends are fed directly --------------------------------------
+            if batching {
+                pending.push(*ev);
+                if pending.len() >= BACKEND_BATCH_MAX {
+                    flush_pending(&mut self.backend, &mut pending);
+                }
+            } else {
+                self.backend.process(ev);
+            }
             // --- FBF Harris refresh (inline in sync mode) -----------------
             since_refresh += 1;
-            if since_refresh >= self.cfg.lut_refresh_events {
+            if refresh_enabled && since_refresh >= self.cfg.lut_refresh_events {
                 since_refresh = 0;
-                self.refresh_lut()?;
+                flush_pending(&mut self.backend, &mut pending);
+                if self.refresh_lut()? {
+                    lut_refreshes += 1;
+                }
             }
             // --- tag ------------------------------------------------------
-            let score = self.detector.score_at(ev.x, ev.y);
+            let score = self.detector.score(ev);
             if score >= self.cfg.corner_threshold {
                 corners.push(signal_events.len());
             }
             scores.push(score);
             signal_events.push(*ev);
         }
+        flush_pending(&mut self.backend, &mut pending);
 
-        Ok(RunReport {
-            events_in: events.len(),
-            events_signal: signal_events.len(),
+        Ok(self.report(
+            events.len(),
             signal_events,
             scores,
             corners,
-            nmc: self.nmc.stats(),
             dvfs_switches,
-            lut_refreshes: self.detector.refreshes,
-            wall_s: start.elapsed().as_secs_f64(),
-            final_tos: self.nmc.snapshot_u8(),
-            final_lut: self.detector.lut().to_vec(),
-        })
+            lut_refreshes,
+            start.elapsed().as_secs_f64(),
+        ))
     }
 
     /// Asynchronous mode: the LUT worker owns its own engine and consumes
@@ -282,8 +523,10 @@ impl Pipeline {
         let mut signal_events = Vec::with_capacity(events.len());
         let mut scores = Vec::with_capacity(events.len());
         let mut corners = Vec::new();
+        let mut pending: Vec<Event> = Vec::new();
         let mut dvfs_switches = 0u64;
         let mut since_snapshot = 0usize;
+        let batching = self.backend.prefers_batching();
         // offer a snapshot at least this often (events); the worker decides
         // the actual refresh rate by how fast it drains the channel.
         let offer_every = (self.cfg.lut_refresh_events / 4).max(1);
@@ -291,7 +534,8 @@ impl Pipeline {
         for ev in events {
             if let Some(ctrl) = &mut self.dvfs {
                 if let Some(op) = ctrl.on_event(ev.t) {
-                    self.nmc.set_vdd(op.vdd);
+                    flush_pending(&mut self.backend, &mut pending);
+                    self.backend.set_vdd(op.vdd);
                     dvfs_switches += 1;
                 }
             }
@@ -300,68 +544,99 @@ impl Pipeline {
                     continue;
                 }
             }
-            self.nmc.process(ev);
+            if batching {
+                pending.push(*ev);
+                if pending.len() >= BACKEND_BATCH_MAX {
+                    flush_pending(&mut self.backend, &mut pending);
+                }
+            } else {
+                self.backend.process(ev);
+            }
 
             // non-blocking LUT pickup
             while let Ok(lut) = lut_rx.try_recv() {
-                self.detector.refresh(&lut);
+                self.detector.refresh_lut(&lut);
             }
             since_snapshot += 1;
             if since_snapshot >= offer_every {
                 since_snapshot = 0;
+                flush_pending(&mut self.backend, &mut pending);
                 // drop the snapshot if the worker is busy (luvHarris "as
                 // fast as possible" semantics, no backpressure onto events)
-                let _ = snap_tx.try_send(self.nmc.snapshot_u8());
+                let _ = snap_tx.try_send(self.backend.snapshot_u8());
             }
 
-            let score = self.detector.score_at(ev.x, ev.y);
+            let score = self.detector.score(ev);
             if score >= self.cfg.corner_threshold {
                 corners.push(signal_events.len());
             }
             scores.push(score);
             signal_events.push(*ev);
         }
+        flush_pending(&mut self.backend, &mut pending);
 
         drop(snap_tx);
         // drain remaining LUTs
         while let Ok(lut) = lut_rx.try_recv() {
-            self.detector.refresh(&lut);
+            self.detector.refresh_lut(&lut);
         }
         let worker_refreshes =
             worker.join().map_err(|_| anyhow::anyhow!("LUT worker panicked"))??;
 
-        Ok(RunReport {
-            events_in: events.len(),
-            events_signal: signal_events.len(),
+        Ok(self.report(
+            events.len(),
             signal_events,
             scores,
             corners,
-            nmc: self.nmc.stats(),
             dvfs_switches,
-            lut_refreshes: worker_refreshes,
-            wall_s: start.elapsed().as_secs_f64(),
-            final_tos: self.nmc.snapshot_u8(),
-            final_lut: self.detector.lut().to_vec(),
-        })
+            worker_refreshes,
+            start.elapsed().as_secs_f64(),
+        ))
     }
 
-    /// Inline LUT refresh (sync mode).
-    fn refresh_lut(&mut self) -> Result<()> {
+    /// Inline LUT refresh (sync mode). Returns whether a refresh ran.
+    fn refresh_lut(&mut self) -> Result<bool> {
         let Some(engine) = &mut self.engine else {
-            return Ok(()); // engine-less pipelines skip the FBF stage
+            return Ok(false); // engine-less pipelines skip the FBF stage
         };
-        let tos = self.nmc.snapshot_u8();
+        if !self.detector.wants_lut() {
+            return Ok(false);
+        }
+        let tos = self.backend.snapshot_u8();
         for (f, &v) in self.frame.iter_mut().zip(&tos) {
             *f = v as f32;
         }
         let lut = engine.compute(&self.frame).context("FBF Harris refresh")?;
-        self.detector.refresh(&lut);
-        Ok(())
+        self.detector.refresh_lut(&lut);
+        Ok(true)
     }
 
-    /// Direct access to the macro (experiments).
-    pub fn nmc(&self) -> &NmcMacro {
-        &self.nmc
+    #[allow(clippy::too_many_arguments)]
+    fn report(
+        &self,
+        events_in: usize,
+        signal_events: Vec<Event>,
+        scores: Vec<f64>,
+        corners: Vec<usize>,
+        dvfs_switches: u64,
+        lut_refreshes: u64,
+        wall_s: f64,
+    ) -> RunReport {
+        RunReport {
+            backend_name: self.backend.name(),
+            detector_name: self.detector.name(),
+            events_in,
+            events_signal: signal_events.len(),
+            signal_events,
+            scores,
+            corners,
+            backend: self.backend.stats(),
+            dvfs_switches,
+            lut_refreshes,
+            wall_s,
+            final_tos: self.backend.snapshot_u8(),
+            final_lut: self.detector.lut().map(<[f32]>::to_vec).unwrap_or_default(),
+        }
     }
 }
 
@@ -377,7 +652,7 @@ mod tests {
     fn engineless_pipeline_runs_and_filters() {
         let mut cfg = PipelineConfig::test64();
         cfg.dvfs = None;
-        let mut pipe = Pipeline::new_without_engine(cfg);
+        let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
         let mut scene = SceneConfig::test64().build(1);
         let events = scene.generate(20_000);
         let report = pipe.run(&events).unwrap();
@@ -387,21 +662,23 @@ mod tests {
         assert_eq!(report.scores.len(), report.events_signal);
         // without an engine the LUT is all zeros -> no corners tagged
         assert!(report.corners.is_empty());
-        assert!(report.nmc.events as usize == report.events_signal);
+        assert!(report.backend.events as usize == report.events_signal);
+        assert_eq!(report.backend_name, "nmc-tos");
+        assert_eq!(report.detector_name, "luvHarris-LUT");
     }
 
     #[test]
     fn dvfs_reacts_to_synthetic_stream() {
         let mut cfg = PipelineConfig::test64();
         cfg.stcf = None;
-        let mut pipe = Pipeline::new_without_engine(cfg);
+        let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
         let mut scene = SceneConfig::test64().build(2);
         let events = scene.generate(50_000);
         let report = pipe.run(&events).unwrap();
         // test64 scene rate (~124 keps) is far below 4.9 Meps -> DVFS
         // settles at 0.6 V after the first window
         assert!(report.dvfs_switches >= 1);
-        assert!((pipe.nmc().vdd() - 0.6).abs() < 1e-9);
+        assert!((pipe.backend().vdd() - 0.6).abs() < 1e-9);
     }
 
     #[test]
@@ -409,7 +686,7 @@ mod tests {
         let mut cfg = PipelineConfig::test64();
         cfg.stcf = None;
         cfg.dvfs = None;
-        let mut pipe = Pipeline::new_without_engine(cfg);
+        let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
         let mut scene = SceneConfig::test64().build(3);
         let events = scene.generate(5_000);
         let report = pipe.run(&events).unwrap();
@@ -423,22 +700,80 @@ mod tests {
         cfg.dvfs = None;
         cfg.fixed_vdd = 0.6;
         cfg.inject_errors = true;
-        let mut pipe = Pipeline::new_without_engine(cfg);
+        let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
         let mut scene = SceneConfig::test64().build(4);
         let events = scene.generate(30_000);
         let report = pipe.run(&events).unwrap();
-        assert!(report.nmc.flipped_bits > 0);
+        assert!(report.backend.flipped_bits > 0);
     }
 
     #[test]
     fn report_scored_events_alignment() {
         let mut cfg = PipelineConfig::test64();
         cfg.dvfs = None;
-        let mut pipe = Pipeline::new_without_engine(cfg);
+        let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
         let mut scene = SceneConfig::test64().build(5);
         let (events, gt) = scene.generate_with_gt(10_000);
         let report = pipe.run(&events).unwrap();
         let scored = report.scored_events(&gt, 3.0);
         assert_eq!(scored.len(), report.events_signal);
+    }
+
+    #[test]
+    fn every_backend_and_detector_combination_runs() {
+        let mut scene = SceneConfig::test64().build(9);
+        let events = scene.generate(3_000);
+        for bk in BackendKind::ALL {
+            for dk in DetectorKind::ALL {
+                let mut cfg = PipelineConfig::test64();
+                cfg.dvfs = None;
+                cfg.backend = bk;
+                cfg.detector = dk;
+                cfg.shards = 3;
+                let mut pipe = Pipeline::from_config_without_engine(cfg).unwrap();
+                let report = pipe.run(&events).unwrap();
+                assert!(report.events_signal > 0, "{bk:?}/{dk:?} dropped everything");
+                assert_eq!(report.scores.len(), report.events_signal);
+                assert_eq!(
+                    report.backend.events as usize, report.events_signal,
+                    "{bk:?}/{dk:?} backend event count"
+                );
+                assert!(!report.backend_name.is_empty());
+                assert!(!report.detector_name.is_empty(), "{dk:?} unnamed");
+            }
+        }
+    }
+
+    #[test]
+    fn all_backends_produce_identical_surfaces() {
+        let mut scene = SceneConfig::test64().build(10);
+        let events = scene.generate(8_000);
+        let mut reference: Option<Vec<u8>> = None;
+        for bk in BackendKind::ALL {
+            let mut cfg = PipelineConfig::test64();
+            cfg.dvfs = None; // pin the voltage: NMC at 1.2 V is error-free
+            cfg.backend = bk;
+            cfg.shards = 5;
+            let mut pipe = Pipeline::from_config_without_engine(cfg).unwrap();
+            let report = pipe.run(&events).unwrap();
+            match &reference {
+                None => reference = Some(report.final_tos),
+                Some(want) => {
+                    assert_eq!(want, &report.final_tos, "{bk:?} diverged from nmc surface")
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backend_and_detector_kinds_parse() {
+        for bk in BackendKind::ALL {
+            assert_eq!(bk.label().parse::<BackendKind>().unwrap(), bk);
+        }
+        for dk in DetectorKind::ALL {
+            assert_eq!(dk.label().parse::<DetectorKind>().unwrap(), dk);
+        }
+        assert!("warp-drive".parse::<BackendKind>().is_err());
+        assert!("warp-drive".parse::<DetectorKind>().is_err());
     }
 }

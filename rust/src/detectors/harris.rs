@@ -17,7 +17,8 @@ pub struct HarrisDetector {
     /// Latest Harris response map in [0,1] (row-major), all-zero until the
     /// first refresh.
     lut: Vec<f32>,
-    /// LUT refreshes seen.
+    /// LUT refreshes seen over the detector's lifetime (cumulative across
+    /// runs; `RunReport::lut_refreshes` counts per run instead).
     pub refreshes: u64,
     /// Events scored.
     pub scored: u64,
@@ -80,6 +81,18 @@ impl EventScorer for HarrisDetector {
         // of luvHarris is the *TOS update*, which is exactly the paper's
         // point.
         18.0
+    }
+
+    fn wants_lut(&self) -> bool {
+        true
+    }
+
+    fn refresh_lut(&mut self, lut: &[f32]) {
+        self.refresh(lut);
+    }
+
+    fn lut(&self) -> Option<&[f32]> {
+        Some(&self.lut)
     }
 }
 

@@ -23,6 +23,11 @@ use crate::events::Event;
 ///
 /// Binary detectors (FAST/ARC) return {0, 1}; continuous ones return the
 /// Harris response.  Higher = more corner-like.
+///
+/// The LUT-refresh hooks let the generic coordinator drive any detector:
+/// SAE-based detectors (eHarris/eFAST/ARC*) keep their own surfaces and
+/// ignore them, while the luvHarris-style LUT detector consumes the FBF
+/// Harris maps the pipeline computes from TOS snapshots.
 pub trait EventScorer {
     /// Process the event (update internal surfaces) and return its score.
     fn score(&mut self, ev: &Event) -> f64;
@@ -33,6 +38,41 @@ pub trait EventScorer {
     /// Estimated datapath operations per event (drives the Fig. 1(b)
     /// throughput model for software/digital implementations).
     fn ops_per_event(&self) -> f64;
+
+    /// Does this detector consume frame-by-frame Harris LUT refreshes?
+    /// When `false`, the coordinator skips the whole FBF/PJRT stage.
+    fn wants_lut(&self) -> bool {
+        false
+    }
+
+    /// Install a freshly computed response map (LUT detectors only).
+    fn refresh_lut(&mut self, _lut: &[f32]) {}
+
+    /// Current response map, if the detector keeps one.
+    fn lut(&self) -> Option<&[f32]> {
+        None
+    }
+}
+
+impl<T: EventScorer + ?Sized> EventScorer for Box<T> {
+    fn score(&mut self, ev: &Event) -> f64 {
+        (**self).score(ev)
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn ops_per_event(&self) -> f64 {
+        (**self).ops_per_event()
+    }
+    fn wants_lut(&self) -> bool {
+        (**self).wants_lut()
+    }
+    fn refresh_lut(&mut self, lut: &[f32]) {
+        (**self).refresh_lut(lut)
+    }
+    fn lut(&self) -> Option<&[f32]> {
+        (**self).lut()
+    }
 }
 
 /// Throughput model for a digital/software implementation executing

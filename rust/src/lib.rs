@@ -10,6 +10,13 @@
 //! Harris lookup-table detector — together with every baseline the paper
 //! compares against (conventional digital TOS, eHarris, FAST, ARC).
 //!
+//! Every TOS implementation sits behind the [`tos::TosBackend`] trait
+//! (golden software, conventional digital, NMC macro, and a row-band
+//! sharded parallel software model), and [`coordinator::Pipeline`] is
+//! generic over backend x detector, so any combination runs through the
+//! same system loop (`Pipeline::from_config`, or `--backend`/`--detector`
+//! on the CLI).
+//!
 //! Layering (see DESIGN.md):
 //! * **L3 (this crate)** — event-by-event coordination, circuit simulation,
 //!   datasets, evaluation, CLI.
@@ -48,13 +55,17 @@ pub mod tos;
 /// Convenient glob-import of the most used types.
 pub mod prelude {
     pub use crate::conventional::ConventionalTos;
-    pub use crate::coordinator::{Pipeline, PipelineConfig, RunReport};
+    pub use crate::coordinator::{
+        BackendKind, DetectorKind, DynPipeline, Pipeline, PipelineConfig, RunReport,
+    };
     pub use crate::datasets::{synthetic::SceneConfig, DatasetKind};
-    pub use crate::detectors::harris::HarrisDetector;
+    pub use crate::detectors::{harris::HarrisDetector, EventScorer};
     pub use crate::dvfs::{DvfsController, DvfsConfig};
     pub use crate::events::{Event, Polarity, Resolution};
     pub use crate::eval::{PrCurve, PrPoint};
     pub use crate::nmc::{calib, NmcMacro, NmcConfig};
     pub use crate::stcf::{Stcf, StcfConfig};
-    pub use crate::tos::{TosConfig, TosSurface};
+    pub use crate::tos::{
+        BackendStats, ShardedTos, TosBackend, TosConfig, TosConfigError, TosSurface,
+    };
 }

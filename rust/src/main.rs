@@ -9,7 +9,10 @@
 //! nmc-tos fig10                      # breakdowns + power vs rate (Fig. 10)
 //! nmc-tos ber    [--reads N]         # Monte-Carlo BER sweep (Sec. V-C)
 //! nmc-tos fig11  [--events N]        # PR curves + AUC deltas (Fig. 11)
-//! nmc-tos run    [--events N] [--async] # end-to-end demo on shapes_dof
+//! nmc-tos run    [--events N] [--async]
+//!                [--backend nmc|conventional|golden|sharded]
+//!                [--detector harris|eharris|fast|arc] [--shards N]
+//!                                    # end-to-end demo on shapes_dof
 //! nmc-tos lut                        # DVFS V/f lookup table
 //! ```
 //!
@@ -104,6 +107,8 @@ fn main() -> Result<()> {
 const HELP: &str = "nmc-tos — NMC-TOS full-system reproduction
 commands: fig1b fig8 table1 fig9 fig10 ber fig11 run lut ablate waveform gen-data
 common flags: --json PATH (dump machine-readable results)
+run flags:    --backend nmc|conventional|golden|sharded  --detector harris|eharris|fast|arc
+              --shards N  --events N  --async
 see DESIGN.md for the experiment index";
 
 // ---------------------------------------------------------------------------
@@ -398,7 +403,7 @@ fn cmd_fig11(args: &Args) -> Result<Json> {
             let auc = curve.auc();
             println!(
                 "{:<20} AUC {:.3}  (signal events {}, LUT refreshes {}, flipped bits {})",
-                label, auc, report.events_signal, report.lut_refreshes, report.nmc.flipped_bits
+                label, auc, report.events_signal, report.lut_refreshes, report.backend.flipped_bits
             );
             if render && vdd == 1.2 {
                 render_ascii(&report.final_tos, 240, 16);
@@ -443,35 +448,49 @@ fn render_ascii(tos: &[u8], width: usize, rows_shown: usize) {
     }
 }
 
-/// End-to-end demo: full pipeline (STCF + NMC + DVFS + PJRT Harris) on the
-/// shapes_dof scene, optionally with the async LUT worker.
+/// End-to-end demo: full pipeline (STCF + TOS backend + DVFS + detector)
+/// on the shapes_dof scene, optionally with the async LUT worker. The
+/// backend x detector combination is chosen with `--backend`/`--detector`;
+/// SAE detectors skip the PJRT engine entirely.
 fn cmd_run(args: &Args) -> Result<Json> {
     let n_events = args.num("events", 200_000.0) as usize;
     let mut cfg = PipelineConfig::davis240();
     cfg.async_refresh = args.flag("async");
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.parse()?;
+    }
+    if let Some(d) = args.get("detector") {
+        cfg.detector = d.parse()?;
+    }
+    cfg.shards = args.num("shards", cfg.shards as f64) as usize;
     let mut scene = SceneConfig::shapes_dof().build(args.num("seed", 42.0) as u64);
     let (events, gt) = scene.generate_with_gt(n_events);
-    let mut pipe = Pipeline::new(cfg)?;
+    let mut pipe = Pipeline::from_config(cfg)?;
     let report = pipe.run(&events)?;
     let scored = report.scored_events(&gt, 3.5);
     let auc = PrCurve::from_scores(&scored, 101).auc();
     println!("== end-to-end run (shapes_dof scene) ==");
+    println!("backend / detector   : {} / {}", report.backend_name, report.detector_name);
     println!("events in            : {}", report.events_in);
     println!("signal after STCF    : {}", report.events_signal);
     println!("corners tagged       : {}", report.corners.len());
     println!("LUT refreshes        : {}", report.lut_refreshes);
     println!("DVFS switches        : {}", report.dvfs_switches);
     println!("PR-AUC vs ground truth: {auc:.3}");
-    println!("simulated NMC busy   : {:.3} ms", report.nmc.busy_ns / 1e6);
-    println!("simulated NMC energy : {:.3} µJ", report.nmc.energy_pj / 1e6);
+    println!("simulated busy       : {:.3} ms", report.backend.busy_ns / 1e6);
+    println!("simulated energy     : {:.3} µJ", report.backend.energy_pj / 1e6);
     println!("wall time            : {:.2} s ({:.0} keps)",
         report.wall_s, report.events_in as f64 / report.wall_s / 1e3);
     Ok(Json::obj(vec![
+        ("backend", Json::Str(report.backend_name.into())),
+        ("detector", Json::Str(report.detector_name.into())),
         ("events_in", Json::Num(report.events_in as f64)),
         ("events_signal", Json::Num(report.events_signal as f64)),
         ("corners", Json::Num(report.corners.len() as f64)),
         ("lut_refreshes", Json::Num(report.lut_refreshes as f64)),
         ("auc", Json::Num(auc)),
+        ("busy_ns", Json::Num(report.backend.busy_ns)),
+        ("energy_pj", Json::Num(report.backend.energy_pj)),
         ("wall_s", Json::Num(report.wall_s)),
     ]))
 }

@@ -22,7 +22,8 @@ pub mod wr;
 
 
 use crate::events::{Event, Resolution};
-use crate::tos::TosConfig;
+use crate::tos::backend::{BackendStats, TosBackend};
+use crate::tos::{TosConfig, TosConfigError};
 
 use energy::EnergyModel;
 use montecarlo::ErrorInjector;
@@ -86,11 +87,12 @@ pub struct NmcMacro {
 }
 
 impl NmcMacro {
-    /// Build a macro covering `res`.
-    pub fn new(res: Resolution, cfg: NmcConfig) -> Self {
-        cfg.tos.validate().expect("invalid TOS config");
-        assert!(cfg.tos.threshold >= 225, "5-bit datapath requires TH >= 225");
-        Self {
+    /// Build a macro covering `res`. Fails on an invalid [`TosConfig`]
+    /// (the 5-bit datapath additionally requires `TH >= 225`) instead of
+    /// panicking, so user-supplied configs propagate as errors.
+    pub fn new(res: Resolution, cfg: NmcConfig) -> Result<Self, TosConfigError> {
+        cfg.tos.validate_nmc()?;
+        Ok(Self {
             cfg,
             array: TypeAArray::new(res),
             timing: TimingModel::at(cfg.vdd),
@@ -100,7 +102,7 @@ impl NmcMacro {
                 .then(|| ErrorInjector::new_sized(cfg.vdd, cfg.seed, res.pixels())),
             wb_table: WbTable::build(cfg.tos.threshold),
             stats: NmcStats::default(),
-        }
+        })
     }
 
     /// Current supply voltage (V).
@@ -195,6 +197,47 @@ impl NmcMacro {
     }
 }
 
+impl TosBackend for NmcMacro {
+    fn name(&self) -> &'static str {
+        "nmc-tos"
+    }
+
+    fn resolution(&self) -> Resolution {
+        NmcMacro::resolution(self)
+    }
+
+    fn process(&mut self, ev: &Event) {
+        NmcMacro::process(self, ev);
+    }
+
+    fn process_batch(&mut self, events: &[Event]) {
+        NmcMacro::process_batch(self, events)
+    }
+
+    fn snapshot_u8(&self) -> Vec<u8> {
+        NmcMacro::snapshot_u8(self)
+    }
+
+    fn set_vdd(&mut self, vdd: f64) {
+        NmcMacro::set_vdd(self, vdd)
+    }
+
+    fn stats(&self) -> BackendStats {
+        let s = NmcMacro::stats(self);
+        BackendStats {
+            events: s.events,
+            pixels: s.pixels,
+            busy_ns: s.busy_ns,
+            energy_pj: s.energy_pj,
+            flipped_bits: s.flipped_bits,
+        }
+    }
+
+    fn reset(&mut self) {
+        NmcMacro::reset(self)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,8 +246,8 @@ mod tests {
     #[test]
     fn equals_golden_model_at_nominal() {
         let res = Resolution::TEST64;
-        let mut mac = NmcMacro::new(res, NmcConfig::default());
-        let mut golden = TosSurface::new(res, TosConfig::default());
+        let mut mac = NmcMacro::new(res, NmcConfig::default()).unwrap();
+        let mut golden = TosSurface::new(res, TosConfig::default()).unwrap();
         for i in 0..3000u64 {
             let e = Event::on((i * 31 % 64) as u16, (i * 11 % 64) as u16, i);
             mac.process(&e);
@@ -215,7 +258,7 @@ mod tests {
 
     #[test]
     fn stats_accumulate() {
-        let mut mac = NmcMacro::new(Resolution::TEST64, NmcConfig::default());
+        let mut mac = NmcMacro::new(Resolution::TEST64, NmcConfig::default()).unwrap();
         mac.process(&Event::on(30, 30, 0));
         mac.process(&Event::on(0, 0, 1));
         let s = mac.stats();
@@ -226,7 +269,7 @@ mod tests {
 
     #[test]
     fn dvfs_retarget_scales_latency() {
-        let mut mac = NmcMacro::new(Resolution::TEST64, NmcConfig::default());
+        let mut mac = NmcMacro::new(Resolution::TEST64, NmcConfig::default()).unwrap();
         let hi = mac.process(&Event::on(30, 30, 0)).latency_ns;
         mac.set_vdd(0.6);
         let lo = mac.process(&Event::on(30, 30, 1)).latency_ns;
@@ -235,7 +278,7 @@ mod tests {
 
     #[test]
     fn max_rate_matches_paper_endpoints() {
-        let mut mac = NmcMacro::new(Resolution::DAVIS240, NmcConfig::default());
+        let mut mac = NmcMacro::new(Resolution::DAVIS240, NmcConfig::default()).unwrap();
         assert!((mac.max_event_rate() / 1e6 - 63.1).abs() < 0.2);
         mac.set_vdd(0.6);
         assert!((mac.max_event_rate() / 1e6 - 4.93).abs() < 0.1);
@@ -244,7 +287,7 @@ mod tests {
 
     #[test]
     fn reset_restores_initial_state() {
-        let mut mac = NmcMacro::new(Resolution::TEST64, NmcConfig::default());
+        let mut mac = NmcMacro::new(Resolution::TEST64, NmcConfig::default()).unwrap();
         mac.process(&Event::on(5, 5, 0));
         mac.reset();
         assert_eq!(mac.stats().events, 0);
@@ -252,9 +295,11 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "TH >= 225")]
-    fn rejects_low_threshold() {
+    fn rejects_low_threshold_as_error() {
         let cfg = NmcConfig { tos: TosConfig { patch: 7, threshold: 200 }, ..Default::default() };
-        NmcMacro::new(Resolution::TEST64, cfg);
+        assert_eq!(
+            NmcMacro::new(Resolution::TEST64, cfg).unwrap_err(),
+            crate::tos::TosConfigError::ThresholdBelowNmcMin(200)
+        );
     }
 }

@@ -7,6 +7,7 @@
 //! *energy* of the traversal come from [`super::timing`] / [`super::energy`].
 
 use crate::events::Event;
+use crate::tos::backend::clip_patch;
 
 use super::cmp::compare_geq;
 use super::energy::EnergyModel;
@@ -95,15 +96,11 @@ pub fn process_event(
     let half = (patch as i32 - 1) / 2;
     let ex = ev.x as i32;
     let ey = ev.y as i32;
-    let x0 = (ex - half).max(0) as u16;
-    let x1 = (ex + half).min(res.width as i32 - 1) as u16;
-    let y0 = (ey - half).max(0) as u16;
-    let y1 = (ey + half).min(res.height as i32 - 1) as u16;
+    let rect = clip_patch(res, ev.x, ev.y, half);
 
     let width = res.width as usize;
-    let mut pixels = 0usize;
-    for y in y0..=y1 {
-        for x in x0..=x1 {
+    for y in rect.y0..=rect.y1 {
+        for x in rect.x0..=rect.x1 {
             // --- MO phase: read + minus-one -------------------------------
             let raw = array.read(x, y);
             let stored = match injector.as_deref_mut() {
@@ -128,11 +125,11 @@ pub fn process_event(
             } else if let Some(bits) = table.lookup(stored) {
                 array.write(x, y, bits);
             }
-            pixels += 1;
         }
     }
 
-    let rows = (y1 - y0 + 1) as usize;
+    let rows = rect.height();
+    let pixels = rect.pixels();
     let latency_ns = if pipelined {
         timing.patch_latency_pipelined_ns(rows)
     } else {
@@ -167,7 +164,7 @@ mod tests {
     fn run_both(events: &[Event]) -> (Vec<u8>, Vec<u8>) {
         let res = Resolution::TEST64;
         let cfg = TosConfig::default();
-        let mut golden = TosSurface::new(res, cfg);
+        let mut golden = TosSurface::new(res, cfg).unwrap();
         let mut array = TypeAArray::new(res);
         let timing = TimingModel::at(1.2);
         let energy = EnergyModel::at(1.2);
@@ -242,7 +239,7 @@ mod tests {
     fn injector_at_nominal_is_transparent() {
         let res = Resolution::TEST64;
         let cfg = TosConfig::default();
-        let mut golden = TosSurface::new(res, cfg);
+        let mut golden = TosSurface::new(res, cfg).unwrap();
         let mut array = TypeAArray::new(res);
         let timing = TimingModel::at(1.2);
         let energy = EnergyModel::at(1.2);

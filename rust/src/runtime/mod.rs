@@ -13,6 +13,13 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+pub mod xla_stub;
+// The offline build has no `xla` crate (it needs the XLA C++ library at
+// build time). The stub mirrors the exact API surface used below and
+// fails fast at client creation; drop this alias and add the `xla`
+// dependency to restore the real PJRT path.
+use self::xla_stub as xla;
+
 /// Description of one artifact from `artifacts/meta.json`.
 #[derive(Debug, Clone)]
 pub struct ArtifactInfo {

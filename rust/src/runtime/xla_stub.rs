@@ -1,0 +1,126 @@
+//! Offline stand-in for the `xla` crate (xla-rs bindings to
+//! xla_extension), which needs the XLA C++ library at build time and is
+//! not available in this offline build.
+//!
+//! The API surface mirrors exactly what [`super::HarrisEngine`] uses, so
+//! swapping the real crate back in is a one-line change in `runtime/mod.rs`
+//! (drop the `use xla_stub as xla;` alias and add the `xla` dependency).
+//! Every entry point fails fast at `PjRtClient::cpu()` with a clear
+//! message; nothing downstream is reachable. Engine-less pipelines, all
+//! simulators, and every SAE detector are unaffected — the artifact-gated
+//! integration tests and benches skip themselves when no engine can load.
+
+/// Error returned by every stubbed PJRT entry point.
+#[derive(Debug, Clone, Copy)]
+pub struct XlaUnavailable;
+
+impl std::fmt::Display for XlaUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PJRT/XLA runtime not built into this binary (offline build without the `xla` \
+             crate); the FBF Harris engine is unavailable — use an engine-less pipeline or an \
+             SAE detector (--detector eharris|fast|arc)"
+        )
+    }
+}
+
+impl std::error::Error for XlaUnavailable {}
+
+/// Stub of `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always fails in the offline build.
+    pub fn cpu() -> Result<PjRtClient, XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+
+    /// Unreachable (no client can be constructed).
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+
+    /// Unreachable (no client can be constructed).
+    pub fn platform_name(&self) -> String {
+        "unavailable".into()
+    }
+}
+
+/// Stub of `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Unreachable (no executable can be compiled).
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+}
+
+/// Stub of the PJRT device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Unreachable.
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+}
+
+/// Stub of `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Always fails in the offline build.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+}
+
+/// Stub of `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Trivially constructible (real work happens at compile()).
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub of `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    /// Trivially constructible (real work happens at execute()).
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Unreachable.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+
+    /// Unreachable.
+    pub fn to_tuple1(&self) -> Result<Literal, XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+
+    /// Unreachable.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_fails_fast_with_helpful_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("offline build"), "{msg}");
+        assert!(msg.contains("--detector"), "{msg}");
+    }
+}

@@ -1,0 +1,248 @@
+//! The [`TosBackend`] abstraction over every TOS implementation the paper
+//! compares (Figs. 1, 9, 10): one trait for the golden software model
+//! ([`crate::tos::TosSurface`]), the conventional digital datapath
+//! ([`crate::conventional::ConventionalTos`]), the NMC macro
+//! ([`crate::nmc::NmcMacro`]) and the sharded parallel software model
+//! ([`crate::tos::sharded::ShardedTos`]) — plus the single shared
+//! Algorithm-1 patch core they all route through.
+//!
+//! The coordinator ([`crate::coordinator::Pipeline`]) is generic over
+//! `B: TosBackend`, so every experiment harness (PR sweeps, DVFS traces,
+//! BER studies) runs identically against any implementation; only the
+//! cost/telemetry side differs. Bit-exactness of every backend against the
+//! golden model is a property-test invariant (`rust/tests/properties.rs`).
+
+use crate::events::{Event, Resolution};
+
+use super::TosConfig;
+
+/// Unified telemetry every backend accumulates.
+///
+/// Pure-software backends (golden, sharded) have no hardware cost model:
+/// their `busy_ns`/`energy_pj` stay zero and only the functional counters
+/// advance. Hardware-model backends (NMC, conventional) fill everything.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BackendStats {
+    /// Events processed.
+    pub events: u64,
+    /// Pixels updated (after border clipping).
+    pub pixels: u64,
+    /// Modelled busy time (ns); 0 for pure-software backends.
+    pub busy_ns: f64,
+    /// Modelled dynamic energy (pJ); 0 for pure-software backends.
+    pub energy_pj: f64,
+    /// Bits corrupted by Monte-Carlo read-error injection (NMC only).
+    pub flipped_bits: u64,
+}
+
+/// A TOS implementation the coordinator can drive.
+///
+/// Functional contract: `process` applies Algorithm 1 bit-exactly (at
+/// nominal voltage / without error injection) — `snapshot_u8` of any two
+/// backends fed the same stream must be identical.
+pub trait TosBackend {
+    /// Implementation name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Sensor geometry this backend covers.
+    fn resolution(&self) -> Resolution;
+
+    /// Apply one event (Algorithm 1 semantics).
+    fn process(&mut self, ev: &Event);
+
+    /// Apply a batch of events in stream order. Backends with a faster
+    /// batch path (sharding) override this.
+    fn process_batch(&mut self, events: &[Event]) {
+        for e in events {
+            self.process(e);
+        }
+    }
+
+    /// Does this backend have a real batch fast path? When `false` (the
+    /// default) callers should feed events one at a time instead of paying
+    /// to buffer them.
+    fn prefers_batching(&self) -> bool {
+        false
+    }
+
+    /// Snapshot the surface as an 8-bit row-major image (the FBF Harris
+    /// stage input).
+    fn snapshot_u8(&self) -> Vec<u8>;
+
+    /// Retarget the supply voltage (DVFS transition). Pure-software
+    /// backends have no voltage knob and ignore it.
+    fn set_vdd(&mut self, _vdd: f64) {}
+
+    /// Cumulative telemetry.
+    fn stats(&self) -> BackendStats;
+
+    /// Reset surface and telemetry to the initial state.
+    fn reset(&mut self);
+}
+
+impl<T: TosBackend + ?Sized> TosBackend for Box<T> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn resolution(&self) -> Resolution {
+        (**self).resolution()
+    }
+    fn process(&mut self, ev: &Event) {
+        (**self).process(ev)
+    }
+    fn process_batch(&mut self, events: &[Event]) {
+        (**self).process_batch(events)
+    }
+    fn prefers_batching(&self) -> bool {
+        (**self).prefers_batching()
+    }
+    fn snapshot_u8(&self) -> Vec<u8> {
+        (**self).snapshot_u8()
+    }
+    fn set_vdd(&mut self, vdd: f64) {
+        (**self).set_vdd(vdd)
+    }
+    fn stats(&self) -> BackendStats {
+        (**self).stats()
+    }
+    fn reset(&mut self) {
+        (**self).reset()
+    }
+}
+
+/// A patch rectangle after clipping at the sensor borders (inclusive
+/// coordinates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PatchRect {
+    /// Leftmost column.
+    pub x0: u16,
+    /// Rightmost column (inclusive).
+    pub x1: u16,
+    /// Topmost row.
+    pub y0: u16,
+    /// Bottommost row (inclusive).
+    pub y1: u16,
+}
+
+impl PatchRect {
+    /// Columns covered.
+    #[inline]
+    pub fn width(&self) -> usize {
+        (self.x1 - self.x0 + 1) as usize
+    }
+
+    /// Rows covered.
+    #[inline]
+    pub fn height(&self) -> usize {
+        (self.y1 - self.y0 + 1) as usize
+    }
+
+    /// Pixels covered.
+    #[inline]
+    pub fn pixels(&self) -> usize {
+        self.width() * self.height()
+    }
+}
+
+/// Clip the `P x P` patch around `(x, y)` at the sensor borders.
+#[inline]
+pub fn clip_patch(res: Resolution, x: u16, y: u16, half: i32) -> PatchRect {
+    PatchRect {
+        x0: (x as i32 - half).max(0) as u16,
+        x1: (x as i32 + half).min(res.width as i32 - 1) as u16,
+        y0: (y as i32 - half).max(0) as u16,
+        y1: (y as i32 + half).min(res.height as i32 - 1) as u16,
+    }
+}
+
+/// The shared Algorithm-1 decrement/clamp core over `rect`, restricted to
+/// a row window: `data` holds consecutive rows starting at sensor row
+/// `base_row` (`base_row = 0` for a full surface; a shard passes its
+/// band's first row). `rect` must already be clipped to the rows `data`
+/// holds. This is the one copy of the hot loop every software backend and
+/// the conventional baseline share.
+#[inline]
+pub fn decrement_clamp(data: &mut [u8], width: usize, base_row: u16, rect: PatchRect, th: u8) {
+    for y in rect.y0..=rect.y1 {
+        let row = (y - base_row) as usize * width;
+        for v in &mut data[row + rect.x0 as usize..=row + rect.x1 as usize] {
+            let d = v.saturating_sub(1);
+            *v = if d < th { 0 } else { d };
+        }
+    }
+}
+
+/// One full golden event update on a whole surface: decrement/clamp the
+/// clipped patch, then write 255 at the event pixel. Returns the pixel
+/// count of the clipped patch.
+#[inline]
+pub fn golden_update(data: &mut [u8], res: Resolution, cfg: TosConfig, ev: &Event) -> usize {
+    let rect = clip_patch(res, ev.x, ev.y, cfg.half());
+    decrement_clamp(data, res.width as usize, 0, rect, cfg.threshold);
+    data[res.index(ev.x, ev.y)] = 255;
+    rect.pixels()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_patch_interior_and_borders() {
+        let res = Resolution::TEST64;
+        let full = clip_patch(res, 32, 32, 3);
+        assert_eq!((full.width(), full.height(), full.pixels()), (7, 7, 49));
+        let corner = clip_patch(res, 0, 0, 3);
+        assert_eq!((corner.x0, corner.x1, corner.y0, corner.y1), (0, 3, 0, 3));
+        assert_eq!(corner.pixels(), 16);
+        let far = clip_patch(res, 63, 63, 3);
+        assert_eq!((far.x0, far.x1, far.y0, far.y1), (60, 63, 60, 63));
+    }
+
+    #[test]
+    fn decrement_clamp_respects_row_window() {
+        // a 4-wide, 3-row buffer representing sensor rows 10..13
+        let mut data = vec![255u8; 12];
+        let rect = PatchRect { x0: 1, x1: 2, y0: 11, y1: 11 };
+        decrement_clamp(&mut data, 4, 10, rect, 225);
+        assert_eq!(data[4], 255); // row 11, col 0 untouched
+        assert_eq!(data[5], 254);
+        assert_eq!(data[6], 254);
+        assert_eq!(data[7], 255);
+        assert!(data[..4].iter().all(|&v| v == 255));
+        assert!(data[8..].iter().all(|&v| v == 255));
+    }
+
+    #[test]
+    fn decrement_clamp_kills_below_threshold() {
+        let mut data = vec![225u8; 4];
+        let rect = PatchRect { x0: 0, x1: 3, y0: 0, y1: 0 };
+        decrement_clamp(&mut data, 4, 0, rect, 225);
+        assert!(data.iter().all(|&v| v == 0), "224 < TH must clamp to 0");
+    }
+
+    #[test]
+    fn golden_update_matches_surface_semantics() {
+        let res = Resolution::TEST64;
+        let cfg = TosConfig::default();
+        let mut data = vec![0u8; res.pixels()];
+        let px = golden_update(&mut data, res, cfg, &Event::on(10, 12, 0));
+        assert_eq!(px, 49);
+        assert_eq!(data[res.index(10, 12)], 255);
+        let px = golden_update(&mut data, res, cfg, &Event::on(0, 0, 1));
+        assert_eq!(px, 16);
+        assert_eq!(data[0], 255);
+    }
+
+    #[test]
+    fn boxed_backend_dispatches() {
+        let surf = super::super::TosSurface::new(Resolution::TEST64, TosConfig::default()).unwrap();
+        let mut b: Box<dyn TosBackend> = Box::new(surf);
+        b.process(&Event::on(5, 5, 0));
+        assert_eq!(b.stats().events, 1);
+        assert_eq!(b.snapshot_u8()[Resolution::TEST64.index(5, 5)], 255);
+        b.reset();
+        assert_eq!(b.stats().events, 0);
+        assert_eq!(b.name(), "golden-tos");
+    }
+}

@@ -1,15 +1,55 @@
 //! Golden software model of the Threshold-Ordinal Surface (paper
-//! Algorithm 1 / luvHarris Sec. III).
+//! Algorithm 1 / luvHarris Sec. III), plus the [`backend`] abstraction
+//! that unifies every TOS implementation in the crate.
 //!
 //! The TOS is an `H x W` map of 8-bit "novelty" values.  Per event:
 //! decrement the `P x P` patch around the event, clamp anything that falls
-//! below `TH` to zero, then write 255 at the event pixel.  This module is
-//! the bit-exact reference against which both the NMC macro simulator
-//! ([`crate::nmc`]) and the Pallas batch kernel (python tests) are checked.
+//! below `TH` to zero, then write 255 at the event pixel.  [`TosSurface`]
+//! is the bit-exact reference against which the NMC macro simulator
+//! ([`crate::nmc`]), the conventional baseline ([`crate::conventional`]),
+//! the sharded parallel model ([`sharded::ShardedTos`]) and the Pallas
+//! batch kernel (python tests) are all checked.
 
+pub mod backend;
+pub mod sharded;
 
+pub use backend::{BackendStats, TosBackend};
+pub use sharded::ShardedTos;
 
 use crate::events::{Event, Resolution};
+
+/// Threshold floor required by the 5-bit on-chip datapath (paper Sec. IV-A).
+pub const NMC_MIN_THRESHOLD: u8 = 225;
+
+/// Validation error for [`TosConfig`] / backend construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TosConfigError {
+    /// Patch side must be odd (the patch is centred on the event pixel).
+    PatchNotOdd(u16),
+    /// Patch side must be at least 3.
+    PatchTooSmall(u16),
+    /// The NMC macro's 5-bit datapath requires `TH >= 225`. (The
+    /// conventional/software backends store full 8-bit values and accept
+    /// any threshold.)
+    ThresholdBelowNmcMin(u8),
+    /// The sharded backend needs at least one shard.
+    ZeroShards,
+}
+
+impl std::fmt::Display for TosConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::PatchNotOdd(p) => write!(f, "patch must be odd, got {p}"),
+            Self::PatchTooSmall(p) => write!(f, "patch must be >= 3, got {p}"),
+            Self::ThresholdBelowNmcMin(t) => {
+                write!(f, "5-bit datapath requires TH >= {NMC_MIN_THRESHOLD}, got {t}")
+            }
+            Self::ZeroShards => write!(f, "sharded backend needs at least one shard"),
+        }
+    }
+}
+
+impl std::error::Error for TosConfigError {}
 
 /// TOS algorithm parameters.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -37,10 +77,23 @@ impl TosConfig {
         (self.patch as i32 - 1) / 2
     }
 
-    /// Validate config invariants (odd patch, sane threshold).
-    pub fn validate(&self) -> Result<(), String> {
-        if self.patch % 2 == 0 || self.patch < 3 {
-            return Err(format!("patch must be odd and >= 3, got {}", self.patch));
+    /// Validate config invariants (odd patch of sane size).
+    pub fn validate(&self) -> Result<(), TosConfigError> {
+        if self.patch < 3 {
+            return Err(TosConfigError::PatchTooSmall(self.patch));
+        }
+        if self.patch % 2 == 0 {
+            return Err(TosConfigError::PatchNotOdd(self.patch));
+        }
+        Ok(())
+    }
+
+    /// Validate for the NMC macro's 5-bit datapath (adds the `TH` floor
+    /// that makes the [`encoding`] injective).
+    pub fn validate_nmc(&self) -> Result<(), TosConfigError> {
+        self.validate()?;
+        if self.threshold < NMC_MIN_THRESHOLD {
+            return Err(TosConfigError::ThresholdBelowNmcMin(self.threshold));
         }
         Ok(())
     }
@@ -52,13 +105,15 @@ pub struct TosSurface {
     res: Resolution,
     cfg: TosConfig,
     data: Vec<u8>,
+    stats: BackendStats,
 }
 
 impl TosSurface {
-    /// Fresh all-zero surface.
-    pub fn new(res: Resolution, cfg: TosConfig) -> Self {
-        cfg.validate().expect("invalid TOS config");
-        Self { res, cfg, data: vec![0; res.pixels()] }
+    /// Fresh all-zero surface. Fails on an invalid [`TosConfig`] instead
+    /// of panicking so user-supplied configs propagate as errors.
+    pub fn new(res: Resolution, cfg: TosConfig) -> Result<Self, TosConfigError> {
+        cfg.validate()?;
+        Ok(Self { res, cfg, data: vec![0; res.pixels()], stats: BackendStats::default() })
     }
 
     /// Sensor geometry.
@@ -98,31 +153,18 @@ impl TosSurface {
         self.data[i] = v;
     }
 
-    /// Apply one event (Algorithm 1). Patches are clipped at the borders.
+    /// Apply one event (Algorithm 1). Patches are clipped at the borders;
+    /// returns the clipped patch's pixel count.
     ///
-    /// This is the *hot path* of the whole system model; it is kept
-    /// allocation-free and branch-light (see EXPERIMENTS.md §Perf).
+    /// This is the *hot path* of the whole system model; the shared core
+    /// ([`backend::decrement_clamp`]) is kept allocation-free and
+    /// branch-light (see EXPERIMENTS.md §Perf).
     #[inline]
-    pub fn update(&mut self, ev: &Event) {
-        let half = self.cfg.half();
-        let th = self.cfg.threshold;
-        let w = self.res.width as i32;
-        let h = self.res.height as i32;
-        let ex = ev.x as i32;
-        let ey = ev.y as i32;
-        let x0 = (ex - half).max(0);
-        let x1 = (ex + half).min(w - 1);
-        let y0 = (ey - half).max(0);
-        let y1 = (ey + half).min(h - 1);
-        for y in y0..=y1 {
-            let row = y as usize * w as usize;
-            let slice = &mut self.data[row + x0 as usize..=row + x1 as usize];
-            for v in slice.iter_mut() {
-                let d = v.saturating_sub(1);
-                *v = if d < th { 0 } else { d };
-            }
-        }
-        self.data[self.res.index(ev.x, ev.y)] = 255;
+    pub fn update(&mut self, ev: &Event) -> usize {
+        let px = backend::golden_update(&mut self.data, self.res, self.cfg, ev);
+        self.stats.events += 1;
+        self.stats.pixels += px as u64;
+        px
     }
 
     /// Apply a batch of events in order.
@@ -150,9 +192,36 @@ impl TosSurface {
         self.data.iter().filter(|&&v| v != 0).count()
     }
 
-    /// Reset to all zeros.
+    /// Reset to all zeros (telemetry included).
     pub fn clear(&mut self) {
         self.data.fill(0);
+        self.stats = BackendStats::default();
+    }
+}
+
+impl TosBackend for TosSurface {
+    fn name(&self) -> &'static str {
+        "golden-tos"
+    }
+
+    fn resolution(&self) -> Resolution {
+        self.res
+    }
+
+    fn process(&mut self, ev: &Event) {
+        self.update(ev);
+    }
+
+    fn snapshot_u8(&self) -> Vec<u8> {
+        self.data.clone()
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats
+    }
+
+    fn reset(&mut self) {
+        self.clear();
     }
 }
 
@@ -192,7 +261,7 @@ mod tests {
     use crate::events::Polarity;
 
     fn surface() -> TosSurface {
-        TosSurface::new(Resolution::TEST64, TosConfig::default())
+        TosSurface::new(Resolution::TEST64, TosConfig::default()).unwrap()
     }
 
     #[test]
@@ -223,8 +292,8 @@ mod tests {
     #[test]
     fn border_clipping() {
         let mut s = surface();
-        s.update(&Event::on(0, 0, 0));
-        s.update(&Event::on(63, 63, 1));
+        assert_eq!(s.update(&Event::on(0, 0, 0)), 16);
+        assert_eq!(s.update(&Event::on(63, 63, 1)), 16);
         assert_eq!(s.get(0, 0), 255);
         assert_eq!(s.get(63, 63), 255);
     }
@@ -271,6 +340,31 @@ mod tests {
         assert!(TosConfig { patch: 6, threshold: 224 }.validate().is_err());
         assert!(TosConfig { patch: 1, threshold: 224 }.validate().is_err());
         assert!(TosConfig { patch: 9, threshold: 200 }.validate().is_ok());
+        // the hardware datapaths additionally require the TH floor
+        assert_eq!(
+            TosConfig { patch: 9, threshold: 200 }.validate_nmc(),
+            Err(TosConfigError::ThresholdBelowNmcMin(200))
+        );
+        assert!(TosConfig::default().validate_nmc().is_ok());
+    }
+
+    #[test]
+    fn invalid_config_is_an_error_not_a_panic() {
+        let err = TosSurface::new(Resolution::TEST64, TosConfig { patch: 4, threshold: 225 });
+        assert_eq!(err.unwrap_err(), TosConfigError::PatchNotOdd(4));
+    }
+
+    #[test]
+    fn backend_trait_counts_events_and_pixels() {
+        let mut s = surface();
+        TosBackend::process(&mut s, &Event::on(32, 32, 0));
+        TosBackend::process(&mut s, &Event::on(0, 0, 1));
+        let st = TosBackend::stats(&s);
+        assert_eq!(st.events, 2);
+        assert_eq!(st.pixels, 49 + 16);
+        // pure software model: no hardware cost
+        assert_eq!(st.busy_ns, 0.0);
+        assert_eq!(st.energy_pj, 0.0);
     }
 
     #[test]
@@ -302,5 +396,6 @@ mod tests {
         s.update(&Event::on(1, 1, 0));
         s.clear();
         assert_eq!(s.active_pixels(), 0);
+        assert_eq!(TosBackend::stats(&s), BackendStats::default());
     }
 }

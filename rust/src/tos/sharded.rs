@@ -1,0 +1,260 @@
+//! Sharded parallel software TOS: the sensor plane is tiled into
+//! horizontal row bands and event batches are fanned out across worker
+//! threads — the "pure software, but actually fast" point on the paper's
+//! Fig. 1(b) axis, and the scale path for HD-class sensors when no NMC
+//! macro is available.
+//!
+//! Routing: an event's clipped patch may straddle a band boundary, so the
+//! event is routed to *every* band its patch intersects (the overlap
+//! region); each band then applies only the rows it owns, and the 255
+//! centre write is performed by the single band owning the event row.
+//! Row ownership is disjoint and each band replays its bucket in stream
+//! order, so the per-pixel operation sequence is identical to the
+//! sequential golden model — bit-exactness at any shard count is enforced
+//! by `prop_all_backends_bit_exact` in `rust/tests/properties.rs`.
+
+use crate::events::{Event, Resolution};
+
+use super::backend::{clip_patch, decrement_clamp, golden_update, BackendStats, PatchRect, TosBackend};
+use super::{TosConfig, TosConfigError};
+
+/// Row-band sharded software TOS backend.
+#[derive(Debug, Clone)]
+pub struct ShardedTos {
+    res: Resolution,
+    cfg: TosConfig,
+    /// Rows owned by each band (the last band may be short).
+    rows_per_band: usize,
+    /// Band count implied by `rows_per_band`.
+    bands: usize,
+    /// Full row-major surface; bands own disjoint row slices of it.
+    data: Vec<u8>,
+    /// Per-band routing buffers (event + its pre-clipped patch, so
+    /// workers don't redo the clip), reused across batches.
+    buckets: Vec<Vec<(Event, PatchRect)>>,
+    stats: BackendStats,
+}
+
+impl ShardedTos {
+    /// Build with `shards` worker bands (clamped to the sensor row count).
+    pub fn new(res: Resolution, cfg: TosConfig, shards: usize) -> Result<Self, TosConfigError> {
+        cfg.validate()?;
+        if shards == 0 {
+            return Err(TosConfigError::ZeroShards);
+        }
+        let h = res.height as usize;
+        let rows_per_band = h.div_ceil(shards.min(h));
+        let bands = h.div_ceil(rows_per_band);
+        Ok(Self {
+            res,
+            cfg,
+            rows_per_band,
+            bands,
+            data: vec![0; res.pixels()],
+            buckets: vec![Vec::new(); bands],
+            stats: BackendStats::default(),
+        })
+    }
+
+    /// Actual number of row bands (= worker parallelism of a batch).
+    #[inline]
+    pub fn bands(&self) -> usize {
+        self.bands
+    }
+
+    /// Algorithm parameters.
+    #[inline]
+    pub fn config(&self) -> TosConfig {
+        self.cfg
+    }
+
+    /// Raw row-major pixel data.
+    #[inline]
+    pub fn data(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Apply a batch in stream order, fanned out across the row bands.
+    ///
+    /// This is the fast path: routing is O(events), then every band walks
+    /// only its own bucket against its own disjoint row slice.
+    pub fn process_batch(&mut self, events: &[Event]) {
+        if events.is_empty() {
+            return;
+        }
+        let half = self.cfg.half();
+        let th = self.cfg.threshold;
+        let w = self.res.width as usize;
+        let rpb = self.rows_per_band;
+        let res = self.res;
+
+        // --- route: an event goes to every band its clipped patch touches
+        for bucket in &mut self.buckets {
+            bucket.clear();
+        }
+        let mut pixels = 0u64;
+        for ev in events {
+            let rect = clip_patch(res, ev.x, ev.y, half);
+            pixels += rect.pixels() as u64;
+            let lo = rect.y0 as usize / rpb;
+            let hi = rect.y1 as usize / rpb;
+            for band in lo..=hi {
+                self.buckets[band].push((*ev, rect));
+            }
+        }
+        self.stats.events += events.len() as u64;
+        self.stats.pixels += pixels;
+
+        // --- apply: one worker per band over its disjoint row slice
+        rayon::scope(|s| {
+            for (band, (chunk, bucket)) in
+                self.data.chunks_mut(rpb * w).zip(&self.buckets).enumerate()
+            {
+                s.spawn(move |_| {
+                    let base = (band * rpb) as u16;
+                    let top = base + (chunk.len() / w) as u16 - 1;
+                    for (ev, rect) in bucket {
+                        let sub = PatchRect {
+                            y0: rect.y0.max(base),
+                            y1: rect.y1.min(top),
+                            ..*rect
+                        };
+                        decrement_clamp(chunk, w, base, sub, th);
+                        if ev.y >= base && ev.y <= top {
+                            chunk[(ev.y - base) as usize * w + ev.x as usize] = 255;
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+impl TosBackend for ShardedTos {
+    fn name(&self) -> &'static str {
+        "sharded-tos"
+    }
+
+    fn resolution(&self) -> Resolution {
+        self.res
+    }
+
+    /// Single-event path: identical to the golden model — parallelism only
+    /// pays off on batches, so lone events skip routing entirely.
+    fn process(&mut self, ev: &Event) {
+        let px = golden_update(&mut self.data, self.res, self.cfg, ev);
+        self.stats.events += 1;
+        self.stats.pixels += px as u64;
+    }
+
+    fn process_batch(&mut self, events: &[Event]) {
+        ShardedTos::process_batch(self, events)
+    }
+
+    fn prefers_batching(&self) -> bool {
+        self.bands > 1
+    }
+
+    fn snapshot_u8(&self) -> Vec<u8> {
+        self.data.clone()
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats
+    }
+
+    fn reset(&mut self) {
+        self.data.fill(0);
+        self.stats = BackendStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tos::TosSurface;
+    use crate::util::rng::Rng;
+
+    fn stream(res: Resolution, n: usize, seed: u64) -> Vec<Event> {
+        let mut rng = Rng::seed_from(seed);
+        (0..n)
+            .map(|i| {
+                Event::on(
+                    rng.below(res.width as u64) as u16,
+                    rng.below(res.height as u64) as u16,
+                    i as u64,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_matches_golden_at_various_shard_counts() {
+        let res = Resolution::TEST64;
+        let cfg = TosConfig::default();
+        let events = stream(res, 4_000, 7);
+        let mut golden = TosSurface::new(res, cfg).unwrap();
+        golden.update_batch(&events);
+        for shards in [1usize, 2, 3, 4, 7, 64, 200] {
+            let mut sh = ShardedTos::new(res, cfg, shards).unwrap();
+            sh.process_batch(&events);
+            assert_eq!(golden.data(), sh.data(), "diverged at shards={shards}");
+        }
+    }
+
+    #[test]
+    fn border_and_boundary_patches_are_exact() {
+        // bands of 2 rows with a 7x7 patch: every patch straddles bands
+        let res = Resolution::TEST64;
+        let cfg = TosConfig::default();
+        let mut events = vec![
+            Event::on(0, 0, 0),
+            Event::on(63, 63, 1),
+            Event::on(0, 63, 2),
+            Event::on(63, 0, 3),
+        ];
+        // hammer one band boundary from both sides
+        for i in 0..200u64 {
+            events.push(Event::on((i % 64) as u16, 31 + (i % 3) as u16, 10 + i));
+        }
+        let mut golden = TosSurface::new(res, cfg).unwrap();
+        golden.update_batch(&events);
+        let mut sh = ShardedTos::new(res, cfg, 32).unwrap();
+        sh.process_batch(&events);
+        assert_eq!(golden.data(), sh.data());
+    }
+
+    #[test]
+    fn interleaved_single_and_batch_processing_agree() {
+        let res = Resolution::TEST64;
+        let cfg = TosConfig::default();
+        let events = stream(res, 1_200, 11);
+        let mut golden = TosSurface::new(res, cfg).unwrap();
+        golden.update_batch(&events);
+        let mut sh = ShardedTos::new(res, cfg, 4).unwrap();
+        sh.process_batch(&events[..400]);
+        for e in &events[400..800] {
+            sh.process(e);
+        }
+        sh.process_batch(&events[800..]);
+        assert_eq!(golden.data(), sh.data());
+        assert_eq!(sh.stats().events, 1_200);
+        assert_eq!(sh.stats().pixels, golden.stats().pixels);
+    }
+
+    #[test]
+    fn shard_count_clamps_to_rows() {
+        let sh = ShardedTos::new(Resolution::TEST64, TosConfig::default(), 10_000).unwrap();
+        assert_eq!(sh.bands(), 64);
+        assert!(ShardedTos::new(Resolution::TEST64, TosConfig::default(), 0).is_err());
+    }
+
+    #[test]
+    fn reset_clears_surface_and_stats() {
+        let mut sh = ShardedTos::new(Resolution::TEST64, TosConfig::default(), 4).unwrap();
+        sh.process_batch(&stream(Resolution::TEST64, 100, 3));
+        sh.reset();
+        assert!(sh.data().iter().all(|&v| v == 0));
+        assert_eq!(sh.stats(), BackendStats::default());
+    }
+}

@@ -5,7 +5,7 @@
 //! scale: corner detection works, BER at 0.6 V degrades AUC only mildly,
 //! and the async (decoupled) LUT worker agrees with the sync path.
 
-use nmc_tos::coordinator::{Pipeline, PipelineConfig};
+use nmc_tos::coordinator::{BackendKind, Pipeline, PipelineConfig};
 use nmc_tos::datasets::synthetic::SceneConfig;
 use nmc_tos::eval::PrCurve;
 use nmc_tos::runtime::default_artifact_dir;
@@ -125,6 +125,34 @@ fn dvfs_pipeline_runs_with_engine() {
     let report = pipe.run(&events).unwrap();
     assert!(report.dvfs_switches >= 1, "DVFS never acted");
     assert!(report.lut_refreshes > 0);
+}
+
+#[test]
+fn backend_swap_is_score_invariant_end_to_end() {
+    // The whole point of the TosBackend refactor: with error injection off
+    // and the voltage pinned, every backend produces the same surface, so
+    // the same LUT, so identical per-event scores through the full engine.
+    if !artifacts_available() {
+        return;
+    }
+    let mut scene = SceneConfig::test64().build(77);
+    let events = scene.generate(30_000);
+    let mut reference: Option<(Vec<f64>, Vec<u8>)> = None;
+    for bk in BackendKind::ALL {
+        let mut cfg = test_cfg();
+        cfg.backend = bk;
+        cfg.shards = 4;
+        let mut pipe = Pipeline::from_config(cfg).unwrap();
+        let report = pipe.run(&events).unwrap();
+        assert!(report.lut_refreshes > 0, "{bk:?}: LUT never refreshed");
+        match &reference {
+            None => reference = Some((report.scores, report.final_tos)),
+            Some((scores, tos)) => {
+                assert_eq!(tos, &report.final_tos, "{bk:?}: surface diverged");
+                assert_eq!(scores, &report.scores, "{bk:?}: scores diverged");
+            }
+        }
+    }
 }
 
 #[test]

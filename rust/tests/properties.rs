@@ -8,7 +8,7 @@ use nmc_tos::dvfs::{DvfsConfig, DvfsController};
 use nmc_tos::events::{stream, Event, Polarity, Resolution};
 use nmc_tos::nmc::{calib, NmcConfig, NmcMacro};
 use nmc_tos::stcf::{Stcf, StcfConfig};
-use nmc_tos::tos::{encoding, TosConfig, TosSurface};
+use nmc_tos::tos::{encoding, ShardedTos, TosConfig, TosSurface};
 use nmc_tos::util::proptest::check;
 use nmc_tos::util::rng::Rng;
 
@@ -45,8 +45,8 @@ fn prop_nmc_equals_golden_tos() {
             inject_errors: true, // injector active but p(err)=0 above 0.63 V
             seed: rng.next_u64(),
         };
-        let mut mac = NmcMacro::new(res, cfg);
-        let mut golden = TosSurface::new(res, tos_cfg);
+        let mut mac = NmcMacro::new(res, cfg).unwrap();
+        let mut golden = TosSurface::new(res, tos_cfg).unwrap();
         for e in random_events(rng, 1500, res) {
             mac.process(&e);
             golden.update(&e);
@@ -62,7 +62,7 @@ fn prop_tos_values_always_representable() {
     check(0xB0B, 20, |rng| {
         let res = Resolution::TEST64;
         let threshold = 225 + rng.below(25) as u8;
-        let mut surf = TosSurface::new(res, TosConfig { patch: 7, threshold });
+        let mut surf = TosSurface::new(res, TosConfig { patch: 7, threshold }).unwrap();
         for e in random_events(rng, 2000, res) {
             surf.update(&e);
             debug_assert!(true);
@@ -77,6 +77,59 @@ fn prop_tos_values_always_representable() {
     });
 }
 
+/// PROPERTY: every [`nmc_tos::tos::TosBackend`] — conventional, NMC at an
+/// error-free voltage, and the sharded parallel model at any shard count —
+/// is bit-exact against the golden `TosSurface` on random event streams,
+/// including patch clipping at the sensor borders and patches straddling
+/// shard boundaries.
+#[test]
+fn prop_all_backends_bit_exact() {
+    check(0xBACE2D, 12, |rng| {
+        let res = if rng.chance(0.5) { Resolution::TEST64 } else { Resolution::new(96, 48) };
+        let patch = [3u16, 5, 7, 9][rng.below(4) as usize];
+        let threshold = 225 + rng.below(20) as u8;
+        let cfg = TosConfig { patch, threshold };
+        let mut events = random_events(rng, 2_000, res);
+        // pin events at all four corners so border clipping always runs
+        let t0 = events.last().map_or(0, |e| e.t);
+        events.push(Event::on(0, 0, t0 + 1));
+        events.push(Event::on(res.width - 1, 0, t0 + 2));
+        events.push(Event::on(0, res.height - 1, t0 + 3));
+        events.push(Event::on(res.width - 1, res.height - 1, t0 + 4));
+
+        let mut golden = TosSurface::new(res, cfg).unwrap();
+        golden.update_batch(&events);
+
+        let mut conv = ConventionalTos::new(res, cfg, 1.2).unwrap();
+        for e in &events {
+            conv.process(e);
+        }
+        assert_eq!(golden.data(), conv.surface().data(), "conventional diverged");
+
+        let vdd = rng.range_f64(0.63, 1.2); // error-free region
+        let mut mac = NmcMacro::new(
+            res,
+            NmcConfig { tos: cfg, pipelined: rng.chance(0.5), vdd, ..NmcConfig::default() },
+        )
+        .unwrap();
+        mac.process_batch(&events);
+        assert_eq!(golden.data(), &mac.snapshot_u8()[..], "NMC diverged at {vdd} V");
+
+        for shards in [1usize, 2, 3, 5, 8, res.height as usize] {
+            let mut sharded = ShardedTos::new(res, cfg, shards).unwrap();
+            // split the stream so both the batch path and the single-event
+            // path are exercised
+            let cut = events.len() / 3;
+            sharded.process_batch(&events[..cut]);
+            for e in &events[cut..2 * cut] {
+                nmc_tos::tos::TosBackend::process(&mut sharded, e);
+            }
+            sharded.process_batch(&events[2 * cut..]);
+            assert_eq!(golden.data(), sharded.data(), "sharded diverged at {shards} shards");
+        }
+    });
+}
+
 /// PROPERTY: conventional baseline and NMC macro produce identical
 /// surfaces (they implement the same Algorithm 1; only cost models differ).
 #[test]
@@ -84,8 +137,8 @@ fn prop_conventional_equals_nmc_functionally() {
     check(0xC0DE, 15, |rng| {
         let res = Resolution::TEST64;
         let cfg = TosConfig::default();
-        let mut conv = ConventionalTos::new(res, cfg, 1.2);
-        let mut mac = NmcMacro::new(res, NmcConfig::default());
+        let mut conv = ConventionalTos::new(res, cfg, 1.2).unwrap();
+        let mut mac = NmcMacro::new(res, NmcConfig::default()).unwrap();
         for e in random_events(rng, 1000, res) {
             conv.process(&e);
             mac.process(&e);
@@ -106,7 +159,8 @@ fn prop_cost_accounting_consistent() {
             let mut mac = NmcMacro::new(
                 res,
                 NmcConfig { pipelined, ..NmcConfig::default() },
-            );
+            )
+            .unwrap();
             let mut sum_lat = 0.0;
             let mut sum_e = 0.0;
             for e in &events {

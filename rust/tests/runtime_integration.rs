@@ -156,7 +156,7 @@ fn engine_highlights_tos_corners() {
     // near the TOS structure corners.
     let Some(m) = manifest_or_skip() else { return };
     let mut engine = HarrisEngine::load(&m, "test64").unwrap();
-    let mut surf = TosSurface::new(Resolution::TEST64, TosConfig::default());
+    let mut surf = TosSurface::new(Resolution::TEST64, TosConfig::default()).unwrap();
     // draw an L: two strokes of events meeting at (32, 32)
     let mut t = 0u64;
     for i in 0..16u16 {
