@@ -12,6 +12,7 @@ use nmc_tos::coordinator::{Pipeline, PipelineConfig};
 use nmc_tos::datasets::synthetic::SceneConfig;
 use nmc_tos::detectors::{arc::Arc, eharris::EHarris, fast::EFast, EventScorer};
 use nmc_tos::eval::PrCurve;
+use nmc_tos::events::source::SliceSource;
 use nmc_tos::events::Resolution;
 
 fn main() -> anyhow::Result<()> {
@@ -32,10 +33,11 @@ fn main() -> anyhow::Result<()> {
             labels.iter().filter(|&&l| l).count() as f64 / labels.len() as f64;
         println!("corner-event base rate: {:.3}", base_rate);
 
-        // --- the paper's system -----------------------------------------
+        // --- the paper's system, fed through the streaming ingestion
+        // path (bit-identical to load-all at any chunk size) --------------
         let t0 = std::time::Instant::now();
         let mut pipe = Pipeline::new(PipelineConfig::davis240())?;
-        let report = pipe.run(&events)?;
+        let report = pipe.run_stream(&mut SliceSource::new(&events, 32_768))?;
         let scored = report.scored_events(&gt, 3.5);
         let auc = PrCurve::from_scores(&scored, 101).auc();
         println!(

@@ -1,25 +1,53 @@
 //! Bench: the full pipeline (STCF + NMC sim + DVFS + PJRT Harris +
 //! tagging) — events/s of the whole system model, sync vs async LUT
-//! refresh. This is the number that gates how large an experiment the
-//! repo can run; EXPERIMENTS.md §Perf tracks it.
+//! refresh, plus the streamed ingestion path. This is the number that
+//! gates how large an experiment the repo can run; EXPERIMENTS.md §Perf
+//! tracks it.
 //!
-//! Requires `make artifacts`.
+//! The engine-less and streamed rows run standalone; the FBF rows need
+//! `make artifacts`.
 
 mod common;
 
 use nmc_tos::coordinator::{Pipeline, PipelineConfig};
 use nmc_tos::datasets::synthetic::SceneConfig;
+use nmc_tos::events::source::SliceSource;
 use nmc_tos::runtime::default_artifact_dir;
 
 fn main() {
-    if !default_artifact_dir().join("meta.json").exists() {
-        println!("SKIP end_to_end: run `make artifacts` first");
-        return;
-    }
     println!("== bench: full pipeline end-to-end ==");
     let mut scene = SceneConfig::shapes_dof().build(8);
     let events = scene.generate(100_000);
 
+    // engine-less variant isolates the simulator cost from PJRT
+    let mut cfg = PipelineConfig::davis240();
+    cfg.lut_refresh_events = usize::MAX;
+    let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
+    let (med, mean) = common::measure(1, 5, || {
+        let r = pipe.run(&events).unwrap();
+        std::hint::black_box(r.events_signal);
+    });
+    common::report("e2e/no_fbf/100k_events", med, mean, events.len() as f64);
+
+    // streamed ingestion: same work in bounded chunks, counters-only
+    // report — the configuration for unbounded recordings
+    for chunk in [4_096usize, 65_536] {
+        let mut cfg = PipelineConfig::davis240();
+        cfg.lut_refresh_events = usize::MAX;
+        cfg.record_per_event = false;
+        let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
+        let (med, mean) = common::measure(1, 5, || {
+            let r = pipe.run_stream(&mut SliceSource::new(&events, chunk)).unwrap();
+            std::hint::black_box(r.events_signal);
+        });
+        let label = format!("e2e/stream_chunk{chunk}/100k_events");
+        common::report(&label, med, mean, events.len() as f64);
+    }
+
+    if !default_artifact_dir().join("meta.json").exists() {
+        println!("SKIP FBF rows: run `make artifacts` first");
+        return;
+    }
     for (label, async_mode, refresh) in [
         ("sync/refresh2k", false, 2_000usize),
         ("sync/refresh500", false, 500),
@@ -37,14 +65,4 @@ fn main() {
         });
         common::report(&format!("e2e/{label}/100k_events"), med, mean, events.len() as f64);
     }
-
-    // engine-less variant isolates the simulator cost from PJRT
-    let mut cfg = PipelineConfig::davis240();
-    cfg.lut_refresh_events = usize::MAX;
-    let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
-    let (med, mean) = common::measure(1, 5, || {
-        let r = pipe.run(&events).unwrap();
-        std::hint::black_box(r.events_signal);
-    });
-    common::report("e2e/no_fbf/100k_events", med, mean, events.len() as f64);
 }

@@ -19,6 +19,14 @@
 //!   luvHarris decoupling: the event path never blocks on the frame path;
 //!   snapshots are dropped (not queued) when the worker is busy.
 //!
+//! Ingestion is streaming-first: [`Pipeline::run_stream`] consumes any
+//! [`EventSource`] chunk by chunk with all pipeline state (DVFS windows,
+//! STCF history, LUT-refresh counters, batch-flush buffers) carried
+//! across chunk boundaries, so peak event-buffer memory is O(chunk) and
+//! the result is bit-identical to the load-all [`Pipeline::run`] wrapper
+//! at any chunk size. For unbounded runs, `record_per_event = false`
+//! keeps the [`RunReport`] to O(1) counters.
+//!
 //! SAE-based detectors don't consume LUTs, so for them the FBF stage (and
 //! the PJRT engine) is skipped entirely. Python never appears on any path
 //! — the Harris graph was AOT-lowered at build time and runs through the
@@ -38,6 +46,7 @@ use crate::detectors::fast::EFast;
 use crate::detectors::harris::HarrisDetector;
 use crate::detectors::EventScorer;
 use crate::dvfs::{DvfsConfig, DvfsController};
+use crate::events::source::{DEFAULT_CHUNK_EVENTS, EventSource, SliceSource};
 use crate::events::{Event, Resolution};
 use crate::nmc::{NmcConfig, NmcMacro};
 use crate::runtime::{default_artifact_dir, HarrisEngine, Manifest};
@@ -165,6 +174,10 @@ pub struct PipelineConfig {
     pub async_refresh: bool,
     /// Score threshold above which an event is tagged a corner.
     pub corner_threshold: f64,
+    /// Record per-event data (`signal_events`, `scores`, `corners`) in
+    /// the [`RunReport`]. Disable for unbounded streamed runs so the
+    /// report holds only O(1) counters instead of O(stream) vectors.
+    pub record_per_event: bool,
 }
 
 impl PipelineConfig {
@@ -187,6 +200,7 @@ impl PipelineConfig {
             lut_refresh_events: 2_000,
             async_refresh: false,
             corner_threshold: 0.55,
+            record_per_event: true,
         }
     }
 
@@ -201,6 +215,11 @@ impl PipelineConfig {
 }
 
 /// Everything a run produces.
+///
+/// The per-event vectors (`signal_events`, `scores`, `corners`) are
+/// populated only when [`PipelineConfig::record_per_event`] is on (the
+/// default); counters (`events_in`, `events_signal`, `corners_total`)
+/// are always exact, so unbounded streamed runs stay O(1) memory here.
 #[derive(Debug, Clone)]
 pub struct RunReport {
     /// TOS backend that ran ([`TosBackend::name`]).
@@ -211,17 +230,22 @@ pub struct RunReport {
     pub events_in: usize,
     /// Events surviving STCF.
     pub events_signal: usize,
-    /// The surviving events, in order (index-aligned with `scores`).
+    /// The surviving events, in order (index-aligned with `scores`);
+    /// empty when per-event recording is off.
     pub signal_events: Vec<Event>,
-    /// Per-signal-event corner score.
+    /// Per-signal-event corner score; empty when recording is off.
     pub scores: Vec<f64>,
-    /// Indices (into `signal_events`) tagged as corners.
+    /// Indices (into `signal_events`) tagged as corners; empty when
+    /// recording is off.
     pub corners: Vec<usize>,
+    /// Total corner tags, counted regardless of recording mode.
+    pub corners_total: u64,
     /// Unified backend telemetry (latency/energy totals, bit flips).
     pub backend: BackendStats,
     /// Voltage switches performed by DVFS.
     pub dvfs_switches: u64,
-    /// Harris LUT refreshes that completed.
+    /// Harris LUT refreshes applied to the detector (sync and async mode
+    /// count the same thing: LUTs the event path actually consumed).
     pub lut_refreshes: u64,
     /// Wall-clock seconds of the whole run (host side).
     pub wall_s: f64,
@@ -412,94 +436,97 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
         &self.detector
     }
 
-    /// Run the pipeline over a time-sorted event stream.
+    /// Run the pipeline over a fully materialized, time-sorted event
+    /// stream. Thin wrapper over [`Pipeline::run_stream`] (the slice is
+    /// served in default-size chunks, which is bit-identical to any
+    /// other chunking) — kept for tests, experiments and every caller
+    /// that already holds the recording in memory.
     pub fn run(&mut self, events: &[Event]) -> Result<RunReport> {
+        self.run_stream(&mut SliceSource::new(events, DEFAULT_CHUNK_EVENTS))
+    }
+
+    /// Run the pipeline over a streaming [`EventSource`], keeping peak
+    /// event-buffer memory O(chunk): DVFS, STCF, LUT-refresh and
+    /// batch-flush state all carry across chunk boundaries, so the
+    /// result is bit-identical to [`Pipeline::run`] on the concatenated
+    /// stream at any chunk size.
+    pub fn run_stream<S: EventSource + ?Sized>(&mut self, source: &mut S) -> Result<RunReport> {
         // Async mode only applies when there is an FBF stage to decouple:
         // a LUT-consuming detector AND an engine (engine-less pipelines
         // stay headless — the worker must not load artifacts behind the
         // caller's back).
         if self.cfg.async_refresh && self.detector.wants_lut() && self.engine.is_some() {
-            self.run_async(events)
+            self.run_stream_async(source)
         } else {
-            self.run_sync(events)
+            self.run_stream_sync(source)
         }
     }
 
     /// Synchronous mode: inline LUT refresh every `lut_refresh_events`.
-    fn run_sync(&mut self, events: &[Event]) -> Result<RunReport> {
+    fn run_stream_sync<S: EventSource + ?Sized>(&mut self, source: &mut S) -> Result<RunReport> {
         let start = Instant::now();
-        let mut signal_events = Vec::with_capacity(events.len());
-        let mut scores = Vec::with_capacity(events.len());
-        let mut corners = Vec::new();
-        let mut pending: Vec<Event> = Vec::new();
-        let mut since_refresh = 0usize;
-        let mut dvfs_switches = 0u64;
-        let mut lut_refreshes = 0u64;
+        let mut st = StreamState::new(self.cfg.record_per_event);
         // without an FBF stage there is no refresh boundary — don't cap
         // the backend batches on a no-op schedule
         let refresh_enabled = self.engine.is_some() && self.detector.wants_lut();
         let batching = self.backend.prefers_batching();
+        let mut chunk: Vec<Event> = Vec::new();
 
-        for ev in events {
-            // --- DVFS monitors the *raw* event rate (paper Fig. 2) -------
-            if let Some(ctrl) = &mut self.dvfs {
-                if let Some(op) = ctrl.on_event(ev.t) {
-                    // settle pending updates at the old voltage first
-                    flush_pending(&mut self.backend, &mut pending);
-                    self.backend.set_vdd(op.vdd);
-                    dvfs_switches += 1;
+        loop {
+            chunk.clear();
+            if source.next_chunk(&mut chunk)? == 0 {
+                break;
+            }
+            st.events_in += chunk.len();
+            for ev in &chunk {
+                // --- DVFS monitors the *raw* event rate (paper Fig. 2) ---
+                if let Some(ctrl) = &mut self.dvfs {
+                    if let Some(op) = ctrl.on_event(ev.t) {
+                        // settle pending updates at the old voltage first
+                        flush_pending(&mut self.backend, &mut st.pending);
+                        self.backend.set_vdd(op.vdd);
+                        st.dvfs_switches += 1;
+                    }
                 }
-            }
-            // --- STCF denoise --------------------------------------------
-            if let Some(f) = &mut self.stcf {
-                if !f.check(ev) {
-                    continue;
+                // --- STCF denoise ----------------------------------------
+                if let Some(f) = &mut self.stcf {
+                    if !f.check(ev) {
+                        continue;
+                    }
                 }
-            }
-            // --- TOS update (the hot path): batch-parallel backends get
-            // events buffered and flushed at snapshot boundaries; per-event
-            // backends are fed directly --------------------------------------
-            if batching {
-                pending.push(*ev);
-                if pending.len() >= BACKEND_BATCH_MAX {
-                    flush_pending(&mut self.backend, &mut pending);
+                // --- TOS update (the hot path): batch-parallel backends
+                // get events buffered and flushed at snapshot boundaries;
+                // per-event backends are fed directly ---------------------
+                if batching {
+                    st.pending.push(*ev);
+                    if st.pending.len() >= BACKEND_BATCH_MAX {
+                        flush_pending(&mut self.backend, &mut st.pending);
+                    }
+                } else {
+                    self.backend.process(ev);
                 }
-            } else {
-                self.backend.process(ev);
-            }
-            // --- FBF Harris refresh (inline in sync mode) -----------------
-            since_refresh += 1;
-            if refresh_enabled && since_refresh >= self.cfg.lut_refresh_events {
-                since_refresh = 0;
-                flush_pending(&mut self.backend, &mut pending);
-                if self.refresh_lut()? {
-                    lut_refreshes += 1;
+                // --- FBF Harris refresh (inline in sync mode) ------------
+                st.since_refresh += 1;
+                if refresh_enabled && st.since_refresh >= self.cfg.lut_refresh_events {
+                    st.since_refresh = 0;
+                    flush_pending(&mut self.backend, &mut st.pending);
+                    if self.refresh_lut()? {
+                        st.lut_refreshes += 1;
+                    }
                 }
+                // --- tag -------------------------------------------------
+                let score = self.detector.score(ev);
+                st.tag(ev, score, self.cfg.corner_threshold);
             }
-            // --- tag ------------------------------------------------------
-            let score = self.detector.score(ev);
-            if score >= self.cfg.corner_threshold {
-                corners.push(signal_events.len());
-            }
-            scores.push(score);
-            signal_events.push(*ev);
         }
-        flush_pending(&mut self.backend, &mut pending);
+        flush_pending(&mut self.backend, &mut st.pending);
 
-        Ok(self.report(
-            events.len(),
-            signal_events,
-            scores,
-            corners,
-            dvfs_switches,
-            lut_refreshes,
-            start.elapsed().as_secs_f64(),
-        ))
+        Ok(self.report(st, start.elapsed().as_secs_f64()))
     }
 
     /// Asynchronous mode: the LUT worker owns its own engine and consumes
     /// TOS snapshots through a depth-1 channel; busy -> snapshot dropped.
-    fn run_async(&mut self, events: &[Event]) -> Result<RunReport> {
+    fn run_stream_async<S: EventSource + ?Sized>(&mut self, source: &mut S) -> Result<RunReport> {
         let start = Instant::now();
         let dir = self.cfg.artifact_dir.clone().unwrap_or_else(default_artifact_dir);
         let artifact = self.cfg.artifact.clone();
@@ -509,89 +536,86 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
         let worker = std::thread::spawn(move || -> Result<u64> {
             let manifest = Manifest::load(&dir)?;
             let mut engine = HarrisEngine::load(&manifest, &artifact)?;
-            let mut refreshes = 0u64;
+            let mut computed = 0u64;
             while let Ok(tos) = snap_rx.recv() {
                 let lut = engine.compute_u8(&tos)?;
-                refreshes += 1;
+                computed += 1;
                 if lut_tx.send(lut).is_err() {
                     break;
                 }
             }
-            Ok(refreshes)
+            Ok(computed)
         });
 
-        let mut signal_events = Vec::with_capacity(events.len());
-        let mut scores = Vec::with_capacity(events.len());
-        let mut corners = Vec::new();
-        let mut pending: Vec<Event> = Vec::new();
-        let mut dvfs_switches = 0u64;
+        let mut st = StreamState::new(self.cfg.record_per_event);
         let mut since_snapshot = 0usize;
         let batching = self.backend.prefers_batching();
         // offer a snapshot at least this often (events); the worker decides
         // the actual refresh rate by how fast it drains the channel.
         let offer_every = (self.cfg.lut_refresh_events / 4).max(1);
+        let mut chunk: Vec<Event> = Vec::new();
 
-        for ev in events {
-            if let Some(ctrl) = &mut self.dvfs {
-                if let Some(op) = ctrl.on_event(ev.t) {
-                    flush_pending(&mut self.backend, &mut pending);
-                    self.backend.set_vdd(op.vdd);
-                    dvfs_switches += 1;
-                }
+        loop {
+            chunk.clear();
+            if source.next_chunk(&mut chunk)? == 0 {
+                break;
             }
-            if let Some(f) = &mut self.stcf {
-                if !f.check(ev) {
-                    continue;
+            st.events_in += chunk.len();
+            for ev in &chunk {
+                if let Some(ctrl) = &mut self.dvfs {
+                    if let Some(op) = ctrl.on_event(ev.t) {
+                        flush_pending(&mut self.backend, &mut st.pending);
+                        self.backend.set_vdd(op.vdd);
+                        st.dvfs_switches += 1;
+                    }
                 }
-            }
-            if batching {
-                pending.push(*ev);
-                if pending.len() >= BACKEND_BATCH_MAX {
-                    flush_pending(&mut self.backend, &mut pending);
+                if let Some(f) = &mut self.stcf {
+                    if !f.check(ev) {
+                        continue;
+                    }
                 }
-            } else {
-                self.backend.process(ev);
-            }
+                if batching {
+                    st.pending.push(*ev);
+                    if st.pending.len() >= BACKEND_BATCH_MAX {
+                        flush_pending(&mut self.backend, &mut st.pending);
+                    }
+                } else {
+                    self.backend.process(ev);
+                }
 
-            // non-blocking LUT pickup
-            while let Ok(lut) = lut_rx.try_recv() {
-                self.detector.refresh_lut(&lut);
-            }
-            since_snapshot += 1;
-            if since_snapshot >= offer_every {
-                since_snapshot = 0;
-                flush_pending(&mut self.backend, &mut pending);
-                // drop the snapshot if the worker is busy (luvHarris "as
-                // fast as possible" semantics, no backpressure onto events)
-                let _ = snap_tx.try_send(self.backend.snapshot_u8());
-            }
+                // non-blocking LUT pickup; `lut_refreshes` counts LUTs the
+                // detector actually consumed, not what the worker computed
+                // (a final in-flight LUT may arrive after the last score)
+                while let Ok(lut) = lut_rx.try_recv() {
+                    self.detector.refresh_lut(&lut);
+                    st.lut_refreshes += 1;
+                }
+                since_snapshot += 1;
+                if since_snapshot >= offer_every {
+                    since_snapshot = 0;
+                    flush_pending(&mut self.backend, &mut st.pending);
+                    // drop the snapshot if the worker is busy (luvHarris "as
+                    // fast as possible" semantics, no backpressure on events)
+                    let _ = snap_tx.try_send(self.backend.snapshot_u8());
+                }
 
-            let score = self.detector.score(ev);
-            if score >= self.cfg.corner_threshold {
-                corners.push(signal_events.len());
+                let score = self.detector.score(ev);
+                st.tag(ev, score, self.cfg.corner_threshold);
             }
-            scores.push(score);
-            signal_events.push(*ev);
         }
-        flush_pending(&mut self.backend, &mut pending);
+        flush_pending(&mut self.backend, &mut st.pending);
 
         drop(snap_tx);
-        // drain remaining LUTs
+        let computed = worker.join().map_err(|_| anyhow::anyhow!("LUT worker panicked"))??;
+        // the worker has exited: drain every remaining LUT into the final
+        // detector state, so each counted refresh was actually applied
         while let Ok(lut) = lut_rx.try_recv() {
             self.detector.refresh_lut(&lut);
+            st.lut_refreshes += 1;
         }
-        let worker_refreshes =
-            worker.join().map_err(|_| anyhow::anyhow!("LUT worker panicked"))??;
+        debug_assert!(st.lut_refreshes <= computed);
 
-        Ok(self.report(
-            events.len(),
-            signal_events,
-            scores,
-            corners,
-            dvfs_switches,
-            worker_refreshes,
-            start.elapsed().as_secs_f64(),
-        ))
+        Ok(self.report(st, start.elapsed().as_secs_f64()))
     }
 
     /// Inline LUT refresh (sync mode). Returns whether a refresh ran.
@@ -611,32 +635,77 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
         Ok(true)
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn report(
-        &self,
-        events_in: usize,
-        signal_events: Vec<Event>,
-        scores: Vec<f64>,
-        corners: Vec<usize>,
-        dvfs_switches: u64,
-        lut_refreshes: u64,
-        wall_s: f64,
-    ) -> RunReport {
+    fn report(&self, st: StreamState, wall_s: f64) -> RunReport {
         RunReport {
             backend_name: self.backend.name(),
             detector_name: self.detector.name(),
-            events_in,
-            events_signal: signal_events.len(),
-            signal_events,
-            scores,
-            corners,
+            events_in: st.events_in,
+            events_signal: st.events_signal,
+            signal_events: st.signal_events,
+            scores: st.scores,
+            corners: st.corners,
+            corners_total: st.corners_total,
             backend: self.backend.stats(),
-            dvfs_switches,
-            lut_refreshes,
+            dvfs_switches: st.dvfs_switches,
+            lut_refreshes: st.lut_refreshes,
             wall_s,
             final_tos: self.backend.snapshot_u8(),
             final_lut: self.detector.lut().map(<[f32]>::to_vec).unwrap_or_default(),
         }
+    }
+}
+
+/// Mutable run state threaded across chunk boundaries: everything the
+/// per-event loop accumulates lives here, so a streamed run is
+/// bit-identical to a load-all run at any chunk size.
+struct StreamState {
+    /// Record per-event vectors (off = counters only, O(1) memory).
+    record: bool,
+    signal_events: Vec<Event>,
+    scores: Vec<f64>,
+    corners: Vec<usize>,
+    corners_total: u64,
+    events_in: usize,
+    events_signal: usize,
+    /// Signal events buffered for batch-preferring backends; flushed at
+    /// snapshot boundaries and when `BACKEND_BATCH_MAX` is reached.
+    pending: Vec<Event>,
+    since_refresh: usize,
+    dvfs_switches: u64,
+    lut_refreshes: u64,
+}
+
+impl StreamState {
+    fn new(record: bool) -> Self {
+        Self {
+            record,
+            signal_events: Vec::new(),
+            scores: Vec::new(),
+            corners: Vec::new(),
+            corners_total: 0,
+            events_in: 0,
+            events_signal: 0,
+            pending: Vec::new(),
+            since_refresh: 0,
+            dvfs_switches: 0,
+            lut_refreshes: 0,
+        }
+    }
+
+    /// Record one scored signal event (the tag stage).
+    #[inline]
+    fn tag(&mut self, ev: &Event, score: f64, threshold: f64) {
+        if score >= threshold {
+            if self.record {
+                self.corners.push(self.events_signal);
+            }
+            self.corners_total += 1;
+        }
+        if self.record {
+            self.scores.push(score);
+            self.signal_events.push(*ev);
+        }
+        self.events_signal += 1;
     }
 }
 
@@ -763,6 +832,49 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn streamed_chunks_bit_identical_to_load_all() {
+        let mut scene = SceneConfig::test64().build(11);
+        let events = scene.generate(12_000);
+        let mut pipe = Pipeline::new_without_engine(PipelineConfig::test64()).unwrap();
+        let want = pipe.run(&events).unwrap();
+        for chunk in [1usize, 97, 4096] {
+            let mut pipe = Pipeline::new_without_engine(PipelineConfig::test64()).unwrap();
+            let got = pipe
+                .run_stream(&mut crate::events::source::SliceSource::new(&events, chunk))
+                .unwrap();
+            assert_eq!(want.final_tos, got.final_tos, "chunk {chunk}");
+            assert_eq!(want.scores, got.scores, "chunk {chunk}");
+            assert_eq!(want.corners, got.corners, "chunk {chunk}");
+            assert_eq!(want.events_in, got.events_in, "chunk {chunk}");
+            assert_eq!(want.events_signal, got.events_signal, "chunk {chunk}");
+            assert_eq!(want.dvfs_switches, got.dvfs_switches, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn no_record_mode_keeps_counters_only() {
+        let mut scene = SceneConfig::test64().build(12);
+        let events = scene.generate(10_000);
+        let mut cfg = PipelineConfig::test64();
+        cfg.dvfs = None;
+        let mut pipe = Pipeline::new_without_engine(cfg.clone()).unwrap();
+        let full = pipe.run(&events).unwrap();
+
+        cfg.record_per_event = false;
+        let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
+        let lean = pipe.run(&events).unwrap();
+
+        assert!(lean.signal_events.is_empty());
+        assert!(lean.scores.is_empty());
+        assert!(lean.corners.is_empty());
+        assert_eq!(lean.events_in, full.events_in);
+        assert_eq!(lean.events_signal, full.events_signal);
+        assert_eq!(lean.corners_total, full.corners_total);
+        assert_eq!(full.corners_total as usize, full.corners.len());
+        assert_eq!(lean.final_tos, full.final_tos);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! Ground truth: every polygon vertex contributes a [`gt::CornerTrack`]
 //! sampled at each animation step.
 
+use crate::events::source::EventSource;
 use crate::events::{Event, Polarity, Resolution};
 use crate::util::rng::Rng;
 
@@ -182,80 +183,96 @@ impl Scene {
         &self.cfg
     }
 
-    /// Generate `n` events (time-sorted) together with ground truth.
-    pub fn generate_with_gt(&mut self, n: usize) -> (Vec<Event>, GroundTruth) {
-        let mut events: Vec<Event> = Vec::with_capacity(n + n / 8);
-        let mut tracks: Vec<CornerTrack> =
-            vec![CornerTrack::default(); self.shapes.iter().map(|s| s.verts.len()).sum()];
+    /// Advance the animation by one step at `t_us`, appending the step's
+    /// events (unsorted; all timestamps in `[t_us, t_us + step_us)`).
+    /// When `tracks` is given, ground-truth corner positions are sampled
+    /// into it (indexed as in [`GroundTruth::tracks`]). The RNG call
+    /// sequence is identical with or without tracks, so streamed and
+    /// batch generation stay bit-identical per seed.
+    fn step(
+        &mut self,
+        t_us: u64,
+        events: &mut Vec<Event>,
+        mut tracks: Option<&mut Vec<CornerTrack>>,
+    ) {
         let res = self.cfg.res;
         let step_us = self.cfg.step_us;
         let step_s = step_us as f64 * 1e-6;
         let signal_per_step = self.cfg.signal_rate * step_s;
         let noise_per_step = self.cfg.noise_rate * step_s;
-
-        let mut t_us: u64 = 0;
-        while events.len() < n {
-            let t_s = t_us as f32 * 1e-6;
-            // --- ground truth sampling + boundary event emission ----------
-            let mut boundary: Vec<(f32, f32, Polarity)> = Vec::with_capacity(512);
-            let mut track_idx = 0usize;
-            for shape in &self.shapes {
-                let verts = shape.verts_at(t_s, res);
-                let verts_next = shape.verts_at(t_s + step_s as f32, res);
+        let t_s = t_us as f32 * 1e-6;
+        // --- ground truth sampling + boundary event emission ----------
+        let mut boundary: Vec<(f32, f32, Polarity)> = Vec::with_capacity(512);
+        let mut track_idx = 0usize;
+        for shape in &self.shapes {
+            let verts = shape.verts_at(t_s, res);
+            let verts_next = shape.verts_at(t_s + step_s as f32, res);
+            if let Some(tracks) = tracks.as_deref_mut() {
                 for (vi, &(vx, vy)) in verts.iter().enumerate() {
                     let tr = &mut tracks[track_idx + vi];
                     tr.t_us.push(t_us);
                     tr.x.push(vx);
                     tr.y.push(vy);
                 }
-                // walk each edge, sample boundary points, polarity from the
-                // sign of normal motion
-                let k = verts.len();
-                for i in 0..k {
-                    let a = verts[i];
-                    let b = verts[(i + 1) % k];
-                    let a2 = verts_next[i];
-                    let len = ((b.0 - a.0).powi(2) + (b.1 - a.1).powi(2)).sqrt();
-                    let samples = (len.ceil() as usize).max(2);
-                    // edge normal (outward-ish; sign only matters for ON/OFF)
-                    let nx = b.1 - a.1;
-                    let ny = a.0 - b.0;
-                    let mvx = a2.0 - a.0;
-                    let mvy = a2.1 - a.1;
-                    let lead = nx * mvx + ny * mvy >= 0.0;
-                    for s in 0..samples {
-                        let f = s as f32 / samples as f32;
-                        let px = a.0 + f * (b.0 - a.0);
-                        let py = a.1 + f * (b.1 - a.1);
-                        boundary.push((px, py, if lead { Polarity::On } else { Polarity::Off }));
-                    }
-                }
-                track_idx += k;
             }
-            // thin boundary samples to the target signal rate
-            let want_signal = self.rng.poisson(signal_per_step) as usize;
-            if !boundary.is_empty() {
-                for _ in 0..want_signal {
-                    let &(px, py, pol) = &boundary[self.rng.below(boundary.len() as u64) as usize];
-                    // sub-pixel jitter models edge thickness
-                    let x = px + self.rng.normal(0.0, 0.5) as f32;
-                    let y = py + self.rng.normal(0.0, 0.5) as f32;
-                    if res.contains(x as i32, y as i32) && x >= 0.0 && y >= 0.0 {
-                        let jitter = self.rng.below(step_us.max(1)) as u64;
-                        events.push(Event::new(x as u16, y as u16, t_us + jitter, pol));
-                    }
+            // walk each edge, sample boundary points, polarity from the
+            // sign of normal motion
+            let k = verts.len();
+            for i in 0..k {
+                let a = verts[i];
+                let b = verts[(i + 1) % k];
+                let a2 = verts_next[i];
+                let len = ((b.0 - a.0).powi(2) + (b.1 - a.1).powi(2)).sqrt();
+                let samples = (len.ceil() as usize).max(2);
+                // edge normal (outward-ish; sign only matters for ON/OFF)
+                let nx = b.1 - a.1;
+                let ny = a.0 - b.0;
+                let mvx = a2.0 - a.0;
+                let mvy = a2.1 - a.1;
+                let lead = nx * mvx + ny * mvy >= 0.0;
+                for s in 0..samples {
+                    let f = s as f32 / samples as f32;
+                    let px = a.0 + f * (b.0 - a.0);
+                    let py = a.1 + f * (b.1 - a.1);
+                    boundary.push((px, py, if lead { Polarity::On } else { Polarity::Off }));
                 }
             }
-            // BA noise: uniform isolated events
-            let want_noise = self.rng.poisson(noise_per_step) as usize;
-            for _ in 0..want_noise {
-                let x = self.rng.below(res.width as u64) as u16;
-                let y = self.rng.below(res.height as u64) as u16;
-                let jitter = self.rng.below(step_us.max(1)) as u64;
-                let pol = if self.rng.chance(0.5) { Polarity::On } else { Polarity::Off };
-                events.push(Event::new(x, y, t_us + jitter, pol));
+            track_idx += k;
+        }
+        // thin boundary samples to the target signal rate
+        let want_signal = self.rng.poisson(signal_per_step) as usize;
+        if !boundary.is_empty() {
+            for _ in 0..want_signal {
+                let &(px, py, pol) = &boundary[self.rng.below(boundary.len() as u64) as usize];
+                // sub-pixel jitter models edge thickness
+                let x = px + self.rng.normal(0.0, 0.5) as f32;
+                let y = py + self.rng.normal(0.0, 0.5) as f32;
+                if res.contains(x as i32, y as i32) && x >= 0.0 && y >= 0.0 {
+                    let jitter = self.rng.below(step_us.max(1)) as u64;
+                    events.push(Event::new(x as u16, y as u16, t_us + jitter, pol));
+                }
             }
-            t_us += step_us;
+        }
+        // BA noise: uniform isolated events
+        let want_noise = self.rng.poisson(noise_per_step) as usize;
+        for _ in 0..want_noise {
+            let x = self.rng.below(res.width as u64) as u16;
+            let y = self.rng.below(res.height as u64) as u16;
+            let jitter = self.rng.below(step_us.max(1)) as u64;
+            let pol = if self.rng.chance(0.5) { Polarity::On } else { Polarity::Off };
+            events.push(Event::new(x, y, t_us + jitter, pol));
+        }
+    }
+
+    /// Generate `n` events (time-sorted) together with ground truth.
+    pub fn generate_with_gt(&mut self, n: usize) -> (Vec<Event>, GroundTruth) {
+        let mut events: Vec<Event> = Vec::with_capacity(n + n / 8);
+        let mut tracks: Vec<CornerTrack> =
+            vec![CornerTrack::default(); self.shapes.iter().map(|s| s.verts.len()).sum()];
+        let mut t_us: u64 = 0;
+        while events.len() < n {
+            self.step(t_us, &mut events, Some(&mut tracks));
+            t_us += self.cfg.step_us;
         }
         events.sort_by_key(|e| e.t);
         events.truncate(n);
@@ -265,6 +282,59 @@ impl Scene {
     /// Generate `n` events without keeping ground truth.
     pub fn generate(&mut self, n: usize) -> Vec<Event> {
         self.generate_with_gt(n).0
+    }
+
+    /// Turn the scene into a bounded-memory [`EventSource`] yielding
+    /// `total_events` events in chunks of `chunk_events`.
+    pub fn into_source(self, total_events: usize, chunk_events: usize) -> SceneSource {
+        SceneSource::new(self, total_events, chunk_events)
+    }
+}
+
+/// Stream a synthetic scene as bounded chunks without materializing the
+/// whole recording: the scene is stepped on demand and each step's
+/// events are sorted locally (step time ranges are disjoint, so the
+/// concatenation is globally time-sorted). The emitted stream is
+/// bit-identical to [`Scene::generate`] with the same seed and total.
+#[derive(Debug, Clone)]
+pub struct SceneSource {
+    scene: Scene,
+    remaining: usize,
+    chunk_events: usize,
+    t_us: u64,
+    step_buf: Vec<Event>,
+}
+
+impl SceneSource {
+    /// Stream `total_events` events from `scene`, `chunk_events` at a time.
+    pub fn new(scene: Scene, total_events: usize, chunk_events: usize) -> Self {
+        Self {
+            scene,
+            remaining: total_events,
+            chunk_events: chunk_events.max(1),
+            t_us: 0,
+            step_buf: Vec::new(),
+        }
+    }
+}
+
+impl EventSource for SceneSource {
+    fn next_chunk(&mut self, out: &mut Vec<Event>) -> anyhow::Result<usize> {
+        let start = out.len();
+        while out.len() - start < self.chunk_events && self.remaining > 0 {
+            self.step_buf.clear();
+            self.scene.step(self.t_us, &mut self.step_buf, None);
+            self.t_us += self.scene.cfg.step_us;
+            self.step_buf.sort_by_key(|e| e.t);
+            let take = self.step_buf.len().min(self.remaining);
+            out.extend_from_slice(&self.step_buf[..take]);
+            self.remaining -= take;
+        }
+        Ok(out.len() - start)
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.remaining)
     }
 }
 
@@ -339,6 +409,19 @@ mod tests {
             s.mean_rate,
             target
         );
+    }
+
+    #[test]
+    fn scene_source_matches_batch_generation() {
+        let want = SceneConfig::test64().build(9).generate(5_000);
+        for chunk in [1usize, 333, 5_000, 9_999] {
+            let mut src = SceneConfig::test64().build(9).into_source(5_000, chunk);
+            assert_eq!(src.size_hint(), Some(5_000));
+            let mut got = Vec::new();
+            while src.next_chunk(&mut got).unwrap() > 0 {}
+            assert_eq!(got, want, "chunk {chunk}");
+            assert_eq!(src.size_hint(), Some(0));
+        }
     }
 
     #[test]

@@ -126,14 +126,7 @@ impl DvfsController {
     /// Feed one event timestamp (µs). Returns `Some(new_point)` when the
     /// controller switches voltage.
     pub fn on_event(&mut self, t_us: u64) -> Option<OperatingPoint> {
-        let mut switched = None;
-        // close any half-windows the stream has moved past
-        while t_us >= self.half_end_us {
-            self.rotate();
-            if let Some(op) = self.retarget() {
-                switched = Some(op);
-            }
-        }
+        let switched = self.advance_to(t_us);
         let max = (1u64 << self.cfg.counter_bits) - 1;
         let c = &mut self.counters[self.ptr];
         if (*c as u64) < max {
@@ -151,9 +144,37 @@ impl DvfsController {
         let max = (1u64 << self.cfg.counter_bits) - 1;
         let c = &mut self.counters[self.ptr];
         *c = (*c as u64).saturating_add(count).min(max) as u32;
+        self.advance_to(t_end_us)
+    }
+
+    /// Close every half-window boundary at or before `t_us`. O(1) for
+    /// arbitrarily long gaps (an idle stretch, or a recording whose
+    /// timestamps start at epoch scale): after three boundary crossings
+    /// with no intervening events all counters are zero, so the remaining
+    /// boundaries are skipped arithmetically instead of rotating once per
+    /// elapsed half-window.
+    fn advance_to(&mut self, t_us: u64) -> Option<OperatingPoint> {
         let mut switched = None;
-        while self.half_end_us <= t_end_us {
+        // rotate through at most three boundaries the normal way — enough
+        // to drain any non-zero counters into (then out of) history
+        let mut steps = 0;
+        while t_us >= self.half_end_us && steps < 3 {
             self.rotate();
+            if let Some(op) = self.retarget() {
+                switched = Some(op);
+            }
+            steps += 1;
+        }
+        if t_us >= self.half_end_us {
+            // gap spans further boundaries: all three counters are zero
+            // now, so every skipped rotation would observe a zero rate —
+            // fast-forward the boundary clock and retarget once
+            debug_assert_eq!(self.counters, [0; 3]);
+            let half = (self.cfg.tw_us / 2).max(1);
+            let skips = (t_us - self.half_end_us) / half + 1;
+            self.ptr = (self.ptr + (skips % 3) as usize) % 3;
+            self.half_end_us = self.half_end_us.saturating_add(skips.saturating_mul(half));
+            self.rotations = self.rotations.saturating_add(skips);
             if let Some(op) = self.retarget() {
                 switched = Some(op);
             }
@@ -165,7 +186,10 @@ impl DvfsController {
     fn rotate(&mut self) {
         self.ptr = (self.ptr + 1) % 3;
         self.counters[self.ptr] = 0;
-        self.half_end_us += self.cfg.tw_us / 2;
+        // saturating: once a crafted timestamp pins the boundary clock at
+        // u64::MAX, further rotations must not overflow (work per event
+        // stays bounded by the advance_to rotation cap)
+        self.half_end_us = self.half_end_us.saturating_add(self.cfg.tw_us / 2);
         self.rotations += 1;
     }
 
@@ -303,6 +327,76 @@ mod tests {
             c.on_event(0);
         }
         assert_eq!(c.counters[c.ptr], 15);
+    }
+
+    #[test]
+    fn epoch_scale_first_timestamp_is_o1() {
+        // real recordings carry wall-clock µs timestamps; the first event
+        // used to spin the rotation loop ~2e11 times before processing
+        let mut c = DvfsController::new(DvfsConfig::default());
+        let t0 = 1_000_000_000_000_000u64; // 1e15 µs
+        for i in 0..1000u64 {
+            c.on_event(t0 + i * 100); // 10 keps after the jump
+        }
+        assert!((c.operating_point().vdd - 0.6).abs() < 1e-9);
+        let est = c.estimated_rate().unwrap();
+        assert!((est - 10_000.0).abs() / 10_000.0 < 0.05, "est {est}");
+    }
+
+    #[test]
+    fn long_idle_gap_is_o1_and_resets_rate() {
+        let mut c = DvfsController::new(DvfsConfig::default());
+        // busy phase: 30 Meps for 30 ms -> high voltage
+        let mut t = 0u64;
+        for _ in 0..900_000u64 {
+            c.on_event(t / 30);
+            t += 1;
+        }
+        assert!(c.operating_point().vdd > 0.8, "vdd {}", c.operating_point().vdd);
+        // ten-minute silence, then one event: O(1), history fully drained
+        let resume = 30_000 + 600_000_000u64;
+        c.on_event(resume);
+        assert!(c.estimated_rate().unwrap() < 1.0);
+        assert!((c.operating_point().vdd - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timestamps_at_u64_max_do_not_overflow() {
+        // crafted recordings can carry any u64 timestamp; the boundary
+        // clock saturates instead of overflowing or spinning
+        let mut c = DvfsController::new(DvfsConfig::default());
+        c.on_event(0);
+        c.on_event(u64::MAX - 1);
+        c.on_event(u64::MAX);
+        c.on_event(u64::MAX);
+        assert!((c.operating_point().vdd - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fast_forward_matches_rotation_loop_state() {
+        // cross-check the O(1) skip against per-boundary rotation for a
+        // gap short enough to iterate
+        let cfg = DvfsConfig::default();
+        let half = cfg.tw_us / 2;
+        for gap_halves in [3u64, 4, 5, 7, 10, 31] {
+            let mut skipped = DvfsController::new(cfg);
+            skipped.on_event(0);
+            skipped.on_event(gap_halves * half + 3);
+            let mut stepped = DvfsController::new(cfg);
+            stepped.on_event(0);
+            // walk boundary by boundary so the capped loop handles each
+            for k in 1..=gap_halves {
+                stepped.on_event(k * half);
+            }
+            stepped.on_event(gap_halves * half + 3);
+            assert_eq!(skipped.ptr, stepped.ptr, "gap {gap_halves}");
+            assert_eq!(skipped.half_end_us, stepped.half_end_us, "gap {gap_halves}");
+            assert_eq!(
+                skipped.operating_point().vdd,
+                stepped.operating_point().vdd,
+                "gap {gap_halves}"
+            );
+        }
     }
 
     #[test]

@@ -6,16 +6,29 @@
 //! * **Text**: `t x y p` per line (the format used by the Mueggler et al.
 //!   event-camera dataset the paper evaluates on), for interop with
 //!   published tooling.
+//!
+//! Both codecs decode **incrementally** through the streaming sources
+//! ([`BinaryStreamSource`], [`TextStreamSource`], see
+//! [`super::source::EventSource`]): the header's record count is treated
+//! as untrusted input — a corrupt or malicious length field produces a
+//! clean error instead of a huge preallocation — and the load-all
+//! [`read_binary`]/[`read_text`] helpers are thin collectors over the
+//! same decoders.
 
 use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use super::source::{DEFAULT_CHUNK_EVENTS, EventSource};
 use super::{Event, Polarity};
 
-const MAGIC: &[u8; 8] = b"NMCTOSEV";
+pub(crate) const MAGIC: &[u8; 8] = b"NMCTOSEV";
 const VERSION: u8 = 1;
 const RECORD_BYTES: usize = 13;
+
+/// Upper bound on events decoded per binary chunk (~52 MiB of records):
+/// keeps the record buffer bounded whatever chunk size a caller asks for.
+const MAX_CHUNK_EVENTS: usize = 1 << 22;
 
 /// Write a stream of events in the binary container format.
 pub fn write_binary<W: Write>(w: W, events: &[Event]) -> Result<()> {
@@ -33,33 +46,112 @@ pub fn write_binary<W: Write>(w: W, events: &[Event]) -> Result<()> {
     Ok(())
 }
 
-/// Read a stream of events from the binary container format.
+#[inline]
+fn decode_record(rec: &[u8]) -> Event {
+    Event {
+        x: u16::from_le_bytes([rec[0], rec[1]]),
+        y: u16::from_le_bytes([rec[2], rec[3]]),
+        t: u64::from_le_bytes(rec[4..12].try_into().unwrap()),
+        p: Polarity::from_bit(rec[12]),
+    }
+}
+
+/// Incremental decoder for the binary container: parses the header
+/// eagerly (validating magic + version), then yields records in bounded
+/// chunks. Memory stays O(chunk) no matter what the header's count field
+/// claims — short data errors with the shortfall, trailing data after
+/// the declared count errors instead of being silently ignored.
+pub struct BinaryStreamSource<R: Read> {
+    r: BufReader<R>,
+    /// Records the header still owes us.
+    remaining: u64,
+    declared: u64,
+    chunk_events: usize,
+    /// Reused record buffer (≤ chunk_events × 13 bytes).
+    buf: Vec<u8>,
+    done: bool,
+}
+
+impl<R: Read> BinaryStreamSource<R> {
+    /// Parse the container header and set up chunked decoding.
+    pub fn new(inner: R, chunk_events: usize) -> Result<Self> {
+        let mut r = BufReader::new(inner);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic).context("truncated header")?;
+        if &magic != MAGIC {
+            bail!("bad magic: {magic:?}");
+        }
+        let mut ver = [0u8; 1];
+        r.read_exact(&mut ver).context("truncated header")?;
+        if ver[0] != VERSION {
+            bail!("unsupported version {}", ver[0]);
+        }
+        let mut len = [0u8; 8];
+        r.read_exact(&mut len).context("truncated header")?;
+        let declared = u64::from_le_bytes(len);
+        Ok(Self {
+            r,
+            remaining: declared,
+            declared,
+            // cap the chunk so even a pathological caller-supplied size
+            // cannot turn the untrusted header count into a preallocation
+            chunk_events: chunk_events.clamp(1, MAX_CHUNK_EVENTS),
+            buf: Vec::new(),
+            done: false,
+        })
+    }
+
+    /// Record count the (untrusted) header declared.
+    pub fn declared_len(&self) -> u64 {
+        self.declared
+    }
+}
+
+impl<R: Read> EventSource for BinaryStreamSource<R> {
+    fn next_chunk(&mut self, out: &mut Vec<Event>) -> Result<usize> {
+        if self.done {
+            return Ok(0);
+        }
+        if self.remaining == 0 {
+            // declared count exhausted: any trailing byte is corruption
+            let mut probe = [0u8; 1];
+            let n = self.r.read(&mut probe)?;
+            ensure!(
+                n == 0,
+                "trailing data after the {} records the header declared",
+                self.declared
+            );
+            self.done = true;
+            return Ok(0);
+        }
+        let take = self.remaining.min(self.chunk_events as u64) as usize;
+        self.buf.resize(take * RECORD_BYTES, 0);
+        self.r.read_exact(&mut self.buf).with_context(|| {
+            format!(
+                "truncated records: header declared {}, at least {} missing",
+                self.declared, self.remaining
+            )
+        })?;
+        out.reserve(take);
+        for rec in self.buf.chunks_exact(RECORD_BYTES) {
+            out.push(decode_record(rec));
+        }
+        self.remaining -= take as u64;
+        Ok(take)
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        // the header is untrusted; only a hint, never a preallocation size
+        usize::try_from(self.remaining).ok()
+    }
+}
+
+/// Read a stream of events from the binary container format (load-all
+/// convenience over [`BinaryStreamSource`]).
 pub fn read_binary<R: Read>(r: R) -> Result<Vec<Event>> {
-    let mut r = BufReader::new(r);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic).context("truncated header")?;
-    if &magic != MAGIC {
-        bail!("bad magic: {:?}", magic);
-    }
-    let mut ver = [0u8; 1];
-    r.read_exact(&mut ver)?;
-    if ver[0] != VERSION {
-        bail!("unsupported version {}", ver[0]);
-    }
-    let mut len = [0u8; 8];
-    r.read_exact(&mut len)?;
-    let n = u64::from_le_bytes(len) as usize;
-    let mut buf = vec![0u8; n * RECORD_BYTES];
-    r.read_exact(&mut buf).context("truncated records")?;
-    let mut events = Vec::with_capacity(n);
-    for rec in buf.chunks_exact(RECORD_BYTES) {
-        events.push(Event {
-            x: u16::from_le_bytes([rec[0], rec[1]]),
-            y: u16::from_le_bytes([rec[2], rec[3]]),
-            t: u64::from_le_bytes(rec[4..12].try_into().unwrap()),
-            p: Polarity::from_bit(rec[12]),
-        });
-    }
+    let mut src = BinaryStreamSource::new(r, DEFAULT_CHUNK_EVENTS)?;
+    let mut events = Vec::new();
+    while src.next_chunk(&mut events)? > 0 {}
     Ok(events)
 }
 
@@ -73,28 +165,87 @@ pub fn write_text<W: Write>(w: W, events: &[Event]) -> Result<()> {
     Ok(())
 }
 
-/// Read events from `t_seconds x y p` lines.
-pub fn read_text<R: Read>(r: R) -> Result<Vec<Event>> {
-    let r = BufReader::new(r);
-    let mut events = Vec::new();
-    for (lineno, line) in r.lines().enumerate() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        let mut it = line.split_ascii_whitespace();
-        let parse = |tok: Option<&str>, what: &str| -> Result<f64> {
-            tok.with_context(|| format!("line {}: missing {what}", lineno + 1))?
-                .parse::<f64>()
-                .with_context(|| format!("line {}: bad {what}", lineno + 1))
-        };
-        let t = parse(it.next(), "t")?;
-        let x = parse(it.next(), "x")? as u16;
-        let y = parse(it.next(), "y")? as u16;
-        let p = parse(it.next(), "p")? as u8;
-        events.push(Event::new(x, y, (t * 1e6).round() as u64, Polarity::from_bit(p)));
+/// Parse one `t x y p` line (1-based `lineno` for error messages);
+/// `Ok(None)` for blank/comment lines. Out-of-range coordinates are
+/// line-numbered errors, never silently saturated into the sensor array.
+fn parse_text_line(lineno: usize, line: &str) -> Result<Option<Event>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
     }
+    let mut it = line.split_ascii_whitespace();
+    let mut parse = |what: &str| -> Result<f64> {
+        it.next()
+            .with_context(|| format!("line {lineno}: missing {what}"))?
+            .parse::<f64>()
+            .with_context(|| format!("line {lineno}: bad {what}"))
+    };
+    let t = parse("t")?;
+    ensure!(t.is_finite() && t >= 0.0, "line {lineno}: t {t} out of range");
+    let x = parse("x")?;
+    let y = parse("y")?;
+    let p = parse("p")?;
+    let coord = |v: f64, what: &str| -> Result<u16> {
+        ensure!(
+            v.is_finite() && (0.0..=u16::MAX as f64).contains(&v),
+            "line {lineno}: {what} {v} out of range 0..={}",
+            u16::MAX
+        );
+        Ok(v as u16)
+    };
+    let x = coord(x, "x")?;
+    let y = coord(y, "y")?;
+    ensure!(
+        p.is_finite() && (0.0..=255.0).contains(&p),
+        "line {lineno}: p {p} out of range 0..=255"
+    );
+    // the µs timestamp must fit u64 — no silent saturation to u64::MAX
+    let t_us = (t * 1e6).round();
+    ensure!(t_us < u64::MAX as f64, "line {lineno}: t {t} out of range");
+    Ok(Some(Event::new(x, y, t_us as u64, Polarity::from_bit(p as u8))))
+}
+
+/// Line-streaming decoder for the `t_seconds x y p` text format.
+pub struct TextStreamSource<R: Read> {
+    lines: io::Lines<BufReader<R>>,
+    lineno: usize,
+    chunk_events: usize,
+}
+
+impl<R: Read> TextStreamSource<R> {
+    /// Stream a text recording, `chunk_events` events per chunk (clamped
+    /// to the same per-chunk bound as the binary decoder, so `--input`
+    /// memory stays bounded for text recordings too).
+    pub fn new(inner: R, chunk_events: usize) -> Self {
+        Self {
+            lines: BufReader::new(inner).lines(),
+            lineno: 0,
+            chunk_events: chunk_events.clamp(1, MAX_CHUNK_EVENTS),
+        }
+    }
+}
+
+impl<R: Read> EventSource for TextStreamSource<R> {
+    fn next_chunk(&mut self, out: &mut Vec<Event>) -> Result<usize> {
+        let mut appended = 0usize;
+        while appended < self.chunk_events {
+            let Some(line) = self.lines.next() else { break };
+            self.lineno += 1;
+            if let Some(ev) = parse_text_line(self.lineno, &line?)? {
+                out.push(ev);
+                appended += 1;
+            }
+        }
+        Ok(appended)
+    }
+}
+
+/// Read events from `t_seconds x y p` lines (load-all convenience over
+/// [`TextStreamSource`]).
+pub fn read_text<R: Read>(r: R) -> Result<Vec<Event>> {
+    let mut src = TextStreamSource::new(r, DEFAULT_CHUNK_EVENTS);
+    let mut events = Vec::new();
+    while src.next_chunk(&mut events)? > 0 {}
     Ok(events)
 }
 
@@ -144,7 +295,45 @@ mod tests {
         let mut buf = Vec::new();
         write_binary(&mut buf, &sample()).unwrap();
         buf.truncate(buf.len() - 1);
-        assert!(read_binary(&buf[..]).is_err());
+        let err = read_binary(&buf[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated records"), "{err:#}");
+    }
+
+    #[test]
+    fn binary_rejects_huge_declared_count_without_preallocating() {
+        // header claims u64::MAX records over a 3-record body: must be a
+        // clean error, not a capacity-overflow abort or an OOM
+        let mut buf = Vec::new();
+        write_binary(&mut buf, &sample()).unwrap();
+        buf[9..17].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = read_binary(&buf[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated records"), "{err:#}");
+    }
+
+    #[test]
+    fn binary_rejects_undersized_declared_count() {
+        // header claims 2 records but 3 follow: the extra one is trailing
+        // data, not silently dropped
+        let mut buf = Vec::new();
+        write_binary(&mut buf, &sample()).unwrap();
+        buf[9..17].copy_from_slice(&2u64.to_le_bytes());
+        let err = read_binary(&buf[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing data"), "{err:#}");
+    }
+
+    #[test]
+    fn binary_stream_chunks_equal_load_all() {
+        let events: Vec<Event> =
+            (0..1000).map(|i| Event::on((i % 64) as u16, (i % 48) as u16, i as u64)).collect();
+        let mut buf = Vec::new();
+        write_binary(&mut buf, &events).unwrap();
+        for chunk in [1usize, 7, 256, 1000, 4096] {
+            let mut src = BinaryStreamSource::new(&buf[..], chunk).unwrap();
+            assert_eq!(src.declared_len(), 1000);
+            let mut out = Vec::new();
+            while src.next_chunk(&mut out).unwrap() > 0 {}
+            assert_eq!(out, events, "chunk {chunk}");
+        }
     }
 
     #[test]
@@ -167,6 +356,24 @@ mod tests {
     fn text_reports_bad_line() {
         let err = read_text("0.5 nope 2 1\n".as_bytes()).unwrap_err();
         assert!(format!("{err}").contains("line 1"));
+    }
+
+    #[test]
+    fn text_rejects_out_of_range_coordinates() {
+        // x = 70000 does not fit u16: used to saturate into a
+        // valid-looking event, must be a line-numbered error
+        let err = read_text("0.5 70000 2 1\n".as_bytes()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 1") && msg.contains("out of range"), "{msg}");
+
+        let err = read_text("0.000001 1 2 1\n0.5 3 -4 1\n".as_bytes()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2") && msg.contains("out of range"), "{msg}");
+
+        assert!(read_text("-0.5 1 2 1\n".as_bytes()).is_err());
+        assert!(read_text("0.5 1 2 900\n".as_bytes()).is_err());
+        // t too large for a u64 µs timestamp must error, not saturate
+        assert!(read_text("1e300 1 2 1\n".as_bytes()).is_err());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 pub mod bus;
 pub mod codec;
+pub mod source;
 pub mod stream;
 
 

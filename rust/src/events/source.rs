@@ -1,0 +1,194 @@
+//! Streaming event ingestion: [`EventSource`], a fallible chunked
+//! iterator over time-sorted event batches.
+//!
+//! Every run path used to materialize the entire recording as a
+//! `Vec<Event>` before the first event was processed, capping stream
+//! length by host memory. Practical event pipelines (luvHarris; Sun et
+//! al.'s memory-efficient DVS corner detection) must instead consume
+//! unbounded live streams with bounded state. An [`EventSource`] yields
+//! the stream in bounded chunks, so the coordinator's
+//! [`run_stream`](crate::coordinator::Pipeline::run_stream) keeps peak
+//! event-buffer memory O(chunk) regardless of recording length.
+//!
+//! Implementations:
+//! * [`SliceSource`] — an in-memory slice, chunked (also the adapter that
+//!   keeps the load-all [`run`](crate::coordinator::Pipeline::run) API).
+//! * [`codec::BinaryStreamSource`](super::codec::BinaryStreamSource) —
+//!   incremental binary-container decoding, no whole-file preallocation.
+//! * [`codec::TextStreamSource`](super::codec::TextStreamSource) —
+//!   line-streaming of the Mueggler `t x y p` text format.
+//! * [`SceneSource`](crate::datasets::synthetic::SceneSource) — the
+//!   synthetic scene generator, stepped on demand.
+//!
+//! [`open`] sniffs a file's container format and returns the right
+//! decoder behind a `Box<dyn EventSource + Send>`.
+
+use std::fs::File;
+use std::io::{Read, Seek};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::codec::{BinaryStreamSource, MAGIC, TextStreamSource};
+use super::Event;
+
+/// Default events per chunk: large enough to amortize per-chunk work,
+/// small enough that a chunk buffer stays ~1 MiB.
+pub const DEFAULT_CHUNK_EVENTS: usize = 65_536;
+
+/// A fallible chunked iterator over a time-sorted event stream.
+///
+/// Contract: `next_chunk` appends up to one chunk of events (in stream
+/// order, timestamps non-decreasing across calls) to `out` and returns
+/// how many it appended; `Ok(0)` means the stream is exhausted. Errors
+/// are sticky — callers should not retry a failed source.
+pub trait EventSource {
+    /// Append the next chunk of events to `out`; `Ok(0)` = end of stream.
+    fn next_chunk(&mut self, out: &mut Vec<Event>) -> Result<usize>;
+
+    /// Events remaining, when the source knows (slices, scenes); `None`
+    /// for open-ended streams.
+    fn size_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+impl<S: EventSource + ?Sized> EventSource for Box<S> {
+    fn next_chunk(&mut self, out: &mut Vec<Event>) -> Result<usize> {
+        (**self).next_chunk(out)
+    }
+    fn size_hint(&self) -> Option<usize> {
+        (**self).size_hint()
+    }
+}
+
+impl<S: EventSource + ?Sized> EventSource for &mut S {
+    fn next_chunk(&mut self, out: &mut Vec<Event>) -> Result<usize> {
+        (**self).next_chunk(out)
+    }
+    fn size_hint(&self) -> Option<usize> {
+        (**self).size_hint()
+    }
+}
+
+/// An in-memory slice served in fixed-size chunks.
+#[derive(Debug)]
+pub struct SliceSource<'a> {
+    events: &'a [Event],
+    pos: usize,
+    chunk_events: usize,
+}
+
+impl<'a> SliceSource<'a> {
+    /// Chunked view over a slice (`chunk_events` per `next_chunk` call).
+    pub fn new(events: &'a [Event], chunk_events: usize) -> Self {
+        Self { events, pos: 0, chunk_events: chunk_events.max(1) }
+    }
+}
+
+impl EventSource for SliceSource<'_> {
+    fn next_chunk(&mut self, out: &mut Vec<Event>) -> Result<usize> {
+        let take = (self.events.len() - self.pos).min(self.chunk_events);
+        out.extend_from_slice(&self.events[self.pos..self.pos + take]);
+        self.pos += take;
+        Ok(take)
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.events.len() - self.pos)
+    }
+}
+
+/// Open an event file as a streaming source, sniffing the container
+/// format: the binary magic selects the binary decoder, anything else is
+/// treated as `t x y p` text.
+pub fn open(path: &Path, chunk_events: usize) -> Result<Box<dyn EventSource + Send>> {
+    // probe and decode through one handle (rewound in between), so the
+    // sniffed format always matches the file actually decoded
+    let mut file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut probe = Vec::with_capacity(MAGIC.len());
+    (&mut file).take(MAGIC.len() as u64).read_to_end(&mut probe)?;
+    file.rewind()?;
+    if probe == MAGIC {
+        Ok(Box::new(BinaryStreamSource::new(file, chunk_events)?))
+    } else {
+        Ok(Box::new(TextStreamSource::new(file, chunk_events)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize) -> Vec<Event> {
+        (0..n).map(|i| Event::on((i % 50) as u16, (i % 40) as u16, i as u64 * 10)).collect()
+    }
+
+    fn drain(src: &mut impl EventSource) -> Vec<Event> {
+        let mut out = Vec::new();
+        while src.next_chunk(&mut out).unwrap() > 0 {}
+        out
+    }
+
+    #[test]
+    fn slice_source_chunks_cover_slice() {
+        let evs = ramp(1000);
+        for chunk in [1usize, 7, 256, 1000, 5000] {
+            let mut src = SliceSource::new(&evs, chunk);
+            assert_eq!(src.size_hint(), Some(1000));
+            assert_eq!(drain(&mut src), evs, "chunk {chunk}");
+            assert_eq!(src.size_hint(), Some(0));
+        }
+    }
+
+    #[test]
+    fn oversized_chunk_is_one_chunk() {
+        let evs = ramp(123);
+        let mut src = SliceSource::new(&evs, usize::MAX);
+        let mut out = Vec::new();
+        assert_eq!(src.next_chunk(&mut out).unwrap(), 123);
+        assert_eq!(src.next_chunk(&mut out).unwrap(), 0);
+        assert_eq!(out, evs);
+    }
+
+    #[test]
+    fn empty_slice_terminates_immediately() {
+        let mut src = SliceSource::new(&[], 64);
+        let mut out = Vec::new();
+        assert_eq!(src.next_chunk(&mut out).unwrap(), 0);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn open_sniffs_binary_and_text() {
+        let evs = ramp(500);
+        let dir = std::env::temp_dir().join("nmc_tos_source_open");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let bin = dir.join("events.bin");
+        let mut buf = Vec::new();
+        crate::events::codec::write_binary(&mut buf, &evs).unwrap();
+        std::fs::write(&bin, &buf).unwrap();
+        let mut src = open(&bin, 64).unwrap();
+        assert_eq!(drain(&mut src), evs);
+
+        let txt = dir.join("events.txt");
+        let mut buf = Vec::new();
+        crate::events::codec::write_text(&mut buf, &evs).unwrap();
+        std::fs::write(&txt, &buf).unwrap();
+        let mut src = open(&txt, 64).unwrap();
+        assert_eq!(drain(&mut src), evs);
+    }
+
+    #[test]
+    fn boxed_and_borrowed_sources_dispatch() {
+        let evs = ramp(32);
+        let mut inner = SliceSource::new(&evs, 8);
+        let mut by_ref: &mut SliceSource = &mut inner;
+        assert_eq!(drain(&mut by_ref), evs);
+
+        let mut boxed: Box<dyn EventSource + '_> = Box::new(SliceSource::new(&evs, 8));
+        assert_eq!(boxed.size_hint(), Some(32));
+        assert_eq!(drain(&mut boxed), evs);
+    }
+}

@@ -58,9 +58,10 @@ pub mod prelude {
     pub use crate::coordinator::{
         BackendKind, DetectorKind, DynPipeline, Pipeline, PipelineConfig, RunReport,
     };
-    pub use crate::datasets::{synthetic::SceneConfig, DatasetKind};
+    pub use crate::datasets::{synthetic::SceneConfig, synthetic::SceneSource, DatasetKind};
     pub use crate::detectors::{harris::HarrisDetector, EventScorer};
     pub use crate::dvfs::{DvfsController, DvfsConfig};
+    pub use crate::events::source::{EventSource, SliceSource};
     pub use crate::events::{Event, Polarity, Resolution};
     pub use crate::eval::{PrCurve, PrPoint};
     pub use crate::nmc::{calib, NmcMacro, NmcConfig};

@@ -12,7 +12,9 @@
 //! nmc-tos run    [--events N] [--async]
 //!                [--backend nmc|conventional|golden|sharded]
 //!                [--detector harris|eharris|fast|arc] [--shards N]
-//!                                    # end-to-end demo on shapes_dof
+//!                [--input FILE] [--chunk-events N] [--no-record]
+//!                                    # end-to-end demo on shapes_dof, or
+//!                                    # stream a recording with bounded memory
 //! nmc-tos lut                        # DVFS V/f lookup table
 //! ```
 //!
@@ -109,6 +111,8 @@ commands: fig1b fig8 table1 fig9 fig10 ber fig11 run lut ablate waveform gen-dat
 common flags: --json PATH (dump machine-readable results)
 run flags:    --backend nmc|conventional|golden|sharded  --detector harris|eharris|fast|arc
               --shards N  --events N  --async
+              --input FILE (stream a recording, bounded memory)
+              --chunk-events N (default 65536)  --no-record (counters only)
 see DESIGN.md for the experiment index";
 
 // ---------------------------------------------------------------------------
@@ -448,10 +452,14 @@ fn render_ascii(tos: &[u8], width: usize, rows_shown: usize) {
     }
 }
 
-/// End-to-end demo: full pipeline (STCF + TOS backend + DVFS + detector)
-/// on the shapes_dof scene, optionally with the async LUT worker. The
-/// backend x detector combination is chosen with `--backend`/`--detector`;
-/// SAE detectors skip the PJRT engine entirely.
+/// End-to-end demo: full pipeline (STCF + TOS backend + DVFS + detector),
+/// optionally with the async LUT worker. The backend x detector
+/// combination is chosen with `--backend`/`--detector`; SAE detectors
+/// skip the PJRT engine entirely. Default input is the shapes_dof scene;
+/// `--input FILE` instead streams a recording (binary container or
+/// `t x y p` text, sniffed) from disk in `--chunk-events` chunks with
+/// bounded memory — add `--no-record` for unbounded recordings so the
+/// report keeps counters instead of per-event vectors.
 fn cmd_run(args: &Args) -> Result<Json> {
     let n_events = args.num("events", 200_000.0) as usize;
     let mut cfg = PipelineConfig::davis240();
@@ -463,6 +471,9 @@ fn cmd_run(args: &Args) -> Result<Json> {
         cfg.detector = d.parse()?;
     }
     cfg.shards = args.num("shards", cfg.shards as f64) as usize;
+    if let Some(input) = args.get("input") {
+        return cmd_run_stream(args, cfg, input);
+    }
     let mut scene = SceneConfig::shapes_dof().build(args.num("seed", 42.0) as u64);
     let (events, gt) = scene.generate_with_gt(n_events);
     let mut pipe = Pipeline::from_config(cfg)?;
@@ -489,6 +500,45 @@ fn cmd_run(args: &Args) -> Result<Json> {
         ("corners", Json::Num(report.corners.len() as f64)),
         ("lut_refreshes", Json::Num(report.lut_refreshes as f64)),
         ("auc", Json::Num(auc)),
+        ("busy_ns", Json::Num(report.backend.busy_ns)),
+        ("energy_pj", Json::Num(report.backend.energy_pj)),
+        ("wall_s", Json::Num(report.wall_s)),
+    ]))
+}
+
+/// `run --input FILE`: stream a recording from disk with bounded memory
+/// (no ground truth, so no AUC — counters and simulated cost instead).
+fn cmd_run_stream(args: &Args, mut cfg: PipelineConfig, input: &str) -> Result<Json> {
+    let default_chunk = nmc_tos::events::source::DEFAULT_CHUNK_EVENTS as f64;
+    let chunk = args.num("chunk-events", default_chunk) as usize;
+    cfg.record_per_event = !args.flag("no-record");
+    let mut source = nmc_tos::events::source::open(std::path::Path::new(input), chunk)?;
+    let mut pipe = Pipeline::from_config(cfg)?;
+    let report = pipe.run_stream(&mut source)?;
+    println!("== streamed run ({input}, chunks of {chunk}) ==");
+    println!("backend / detector   : {} / {}", report.backend_name, report.detector_name);
+    println!("events in            : {}", report.events_in);
+    println!("signal after STCF    : {}", report.events_signal);
+    println!("corners tagged       : {}", report.corners_total);
+    println!("LUT refreshes        : {}", report.lut_refreshes);
+    println!("DVFS switches        : {}", report.dvfs_switches);
+    println!("simulated busy       : {:.3} ms", report.backend.busy_ns / 1e6);
+    println!("simulated energy     : {:.3} µJ", report.backend.energy_pj / 1e6);
+    println!(
+        "wall time            : {:.2} s ({:.0} keps)",
+        report.wall_s,
+        report.events_in as f64 / report.wall_s.max(1e-9) / 1e3
+    );
+    Ok(Json::obj(vec![
+        ("input", Json::Str(input.into())),
+        ("chunk_events", Json::Num(chunk as f64)),
+        ("backend", Json::Str(report.backend_name.into())),
+        ("detector", Json::Str(report.detector_name.into())),
+        ("events_in", Json::Num(report.events_in as f64)),
+        ("events_signal", Json::Num(report.events_signal as f64)),
+        ("corners", Json::Num(report.corners_total as f64)),
+        ("lut_refreshes", Json::Num(report.lut_refreshes as f64)),
+        ("dvfs_switches", Json::Num(report.dvfs_switches as f64)),
         ("busy_ns", Json::Num(report.backend.busy_ns)),
         ("energy_pj", Json::Num(report.backend.energy_pj)),
         ("wall_s", Json::Num(report.wall_s)),

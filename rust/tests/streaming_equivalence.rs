@@ -1,0 +1,118 @@
+//! Streamed ingestion must be indistinguishable from load-all ingestion:
+//! for every backend x detector combination, a `run_stream` over a
+//! file-backed [`EventSource`] with a chunk size far below the stream
+//! length produces a `RunReport` bit-identical (surface, scores, corner
+//! indices, telemetry counters) to `run` on the fully materialized
+//! stream. Engine-less, so these run without `make artifacts`.
+
+use nmc_tos::coordinator::{BackendKind, DetectorKind, Pipeline, PipelineConfig};
+use nmc_tos::datasets::synthetic::SceneConfig;
+use nmc_tos::events::codec::{self, BinaryStreamSource};
+use nmc_tos::events::source::SliceSource;
+use nmc_tos::events::Event;
+
+fn scratch(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("nmc_tos_streaming_eq");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn file_streamed_run_bit_identical_for_every_combination() {
+    let mut scene = SceneConfig::test64().build(123);
+    let events = scene.generate(6_000);
+    let path = scratch("all_combos.bin");
+    codec::save(&path, &events).unwrap();
+
+    for bk in BackendKind::ALL {
+        for dk in DetectorKind::ALL {
+            let mk_cfg = || {
+                let mut cfg = PipelineConfig::test64();
+                cfg.backend = bk;
+                cfg.detector = dk;
+                cfg.shards = 3;
+                cfg
+            };
+            let mut pipe = Pipeline::from_config_without_engine(mk_cfg()).unwrap();
+            let want = pipe.run(&events).unwrap();
+
+            // chunk size ≪ stream length, and not a divisor of it
+            let mut pipe = Pipeline::from_config_without_engine(mk_cfg()).unwrap();
+            let mut src =
+                BinaryStreamSource::new(std::fs::File::open(&path).unwrap(), 257).unwrap();
+            let got = pipe.run_stream(&mut src).unwrap();
+
+            assert_eq!(want.final_tos, got.final_tos, "{bk:?}/{dk:?} surface diverged");
+            assert_eq!(want.scores, got.scores, "{bk:?}/{dk:?} scores diverged");
+            assert_eq!(want.corners, got.corners, "{bk:?}/{dk:?} corners diverged");
+            assert_eq!(want.events_in, got.events_in, "{bk:?}/{dk:?} events_in");
+            assert_eq!(want.events_signal, got.events_signal, "{bk:?}/{dk:?} events_signal");
+            assert_eq!(want.dvfs_switches, got.dvfs_switches, "{bk:?}/{dk:?} dvfs");
+            assert_eq!(want.corners_total, got.corners_total, "{bk:?}/{dk:?} corner count");
+        }
+    }
+}
+
+#[test]
+fn text_streamed_run_matches_binary_streamed_run() {
+    // µs-integral timestamps survive the text format's 1e-6 rounding, so
+    // both containers must drive the pipeline to the same result
+    let mut scene = SceneConfig::test64().build(321);
+    let events = scene.generate(4_000);
+
+    let bin = scratch("text_vs_bin.bin");
+    codec::save(&bin, &events).unwrap();
+    let txt = scratch("text_vs_bin.txt");
+    let mut buf = Vec::new();
+    codec::write_text(&mut buf, &events).unwrap();
+    std::fs::write(&txt, &buf).unwrap();
+
+    let run_file = |path: &std::path::Path| {
+        let mut cfg = PipelineConfig::test64();
+        cfg.detector = DetectorKind::Fast;
+        let mut pipe = Pipeline::from_config_without_engine(cfg).unwrap();
+        let mut src = nmc_tos::events::source::open(path, 509).unwrap();
+        pipe.run_stream(&mut src).unwrap()
+    };
+    let from_bin = run_file(&bin);
+    let from_txt = run_file(&txt);
+    assert_eq!(from_bin.events_in, 4_000);
+    assert_eq!(from_bin.final_tos, from_txt.final_tos);
+    assert_eq!(from_bin.scores, from_txt.scores);
+}
+
+#[test]
+fn scene_source_streams_through_pipeline() {
+    // generator-backed source: same seed, same totals as the batch path
+    let events = SceneConfig::test64().build(55).generate(8_000);
+    let mut cfg = PipelineConfig::test64();
+    cfg.detector = DetectorKind::EHarris;
+    let mut pipe = Pipeline::from_config_without_engine(cfg.clone()).unwrap();
+    let want = pipe.run(&events).unwrap();
+
+    let mut pipe = Pipeline::from_config_without_engine(cfg).unwrap();
+    let mut src = SceneConfig::test64().build(55).into_source(8_000, 1_024);
+    let got = pipe.run_stream(&mut src).unwrap();
+    assert_eq!(want.final_tos, got.final_tos);
+    assert_eq!(want.scores, got.scores);
+    assert_eq!(want.corners, got.corners);
+}
+
+#[test]
+fn chunk_boundaries_do_not_leak_into_batch_flush_state() {
+    // a chunk size below BACKEND_BATCH_MAX must not change when the
+    // sharded backend's pending buffer flushes
+    let events: Vec<Event> = SceneConfig::test64().build(77).generate(10_000);
+    let mut cfg = PipelineConfig::test64();
+    cfg.backend = BackendKind::Sharded;
+    cfg.detector = DetectorKind::Arc;
+    cfg.shards = 4;
+    let mut pipe = Pipeline::from_config_without_engine(cfg.clone()).unwrap();
+    let want = pipe.run(&events).unwrap();
+    for chunk in [64usize, 1000, 4096, 9_999] {
+        let mut pipe = Pipeline::from_config_without_engine(cfg.clone()).unwrap();
+        let got = pipe.run_stream(&mut SliceSource::new(&events, chunk)).unwrap();
+        assert_eq!(want.final_tos, got.final_tos, "chunk {chunk}");
+        assert_eq!(want.scores, got.scores, "chunk {chunk}");
+    }
+}
