@@ -2,16 +2,28 @@
 //! warmup + N timed iterations, reporting median / mean / throughput.
 //! (criterion is unavailable in this offline build; this keeps the same
 //! shape of output so `cargo bench | tee bench_output.txt` stays useful.)
+//!
+//! [`Harness`] adds the machine-readable trajectory mode: benches that
+//! construct one record their rows and dump `BENCH_*.json` at the repo
+//! root on `finish()`, so every PR leaves a comparable perf data point.
+//! Flags (after `--` on `cargo bench`): `--smoke` shrinks event counts /
+//! iterations for CI, `--json PATH` overrides the output file;
+//! `BENCH_SMOKE=1` in the environment also enables smoke mode.
 
+#![allow(dead_code)] // each bench binary compiles its own copy of this module
+
+use std::path::PathBuf;
 use std::time::Instant;
+
+use nmc_tos::util::json::Json;
 
 /// Run `f` repeatedly, returning (median_ns, mean_ns) per iteration.
 pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
     for _ in 0..warmup {
         f();
     }
-    let mut samples = Vec::with_capacity(iters);
-    for _ in 0..iters {
+    let mut samples = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
         let t0 = Instant::now();
         f();
         samples.push(t0.elapsed().as_nanos() as f64);
@@ -32,4 +44,91 @@ pub fn report(name: &str, median_ns: f64, mean_ns: f64, items_per_iter: f64) {
         mean_ns / 1e3,
         throughput / 1e6
     );
+}
+
+/// One recorded bench row.
+struct Row {
+    name: String,
+    median_ns: f64,
+    mean_ns: f64,
+    items_per_iter: f64,
+}
+
+/// Bench harness with a machine-readable output mode (`BENCH_*.json`).
+pub struct Harness {
+    /// Shrunken run for CI (`--smoke` / `BENCH_SMOKE=1`): small event
+    /// counts, minimal iterations — checks the harness itself, the
+    /// numbers are not comparable to full runs (`"smoke": true` in the
+    /// JSON marks them).
+    pub smoke: bool,
+    bench: &'static str,
+    rows: Vec<Row>,
+    out: PathBuf,
+}
+
+impl Harness {
+    /// Parse bench flags; `default_out` is relative to the workspace root.
+    pub fn new(bench: &'static str, default_out: &str) -> Self {
+        let mut smoke = std::env::var("BENCH_SMOKE").is_ok_and(|v| v != "0" && !v.is_empty());
+        let mut out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join(default_out);
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            match a.as_str() {
+                "--smoke" => smoke = true,
+                "--json" => {
+                    if let Some(p) = args.next() {
+                        out = PathBuf::from(p);
+                    }
+                }
+                _ => {} // ignore cargo's own bench flags (--bench etc.)
+            }
+        }
+        Self { smoke, bench, rows: Vec::new(), out }
+    }
+
+    /// Scale an event count for the active mode.
+    pub fn events(&self, full: usize) -> usize {
+        if self.smoke {
+            (full / 20).clamp(1, full.max(1))
+        } else {
+            full
+        }
+    }
+
+    /// Measure + print + record one row (`items` = items per iteration,
+    /// for the events/s column). Warmup/iterations collapse in smoke mode.
+    pub fn run<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, items: f64, f: F) {
+        let (warmup, iters) =
+            if self.smoke { (warmup.min(1), iters.min(2)) } else { (warmup, iters) };
+        let (median_ns, mean_ns) = measure(warmup, iters, f);
+        report(name, median_ns, mean_ns, items);
+        self.rows.push(Row { name: name.to_string(), median_ns, mean_ns, items_per_iter: items });
+    }
+
+    /// Write the recorded rows as `BENCH_*.json` (schema: see DESIGN.md
+    /// §Hot paths — one object per row with median/mean ns and events/s).
+    pub fn finish(&self) {
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("median_ns", Json::Num(r.median_ns)),
+                    ("mean_ns", Json::Num(r.mean_ns)),
+                    ("items_per_iter", Json::Num(r.items_per_iter)),
+                    ("events_per_sec", Json::Num(r.items_per_iter / (r.median_ns.max(1.0) / 1e9))),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("schema", Json::Str("nmc-tos-bench-v1".into())),
+            ("bench", Json::Str(self.bench.into())),
+            ("smoke", Json::Bool(self.smoke)),
+            ("rows", Json::Arr(rows)),
+        ]);
+        std::fs::write(&self.out, doc.render())
+            .unwrap_or_else(|e| panic!("writing {}: {e}", self.out.display()));
+        println!("\nwrote {}", self.out.display());
+    }
 }

@@ -47,6 +47,32 @@ fn main() {
     });
     common::report("detector/eharris/10k", med, mean, subset.len() as f64);
 
+    // dense 5x5-stencil reference vs the separable form, on the same
+    // surface state (score() above left the FIFO warm)
+    let (med, mean) = common::measure(1, 5, || {
+        for e in subset {
+            std::hint::black_box(eh.harris_at(e.x as i32, e.y as i32));
+        }
+    });
+    common::report("detector/eharris_separable/10k", med, mean, subset.len() as f64);
+    let (med, mean) = common::measure(1, 5, || {
+        for e in subset {
+            std::hint::black_box(eh.harris_at_dense(e.x as i32, e.y as i32));
+        }
+    });
+    common::report("detector/eharris_dense_ref/10k", med, mean, subset.len() as f64);
+
+    // surface-window sweep (the `--eharris-window` knob)
+    for window in [500usize, 2000, 8000] {
+        let mut eh = EHarris::with_params(res, window, EHarris::DEFAULT_K);
+        let (med, mean) = common::measure(1, 5, || {
+            for e in subset {
+                std::hint::black_box(eh.score(e));
+            }
+        });
+        common::report(&format!("detector/eharris_w{window}/10k"), med, mean, subset.len() as f64);
+    }
+
     println!("\nmodelled digital throughput at 500 MHz (Fig. 1b):");
     for (name, ops) in [
         ("luvharris_lut", lut_det.ops_per_event()),

@@ -1,33 +1,36 @@
-//! Bench: the full pipeline (STCF + NMC sim + DVFS + PJRT Harris +
-//! tagging) — events/s of the whole system model, sync vs async LUT
-//! refresh, plus the streamed ingestion path. This is the number that
-//! gates how large an experiment the repo can run; EXPERIMENTS.md §Perf
-//! tracks it.
+//! Bench: the full pipeline (STCF + TOS backend + DVFS + detector +
+//! tagging) — events/s of the whole system model across every backend x
+//! detector combination and two resolutions, plus sync-vs-async LUT
+//! refresh and the streamed ingestion path. Emits `BENCH_e2e.json` at the
+//! repo root (see DESIGN.md §Hot paths); `--smoke` shrinks the run for CI.
 //!
-//! The engine-less and streamed rows run standalone; the FBF rows need
+//! The engine-less rows run standalone; the FBF rows need
 //! `make artifacts`.
 
 mod common;
 
-use nmc_tos::coordinator::{Pipeline, PipelineConfig};
+use common::Harness;
+use nmc_tos::coordinator::{BackendKind, DetectorKind, Pipeline, PipelineConfig};
 use nmc_tos::datasets::synthetic::SceneConfig;
 use nmc_tos::events::source::SliceSource;
+use nmc_tos::events::Resolution;
 use nmc_tos::runtime::default_artifact_dir;
 
 fn main() {
+    let mut h = Harness::new("end_to_end", "BENCH_e2e.json");
+
     println!("== bench: full pipeline end-to-end ==");
     let mut scene = SceneConfig::shapes_dof().build(8);
-    let events = scene.generate(100_000);
+    let events = scene.generate(h.events(100_000));
 
     // engine-less variant isolates the simulator cost from PJRT
     let mut cfg = PipelineConfig::davis240();
     cfg.lut_refresh_events = usize::MAX;
     let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
-    let (med, mean) = common::measure(1, 5, || {
+    h.run("e2e/no_fbf/100k_events", 1, 5, events.len() as f64, || {
         let r = pipe.run(&events).unwrap();
         std::hint::black_box(r.events_signal);
     });
-    common::report("e2e/no_fbf/100k_events", med, mean, events.len() as f64);
 
     // streamed ingestion: same work in bounded chunks, counters-only
     // report — the configuration for unbounded recordings
@@ -36,16 +39,48 @@ fn main() {
         cfg.lut_refresh_events = usize::MAX;
         cfg.record_per_event = false;
         let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
-        let (med, mean) = common::measure(1, 5, || {
+        h.run(&format!("e2e/stream_chunk{chunk}/100k_events"), 1, 5, events.len() as f64, || {
             let r = pipe.run_stream(&mut SliceSource::new(&events, chunk)).unwrap();
             std::hint::black_box(r.events_signal);
         });
-        let label = format!("e2e/stream_chunk{chunk}/100k_events");
-        common::report(&label, med, mean, events.len() as f64);
+    }
+
+    // backend x detector x resolution matrix (engine-less: the harris
+    // detector runs with a zero LUT — its per-event tag cost is real,
+    // only the FBF refresh is absent)
+    println!("\n== bench: backend x detector x resolution (engine-less) ==");
+    for (rlabel, res) in [("davis240", Resolution::DAVIS240), ("hd720", Resolution::HD720)] {
+        let mut scene_cfg = SceneConfig::shapes_dof();
+        scene_cfg.res = res;
+        let mut scene = scene_cfg.build(9);
+        let events = scene.generate(h.events(50_000));
+        for bk in BackendKind::ALL {
+            for dk in DetectorKind::ALL {
+                let mut cfg = PipelineConfig::davis240();
+                cfg.res = res;
+                cfg.dvfs = None;
+                cfg.backend = bk;
+                cfg.detector = dk;
+                cfg.shards = 4;
+                cfg.record_per_event = false;
+                let mut pipe = Pipeline::from_config_without_engine(cfg).unwrap();
+                h.run(
+                    &format!("e2e/{rlabel}/{}/{}/50k_events", bk.label(), dk.label()),
+                    1,
+                    3,
+                    events.len() as f64,
+                    || {
+                        let r = pipe.run(&events).unwrap();
+                        std::hint::black_box(r.events_signal);
+                    },
+                );
+            }
+        }
     }
 
     if !default_artifact_dir().join("meta.json").exists() {
         println!("SKIP FBF rows: run `make artifacts` first");
+        h.finish();
         return;
     }
     for (label, async_mode, refresh) in [
@@ -59,10 +94,11 @@ fn main() {
         // construct once: PJRT client + HLO compile are per-process costs,
         // not per-run costs (the coordinator keeps the executable loaded)
         let mut pipe = Pipeline::new(cfg).unwrap();
-        let (med, mean) = common::measure(1, 5, || {
+        h.run(&format!("e2e/{label}/100k_events"), 1, 5, events.len() as f64, || {
             let r = pipe.run(&events).unwrap();
             std::hint::black_box(r.corners.len());
         });
-        common::report(&format!("e2e/{label}/100k_events"), med, mean, events.len() as f64);
     }
+
+    h.finish();
 }

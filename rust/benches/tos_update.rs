@@ -1,12 +1,21 @@
-//! Bench: golden TOS update throughput (the software model of the paper's
-//! hot path) across patch sizes and resolutions, plus the sharded parallel
-//! software backend against the single-threaded golden model. This is the
-//! simulator's own hot loop — EXPERIMENTS.md §Perf tracks it.
+//! Bench: TOS update throughput — the paper's hot path in software.
+//!
+//! Rows cover the SWAR-vectorized golden kernel against the scalar
+//! reference loop (the pre-vectorization baseline, kept in-tree as
+//! `decrement_clamp_scalar`), every backend at DAVIS240/HD720, and the
+//! sharded parallel model against the single-threaded golden model.
+//! Emits `BENCH_tos.json` at the repo root (see DESIGN.md §Hot paths) so
+//! each PR records a comparable trajectory point; `--smoke` shrinks the
+//! run for CI.
 
 mod common;
 
+use common::Harness;
+use nmc_tos::conventional::ConventionalTos;
 use nmc_tos::events::{Event, Resolution};
-use nmc_tos::tos::{ShardedTos, TosConfig, TosSurface};
+use nmc_tos::nmc::{NmcConfig, NmcMacro};
+use nmc_tos::tos::backend::{clip_patch, decrement_clamp_scalar};
+use nmc_tos::tos::{ShardedTos, TosBackend, TosConfig, TosSurface};
 use nmc_tos::util::rng::Rng;
 
 fn events(res: Resolution, n: usize, seed: u64) -> Vec<Event> {
@@ -23,63 +32,98 @@ fn events(res: Resolution, n: usize, seed: u64) -> Vec<Event> {
 }
 
 fn main() {
-    println!("== bench: golden TOS update ==");
+    let mut h = Harness::new("tos_update", "BENCH_tos.json");
+
+    println!("== bench: golden (SWAR) vs scalar-reference TOS update ==");
     for (label, res) in [("davis240", Resolution::DAVIS240), ("hd720", Resolution::HD720)] {
         for patch in [5u16, 7, 9] {
-            let evs = events(res, 100_000, 1);
+            let n = h.events(100_000);
+            let evs = events(res, n, 1);
             let cfg = TosConfig { patch, threshold: 225 };
             let mut surf = TosSurface::new(res, cfg).unwrap();
-            let (med, mean) = common::measure(2, 10, || {
+            h.run(&format!("tos_update/{label}/p{patch}/golden"), 2, 10, n as f64, || {
                 surf.update_batch(&evs);
             });
-            common::report(
-                &format!("tos_update/{label}/p{patch}/100k_events"),
-                med,
-                mean,
-                evs.len() as f64,
-            );
+            // the exact pre-PR hot loop: clip + scalar decrement/clamp +
+            // centre write on a flat surface
+            let mut data = vec![0u8; res.pixels()];
+            let width = res.width as usize;
+            h.run(&format!("tos_update/{label}/p{patch}/scalar_ref"), 2, 10, n as f64, || {
+                for ev in &evs {
+                    let rect = clip_patch(res, ev.x, ev.y, cfg.half());
+                    decrement_clamp_scalar(&mut data, width, 0, rect, cfg.threshold);
+                    data[res.index(ev.x, ev.y)] = 255;
+                }
+            });
+        }
+    }
+
+    println!("\n== bench: TOS update per backend ==");
+    for (label, res) in [("davis240", Resolution::DAVIS240), ("hd720", Resolution::HD720)] {
+        let n = h.events(100_000);
+        let evs = events(res, n, 2);
+        let cfg = TosConfig::default();
+        let mut backends: Vec<(String, Box<dyn TosBackend>)> = vec![
+            ("golden".into(), Box::new(TosSurface::new(res, cfg).unwrap())),
+            ("conventional".into(), Box::new(ConventionalTos::new(res, cfg, 1.2).unwrap())),
+            (
+                "nmc".into(),
+                Box::new(NmcMacro::new(res, NmcConfig { tos: cfg, ..Default::default() }).unwrap()),
+            ),
+            ("sharded4".into(), Box::new(ShardedTos::new(res, cfg, 4).unwrap())),
+        ];
+        for (name, backend) in &mut backends {
+            h.run(&format!("tos_update/{label}/backend_{name}"), 1, 5, n as f64, || {
+                backend.process_batch(&evs);
+            });
         }
     }
 
     // The acceptance stream of the sharded backend: 200k events over a
     // DAVIS240 plane, batched through the row-band workers.
-    println!("\n== bench: sharded vs golden (200k-event DAVIS240 stream) ==");
+    println!("\n== bench: sharded vs golden (200k-event stream) ==");
     for (label, res) in [("davis240", Resolution::DAVIS240), ("hd720", Resolution::HD720)] {
         let cfg = TosConfig::default();
-        let evs = events(res, 200_000, 3);
+        let n = h.events(200_000);
+        let evs = events(res, n, 3);
         let mut golden = TosSurface::new(res, cfg).unwrap();
-        let (golden_med, golden_mean) = common::measure(2, 10, || {
+        h.run(&format!("tos_update/{label}/golden/200k_events"), 2, 10, n as f64, || {
             golden.update_batch(&evs);
         });
-        common::report(
-            &format!("tos_update/{label}/golden/200k_events"),
-            golden_med,
-            golden_mean,
-            evs.len() as f64,
-        );
         for shards in [2usize, 4, 8] {
             let mut sharded = ShardedTos::new(res, cfg, shards).unwrap();
-            let (med, mean) = common::measure(2, 10, || {
-                sharded.process_batch(&evs);
-            });
-            common::report(
+            h.run(
                 &format!("tos_update/{label}/sharded{shards}/200k_events"),
-                med,
-                mean,
-                evs.len() as f64,
+                2,
+                10,
+                n as f64,
+                || {
+                    sharded.process_batch(&evs);
+                },
             );
-            println!("    -> {:.2}x vs golden", golden_med / med);
         }
     }
 
-    // bit-exactness spot check on the exact bench stream (the full sweep
-    // lives in rust/tests/properties.rs)
+    // bit-exactness spot check on the exact bench stream: SWAR golden,
+    // scalar reference, and the sharded batch path must agree (the full
+    // sweep lives in rust/tests/properties.rs)
     let cfg = TosConfig::default();
-    let evs = events(Resolution::DAVIS240, 200_000, 3);
-    let mut a = TosSurface::new(Resolution::DAVIS240, cfg).unwrap();
+    let n = h.events(200_000);
+    let evs = events(Resolution::DAVIS240, n, 3);
+    let res = Resolution::DAVIS240;
+    let mut a = TosSurface::new(res, cfg).unwrap();
     a.update_batch(&evs);
-    let mut b = ShardedTos::new(Resolution::DAVIS240, cfg, 4).unwrap();
+    let mut b = ShardedTos::new(res, cfg, 4).unwrap();
     b.process_batch(&evs);
     assert_eq!(a.data(), b.data(), "sharded output diverged from golden");
-    println!("\nsharded output bit-exact vs golden on the 200k stream: OK");
+    let mut c = vec![0u8; res.pixels()];
+    for ev in &evs {
+        let rect = clip_patch(res, ev.x, ev.y, cfg.half());
+        decrement_clamp_scalar(&mut c, res.width as usize, 0, rect, cfg.threshold);
+        c[res.index(ev.x, ev.y)] = 255;
+    }
+    assert_eq!(a.data(), &c[..], "SWAR kernel diverged from scalar reference");
+    println!("\ngolden (SWAR) == scalar reference == sharded on the bench stream: OK");
+
+    h.finish();
 }

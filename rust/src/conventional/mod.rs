@@ -126,8 +126,8 @@ impl TosBackend for ConventionalTos {
         ConventionalTos::process(self, ev);
     }
 
-    fn snapshot_u8(&self) -> Vec<u8> {
-        self.surface.data().to_vec()
+    fn tos_view(&self) -> &[u8] {
+        self.surface.data()
     }
 
     fn set_vdd(&mut self, vdd: f64) {

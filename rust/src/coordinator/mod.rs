@@ -170,6 +170,9 @@ pub struct PipelineConfig {
     pub fixed_vdd: f64,
     /// Sync mode: recompute the Harris LUT every N signal events.
     pub lut_refresh_events: usize,
+    /// eHarris binary-surface window (events kept); the paper's reference
+    /// implementation uses 2000 (`--eharris-window`).
+    pub eharris_window: usize,
     /// Use the async (threaded) LUT worker instead of inline refresh.
     pub async_refresh: bool,
     /// Score threshold above which an event is tagged a corner.
@@ -198,6 +201,7 @@ impl PipelineConfig {
             dvfs: Some(DvfsConfig::default()),
             fixed_vdd: 1.2,
             lut_refresh_events: 2_000,
+            eharris_window: 2_000,
             async_refresh: false,
             corner_threshold: 0.55,
             record_per_event: true,
@@ -350,12 +354,14 @@ pub fn make_backend(cfg: &PipelineConfig) -> Result<Box<dyn TosBackend>> {
 }
 
 /// Build the detector a config asks for (`cfg.detector`).
-pub fn make_detector(res: Resolution, kind: DetectorKind) -> Box<dyn EventScorer> {
-    match kind {
-        DetectorKind::Harris => Box::new(HarrisDetector::new(res)),
-        DetectorKind::EHarris => Box::new(EHarris::new(res)),
-        DetectorKind::Fast => Box::new(EFast::new(res)),
-        DetectorKind::Arc => Box::new(ArcDetector::new(res)),
+pub fn make_detector(cfg: &PipelineConfig) -> Box<dyn EventScorer> {
+    match cfg.detector {
+        DetectorKind::Harris => Box::new(HarrisDetector::new(cfg.res)),
+        DetectorKind::EHarris => {
+            Box::new(EHarris::with_params(cfg.res, cfg.eharris_window, EHarris::DEFAULT_K))
+        }
+        DetectorKind::Fast => Box::new(EFast::new(cfg.res)),
+        DetectorKind::Arc => Box::new(ArcDetector::new(cfg.res)),
     }
 }
 
@@ -385,7 +391,7 @@ impl Pipeline<NmcMacro, HarrisDetector> {
     /// for LUT-consuming detectors; SAE detectors run fully headless.
     pub fn from_config(cfg: PipelineConfig) -> Result<DynPipeline> {
         let backend = make_backend(&cfg)?;
-        let detector = make_detector(cfg.res, cfg.detector);
+        let detector = make_detector(&cfg);
         let engine = if detector.wants_lut() { Some(load_engine(&cfg)?) } else { None };
         DynPipeline::with_parts(cfg, backend, detector, engine)
     }
@@ -394,7 +400,7 @@ impl Pipeline<NmcMacro, HarrisDetector> {
     /// (LUT detectors score zero) — for engine-less tests and harnesses.
     pub fn from_config_without_engine(cfg: PipelineConfig) -> Result<DynPipeline> {
         let backend = make_backend(&cfg)?;
-        let detector = make_detector(cfg.res, cfg.detector);
+        let detector = make_detector(&cfg);
         DynPipeline::with_parts(cfg, backend, detector, None)
     }
 }
@@ -465,7 +471,7 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
     /// Synchronous mode: inline LUT refresh every `lut_refresh_events`.
     fn run_stream_sync<S: EventSource + ?Sized>(&mut self, source: &mut S) -> Result<RunReport> {
         let start = Instant::now();
-        let mut st = StreamState::new(self.cfg.record_per_event);
+        let mut st = StreamState::new(self.cfg.record_per_event, reserve_hint(source));
         // without an FBF stage there is no refresh boundary — don't cap
         // the backend batches on a no-op schedule
         let refresh_enabled = self.engine.is_some() && self.detector.wants_lut();
@@ -533,12 +539,16 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
 
         let (snap_tx, snap_rx) = mpsc::sync_channel::<Vec<u8>>(1);
         let (lut_tx, lut_rx) = mpsc::channel::<Vec<f32>>();
+        let (recycle_tx, recycle_rx) = mpsc::channel::<Vec<u8>>();
         let worker = std::thread::spawn(move || -> Result<u64> {
             let manifest = Manifest::load(&dir)?;
             let mut engine = HarrisEngine::load(&manifest, &artifact)?;
             let mut computed = 0u64;
             while let Ok(tos) = snap_rx.recv() {
                 let lut = engine.compute_u8(&tos)?;
+                // hand the snapshot buffer back for reuse; if the event
+                // loop already finished, the buffer just drops
+                let _ = recycle_tx.send(tos);
                 computed += 1;
                 if lut_tx.send(lut).is_err() {
                     break;
@@ -547,7 +557,13 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
             Ok(computed)
         });
 
-        let mut st = StreamState::new(self.cfg.record_per_event);
+        // Double-buffered snapshot scratch: one buffer can sit in the
+        // depth-1 channel while the worker computes from the other. When
+        // both are in flight the offer is skipped outright — previously a
+        // full frame was cloned per offer and dropped whenever the
+        // channel was full.
+        let mut snap_bufs: Vec<Vec<u8>> = vec![Vec::new(), Vec::new()];
+        let mut st = StreamState::new(self.cfg.record_per_event, reserve_hint(source));
         let mut since_snapshot = 0usize;
         let batching = self.backend.prefers_batching();
         // offer a snapshot at least this often (events); the worker decides
@@ -594,9 +610,26 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
                 if since_snapshot >= offer_every {
                     since_snapshot = 0;
                     flush_pending(&mut self.backend, &mut st.pending);
-                    // drop the snapshot if the worker is busy (luvHarris "as
-                    // fast as possible" semantics, no backpressure on events)
-                    let _ = snap_tx.try_send(self.backend.snapshot_u8());
+                    // drop the offer if the worker is busy (luvHarris "as
+                    // fast as possible" semantics, no backpressure on
+                    // events): reclaim buffers the worker has finished
+                    // with, and only snapshot if one is free
+                    while let Ok(buf) = recycle_rx.try_recv() {
+                        snap_bufs.push(buf);
+                    }
+                    if let Some(mut buf) = snap_bufs.pop() {
+                        self.backend.snapshot_into(&mut buf);
+                        match snap_tx.try_send(buf) {
+                            Ok(()) => {}
+                            Err(mpsc::TrySendError::Full(buf))
+                            | Err(mpsc::TrySendError::Disconnected(buf)) => {
+                                // channel full (offer dropped) or worker
+                                // exited early (join surfaces the error);
+                                // either way keep the buffer
+                                snap_bufs.push(buf);
+                            }
+                        }
+                    }
                 }
 
                 let score = self.detector.score(ev);
@@ -626,8 +659,9 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
         if !self.detector.wants_lut() {
             return Ok(false);
         }
-        let tos = self.backend.snapshot_u8();
-        for (f, &v) in self.frame.iter_mut().zip(&tos) {
+        // borrow the surface straight into the reusable f32 frame — the
+        // old path cloned a full u8 frame per refresh first
+        for (f, &v) in self.frame.iter_mut().zip(self.backend.tos_view()) {
             *f = v as f32;
         }
         let lut = engine.compute(&self.frame).context("FBF Harris refresh")?;
@@ -675,12 +709,24 @@ struct StreamState {
     lut_refreshes: u64,
 }
 
+/// Cap on speculative per-event-vector preallocation. Size hints can
+/// originate from untrusted container headers
+/// ([`EventSource::size_hint`]), so never reserve more than this many
+/// events up front — the vectors still grow on demand past it.
+const RESERVE_EVENTS_MAX: usize = 1 << 20;
+
+/// Bounded preallocation hint for a source's per-event vectors.
+fn reserve_hint<S: EventSource + ?Sized>(source: &S) -> usize {
+    source.size_hint().unwrap_or(0).min(RESERVE_EVENTS_MAX)
+}
+
 impl StreamState {
-    fn new(record: bool) -> Self {
+    fn new(record: bool, reserve: usize) -> Self {
+        let reserve = if record { reserve } else { 0 };
         Self {
             record,
-            signal_events: Vec::new(),
-            scores: Vec::new(),
+            signal_events: Vec::with_capacity(reserve),
+            scores: Vec::with_capacity(reserve),
             corners: Vec::new(),
             corners_total: 0,
             events_in: 0,

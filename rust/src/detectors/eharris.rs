@@ -4,6 +4,14 @@
 //! Accuracy is good, but the per-event cost — two 5x5 Sobel stencils plus
 //! a windowed structure tensor over an LxL neighbourhood — is what caps
 //! its throughput at well under 1 Meps in Fig. 1(b).
+//!
+//! The stencils run in *separable* form (vertical smooth/deriv passes,
+//! then horizontal deriv/smooth): the 5x5 Sobel taps factor as
+//! `kx = smooth ⊗ deriv` and `ky = deriv ⊗ smooth`, cutting the per-event
+//! multiply count from `2·G²·25` dense MACs to `2·(G·L + G·G)·5`
+//! (1250 → 350 for L=9). The dense form is kept as
+//! [`EHarris::harris_at_dense`] — the equivalence oracle for tests and
+//! benches (scores agree within f32 tolerance, corner ordering identical).
 
 use std::collections::VecDeque;
 
@@ -17,8 +25,17 @@ use super::EventScorer;
 const L: usize = 9;
 /// Gradient patch side after valid 5x5 Sobel.
 const G: usize = L - 4;
+/// Sobel tap count.
+const K: usize = 5;
 
-/// 5x5 Sobel taps (binomial smooth x central difference), row-major.
+/// Normalized 1-D binomial smoothing taps (`[1,4,6,4,1] / 16`).
+const SMOOTH: [f32; K] = [1.0 / 16.0, 4.0 / 16.0, 6.0 / 16.0, 4.0 / 16.0, 1.0 / 16.0];
+/// Normalized 1-D derivative taps (`[-1,-2,0,2,1] / 6`).
+const DERIV: [f32; K] = [-1.0 / 6.0, -2.0 / 6.0, 0.0, 2.0 / 6.0, 1.0 / 6.0];
+
+/// 5x5 Sobel taps (binomial smooth x central difference), row-major — the
+/// dense outer-product form of [`SMOOTH`] / [`DERIV`], used by the
+/// reference implementation only.
 fn sobel5() -> ([[f32; 5]; 5], [[f32; 5]; 5]) {
     let smooth = [1.0f32, 4.0, 6.0, 4.0, 1.0];
     let deriv = [-1.0f32, -2.0, 0.0, 2.0, 1.0];
@@ -43,29 +60,120 @@ pub struct EHarris {
     fifo: VecDeque<usize>,
     /// Number of events kept on the binary surface.
     window: usize,
-    kx: [[f32; 5]; 5],
-    ky: [[f32; 5]; 5],
     /// Harris k.
     k: f32,
+    /// Reusable scratch: the gathered LxL binary patch (zeros outside the
+    /// sensor); rewritten per event, never reallocated.
+    patch: [[f32; L]; L],
+    /// Reusable scratch: vertical smooth / deriv passes (G rows x L cols).
+    vsmooth: [[f32; L]; G],
+    vderiv: [[f32; L]; G],
 }
 
 impl EHarris {
+    /// The standard Harris sensitivity constant.
+    pub const DEFAULT_K: f32 = 0.04;
+
     /// Detector with the standard 2000-event binary surface.
     pub fn new(res: Resolution) -> Self {
-        let (kx, ky) = sobel5();
+        Self::with_params(res, 2000, Self::DEFAULT_K)
+    }
+
+    /// Detector with an explicit surface window (events kept, >= 1) and
+    /// Harris `k` — the bench sweep varies the window
+    /// (`--eharris-window` on the CLI).
+    pub fn with_params(res: Resolution, window: usize, k: f32) -> Self {
+        let window = window.max(1);
         Self {
             res,
             surface: vec![0; res.pixels()],
-            fifo: VecDeque::with_capacity(2001),
-            window: 2000,
-            kx,
-            ky,
-            k: 0.04,
+            fifo: VecDeque::with_capacity(window + 1),
+            window,
+            k,
+            patch: [[0.0; L]; L],
+            vsmooth: [[0.0; L]; G],
+            vderiv: [[0.0; L]; G],
         }
     }
 
-    /// Harris response at `(ex, ey)` over the binary surface.
-    fn harris_at(&self, ex: i32, ey: i32) -> f64 {
+    /// Surface window currently configured.
+    #[inline]
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Gather the LxL binary patch around `(ex, ey)` into the scratch.
+    /// Interior events (the overwhelmingly common case) copy row slices
+    /// without per-pixel bounds tests; border events zero-pad.
+    fn gather(&mut self, ex: i32, ey: i32) {
+        let half = (L as i32 - 1) / 2;
+        let w = self.res.width as i32;
+        let h = self.res.height as i32;
+        let interior = ex >= half && ey >= half && ex + half < w && ey + half < h;
+        if interior {
+            for (r, prow) in self.patch.iter_mut().enumerate() {
+                let base = (ey - half + r as i32) as usize * w as usize + (ex - half) as usize;
+                for (p, &s) in prow.iter_mut().zip(&self.surface[base..base + L]) {
+                    *p = s as f32;
+                }
+            }
+        } else {
+            for (r, prow) in self.patch.iter_mut().enumerate() {
+                let y = ey - half + r as i32;
+                for (c, p) in prow.iter_mut().enumerate() {
+                    let x = ex - half + c as i32;
+                    *p = if self.res.contains(x, y) {
+                        self.surface[self.res.index(x as u16, y as u16)] as f32
+                    } else {
+                        0.0
+                    };
+                }
+            }
+        }
+    }
+
+    /// Harris response at `(ex, ey)` over the binary surface — separable
+    /// Sobel (vertical smooth/deriv, then horizontal deriv/smooth) fused
+    /// with the structure-tensor accumulation.
+    pub fn harris_at(&mut self, ex: i32, ey: i32) -> f64 {
+        self.gather(ex, ey);
+        // vertical 5-tap passes: G output rows over all L columns
+        for r in 0..G {
+            for c in 0..L {
+                let mut s = 0.0f32;
+                let mut d = 0.0f32;
+                for (k, (&sk, &dk)) in SMOOTH.iter().zip(&DERIV).enumerate() {
+                    let v = self.patch[r + k][c];
+                    s += v * sk;
+                    d += v * dk;
+                }
+                self.vsmooth[r][c] = s;
+                self.vderiv[r][c] = d;
+            }
+        }
+        // horizontal 5-tap passes + structure tensor over the GxG patch
+        let (mut sxx, mut syy, mut sxy) = (0.0f32, 0.0f32, 0.0f32);
+        for r in 0..G {
+            for c in 0..G {
+                let mut ix = 0.0f32;
+                let mut iy = 0.0f32;
+                for (k, (&sk, &dk)) in SMOOTH.iter().zip(&DERIV).enumerate() {
+                    ix += self.vsmooth[r][c + k] * dk;
+                    iy += self.vderiv[r][c + k] * sk;
+                }
+                sxx += ix * ix;
+                syy += iy * iy;
+                sxy += ix * iy;
+            }
+        }
+        (sxx * syy - sxy * sxy - self.k * (sxx + syy) * (sxx + syy)) as f64
+    }
+
+    /// Dense 5x5-stencil reference form of [`EHarris::harris_at`] (the
+    /// pre-separable implementation, kept verbatim): equivalence oracle
+    /// for tests and the `detectors` bench.
+    pub fn harris_at_dense(&self, ex: i32, ey: i32) -> f64 {
+        let (kx, ky) = sobel5();
         let half = (L as i32 - 1) / 2;
         // gather the LxL binary patch (zeros outside the sensor)
         let mut patch = [[0.0f32; L]; L];
@@ -88,8 +196,8 @@ impl EHarris {
                 for kr in 0..5 {
                     for kc in 0..5 {
                         let v = patch[r + kr][c + kc];
-                        sx += v * self.kx[kr][kc];
-                        sy += v * self.ky[kr][kc];
+                        sx += v * kx[kr][kc];
+                        sy += v * ky[kr][kc];
                     }
                 }
                 ix[r][c] = sx;
@@ -128,10 +236,13 @@ impl EventScorer for EHarris {
     }
 
     fn ops_per_event(&self) -> f64 {
-        // Sobel: G*G*(2*25 MACs) = 25*50; tensor: G*G*3 MACs + score ~ 10.
-        let sobel = (G * G) as f64 * 50.0;
+        // separable stencils: vertical passes 2*(G*L*K) MACs, horizontal
+        // 2*(G*G*K), tensor G*G*3, plus the LxL gather and the score.
+        let vertical = (G * L * K) as f64 * 2.0;
+        let horizontal = (G * G * K) as f64 * 2.0;
         let tensor = (G * G) as f64 * 3.0;
-        2.0 * sobel / 2.0 + sobel + tensor + 10.0 // gather + 2 stencils + tensor
+        let gather = (L * L) as f64;
+        vertical + horizontal + tensor + gather + 10.0
     }
 }
 
@@ -155,9 +266,67 @@ mod tests {
     }
 
     #[test]
-    fn window_evicts_oldest() {
+    fn separable_matches_dense_within_f32_tolerance() {
+        // pseudo-random binary surface, then compare both stencil forms
+        // everywhere, including every border and corner position
+        let res = Resolution::TEST64;
+        let mut d = EHarris::with_params(res, 4000, EHarris::DEFAULT_K);
+        let mut t = 0u64;
+        let mut state = 0x12345u64;
+        for _ in 0..3000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let x = ((state >> 33) % 64) as u16;
+            let y = ((state >> 17) % 64) as u16;
+            t += 1;
+            d.score(&Event::on(x, y, t));
+        }
+        let mut checked = 0usize;
+        for y in 0..64i32 {
+            for x in 0..64i32 {
+                let dense = d.harris_at_dense(x, y);
+                let sep = d.harris_at(x, y);
+                let tol = 1e-4 * (1.0 + dense.abs());
+                assert!(
+                    (dense - sep).abs() <= tol,
+                    "({x},{y}): dense {dense} vs separable {sep}"
+                );
+                checked += 1;
+            }
+        }
+        assert_eq!(checked, 64 * 64);
+    }
+
+    #[test]
+    fn separable_preserves_corner_decisions() {
+        // the decision-relevant ordering (corner > edge > flat) must be
+        // identical between the two stencil forms
         let mut d = EHarris::new(Resolution::TEST64);
-        d.window = 3;
+        for i in 0..12u16 {
+            d.score(&Event::on(30 - i, 30, i as u64));
+            d.score(&Event::on(30, 30 - i, 100 + i as u64));
+        }
+        let dense = [
+            d.harris_at_dense(30, 30),
+            d.harris_at_dense(24, 30),
+            d.harris_at_dense(50, 50),
+        ];
+        let sep = [d.harris_at(30, 30), d.harris_at(24, 30), d.harris_at(50, 50)];
+        assert!(dense[0] > dense[1] && dense[1] >= dense[2]);
+        assert!(sep[0] > sep[1] && sep[1] >= sep[2]);
+    }
+
+    #[test]
+    fn with_params_configures_window_and_k() {
+        let d = EHarris::with_params(Resolution::TEST64, 500, 0.06);
+        assert_eq!(d.window(), 500);
+        assert!((d.k - 0.06).abs() < 1e-9);
+        // a zero window clamps to 1 instead of evicting everything
+        assert_eq!(EHarris::with_params(Resolution::TEST64, 0, 0.04).window(), 1);
+    }
+
+    #[test]
+    fn window_evicts_oldest() {
+        let mut d = EHarris::with_params(Resolution::TEST64, 3, EHarris::DEFAULT_K);
         d.score(&Event::on(1, 1, 0));
         d.score(&Event::on(2, 2, 1));
         d.score(&Event::on(3, 3, 2));
@@ -177,8 +346,8 @@ mod tests {
 
     #[test]
     fn throughput_well_below_conventional_luvharris() {
-        // Fig. 1(b): eHarris max throughput is far below the 2.6 Meps of
-        // the conventional TOS update.
+        // Fig. 1(b): even with separable stencils, eHarris max throughput
+        // stays far below the 2.6 Meps of the conventional TOS update.
         let d = EHarris::new(Resolution::DAVIS240);
         let t = super::super::max_throughput_eps(d.ops_per_event(), 500e6);
         assert!(t < 1.0e6, "eHarris throughput {t}");

@@ -188,9 +188,11 @@ impl DvfsController {
         self.counters[self.ptr] = 0;
         // saturating: once a crafted timestamp pins the boundary clock at
         // u64::MAX, further rotations must not overflow (work per event
-        // stays bounded by the advance_to rotation cap)
+        // stays bounded by the advance_to rotation cap) — and the
+        // rotation counter itself must saturate for the same reason (the
+        // fast-forward path can saturate it to u64::MAX in one step)
         self.half_end_us = self.half_end_us.saturating_add(self.cfg.tw_us / 2);
-        self.rotations += 1;
+        self.rotations = self.rotations.saturating_add(1);
     }
 
     /// Pick the lowest voltage sustaining the estimated rate with headroom.

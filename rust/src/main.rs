@@ -12,6 +12,7 @@
 //! nmc-tos run    [--events N] [--async]
 //!                [--backend nmc|conventional|golden|sharded]
 //!                [--detector harris|eharris|fast|arc] [--shards N]
+//!                [--eharris-window N]
 //!                [--input FILE] [--chunk-events N] [--no-record]
 //!                                    # end-to-end demo on shapes_dof, or
 //!                                    # stream a recording with bounded memory
@@ -110,7 +111,7 @@ const HELP: &str = "nmc-tos — NMC-TOS full-system reproduction
 commands: fig1b fig8 table1 fig9 fig10 ber fig11 run lut ablate waveform gen-data
 common flags: --json PATH (dump machine-readable results)
 run flags:    --backend nmc|conventional|golden|sharded  --detector harris|eharris|fast|arc
-              --shards N  --events N  --async
+              --shards N  --events N  --async  --eharris-window N (binary-surface window, default 2000)
               --input FILE (stream a recording, bounded memory)
               --chunk-events N (default 65536)  --no-record (counters only)
 see DESIGN.md for the experiment index";
@@ -471,6 +472,7 @@ fn cmd_run(args: &Args) -> Result<Json> {
         cfg.detector = d.parse()?;
     }
     cfg.shards = args.num("shards", cfg.shards as f64) as usize;
+    cfg.eharris_window = args.num("eharris-window", cfg.eharris_window as f64) as usize;
     if let Some(input) = args.get("input") {
         return cmd_run_stream(args, cfg, input);
     }

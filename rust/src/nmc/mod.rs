@@ -214,8 +214,8 @@ impl TosBackend for NmcMacro {
         NmcMacro::process_batch(self, events)
     }
 
-    fn snapshot_u8(&self) -> Vec<u8> {
-        NmcMacro::snapshot_u8(self)
+    fn tos_view(&self) -> &[u8] {
+        self.array.decoded()
     }
 
     fn set_vdd(&mut self, vdd: f64) {

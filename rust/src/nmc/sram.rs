@@ -87,6 +87,10 @@ pub struct TypeAArray {
     /// div/mod of the block mapping on every pixel access
     /// (EXPERIMENTS.md §Perf iteration 8).
     words: Vec<u8>,
+    /// Decoded 8-bit mirror of `words`, maintained on every write so TOS
+    /// snapshots are zero-cost borrows ([`TypeAArray::decoded`]) instead
+    /// of a full-frame decode per snapshot boundary.
+    decoded: Vec<u8>,
     width: usize,
 }
 
@@ -95,7 +99,8 @@ impl TypeAArray {
     pub fn new(res: Resolution) -> Self {
         let grid = BlockGrid::for_resolution(res);
         let words = vec![0u8; res.pixels()];
-        Self { grid, words, width: res.width as usize }
+        let decoded = vec![0u8; res.pixels()];
+        Self { grid, words, decoded, width: res.width as usize }
     }
 
     /// Geometry.
@@ -116,16 +121,26 @@ impl TypeAArray {
         debug_assert!(bits5 < (1 << BITS_PER_WORD));
         let i = y as usize * self.width + x as usize;
         self.words[i] = bits5;
+        self.decoded[i] = crate::tos::encoding::load(bits5);
     }
 
-    /// Snapshot all pixels into an 8-bit TOS image (row-major).
+    /// Borrowed 8-bit TOS image (row-major), decoded incrementally at
+    /// write time. Zero-cost: this is the snapshot path of the NMC
+    /// backend.
+    #[inline]
+    pub fn decoded(&self) -> &[u8] {
+        &self.decoded
+    }
+
+    /// Snapshot all pixels into an owned 8-bit TOS image (row-major).
     pub fn snapshot_u8(&self) -> Vec<u8> {
-        self.words.iter().map(|&w| crate::tos::encoding::load(w)).collect()
+        self.decoded.clone()
     }
 
     /// Erase all cells.
     pub fn clear(&mut self) {
         self.words.fill(0);
+        self.decoded.fill(0);
     }
 }
 
@@ -189,6 +204,12 @@ mod tests {
         assert_eq!(img[1 * 64 + 1], 255);
         assert_eq!(img[2 * 64 + 2], 230);
         assert_eq!(img[0], 0);
+        // the borrowed view and the owned snapshot are the same image,
+        // and overwriting a cell keeps the mirror in sync
+        assert_eq!(a.decoded(), &img[..]);
+        a.write(1, 1, 0);
+        assert_eq!(a.decoded()[64 + 1], 0);
+        assert_eq!(a.snapshot_u8()[64 + 1], 0);
     }
 
     #[test]

@@ -88,6 +88,10 @@ pub struct HarrisEngine {
     pub width: usize,
     /// Executions performed (telemetry).
     pub executions: u64,
+    /// Reusable u8 -> f32 conversion scratch for [`HarrisEngine::compute_u8`]
+    /// (the async LUT worker calls it once per snapshot; without this it
+    /// allocated a full f32 frame per refresh).
+    frame_scratch: Vec<f32>,
 }
 
 impl std::fmt::Debug for HarrisEngine {
@@ -112,7 +116,14 @@ impl HarrisEngine {
         .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client.compile(&comp).context("compiling HLO")?;
-        Ok(HarrisEngine { client, exe, height: info.height, width: info.width, executions: 0 })
+        Ok(HarrisEngine {
+            client,
+            exe,
+            height: info.height,
+            width: info.width,
+            executions: 0,
+            frame_scratch: Vec::new(),
+        })
     }
 
     /// Compute the Harris LUT of one TOS frame.
@@ -136,10 +147,15 @@ impl HarrisEngine {
         Ok(values)
     }
 
-    /// Convenience: compute from a u8 TOS snapshot.
+    /// Compute from a u8 TOS snapshot. The u8 -> f32 conversion goes
+    /// through a reusable scratch buffer (no per-call frame allocation).
     pub fn compute_u8(&mut self, tos: &[u8]) -> Result<Vec<f32>> {
-        let frame: Vec<f32> = tos.iter().map(|&v| v as f32).collect();
-        self.compute(&frame)
+        let mut frame = std::mem::take(&mut self.frame_scratch);
+        frame.clear();
+        frame.extend(tos.iter().map(|&v| v as f32));
+        let out = self.compute(&frame);
+        self.frame_scratch = frame;
+        out
     }
 
     /// PJRT platform string (telemetry / sanity).

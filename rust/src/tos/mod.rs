@@ -212,8 +212,8 @@ impl TosBackend for TosSurface {
         self.update(ev);
     }
 
-    fn snapshot_u8(&self) -> Vec<u8> {
-        self.data.clone()
+    fn tos_view(&self) -> &[u8] {
+        &self.data
     }
 
     fn stats(&self) -> BackendStats {

@@ -155,8 +155,11 @@ impl TosBackend for ShardedTos {
         self.bands > 1
     }
 
-    fn snapshot_u8(&self) -> Vec<u8> {
-        self.data.clone()
+    fn tos_view(&self) -> &[u8] {
+        // bands own disjoint row slices of one contiguous row-major
+        // buffer, so the snapshot view is the buffer itself — the band
+        // layout needs no gather step
+        &self.data
     }
 
     fn stats(&self) -> BackendStats {

@@ -8,7 +8,8 @@ use nmc_tos::dvfs::{DvfsConfig, DvfsController};
 use nmc_tos::events::{stream, Event, Polarity, Resolution};
 use nmc_tos::nmc::{calib, NmcConfig, NmcMacro};
 use nmc_tos::stcf::{Stcf, StcfConfig};
-use nmc_tos::tos::{encoding, ShardedTos, TosConfig, TosSurface};
+use nmc_tos::tos::backend::{decrement_clamp, decrement_clamp_scalar, PatchRect};
+use nmc_tos::tos::{encoding, ShardedTos, TosBackend, TosConfig, TosSurface};
 use nmc_tos::util::proptest::check;
 use nmc_tos::util::rng::Rng;
 
@@ -126,6 +127,65 @@ fn prop_all_backends_bit_exact() {
             }
             sharded.process_batch(&events[2 * cut..]);
             assert_eq!(golden.data(), sharded.data(), "sharded diverged at {shards} shards");
+        }
+    });
+}
+
+/// PROPERTY: the SWAR-vectorized decrement/clamp kernel is bit-exact
+/// against the scalar reference loop on random row windows — every width
+/// (1-pixel rows through multi-lane rows), every alignment, rects
+/// touching every border of the window, shard-style `base_row` offsets,
+/// and the full 0..=255 threshold range (the software backends accept any
+/// `TH`, not just the NMC floor).
+#[test]
+fn prop_vector_kernel_equals_scalar() {
+    check(0x51AD0, 80, |rng| {
+        let width = 1 + rng.below(40) as usize;
+        let rows = 1 + rng.below(12) as usize;
+        let base_row = rng.below(300) as u16;
+        let data: Vec<u8> = (0..width * rows).map(|_| rng.below(256) as u8).collect();
+        let x0 = rng.below(width as u64) as u16;
+        let x1 = x0 + rng.below(width as u64 - x0 as u64) as u16;
+        let y0 = base_row + rng.below(rows as u64) as u16;
+        let y1 = y0 + rng.below(rows as u64 - (y0 - base_row) as u64) as u16;
+        let th = rng.below(256) as u8;
+        let rect = PatchRect { x0, x1, y0, y1 };
+        let mut a = data.clone();
+        let mut b = data;
+        decrement_clamp(&mut a, width, base_row, rect, th);
+        decrement_clamp_scalar(&mut b, width, base_row, rect, th);
+        assert_eq!(a, b, "w={width} rows={rows} base={base_row} rect={rect:?} th={th}");
+    });
+}
+
+/// PROPERTY: the three snapshot APIs (`tos_view`, `snapshot_into`,
+/// `snapshot_u8`) agree with each other and with the old `snapshot_u8`
+/// semantics — the golden surface contents — for every backend, and
+/// `snapshot_into` fixes up a wrongly-sized caller buffer.
+#[test]
+fn prop_snapshot_apis_agree_for_every_backend() {
+    check(0x5AA95, 8, |rng| {
+        let res = Resolution::TEST64;
+        let cfg = TosConfig { patch: 7, threshold: 225 + rng.below(20) as u8 };
+        let events = random_events(rng, 1200, res);
+        let mut golden = TosSurface::new(res, cfg).unwrap();
+        golden.update_batch(&events);
+        let backends: Vec<Box<dyn TosBackend>> = vec![
+            Box::new(TosSurface::new(res, cfg).unwrap()),
+            Box::new(ConventionalTos::new(res, cfg, 1.2).unwrap()),
+            Box::new(NmcMacro::new(res, NmcConfig { tos: cfg, ..NmcConfig::default() }).unwrap()),
+            Box::new(ShardedTos::new(res, cfg, 1 + rng.below(8) as usize).unwrap()),
+        ];
+        for mut b in backends {
+            b.process_batch(&events);
+            assert_eq!(b.tos_view(), golden.data(), "{} tos_view", b.name());
+            assert_eq!(b.snapshot_u8(), golden.data(), "{} snapshot_u8", b.name());
+            let mut out = vec![0xAB; 3]; // wrong size on purpose
+            b.snapshot_into(&mut out);
+            assert_eq!(out, golden.data(), "{} snapshot_into", b.name());
+            // reset erases the view too
+            b.reset();
+            assert!(b.tos_view().iter().all(|&v| v == 0), "{} reset view", b.name());
         }
     });
 }
