@@ -1,0 +1,65 @@
+//! Bench: multi-stream serving throughput — aggregate events/s of a
+//! `StreamServer` driving S concurrent synthetic streams through its
+//! worker pool, across stream counts and backends. Emits
+//! `BENCH_serving.json` at the repo root (see DESIGN.md §Hot paths);
+//! `--smoke` shrinks the run for CI.
+//!
+//! Engine-less (eFAST detector), so the rows measure the serving fabric +
+//! pipeline cost, not PJRT. Sessions are submitted in-process: the TCP
+//! wire path adds codec + loopback cost and is covered by the
+//! integration tests; here the question is how aggregate throughput
+//! scales with concurrent streams per backend.
+
+mod common;
+
+use common::Harness;
+use nmc_tos::coordinator::{BackendKind, DetectorKind, PipelineConfig};
+use nmc_tos::datasets::synthetic::SceneConfig;
+use nmc_tos::events::Resolution;
+use nmc_tos::serve::{ServeConfig, StreamServer};
+
+fn main() {
+    let mut h = Harness::new("serving", "BENCH_serving.json");
+
+    println!("== bench: multi-stream serving (in-process sessions) ==");
+    let events_per_stream = h.events(60_000);
+
+    for bk in [BackendKind::Golden, BackendKind::Sharded] {
+        for streams in [1usize, 2, 4, 8] {
+            let mut base = PipelineConfig::davis240();
+            base.backend = bk;
+            base.detector = DetectorKind::Fast;
+            base.shards = 4;
+            base.record_per_event = false;
+            let mut cfg = ServeConfig::new(base);
+            cfg.max_streams = streams;
+            let server = StreamServer::new(cfg).unwrap();
+
+            let total = (streams * events_per_stream) as f64;
+            h.run(
+                &format!("serve/{}/{streams}streams/60k_each", bk.label()),
+                1,
+                3,
+                total,
+                || {
+                    let handles: Vec<_> = (0..streams)
+                        .map(|i| {
+                            let scene = SceneConfig::shapes_dof().build(10 + i as u64);
+                            let source = scene.into_source(events_per_stream, 16_384);
+                            server
+                                .submit(i as u32, Resolution::DAVIS240, Box::new(source))
+                                .unwrap()
+                        })
+                        .collect();
+                    for handle in handles {
+                        std::hint::black_box(handle.join().unwrap().events_signal);
+                    }
+                },
+            );
+            let stats = server.shutdown();
+            assert_eq!(stats.sessions_failed, 0);
+        }
+    }
+
+    h.finish();
+}

@@ -279,8 +279,25 @@ pub struct Pipeline<B: TosBackend = NmcMacro, D: EventScorer = HarrisDetector> {
     stcf: Option<Stcf>,
     dvfs: Option<DvfsController>,
     detector: D,
-    /// Reused frame buffer for the FBF path (no per-refresh allocation).
+    /// Reused FBF buffers (no per-refresh allocation; poolable across
+    /// serving sessions via [`Pipeline::into_parts`]).
+    scratch: PipelineScratch,
+}
+
+/// Reusable per-pipeline scratch buffers for the FBF Harris path: the
+/// u8 -> f32 conversion frame and the sync-mode LUT output buffer.
+///
+/// Both reach frame size once and are then reused for every refresh. A
+/// serving host recycles them across sessions (together with the engine)
+/// through [`Pipeline::into_parts`] /
+/// [`Pipeline::with_parts_and_scratch`], so back-to-back streams at the
+/// same resolution allocate nothing per session either.
+#[derive(Debug, Default)]
+pub struct PipelineScratch {
+    /// u8 TOS -> f32 frame conversion buffer.
     frame: Vec<f32>,
+    /// Sync-mode LUT output buffer ([`HarrisEngine::compute_into`]).
+    lut: Vec<f32>,
 }
 
 /// A pipeline whose backend and detector were chosen at runtime.
@@ -413,6 +430,19 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
         detector: D,
         engine: Option<HarrisEngine>,
     ) -> Result<Self> {
+        Self::with_parts_and_scratch(cfg, backend, detector, engine, PipelineScratch::default())
+    }
+
+    /// Like [`Pipeline::with_parts`] but reusing scratch buffers from a
+    /// previous session (see [`Pipeline::into_parts`]): a serving host
+    /// recycling engine + scratch builds each session allocation-free.
+    pub fn with_parts_and_scratch(
+        cfg: PipelineConfig,
+        backend: B,
+        detector: D,
+        engine: Option<HarrisEngine>,
+        mut scratch: PipelineScratch,
+    ) -> Result<Self> {
         anyhow::ensure!(
             backend.resolution() == cfg.res,
             "backend {}x{} does not match configured sensor {}x{}",
@@ -423,8 +453,16 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
         );
         let stcf = cfg.stcf.map(|c| Stcf::new(cfg.res, c));
         let dvfs = cfg.dvfs.map(DvfsController::new);
-        let frame = vec![0.0f32; cfg.res.pixels()];
-        Ok(Pipeline { cfg, engine, backend, stcf, dvfs, detector, frame })
+        scratch.frame.clear();
+        scratch.frame.resize(cfg.res.pixels(), 0.0);
+        Ok(Pipeline { cfg, engine, backend, stcf, dvfs, detector, scratch })
+    }
+
+    /// Tear the pipeline down into its poolable parts: the (expensive)
+    /// compiled Harris engine and the FBF scratch buffers. The serving
+    /// layer returns both to its per-resolution pool when a session ends.
+    pub fn into_parts(self) -> (Option<HarrisEngine>, PipelineScratch) {
+        (self.engine, self.scratch)
     }
 
     /// Pipeline configuration.
@@ -540,12 +578,18 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
         let (snap_tx, snap_rx) = mpsc::sync_channel::<Vec<u8>>(1);
         let (lut_tx, lut_rx) = mpsc::channel::<Vec<f32>>();
         let (recycle_tx, recycle_rx) = mpsc::channel::<Vec<u8>>();
+        let (lut_recycle_tx, lut_recycle_rx) = mpsc::channel::<Vec<f32>>();
         let worker = std::thread::spawn(move || -> Result<u64> {
             let manifest = Manifest::load(&dir)?;
             let mut engine = HarrisEngine::load(&manifest, &artifact)?;
             let mut computed = 0u64;
             while let Ok(tos) = snap_rx.recv() {
-                let lut = engine.compute_u8(&tos)?;
+                // compute into a LUT buffer the event loop has finished
+                // with (empty only for the first refreshes): together
+                // with the snapshot recycle channel this makes the whole
+                // refresh round-trip allocation-free at steady state
+                let mut lut = lut_recycle_rx.try_recv().unwrap_or_default();
+                engine.compute_u8_into(&tos, &mut lut)?;
                 // hand the snapshot buffer back for reuse; if the event
                 // loop already finished, the buffer just drops
                 let _ = recycle_tx.send(tos);
@@ -605,6 +649,8 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
                 while let Ok(lut) = lut_rx.try_recv() {
                     self.detector.refresh_lut(&lut);
                     st.lut_refreshes += 1;
+                    // return the consumed buffer for the next refresh
+                    let _ = lut_recycle_tx.send(lut);
                 }
                 since_snapshot += 1;
                 if since_snapshot >= offer_every {
@@ -642,6 +688,7 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
         let computed = worker.join().map_err(|_| anyhow::anyhow!("LUT worker panicked"))??;
         // the worker has exited: drain every remaining LUT into the final
         // detector state, so each counted refresh was actually applied
+        // (no recycling needed — there is nobody left to reuse them)
         while let Ok(lut) = lut_rx.try_recv() {
             self.detector.refresh_lut(&lut);
             st.lut_refreshes += 1;
@@ -661,11 +708,15 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
         }
         // borrow the surface straight into the reusable f32 frame — the
         // old path cloned a full u8 frame per refresh first
-        for (f, &v) in self.frame.iter_mut().zip(self.backend.tos_view()) {
+        for (f, &v) in self.scratch.frame.iter_mut().zip(self.backend.tos_view()) {
             *f = v as f32;
         }
-        let lut = engine.compute(&self.frame).context("FBF Harris refresh")?;
-        self.detector.refresh_lut(&lut);
+        // the response map lands in the reusable LUT scratch: the whole
+        // sync refresh is allocation-free after the first iteration
+        engine
+            .compute_into(&self.scratch.frame, &mut self.scratch.lut)
+            .context("FBF Harris refresh")?;
+        self.detector.refresh_lut(&self.scratch.lut);
         Ok(true)
     }
 

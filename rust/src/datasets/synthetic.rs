@@ -296,6 +296,12 @@ impl Scene {
 /// events are sorted locally (step time ranges are disjoint, so the
 /// concatenation is globally time-sorted). The emitted stream is
 /// bit-identical to [`Scene::generate`] with the same seed and total.
+///
+/// The chunk bound is strict: a scene step that produces more events
+/// than the chunk has room for is split across chunks (the remainder is
+/// carried in the step buffer), so `next_chunk` never appends more than
+/// `chunk_events` — a high-rate scene config cannot blow the caller's
+/// O(chunk) memory budget.
 #[derive(Debug, Clone)]
 pub struct SceneSource {
     scene: Scene,
@@ -303,6 +309,8 @@ pub struct SceneSource {
     chunk_events: usize,
     t_us: u64,
     step_buf: Vec<Event>,
+    /// Next unconsumed event in `step_buf` (a step split across chunks).
+    step_pos: usize,
 }
 
 impl SceneSource {
@@ -314,6 +322,7 @@ impl SceneSource {
             chunk_events: chunk_events.max(1),
             t_us: 0,
             step_buf: Vec::new(),
+            step_pos: 0,
         }
     }
 }
@@ -322,13 +331,22 @@ impl EventSource for SceneSource {
     fn next_chunk(&mut self, out: &mut Vec<Event>) -> anyhow::Result<usize> {
         let start = out.len();
         while out.len() - start < self.chunk_events && self.remaining > 0 {
+            // drain the current step first (it may span several chunks)
+            if self.step_pos < self.step_buf.len() {
+                let room = self.chunk_events - (out.len() - start);
+                let avail = self.step_buf.len() - self.step_pos;
+                let take = room.min(avail).min(self.remaining);
+                out.extend_from_slice(&self.step_buf[self.step_pos..self.step_pos + take]);
+                self.step_pos += take;
+                self.remaining -= take;
+                continue;
+            }
+            // step the animation for the next batch of events
             self.step_buf.clear();
+            self.step_pos = 0;
             self.scene.step(self.t_us, &mut self.step_buf, None);
             self.t_us += self.scene.cfg.step_us;
             self.step_buf.sort_by_key(|e| e.t);
-            let take = self.step_buf.len().min(self.remaining);
-            out.extend_from_slice(&self.step_buf[..take]);
-            self.remaining -= take;
         }
         Ok(out.len() - start)
     }
@@ -421,6 +439,29 @@ mod tests {
             while src.next_chunk(&mut got).unwrap() > 0 {}
             assert_eq!(got, want, "chunk {chunk}");
             assert_eq!(src.size_hint(), Some(0));
+        }
+    }
+
+    #[test]
+    fn scene_source_chunk_bound_is_strict() {
+        // one test64 scene step emits ~62 events ((120k+4k) eps x 500 µs),
+        // so chunk sizes below that force every step to split across
+        // chunks; the source must still be bit-identical to batch
+        // generation while never over-filling a chunk
+        let want = SceneConfig::test64().build(21).generate(3_000);
+        for chunk in [1usize, 7, 50] {
+            let mut src = SceneConfig::test64().build(21).into_source(3_000, chunk);
+            let mut got = Vec::new();
+            loop {
+                let before = got.len();
+                let n = src.next_chunk(&mut got).unwrap();
+                assert!(n <= chunk, "chunk {chunk}: appended {n}");
+                assert_eq!(got.len() - before, n);
+                if n == 0 {
+                    break;
+                }
+            }
+            assert_eq!(got, want, "chunk {chunk}");
         }
     }
 

@@ -146,6 +146,35 @@ impl<R: Read> EventSource for BinaryStreamSource<R> {
     }
 }
 
+/// Decode one complete in-memory binary container (header + all
+/// records), appending to `out` and returning the record count. Errors
+/// on bad magic/version, on a body that is not a whole number of
+/// records, and on a header count that disagrees with the body length.
+///
+/// This is the framed network path
+/// ([`FramedStreamSource`](super::source::FramedStreamSource)): the
+/// frame length already bounds memory, so records decode straight from
+/// the payload slice — no reader, no per-call record buffer.
+pub(crate) fn decode_container(data: &[u8], out: &mut Vec<Event>) -> Result<usize> {
+    const HEADER_BYTES: usize = 17; // magic(8) + version(1) + count(8)
+    ensure!(data.len() >= HEADER_BYTES, "truncated container header");
+    ensure!(&data[..8] == MAGIC, "bad magic: {:?}", &data[..8]);
+    ensure!(data[8] == VERSION, "unsupported version {}", data[8]);
+    let declared = u64::from_le_bytes(data[9..HEADER_BYTES].try_into().unwrap());
+    let body = &data[HEADER_BYTES..];
+    let records = body.len() / RECORD_BYTES;
+    ensure!(
+        body.len() % RECORD_BYTES == 0 && declared == records as u64,
+        "container length mismatch: header declares {declared} records over {} body bytes",
+        body.len()
+    );
+    out.reserve(records);
+    for rec in body.chunks_exact(RECORD_BYTES) {
+        out.push(decode_record(rec));
+    }
+    Ok(records)
+}
+
 /// Read a stream of events from the binary container format (load-all
 /// convenience over [`BinaryStreamSource`]).
 pub fn read_binary<R: Read>(r: R) -> Result<Vec<Event>> {
@@ -334,6 +363,34 @@ mod tests {
             while src.next_chunk(&mut out).unwrap() > 0 {}
             assert_eq!(out, events, "chunk {chunk}");
         }
+    }
+
+    #[test]
+    fn decode_container_roundtrip_and_rejects_corruption() {
+        let mut buf = Vec::new();
+        write_binary(&mut buf, &sample()).unwrap();
+        let mut out = Vec::new();
+        assert_eq!(decode_container(&buf, &mut out).unwrap(), 3);
+        assert_eq!(out, sample());
+
+        // truncated body
+        let mut t = buf.clone();
+        t.truncate(t.len() - 1);
+        assert!(decode_container(&t, &mut Vec::new()).is_err());
+        // header count disagrees with body length
+        let mut m = buf.clone();
+        m[9..17].copy_from_slice(&9u64.to_le_bytes());
+        assert!(decode_container(&m, &mut Vec::new()).is_err());
+        // bad magic / truncated header
+        let mut b = buf.clone();
+        b[0] = b'X';
+        assert!(decode_container(&b, &mut Vec::new()).is_err());
+        assert!(decode_container(&buf[..10], &mut Vec::new()).is_err());
+
+        // empty container (keep-alive frame payload) decodes to 0 events
+        let mut empty = Vec::new();
+        write_binary(&mut empty, &[]).unwrap();
+        assert_eq!(decode_container(&empty, &mut Vec::new()).unwrap(), 0);
     }
 
     #[test]

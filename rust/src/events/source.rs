@@ -19,15 +19,20 @@
 //!   line-streaming of the Mueggler `t x y p` text format.
 //! * [`SceneSource`](crate::datasets::synthetic::SceneSource) — the
 //!   synthetic scene generator, stepped on demand.
+//! * [`FramedStreamSource`] — length-prefixed frames of binary event
+//!   containers over any [`Read`] — the network ingestion path
+//!   ([`TcpStreamSource`] is the `TcpStream` instantiation the serving
+//!   layer hands to each session; see `serve::wire` for the framing
+//!   contract).
 //!
 //! [`open`] sniffs a file's container format and returns the right
 //! decoder behind a `Box<dyn EventSource + Send>`.
 
 use std::fs::File;
-use std::io::{Read, Seek};
+use std::io::{BufReader, Read, Seek};
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::codec::{BinaryStreamSource, MAGIC, TextStreamSource};
 use super::Event;
@@ -42,6 +47,18 @@ pub const DEFAULT_CHUNK_EVENTS: usize = 65_536;
 /// order, timestamps non-decreasing across calls) to `out` and returns
 /// how many it appended; `Ok(0)` means the stream is exhausted. Errors
 /// are sticky — callers should not retry a failed source.
+///
+/// ```
+/// use nmc_tos::events::source::{EventSource, SliceSource};
+/// use nmc_tos::events::Event;
+///
+/// let events = vec![Event::on(1, 2, 10), Event::on(3, 4, 20)];
+/// let mut src = SliceSource::new(&events, 1); // one event per chunk
+/// let mut out = Vec::new();
+/// while src.next_chunk(&mut out)? > 0 {}
+/// assert_eq!(out, events);
+/// # anyhow::Ok(())
+/// ```
 pub trait EventSource {
     /// Append the next chunk of events to `out`; `Ok(0)` = end of stream.
     fn next_chunk(&mut self, out: &mut Vec<Event>) -> Result<usize>;
@@ -96,6 +113,76 @@ impl EventSource for SliceSource<'_> {
 
     fn size_hint(&self) -> Option<usize> {
         Some(self.events.len() - self.pos)
+    }
+}
+
+/// Upper bound on one frame's payload (64 MiB). A frame is decoded into
+/// memory as a unit, so this caps per-stream buffer memory no matter what
+/// length prefix a (possibly hostile) peer declares.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Chunked event ingestion over a byte stream: length-prefixed frames,
+/// each holding one complete binary event container
+/// ([`codec::write_binary`](super::codec::write_binary) format).
+///
+/// Framing (all little-endian): `u32` payload byte length, then the
+/// payload; a zero-length frame marks end of stream. One frame decodes to
+/// one [`next_chunk`](EventSource::next_chunk) chunk (empty containers
+/// are skipped, so `Ok(0)` still means end of stream), which keeps the
+/// pipeline's O(chunk) memory bound: the sender's frame size *is* the
+/// chunk size. Frames above [`MAX_FRAME_BYTES`] are rejected — the
+/// prefix is untrusted input and must never size an allocation.
+///
+/// This is the server side of the `nmc-tos serve` wire protocol (the
+/// handshake that precedes the frames lives in `serve::wire`); it is
+/// generic over [`Read`] so tests can drive it from an in-memory buffer.
+#[derive(Debug)]
+pub struct FramedStreamSource<R: Read> {
+    r: R,
+    /// Recycled payload buffer (≤ one frame).
+    payload: Vec<u8>,
+    done: bool,
+}
+
+/// [`FramedStreamSource`] over a buffered TCP connection — the per-session
+/// event source of the serving layer.
+pub type TcpStreamSource = FramedStreamSource<BufReader<std::net::TcpStream>>;
+
+impl<R: Read> FramedStreamSource<R> {
+    /// Wrap a byte stream positioned at the first frame (any handshake
+    /// already consumed).
+    pub fn new(r: R) -> Self {
+        Self { r, payload: Vec::new(), done: false }
+    }
+}
+
+impl<R: Read> EventSource for FramedStreamSource<R> {
+    fn next_chunk(&mut self, out: &mut Vec<Event>) -> Result<usize> {
+        while !self.done {
+            let mut len = [0u8; 4];
+            self.r.read_exact(&mut len).context("reading frame length")?;
+            let len = u32::from_le_bytes(len) as usize;
+            if len == 0 {
+                self.done = true;
+                break;
+            }
+            if len > MAX_FRAME_BYTES {
+                bail!("frame of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte cap");
+            }
+            self.payload.resize(len, 0);
+            self.r.read_exact(&mut self.payload).context("reading frame payload")?;
+            // one frame = one container, decoded straight from the
+            // recycled payload buffer (no reader or per-frame record
+            // buffer on the serving hot path); a frame carrying zero
+            // events is legal (a keep-alive) but must not read as
+            // end-of-stream
+            let appended = super::codec::decode_container(&self.payload, out)
+                .context("decoding frame container")?;
+            if appended > 0 {
+                return Ok(appended);
+            }
+        }
+        Ok(0)
     }
 }
 
@@ -178,6 +265,78 @@ mod tests {
         std::fs::write(&txt, &buf).unwrap();
         let mut src = open(&txt, 64).unwrap();
         assert_eq!(drain(&mut src), evs);
+    }
+
+    /// Frame a slice of events as one length-prefixed container.
+    fn frame(events: &[Event]) -> Vec<u8> {
+        let mut payload = Vec::new();
+        crate::events::codec::write_binary(&mut payload, events).unwrap();
+        let mut out = (payload.len() as u32).to_le_bytes().to_vec();
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    #[test]
+    fn framed_source_decodes_frames_as_chunks() {
+        let evs = ramp(700);
+        let mut wire = Vec::new();
+        for chunk in evs.chunks(256) {
+            wire.extend_from_slice(&frame(chunk));
+        }
+        wire.extend_from_slice(&0u32.to_le_bytes()); // end-of-stream
+        let mut src = FramedStreamSource::new(&wire[..]);
+        let mut out = Vec::new();
+        // each frame is one chunk: 256, 256, 188
+        assert_eq!(src.next_chunk(&mut out).unwrap(), 256);
+        assert_eq!(src.next_chunk(&mut out).unwrap(), 256);
+        assert_eq!(src.next_chunk(&mut out).unwrap(), 188);
+        assert_eq!(src.next_chunk(&mut out).unwrap(), 0);
+        assert_eq!(src.next_chunk(&mut out).unwrap(), 0, "EOS is sticky");
+        assert_eq!(out, evs);
+    }
+
+    #[test]
+    fn framed_source_skips_empty_frames() {
+        let evs = ramp(10);
+        let mut wire = frame(&[]); // keep-alive: zero events, not EOS
+        wire.extend_from_slice(&frame(&evs));
+        wire.extend_from_slice(&0u32.to_le_bytes());
+        let mut src = FramedStreamSource::new(&wire[..]);
+        assert_eq!(drain(&mut src), evs);
+    }
+
+    #[test]
+    fn framed_source_rejects_oversized_and_truncated_frames() {
+        // length prefix beyond the cap must error before any allocation
+        let wire = (u32::MAX).to_le_bytes();
+        let mut src = FramedStreamSource::new(&wire[..]);
+        let err = src.next_chunk(&mut Vec::new()).unwrap_err();
+        assert!(format!("{err:#}").contains("cap"), "{err:#}");
+
+        // frame cut off mid-payload is a clean error, not a hang
+        let mut wire = frame(&ramp(5));
+        wire.truncate(wire.len() - 3);
+        let mut src = FramedStreamSource::new(&wire[..]);
+        assert!(src.next_chunk(&mut Vec::new()).is_err());
+
+        // stream ending without the zero-length EOS frame is an error
+        // (a dropped connection must be distinguishable from a clean end)
+        let wire = frame(&ramp(5));
+        let mut src = FramedStreamSource::new(&wire[..]);
+        let mut out = Vec::new();
+        assert_eq!(src.next_chunk(&mut out).unwrap(), 5);
+        assert!(src.next_chunk(&mut out).is_err());
+    }
+
+    #[test]
+    fn framed_source_rejects_corrupt_container() {
+        let mut payload = Vec::new();
+        crate::events::codec::write_binary(&mut payload, &ramp(3)).unwrap();
+        payload[0] = b'X'; // break the container magic
+        let mut wire = (payload.len() as u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(&payload);
+        let mut src = FramedStreamSource::new(&wire[..]);
+        assert!(src.next_chunk(&mut Vec::new()).is_err());
     }
 
     #[test]

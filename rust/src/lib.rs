@@ -2,41 +2,70 @@
 //!
 //! Full-system reproduction of *"Near-Memory Architecture for
 //! Threshold-Ordinal Surface-Based Corner Detection of Event Cameras"*
-//! (Shang et al., CS.AR 2025).
+//! (Shang et al., cs.AR 2025) — grown into a servable event-camera
+//! corner-detection library.
 //!
 //! The crate simulates the complete corner-detection system of the paper's
 //! Fig. 2 — STCF denoising, the NMC-TOS near-memory macro (phase-level
 //! timing + energy + Monte-Carlo bit errors), DVFS, and the frame-by-frame
 //! Harris lookup-table detector — together with every baseline the paper
-//! compares against (conventional digital TOS, eHarris, FAST, ARC).
+//! compares against (conventional digital TOS, eHarris, eFAST, ARC*).
 //!
-//! Every TOS implementation sits behind the [`tos::TosBackend`] trait
-//! (golden software, conventional digital, NMC macro, and a row-band
-//! sharded parallel software model), and [`coordinator::Pipeline`] is
-//! generic over backend x detector, so any combination runs through the
-//! same system loop (`Pipeline::from_config`, or `--backend`/`--detector`
-//! on the CLI).
+//! ## Architecture
+//!
+//! Three traits carry the whole system; everything else plugs into them:
+//!
+//! * [`tos::TosBackend`] — a TOS implementation (golden software,
+//!   conventional digital, NMC macro, row-band sharded parallel). All are
+//!   bit-exact against each other; only cost/telemetry differ.
+//! * [`detectors::EventScorer`] — a per-event corner scorer (luvHarris
+//!   LUT, eHarris, eFAST, ARC*).
+//! * [`events::source::EventSource`] — chunked, fallible event ingestion:
+//!   in-memory slices, binary/text recordings decoded incrementally,
+//!   synthetic scenes stepped on demand, and framed TCP streams.
+//!
+//! [`coordinator::Pipeline`] is generic over backend x detector and runs
+//! any [`EventSource`](events::source::EventSource) with bounded memory
+//! ([`run_stream`](coordinator::Pipeline::run_stream)); results are
+//! bit-identical at any chunk size. [`serve::StreamServer`] drives many
+//! concurrent pipelines over a worker pool and a shared per-resolution
+//! engine pool — the multi-stream serving layer behind `nmc-tos serve`.
 //!
 //! Layering (see DESIGN.md):
 //! * **L3 (this crate)** — event-by-event coordination, circuit simulation,
-//!   datasets, evaluation, CLI.
+//!   datasets, evaluation, serving, CLI.
 //! * **L2/L1 (python, build-time only)** — the Harris-score graph + Pallas
 //!   stencil kernel, AOT-lowered to `artifacts/*.hlo.txt` and executed
 //!   from [`runtime`] through the PJRT CPU client. Python never runs on
 //!   the event path.
 //!
-//! Quickstart:
-//! ```no_run
+//! ## Quickstart
+//!
+//! Engine-less end-to-end run (no artifacts needed — an SAE detector):
+//!
+//! ```
 //! use nmc_tos::prelude::*;
 //!
-//! let mut scene = nmc_tos::datasets::synthetic::SceneConfig::shapes_dof().build(42);
-//! let events = scene.generate(200_000);
-//! let mut pipe = nmc_tos::coordinator::Pipeline::new(
-//!     nmc_tos::coordinator::PipelineConfig::davis240(),
-//! ).unwrap();
-//! let report = pipe.run(&events).unwrap();
-//! println!("corners: {}", report.corners.len());
+//! // synthetic scene standing in for a DAVIS240 recording
+//! let mut scene = SceneConfig::test64().build(42);
+//! let events = scene.generate(5_000);
+//!
+//! let mut cfg = PipelineConfig::test64();
+//! cfg.detector = DetectorKind::Fast; // SAE detector: no Harris engine
+//! let mut pipe = Pipeline::from_config_without_engine(cfg)?;
+//! let report = pipe.run(&events)?;
+//! assert_eq!(report.events_in, 5_000);
+//! println!("corners: {}", report.corners_total);
+//! # anyhow::Ok(())
 //! ```
+//!
+//! The same pipeline consumes unbounded streams chunk by chunk — see
+//! [`coordinator::Pipeline::run_stream`] — and many streams at once
+//! through [`serve::StreamServer`]. The paper's default combination (NMC
+//! macro + luvHarris LUT) needs the AOT artifacts: `Pipeline::new(
+//! PipelineConfig::davis240())` after `make artifacts`.
+
+#![warn(missing_docs)]
 
 pub mod conventional;
 pub mod util;
@@ -49,6 +78,7 @@ pub mod events;
 pub mod nmc;
 pub mod power;
 pub mod runtime;
+pub mod serve;
 pub mod stcf;
 pub mod tos;
 
@@ -56,15 +86,17 @@ pub mod tos;
 pub mod prelude {
     pub use crate::conventional::ConventionalTos;
     pub use crate::coordinator::{
-        BackendKind, DetectorKind, DynPipeline, Pipeline, PipelineConfig, RunReport,
+        BackendKind, DetectorKind, DynPipeline, Pipeline, PipelineConfig, PipelineScratch,
+        RunReport,
     };
     pub use crate::datasets::{synthetic::SceneConfig, synthetic::SceneSource, DatasetKind};
     pub use crate::detectors::{harris::HarrisDetector, EventScorer};
     pub use crate::dvfs::{DvfsController, DvfsConfig};
-    pub use crate::events::source::{EventSource, SliceSource};
+    pub use crate::events::source::{EventSource, FramedStreamSource, SliceSource};
     pub use crate::events::{Event, Polarity, Resolution};
     pub use crate::eval::{PrCurve, PrPoint};
     pub use crate::nmc::{calib, NmcMacro, NmcConfig};
+    pub use crate::serve::{ServeConfig, ServerStats, SessionHandle, StreamServer};
     pub use crate::stcf::{Stcf, StcfConfig};
     pub use crate::tos::{
         BackendStats, ShardedTos, TosBackend, TosConfig, TosConfigError, TosSurface,

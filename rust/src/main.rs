@@ -16,6 +16,12 @@
 //!                [--input FILE] [--chunk-events N] [--no-record]
 //!                                    # end-to-end demo on shapes_dof, or
 //!                                    # stream a recording with bounded memory
+//! nmc-tos serve  [--listen ADDR] [--max-streams N] [--sessions N]
+//!                [--backend B] [--detector D]
+//!                                    # multi-stream server over TCP
+//! nmc-tos feed   --input FILE [--connect ADDR] [--res WxH]
+//!                [--chunk-events N] [--stream-id N]
+//!                                    # stream a recording to a server
 //! nmc-tos lut                        # DVFS V/f lookup table
 //! ```
 //!
@@ -90,6 +96,8 @@ fn main() -> Result<()> {
         "ber" => cmd_ber(&args),
         "fig11" => cmd_fig11(&args),
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "feed" => cmd_feed(&args),
         "lut" => cmd_lut(),
         "ablate" => cmd_ablate(&args),
         "waveform" => cmd_waveform(&args),
@@ -108,12 +116,18 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "nmc-tos — NMC-TOS full-system reproduction
-commands: fig1b fig8 table1 fig9 fig10 ber fig11 run lut ablate waveform gen-data
+commands: fig1b fig8 table1 fig9 fig10 ber fig11 run serve feed lut ablate waveform gen-data
 common flags: --json PATH (dump machine-readable results)
 run flags:    --backend nmc|conventional|golden|sharded  --detector harris|eharris|fast|arc
               --shards N  --events N  --async  --eharris-window N (binary-surface window, default 2000)
               --input FILE (stream a recording, bounded memory)
               --chunk-events N (default 65536)  --no-record (counters only)
+serve flags:  --listen ADDR (default 127.0.0.1:7700)  --max-streams N (default 4)
+              --sessions N (serve N connections then exit; default: run until killed)
+              --backend B  --detector D  --shards N  --eharris-window N
+feed flags:   --input FILE (required)  --connect ADDR (default 127.0.0.1:7700)
+              --res WxH|davis240|davis346|hd720|test64 (default davis240)
+              --chunk-events N (default 16384)  --stream-id N
 see DESIGN.md for the experiment index";
 
 // ---------------------------------------------------------------------------
@@ -544,6 +558,145 @@ fn cmd_run_stream(args: &Args, mut cfg: PipelineConfig, input: &str) -> Result<J
         ("busy_ns", Json::Num(report.backend.busy_ns)),
         ("energy_pj", Json::Num(report.backend.energy_pj)),
         ("wall_s", Json::Num(report.wall_s)),
+    ]))
+}
+
+/// Parse `--res`: a named sensor or `WIDTHxHEIGHT`.
+fn parse_res(s: &str) -> Result<Resolution> {
+    Ok(match s {
+        "davis240" => Resolution::DAVIS240,
+        "davis346" => Resolution::DAVIS346,
+        "hd720" => Resolution::HD720,
+        "test64" => Resolution::TEST64,
+        other => {
+            let (w, h) = other
+                .split_once('x')
+                .context("--res takes WxH or davis240|davis346|hd720|test64")?;
+            let w: u16 = w.parse().context("bad --res width")?;
+            let h: u16 = h.parse().context("bad --res height")?;
+            anyhow::ensure!(w > 0 && h > 0, "--res {other} is degenerate");
+            Resolution::new(w, h)
+        }
+    })
+}
+
+/// `serve`: accept event streams over TCP and drive each through the
+/// pipeline on a worker pool — one `TosBackend` + detector per stream,
+/// Harris engines shared through a per-resolution pool. Each session's
+/// resolution comes from the client handshake; backend/detector are
+/// server policy. `--sessions N` serves N connections then prints the
+/// aggregate stats (scripted runs); without it the server runs until
+/// killed.
+fn cmd_serve(args: &Args) -> Result<Json> {
+    use nmc_tos::serve::{ServeConfig, StreamServer};
+    let listen = args.get("listen").unwrap_or("127.0.0.1:7700").to_string();
+    let mut cfg = PipelineConfig::davis240();
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.parse()?;
+    }
+    if let Some(d) = args.get("detector") {
+        cfg.detector = d.parse()?;
+    }
+    cfg.shards = args.num("shards", cfg.shards as f64) as usize;
+    cfg.eharris_window = args.num("eharris-window", cfg.eharris_window as f64) as usize;
+    // counters only: streams may be unbounded, and the CLI server has no
+    // consumer for per-event vectors (library embedders that want full
+    // reports use ServeConfig::keep_reports + StreamServer::take_reports)
+    cfg.record_per_event = false;
+    let backend = cfg.backend;
+    let detector = cfg.detector;
+    let mut serve_cfg = ServeConfig::new(cfg);
+    serve_cfg.max_streams = args.num("max-streams", 4.0) as usize;
+    let sessions = match args.get("sessions") {
+        Some(s) => Some(s.parse::<usize>().context("bad --sessions value")?),
+        None => None,
+    };
+
+    let server = StreamServer::new(serve_cfg)?;
+    let listener = std::net::TcpListener::bind(&listen)
+        .with_context(|| format!("binding {listen}"))?;
+    println!(
+        "serving on {listen} — {} workers, backend {} / detector {}{}",
+        args.num("max-streams", 4.0) as usize,
+        backend.label(),
+        detector.label(),
+        match sessions {
+            Some(n) => format!(", exiting after {n} sessions"),
+            None => " (^C to stop)".into(),
+        }
+    );
+    server.serve(&listener, sessions)?;
+    let stats = server.shutdown();
+    println!("== server stats ==");
+    println!("sessions completed   : {}", stats.sessions_completed);
+    println!("sessions failed      : {}", stats.sessions_failed);
+    println!("events ingested      : {}", stats.events_in);
+    println!("signal after STCF    : {}", stats.events_signal);
+    println!("corners tagged       : {}", stats.corners_total);
+    println!("peak concurrency     : {}", stats.peak_concurrent);
+    println!("mean ingest rate     : {:.0} keps", stats.events_per_sec() / 1e3);
+    println!("worst realtime lag   : {:+.3} s", stats.worst_lag_s);
+    println!(
+        "engines compiled/reused: {}/{}",
+        stats.pool.engines_created, stats.pool.engines_reused
+    );
+    Ok(Json::obj(vec![
+        ("listen", Json::Str(listen)),
+        ("sessions_completed", Json::Num(stats.sessions_completed as f64)),
+        ("sessions_failed", Json::Num(stats.sessions_failed as f64)),
+        ("events_in", Json::Num(stats.events_in as f64)),
+        ("events_signal", Json::Num(stats.events_signal as f64)),
+        ("corners", Json::Num(stats.corners_total as f64)),
+        ("peak_concurrent", Json::Num(stats.peak_concurrent as f64)),
+        ("events_per_sec", Json::Num(stats.events_per_sec())),
+        ("worst_lag_s", Json::Num(stats.worst_lag_s)),
+        ("engines_created", Json::Num(stats.pool.engines_created as f64)),
+        ("engines_reused", Json::Num(stats.pool.engines_reused as f64)),
+    ]))
+}
+
+/// `feed`: stream a recording to a running `serve` instance over TCP
+/// (the loopback test client: `gen-data` + `serve` + `feed` is a full
+/// serving smoke test on one machine). Prints the server's end-of-stream
+/// summary.
+fn cmd_feed(args: &Args) -> Result<Json> {
+    use nmc_tos::serve::wire::{self, Hello};
+    let input = args.get("input").context("feed needs --input FILE")?;
+    let connect = args.get("connect").unwrap_or("127.0.0.1:7700");
+    let chunk = args.num("chunk-events", 16_384.0) as usize;
+    let stream_id = args.num("stream-id", 0.0) as u32;
+    let res = parse_res(args.get("res").unwrap_or("davis240"))?;
+
+    let mut source = nmc_tos::events::source::open(std::path::Path::new(input), chunk)?;
+    let stream = std::net::TcpStream::connect(connect)
+        .with_context(|| format!("connecting to {connect}"))?;
+    let t0 = std::time::Instant::now();
+    let summary = wire::feed(stream, Hello { stream_id, res }, &mut source)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("== fed {input} to {connect} (stream {stream_id}, chunks of {chunk}) ==");
+    println!("events sent          : {}", summary.events_in);
+    println!("signal after STCF    : {}", summary.events_signal);
+    println!("corners tagged       : {}", summary.corners_total);
+    println!("LUT refreshes        : {}", summary.lut_refreshes);
+    println!("DVFS switches        : {}", summary.dvfs_switches);
+    println!("server busy          : {:.3} s", summary.wall_us as f64 / 1e6);
+    println!(
+        "round trip           : {:.3} s ({:.0} keps)",
+        wall,
+        summary.events_in as f64 / wall.max(1e-9) / 1e3
+    );
+    Ok(Json::obj(vec![
+        ("input", Json::Str(input.into())),
+        ("connect", Json::Str(connect.into())),
+        ("stream_id", Json::Num(stream_id as f64)),
+        ("events_in", Json::Num(summary.events_in as f64)),
+        ("events_signal", Json::Num(summary.events_signal as f64)),
+        ("corners", Json::Num(summary.corners_total as f64)),
+        ("lut_refreshes", Json::Num(summary.lut_refreshes as f64)),
+        ("dvfs_switches", Json::Num(summary.dvfs_switches as f64)),
+        ("server_wall_s", Json::Num(summary.wall_us as f64 / 1e6)),
+        ("roundtrip_s", Json::Num(wall)),
     ]))
 }
 

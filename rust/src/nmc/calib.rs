@@ -42,6 +42,8 @@ pub const PATCH_ENERGY_MIN_PJ: f64 = 26.0;
 /// cycles needed per 7x7 patch (1 px/cycle sequential read-modify-write,
 /// plus the paper's 392 ns => 196 cycles at 500 MHz).
 pub const CONV_CLOCK_NOM_HZ: f64 = 500.0e6;
+/// Cycles per 7x7 patch on the conventional datapath (see
+/// [`CONV_CLOCK_NOM_HZ`]).
 pub const CONV_CYCLES_PER_PATCH: f64 = 196.0;
 /// Conventional-vs-NMC energy ratio at equal voltage (paper: "1.2x",
 /// pinned so that E_conv(1.2 V) / E_nmc(0.6 V) = 6.6x as reported).
@@ -59,7 +61,9 @@ pub const ENERGY_SHARE_LABELS: [&str; 4] = ["peripheral", "array", "driver", "se
 /// SRAM block geometry (paper Fig. 3): one block stores 180 x 120 pixels
 /// as 180 rows x 600 columns of 5-bit words.
 pub const BLOCK_ROWS: usize = 180;
+/// Pixels per SRAM block row (see [`BLOCK_ROWS`]).
 pub const BLOCK_COLS_PX: usize = 120;
+/// Bits per pixel word in the SRAM array (see [`BLOCK_ROWS`]).
 pub const BITS_PER_WORD: usize = 5;
 
 /// DAVIS240 peak bus bandwidth used in Fig. 1(b) (events/s).

@@ -129,8 +129,21 @@ impl HarrisEngine {
     /// Compute the Harris LUT of one TOS frame.
     ///
     /// `frame` is row-major `height*width` f32 in `[0, 255]`; returns the
-    /// normalized response map in `[0, 1]`.
+    /// normalized response map in `[0, 1]`. Allocating convenience over
+    /// [`HarrisEngine::compute_into`].
     pub fn compute(&mut self, frame: &[f32]) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.compute_into(frame, &mut out)?;
+        Ok(out)
+    }
+
+    /// Compute the Harris LUT of one TOS frame into a caller-owned buffer
+    /// (resized to `height*width`). Steady-state this allocates nothing:
+    /// the refresh paths hand the same buffer back each time, so the
+    /// response map is read straight out of the PJRT literal into it
+    /// (`Literal::copy_raw_to` — the same primitive `to_vec` wraps, minus
+    /// the fresh allocation).
+    pub fn compute_into(&mut self, frame: &[f32], out: &mut Vec<f32>) -> Result<()> {
         if frame.len() != self.height * self.width {
             bail!("frame size {} != {}x{}", frame.len(), self.height, self.width);
         }
@@ -141,21 +154,32 @@ impl HarrisEngine {
             .to_literal_sync()
             .context("fetching result")?;
         // aot.py lowers with return_tuple=True -> unwrap the 1-tuple
-        let out = result.to_tuple1().context("unwrapping result tuple")?;
-        let values = out.to_vec::<f32>().context("reading result values")?;
+        let lit = result.to_tuple1().context("unwrapping result tuple")?;
+        out.resize(self.height * self.width, 0.0);
+        lit.copy_raw_to::<f32>(out).context("reading result values")?;
         self.executions += 1;
-        Ok(values)
+        Ok(())
     }
 
     /// Compute from a u8 TOS snapshot. The u8 -> f32 conversion goes
     /// through a reusable scratch buffer (no per-call frame allocation).
     pub fn compute_u8(&mut self, tos: &[u8]) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.compute_u8_into(tos, &mut out)?;
+        Ok(out)
+    }
+
+    /// Compute from a u8 TOS snapshot into a caller-owned LUT buffer: the
+    /// fully recycled refresh path (the async LUT worker sends consumed
+    /// LUT buffers back over a recycle channel and computes the next map
+    /// into them — zero per-refresh f32 allocation on either side).
+    pub fn compute_u8_into(&mut self, tos: &[u8], out: &mut Vec<f32>) -> Result<()> {
         let mut frame = std::mem::take(&mut self.frame_scratch);
         frame.clear();
         frame.extend(tos.iter().map(|&v| v as f32));
-        let out = self.compute(&frame);
+        let result = self.compute_into(&frame, out);
         self.frame_scratch = frame;
-        out
+        result
     }
 
     /// PJRT platform string (telemetry / sanity).

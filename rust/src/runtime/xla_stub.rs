@@ -110,6 +110,13 @@ impl Literal {
     pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaUnavailable> {
         Err(XlaUnavailable)
     }
+
+    /// Unreachable. Mirrors `xla::Literal::copy_raw_to` (the zero-extra-
+    /// allocation read path `to_vec` is built on): copies the literal's
+    /// elements into a caller-owned slice.
+    pub fn copy_raw_to<T>(&self, _dst: &mut [T]) -> Result<(), XlaUnavailable> {
+        Err(XlaUnavailable)
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,645 @@
+//! Multi-stream serving: one process driving many concurrent event
+//! streams through the Fig. 2 pipeline over a shared engine pool.
+//!
+//! [`StreamServer`] owns a pool of worker threads (one active session per
+//! worker, `max_streams` total) and two front doors:
+//!
+//! * **TCP** ([`StreamServer::serve`]) — each connection is one session:
+//!   a handshake declaring the stream's resolution
+//!   ([`wire::Hello`]), then length-prefixed binary event frames
+//!   (the on-disk codec, relayed without re-encoding), answered with a
+//!   counters [`wire::Summary`] when the stream ends. `nmc-tos feed`
+//!   is the matching client.
+//! * **in-process** ([`StreamServer::submit`]) — tests, benches and
+//!   embedding applications hand the server an [`EventSource`] directly
+//!   and get the full [`RunReport`] back through a [`SessionHandle`].
+//!
+//! Every session runs the exact same `run_stream` machinery as a
+//! single-shot `nmc-tos run`: a served stream's report is bit-identical
+//! to running the same events sequentially (the integration test in
+//! `rust/tests/serve_integration.rs` proves it for concurrent sessions).
+//! Expensive state that does not depend on stream *content* — compiled
+//! Harris engines and FBF scratch buffers — lives in a per-resolution
+//! [`EnginePool`] shared by all workers, so N streams don't pay N engine
+//! setups; per-stream state is just the pipeline itself (surface + STCF
+//! history + DVFS counters), which is what keeps many streams resident
+//! on one box.
+//!
+//! Failure isolation: a session that errors (dropped connection, corrupt
+//! frame, handshake garbage) is counted in [`ServerStats::sessions_failed`],
+//! its worker moves on to the next session, and nothing shared is
+//! poisoned.
+
+pub mod pool;
+pub mod wire;
+
+use std::io::{BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{make_backend, make_detector, DynPipeline, PipelineConfig, RunReport};
+use crate::events::source::{EventSource, TcpStreamSource};
+use crate::events::{Event, Resolution};
+
+pub use pool::{EnginePool, PoolStats};
+pub use wire::{Hello, Summary};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Per-session pipeline template. A session clones it and overrides
+    /// `res` with the handshake's geometry; `async_refresh` is forced off
+    /// (the async worker loads a private engine, which would bypass the
+    /// shared pool). For unbounded streams keep `record_per_event` off.
+    pub base: PipelineConfig,
+    /// Worker count = max concurrent sessions. Further connections queue
+    /// in the listener backlog until a worker frees up (no event loss —
+    /// backpressure, not drops).
+    pub max_streams: usize,
+    /// Retain every session's full [`RunReport`] (keyed by stream id) for
+    /// [`StreamServer::take_reports`]. Tests and short-lived servers
+    /// only — reports hold per-event vectors when recording is on.
+    pub keep_reports: bool,
+    /// Per-connection socket read/write timeout (default 30 s). A client
+    /// that stays silent longer — live feeds with sparse traffic send
+    /// keep-alive frames (empty containers) — fails its session and
+    /// frees the worker; without a timeout, `max_streams` idle
+    /// connections would pin every worker forever. `None` blocks
+    /// indefinitely (trusted peers only).
+    pub io_timeout: Option<Duration>,
+}
+
+impl ServeConfig {
+    /// Serve `base` with default worker count (4), no report retention,
+    /// and a 30 s connection timeout.
+    pub fn new(base: PipelineConfig) -> Self {
+        Self {
+            base,
+            max_streams: 4,
+            keep_reports: false,
+            io_timeout: Some(Duration::from_secs(30)),
+        }
+    }
+}
+
+/// Aggregate serving telemetry (monotonic counters over the server's
+/// lifetime; a snapshot, not a live view).
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    /// Sessions handed to workers (TCP accepts + in-process submissions).
+    pub sessions_accepted: u64,
+    /// Sessions that ran to a clean end of stream.
+    pub sessions_completed: u64,
+    /// Sessions that died mid-stream (dropped connection, bad handshake,
+    /// corrupt frame, pipeline error). Their worker cleaned up and moved
+    /// on.
+    pub sessions_failed: u64,
+    /// Events ingested across completed sessions.
+    pub events_in: u64,
+    /// Events surviving STCF across completed sessions.
+    pub events_signal: u64,
+    /// Corner tags across completed sessions.
+    pub corners_total: u64,
+    /// Summed session wall time (s). `events_in / busy_s` is the mean
+    /// per-worker throughput; it exceeds single-stream throughput times
+    /// worker count only if sessions overlapped.
+    pub busy_s: f64,
+    /// Most concurrently active sessions observed.
+    pub peak_concurrent: usize,
+    /// Worst per-stream real-time lag (s): session wall time minus the
+    /// stream's own event-time span. Positive = that stream fell behind
+    /// a live sensor; negative = processed faster than real time. 0
+    /// until the first session completes.
+    pub worst_lag_s: f64,
+    /// Engine-pool counters (cold compiles vs pooled reuses).
+    pub pool: PoolStats,
+}
+
+impl ServerStats {
+    /// Mean ingest rate over busy time (events/s); 0 before any session.
+    pub fn events_per_sec(&self) -> f64 {
+        if self.busy_s > 0.0 {
+            self.events_in as f64 / self.busy_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One queued session (TCP connection or in-process source).
+enum Session {
+    Tcp(TcpStream),
+    Local {
+        stream_id: u32,
+        res: Resolution,
+        source: Box<dyn EventSource + Send>,
+        reply: mpsc::Sender<Result<RunReport>>,
+    },
+}
+
+/// Handle to an in-process session: resolves to the session's full
+/// [`RunReport`] when the stream ends.
+#[derive(Debug)]
+pub struct SessionHandle {
+    rx: mpsc::Receiver<Result<RunReport>>,
+}
+
+impl SessionHandle {
+    /// Block until the session finishes and return its report.
+    pub fn join(self) -> Result<RunReport> {
+        self.rx.recv().context("server shut down before the session finished")?
+    }
+}
+
+/// State shared between the accept loop, workers, and the public API.
+struct Shared {
+    cfg: ServeConfig,
+    pool: EnginePool,
+    stats: Mutex<ServerStats>,
+    active: AtomicUsize,
+    reports: Mutex<Vec<(u32, RunReport)>>,
+    engine_warned: AtomicBool,
+}
+
+/// Multi-stream server: a worker pool driving concurrent pipeline
+/// sessions over a shared [`EnginePool`]. See the [module docs](self)
+/// for the serving model and `nmc-tos serve` for the CLI front end.
+pub struct StreamServer {
+    shared: Arc<Shared>,
+    tx: Option<mpsc::SyncSender<Session>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for StreamServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamServer")
+            .field("max_streams", &self.shared.cfg.max_streams)
+            .field("active", &self.shared.active.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl StreamServer {
+    /// Spawn the worker pool (`cfg.max_streams` threads, each running one
+    /// session at a time). The engine pool reads artifacts from
+    /// `cfg.base.artifact_dir` (or auto-discovers).
+    pub fn new(cfg: ServeConfig) -> Result<StreamServer> {
+        anyhow::ensure!(cfg.max_streams >= 1, "max_streams must be >= 1");
+        let pool = EnginePool::new(cfg.base.artifact_dir.clone());
+        let shared = Arc::new(Shared {
+            cfg,
+            pool,
+            stats: Mutex::new(ServerStats::default()),
+            active: AtomicUsize::new(0),
+            reports: Mutex::new(Vec::new()),
+            engine_warned: AtomicBool::new(false),
+        });
+        // rendezvous channel: a session is accepted exactly when a worker
+        // is ready to run it — everything else waits in the OS backlog
+        let (tx, rx) = mpsc::sync_channel::<Session>(0);
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..shared.cfg.max_streams)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || worker_loop(&shared, &rx))
+            })
+            .collect();
+        Ok(StreamServer { shared, tx: Some(tx), workers })
+    }
+
+    /// Enqueue an in-process session (blocks until a worker picks it up).
+    /// The returned handle resolves to the session's full [`RunReport`].
+    pub fn submit(
+        &self,
+        stream_id: u32,
+        res: Resolution,
+        source: Box<dyn EventSource + Send>,
+    ) -> Result<SessionHandle> {
+        let (reply, rx) = mpsc::channel();
+        self.shared.stats.lock().unwrap().sessions_accepted += 1;
+        self.tx
+            .as_ref()
+            .expect("server already shut down")
+            .send(Session::Local { stream_id, res, source, reply })
+            .map_err(|_| anyhow::anyhow!("server workers have shut down"))?;
+        Ok(SessionHandle { rx })
+    }
+
+    /// Accept loop: hand each connection to the worker pool as one
+    /// session. With `max_sessions = Some(n)` the loop returns after
+    /// accepting `n` connections (scripted demos, tests); `None` serves
+    /// until the process exits.
+    pub fn serve(&self, listener: &TcpListener, max_sessions: Option<usize>) -> Result<()> {
+        let tx = self.tx.as_ref().expect("server already shut down");
+        let mut accepted = 0usize;
+        for conn in listener.incoming() {
+            let conn = conn.context("accepting connection")?;
+            self.shared.stats.lock().unwrap().sessions_accepted += 1;
+            tx.send(Session::Tcp(conn))
+                .map_err(|_| anyhow::anyhow!("server workers have shut down"))?;
+            accepted += 1;
+            if max_sessions.is_some_and(|n| accepted >= n) {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Snapshot of the aggregate serving telemetry.
+    pub fn stats(&self) -> ServerStats {
+        let mut stats = self.shared.stats.lock().unwrap().clone();
+        stats.pool = self.shared.pool.stats();
+        stats
+    }
+
+    /// Sessions currently running.
+    pub fn active_sessions(&self) -> usize {
+        self.shared.active.load(Ordering::Relaxed)
+    }
+
+    /// Drain the retained `(stream_id, report)` pairs
+    /// ([`ServeConfig::keep_reports`]; empty when retention is off).
+    pub fn take_reports(&self) -> Vec<(u32, RunReport)> {
+        std::mem::take(&mut *self.shared.reports.lock().unwrap())
+    }
+
+    /// Stop accepting sessions, wait for in-flight ones to finish, and
+    /// return the final stats. (Dropping the server does the same minus
+    /// the stats.)
+    pub fn shutdown(mut self) -> ServerStats {
+        self.shutdown_workers();
+        self.stats()
+    }
+
+    fn shutdown_workers(&mut self) {
+        drop(self.tx.take()); // workers see the channel close and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for StreamServer {
+    fn drop(&mut self) {
+        self.shutdown_workers();
+    }
+}
+
+/// Worker: run queued sessions until the channel closes.
+fn worker_loop(shared: &Shared, rx: &Mutex<mpsc::Receiver<Session>>) {
+    loop {
+        // take the lock only to dequeue, never while running a session
+        let session = match rx.lock().unwrap().recv() {
+            Ok(s) => s,
+            Err(_) => return, // server shut down
+        };
+        let active = shared.active.fetch_add(1, Ordering::SeqCst) + 1;
+        {
+            let mut stats = shared.stats.lock().unwrap();
+            stats.peak_concurrent = stats.peak_concurrent.max(active);
+        }
+        // a panicking session must not take its worker (and a slice of
+        // server capacity) down with it: catch the unwind, count it as a
+        // failed session, and keep serving
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match session {
+            Session::Tcp(stream) => run_tcp_session(shared, stream),
+            Session::Local { stream_id, res, mut source, reply } => {
+                let result = run_session(shared, stream_id, res, &mut source);
+                match result {
+                    Ok((report, lag_s)) => {
+                        record_completion(shared, stream_id, &report, lag_s);
+                        let _ = reply.send(Ok(report));
+                        Ok(())
+                    }
+                    Err(e) => {
+                        let _ = reply.send(Err(anyhow::anyhow!("{e:#}")));
+                        Err(e)
+                    }
+                }
+            }
+        }));
+        shared.active.fetch_sub(1, Ordering::SeqCst);
+        match outcome {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                shared.stats.lock().unwrap().sessions_failed += 1;
+                eprintln!("serve: session failed: {e:#}");
+            }
+            Err(_) => {
+                shared.stats.lock().unwrap().sessions_failed += 1;
+                eprintln!("serve: session panicked; worker continues");
+            }
+        }
+    }
+}
+
+/// Largest pixel count a TCP handshake may declare (a 4K-class sensor).
+/// The resolution sizes real allocations (surface, STCF history, f32
+/// frames), so like the frame length prefix it is untrusted input: a
+/// bogus `Hello` gets `ACK_REJECTED`, not a multi-GB allocation.
+const MAX_SESSION_PIXELS: usize = 4096 * 4096;
+
+/// One TCP session: handshake, stream, summary. Any error mid-way drops
+/// the connection; the caller counts it as failed.
+fn run_tcp_session(shared: &Shared, stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // a silent peer must not pin this worker forever: reads and writes
+    // give up after the configured timeout and fail the session
+    stream.set_read_timeout(shared.cfg.io_timeout).ok();
+    stream.set_write_timeout(shared.cfg.io_timeout).ok();
+    let mut reader = BufReader::new(stream.try_clone().context("cloning connection")?);
+    let hello = match wire::read_hello(&mut reader) {
+        Ok(h) if h.res.pixels() > MAX_SESSION_PIXELS => {
+            let _ = wire::write_ack(&mut &stream, wire::ACK_REJECTED);
+            anyhow::bail!(
+                "handshake: resolution {}x{} exceeds the {MAX_SESSION_PIXELS}-pixel cap",
+                h.res.width,
+                h.res.height
+            );
+        }
+        Ok(h) => h,
+        Err(e) => {
+            let _ = wire::write_ack(&mut &stream, wire::ACK_REJECTED);
+            return Err(e.context("handshake"));
+        }
+    };
+    wire::write_ack(&mut &stream, wire::ACK_OK)?;
+    (&stream).flush()?;
+
+    let framed: TcpStreamSource = crate::events::source::FramedStreamSource::new(reader);
+    let mut source = BoundsCheckedSource { inner: framed, res: hello.res };
+    let (report, lag_s) = run_session(shared, hello.stream_id, hello.res, &mut source)?;
+    wire::write_summary(&mut &stream, &wire::Summary::from_report(hello.stream_id, &report))?;
+    (&stream).flush()?;
+    record_completion(shared, hello.stream_id, &report, lag_s);
+    Ok(())
+}
+
+/// Build a pipeline for one session (engine + scratch from the pool),
+/// run the stream, and return the report plus the session's real-time
+/// lag (wall seconds minus event-time span).
+fn run_session<S: EventSource + ?Sized>(
+    shared: &Shared,
+    stream_id: u32,
+    res: Resolution,
+    source: &mut S,
+) -> Result<(RunReport, f64)> {
+    let mut cfg = shared.cfg.base.clone();
+    cfg.res = res;
+    // sync refresh only: the async worker loads a private engine, which
+    // would bypass the pool and double-load artifacts per session
+    cfg.async_refresh = false;
+
+    let backend = make_backend(&cfg).with_context(|| format!("stream {stream_id}: backend"))?;
+    let detector = make_detector(&cfg);
+    let engine = if detector.wants_lut() {
+        match shared.pool.checkout_engine(res) {
+            Ok(engine) => Some(engine),
+            Err(e) => {
+                // no artifacts / no PJRT runtime: serve engine-less (LUT
+                // scores stay zero) instead of refusing streams, and say
+                // so once rather than once per session
+                if !shared.engine_warned.swap(true, Ordering::Relaxed) {
+                    eprintln!("serve: running engine-less ({e:#})");
+                }
+                None
+            }
+        }
+    } else {
+        None
+    };
+    let scratch = shared.pool.checkout_scratch(res);
+
+    let mut pipe = DynPipeline::with_parts_and_scratch(cfg, backend, detector, engine, scratch)?;
+    let mut tracked = SpanSource::new(source);
+    let result = pipe.run_stream(&mut tracked);
+    let span_s = tracked.span_s();
+    // engine + scratch go back to the pool whether the run succeeded or
+    // not — a failed stream must not leak the shared engine
+    let (engine, scratch) = pipe.into_parts();
+    if let Some(engine) = engine {
+        shared.pool.checkin_engine(engine);
+    }
+    shared.pool.checkin_scratch(res, scratch);
+
+    let report = result.with_context(|| format!("stream {stream_id}"))?;
+    let lag_s = report.wall_s - span_s;
+    Ok((report, lag_s))
+}
+
+/// Fold a finished session into the aggregate stats (and retained
+/// reports, if enabled).
+fn record_completion(shared: &Shared, stream_id: u32, report: &RunReport, lag_s: f64) {
+    let mut stats = shared.stats.lock().unwrap();
+    stats.sessions_completed += 1;
+    stats.events_in += report.events_in as u64;
+    stats.events_signal += report.events_signal as u64;
+    stats.corners_total += report.corners_total;
+    stats.busy_s += report.wall_s;
+    // the first session seeds the value so faster-than-realtime fleets
+    // report their true (negative) worst lag instead of flooring at 0
+    stats.worst_lag_s =
+        if stats.sessions_completed == 1 { lag_s } else { stats.worst_lag_s.max(lag_s) };
+    drop(stats);
+    if shared.cfg.keep_reports {
+        shared.reports.lock().unwrap().push((stream_id, report.clone()));
+    }
+}
+
+/// [`EventSource`] adapter rejecting events outside the session's
+/// declared resolution. Frame payloads are untrusted remote input: an
+/// out-of-range `y` would index past the surface/STCF arrays (worker
+/// panic), and an out-of-range `x` with in-range `y` would alias into
+/// the next row (silent corruption) — neither may reach the pipeline.
+struct BoundsCheckedSource<S> {
+    inner: S,
+    res: Resolution,
+}
+
+impl<S: EventSource> EventSource for BoundsCheckedSource<S> {
+    fn next_chunk(&mut self, out: &mut Vec<Event>) -> Result<usize> {
+        let start = out.len();
+        let n = self.inner.next_chunk(out)?;
+        for ev in &out[start..] {
+            anyhow::ensure!(
+                ev.x < self.res.width && ev.y < self.res.height,
+                "event at ({}, {}) outside the declared {}x{} sensor",
+                ev.x,
+                ev.y,
+                self.res.width,
+                self.res.height
+            );
+        }
+        Ok(n)
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        self.inner.size_hint()
+    }
+}
+
+/// [`EventSource`] adapter recording the stream's event-time span (first
+/// to last timestamp) for the per-stream real-time lag metric.
+struct SpanSource<'a, S: ?Sized> {
+    inner: &'a mut S,
+    first_t: Option<u64>,
+    last_t: u64,
+}
+
+impl<'a, S: EventSource + ?Sized> SpanSource<'a, S> {
+    fn new(inner: &'a mut S) -> Self {
+        Self { inner, first_t: None, last_t: 0 }
+    }
+
+    /// Event-time span in seconds (0 for empty streams).
+    fn span_s(&self) -> f64 {
+        match self.first_t {
+            Some(first) => (self.last_t.saturating_sub(first)) as f64 * 1e-6,
+            None => 0.0,
+        }
+    }
+}
+
+impl<S: EventSource + ?Sized> EventSource for SpanSource<'_, S> {
+    fn next_chunk(&mut self, out: &mut Vec<Event>) -> Result<usize> {
+        let start = out.len();
+        let n = self.inner.next_chunk(out)?;
+        if n > 0 {
+            // the stream is time-sorted: first/last of the chunk suffice
+            if self.first_t.is_none() {
+                self.first_t = Some(out[start].t);
+            }
+            self.last_t = out[out.len() - 1].t;
+        }
+        Ok(n)
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        self.inner.size_hint()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BackendKind, DetectorKind, Pipeline};
+    use crate::datasets::synthetic::SceneConfig;
+
+    fn base_cfg() -> PipelineConfig {
+        let mut cfg = PipelineConfig::test64();
+        cfg.detector = DetectorKind::Fast; // engine-less: no artifacts needed
+        cfg
+    }
+
+    #[test]
+    fn local_session_matches_sequential_run() {
+        let events = SceneConfig::test64().build(31).generate(6_000);
+        let mut pipe = Pipeline::from_config_without_engine(base_cfg()).unwrap();
+        let want = pipe.run(&events).unwrap();
+
+        let server = StreamServer::new(ServeConfig::new(base_cfg())).unwrap();
+        let source = SceneConfig::test64().build(31).into_source(6_000, 512);
+        let got = server.submit(7, Resolution::TEST64, Box::new(source)).unwrap().join().unwrap();
+
+        assert_eq!(want.final_tos, got.final_tos);
+        assert_eq!(want.scores, got.scores);
+        assert_eq!(want.corners, got.corners);
+        assert_eq!(want.events_in, got.events_in);
+
+        let stats = server.shutdown();
+        assert_eq!(stats.sessions_accepted, 1);
+        assert_eq!(stats.sessions_completed, 1);
+        assert_eq!(stats.sessions_failed, 0);
+        assert_eq!(stats.events_in, 6_000);
+    }
+
+    #[test]
+    fn many_local_sessions_share_one_server() {
+        let mut cfg = base_cfg();
+        cfg.backend = BackendKind::Sharded;
+        cfg.shards = 2;
+        let mut serve_cfg = ServeConfig::new(cfg);
+        serve_cfg.max_streams = 3;
+        let server = StreamServer::new(serve_cfg).unwrap();
+
+        let handles: Vec<SessionHandle> = (0..6u32)
+            .map(|i| {
+                let source = SceneConfig::test64().build(100 + i as u64).into_source(2_000, 257);
+                server.submit(i, Resolution::TEST64, Box::new(source)).unwrap()
+            })
+            .collect();
+        for h in handles {
+            let report = h.join().unwrap();
+            assert_eq!(report.events_in, 2_000);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.sessions_completed, 6);
+        assert!(stats.peak_concurrent >= 1);
+        assert!(stats.events_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn failed_session_is_counted_and_isolated() {
+        /// A source that errors mid-stream (a dropped connection).
+        struct Dying(usize);
+        impl EventSource for Dying {
+            fn next_chunk(&mut self, out: &mut Vec<Event>) -> Result<usize> {
+                if self.0 == 0 {
+                    anyhow::bail!("simulated connection drop");
+                }
+                self.0 -= 1;
+                out.push(Event::on(1, 1, 1));
+                Ok(1)
+            }
+        }
+
+        let server = StreamServer::new(ServeConfig::new(base_cfg())).unwrap();
+        let err = server.submit(1, Resolution::TEST64, Box::new(Dying(3))).unwrap().join();
+        assert!(err.is_err());
+
+        // the worker that ran the failed session still serves new ones
+        let source = SceneConfig::test64().build(5).into_source(1_000, 128);
+        let ok = server.submit(2, Resolution::TEST64, Box::new(source)).unwrap().join();
+        assert!(ok.is_ok());
+
+        let stats = server.shutdown();
+        assert_eq!(stats.sessions_failed, 1);
+        assert_eq!(stats.sessions_completed, 1);
+    }
+
+    #[test]
+    fn keep_reports_retains_by_stream_id() {
+        let mut serve_cfg = ServeConfig::new(base_cfg());
+        serve_cfg.keep_reports = true;
+        let server = StreamServer::new(serve_cfg).unwrap();
+        for id in [11u32, 22] {
+            let source = SceneConfig::test64().build(id as u64).into_source(1_500, 300);
+            server.submit(id, Resolution::TEST64, Box::new(source)).unwrap().join().unwrap();
+        }
+        let mut reports = server.take_reports();
+        reports.sort_by_key(|(id, _)| *id);
+        let ids: Vec<u32> = reports.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![11, 22]);
+        assert!(server.take_reports().is_empty(), "take drains");
+    }
+
+    #[test]
+    fn span_source_tracks_event_time() {
+        let events = vec![
+            Event::on(0, 0, 1_000_000),
+            Event::on(1, 1, 1_500_000),
+            Event::on(2, 2, 3_000_000),
+        ];
+        let mut inner = crate::events::source::SliceSource::new(&events, 2);
+        let mut span = SpanSource::new(&mut inner);
+        let mut out = Vec::new();
+        while span.next_chunk(&mut out).unwrap() > 0 {}
+        assert!((span.span_s() - 2.0).abs() < 1e-9);
+    }
+}

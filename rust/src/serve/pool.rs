@@ -1,0 +1,177 @@
+//! Shared expensive state for the serving layer: compiled Harris engines
+//! and per-session scratch buffers, pooled by resolution.
+//!
+//! An FBF Harris engine is the most expensive piece of per-stream state
+//! (artifact manifest read + HLO parse + PJRT compile), and it is only
+//! needed while a LUT-consuming session is actually running. The pool
+//! checks engines out to sessions and back in when they end, so N
+//! concurrent streams at the same resolution pay for at most
+//! min(N, max concurrent LUT streams) engine setups — and a stream
+//! arriving after another finished pays for none. The artifact manifest
+//! itself is parsed once per pool. [`PipelineScratch`] buffers (two f32
+//! frames per session) are recycled the same way, so steady-state
+//! serving allocates nothing per session beyond the pipeline's own
+//! surface.
+//!
+//! Engines are matched to sessions by *resolution*, not artifact name:
+//! the manifest records each artifact's frame geometry, and a session's
+//! handshake declares its sensor size, so the pool picks whichever
+//! artifact fits.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::PipelineScratch;
+use crate::events::Resolution;
+use crate::runtime::{default_artifact_dir, HarrisEngine, Manifest};
+
+/// Counters describing how well engine sharing is working.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Engines compiled from artifacts (cold checkouts).
+    pub engines_created: u64,
+    /// Checkouts served from an idle pooled engine.
+    pub engines_reused: u64,
+    /// Engines currently idle in the pool.
+    pub engines_idle: usize,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// Manifest, parsed once per pool (`None` until first engine checkout).
+    manifest: Option<Manifest>,
+    /// Idle engines keyed by `(width, height)`.
+    engines: HashMap<(u16, u16), Vec<HarrisEngine>>,
+    /// Idle scratch buffers keyed by `(width, height)`.
+    scratch: HashMap<(u16, u16), Vec<PipelineScratch>>,
+    created: u64,
+    reused: u64,
+}
+
+/// Pool of compiled Harris engines + pipeline scratch, keyed by
+/// resolution. All methods are `&self` (internal mutex), so one pool is
+/// shared by every server worker.
+pub struct EnginePool {
+    dir: Option<PathBuf>,
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for EnginePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let stats = self.stats();
+        f.debug_struct("EnginePool").field("dir", &self.dir).field("stats", &stats).finish()
+    }
+}
+
+impl EnginePool {
+    /// A pool loading artifacts from `dir` (`None` = auto-discover, same
+    /// rules as [`default_artifact_dir`]).
+    pub fn new(dir: Option<PathBuf>) -> Self {
+        Self { dir, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Check an engine out for a session at `res`: an idle pooled engine
+    /// if one fits, otherwise a fresh compile of whichever manifest
+    /// artifact matches the resolution. Errors if no artifact fits or the
+    /// runtime is unavailable (callers typically degrade to an
+    /// engine-less session).
+    pub fn checkout_engine(&self, res: Resolution) -> Result<HarrisEngine> {
+        let key = (res.width, res.height);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(engine) = inner.engines.get_mut(&key).and_then(Vec::pop) {
+                inner.reused += 1;
+                return Ok(engine);
+            }
+        }
+        // manifest parse + engine compile happen outside the lock: a cold
+        // checkout must not stall other sessions checking buffers in/out
+        let dir = self.dir.clone().unwrap_or_else(default_artifact_dir);
+        let cached = self.inner.lock().unwrap().manifest.clone();
+        let manifest = match cached {
+            Some(m) => m,
+            None => {
+                let loaded = Manifest::load(&dir)?;
+                // a racing checkout may have cached one meanwhile — keep it
+                self.inner.lock().unwrap().manifest.get_or_insert(loaded).clone()
+            }
+        };
+        let info = manifest
+            .artifacts
+            .iter()
+            .find(|a| a.width == res.width as usize && a.height == res.height as usize)
+            .with_context(|| {
+                format!("no artifact for {}x{} in {}", res.width, res.height, dir.display())
+            })?;
+        let name = info.name.clone();
+        let engine = HarrisEngine::load(&manifest, &name)?;
+        self.inner.lock().unwrap().created += 1;
+        Ok(engine)
+    }
+
+    /// Return a session's engine to the pool.
+    pub fn checkin_engine(&self, engine: HarrisEngine) {
+        let key = (engine.width as u16, engine.height as u16);
+        self.inner.lock().unwrap().engines.entry(key).or_default().push(engine);
+    }
+
+    /// Check out scratch buffers for a session at `res` (fresh, empty
+    /// buffers if none are pooled — they grow to frame size on first use).
+    pub fn checkout_scratch(&self, res: Resolution) -> PipelineScratch {
+        let key = (res.width, res.height);
+        self.inner
+            .lock()
+            .unwrap()
+            .scratch
+            .get_mut(&key)
+            .and_then(Vec::pop)
+            .unwrap_or_default()
+    }
+
+    /// Return a session's scratch buffers to the pool.
+    pub fn checkin_scratch(&self, res: Resolution, scratch: PipelineScratch) {
+        let key = (res.width, res.height);
+        self.inner.lock().unwrap().scratch.entry(key).or_default().push(scratch);
+    }
+
+    /// Sharing counters.
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.inner.lock().unwrap();
+        PoolStats {
+            engines_created: inner.created,
+            engines_reused: inner.reused,
+            engines_idle: inner.engines.values().map(Vec::len).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_roundtrips_through_pool() {
+        let pool = EnginePool::new(None);
+        let res = Resolution::TEST64;
+        let a = pool.checkout_scratch(res);
+        pool.checkin_scratch(res, a);
+        // the returned buffer is handed back out before a fresh one
+        let _b = pool.checkout_scratch(res);
+        // different resolution -> different bucket
+        let _c = pool.checkout_scratch(Resolution::DAVIS240);
+        assert_eq!(pool.stats(), PoolStats::default());
+    }
+
+    #[test]
+    fn engine_checkout_without_artifacts_is_clean_error() {
+        let dir = std::env::temp_dir().join("nmc_tos_empty_pool_dir");
+        std::fs::create_dir_all(&dir).unwrap();
+        let pool = EnginePool::new(Some(dir));
+        // no meta.json there: a helpful error, not a panic
+        assert!(pool.checkout_engine(Resolution::TEST64).is_err());
+        assert_eq!(pool.stats().engines_created, 0);
+    }
+}

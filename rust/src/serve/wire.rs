@@ -1,0 +1,304 @@
+//! The `nmc-tos serve` wire protocol: handshake, event frames, and the
+//! end-of-stream summary.
+//!
+//! A session is one TCP connection carrying one event stream:
+//!
+//! ```text
+//! client -> server   Hello     "NMCTOSRV" | version u8 | stream_id u32
+//!                              | width u16 | height u16      (all LE)
+//! server -> client   Ack       status u8 (0 = accepted)
+//! client -> server   frames    u32 payload length, then the payload:
+//!                              one complete binary event container
+//!                              (`events::codec::write_binary` format).
+//!                              A zero-length frame is end of stream.
+//! server -> client   Summary   "NMCTOSRP" | stream_id u32 | events_in,
+//!                              events_signal, corners_total,
+//!                              dvfs_switches, lut_refreshes, wall_us
+//!                              (all u64 LE)
+//! ```
+//!
+//! Each frame decodes to one pipeline chunk
+//! ([`FramedStreamSource`](crate::events::source::FramedStreamSource)),
+//! so the sender's frame size is the server's per-stream memory bound;
+//! frames above [`MAX_FRAME_BYTES`](crate::events::source::MAX_FRAME_BYTES)
+//! are rejected. The container format inside each frame is exactly the
+//! on-disk codec, so a recording can be relayed without re-encoding.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::RunReport;
+use crate::events::codec::write_binary;
+use crate::events::source::{EventSource, MAX_FRAME_BYTES};
+use crate::events::{Event, Resolution};
+
+/// Handshake magic (client -> server).
+pub const HELLO_MAGIC: &[u8; 8] = b"NMCTOSRV";
+/// Summary magic (server -> client).
+pub const SUMMARY_MAGIC: &[u8; 8] = b"NMCTOSRP";
+/// Protocol version negotiated by the handshake.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Ack status: session accepted.
+pub const ACK_OK: u8 = 0;
+/// Ack status: handshake rejected (bad resolution / unsupported config).
+pub const ACK_REJECTED: u8 = 1;
+
+/// The client's session declaration: a caller-chosen stream id (echoed in
+/// the summary and used to label server-side reports) and the sensor
+/// geometry of the events that will follow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hello {
+    /// Caller-chosen stream label (not required to be unique).
+    pub stream_id: u32,
+    /// Sensor geometry of the stream's events.
+    pub res: Resolution,
+}
+
+/// Write the handshake.
+pub fn write_hello<W: Write>(w: &mut W, hello: &Hello) -> Result<()> {
+    w.write_all(HELLO_MAGIC)?;
+    w.write_all(&[WIRE_VERSION])?;
+    w.write_all(&hello.stream_id.to_le_bytes())?;
+    w.write_all(&hello.res.width.to_le_bytes())?;
+    w.write_all(&hello.res.height.to_le_bytes())?;
+    Ok(())
+}
+
+/// Read and validate the handshake.
+pub fn read_hello<R: Read>(r: &mut R) -> Result<Hello> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("truncated handshake")?;
+    if &magic != HELLO_MAGIC {
+        bail!("bad handshake magic: {magic:?}");
+    }
+    let mut ver = [0u8; 1];
+    r.read_exact(&mut ver).context("truncated handshake")?;
+    if ver[0] != WIRE_VERSION {
+        bail!("unsupported wire version {}", ver[0]);
+    }
+    let mut id = [0u8; 4];
+    r.read_exact(&mut id).context("truncated handshake")?;
+    let mut dim = [0u8; 2];
+    r.read_exact(&mut dim).context("truncated handshake")?;
+    let width = u16::from_le_bytes(dim);
+    r.read_exact(&mut dim).context("truncated handshake")?;
+    let height = u16::from_le_bytes(dim);
+    ensure!(width > 0 && height > 0, "degenerate resolution {width}x{height}");
+    Ok(Hello { stream_id: u32::from_le_bytes(id), res: Resolution::new(width, height) })
+}
+
+/// Write the handshake ack (`ACK_OK` / `ACK_REJECTED`).
+pub fn write_ack<W: Write>(w: &mut W, status: u8) -> Result<()> {
+    w.write_all(&[status])?;
+    Ok(())
+}
+
+/// Read the handshake ack; a non-OK status is an error.
+pub fn read_ack<R: Read>(r: &mut R) -> Result<()> {
+    let mut status = [0u8; 1];
+    r.read_exact(&mut status).context("connection closed before ack")?;
+    ensure!(status[0] == ACK_OK, "server rejected the stream (status {})", status[0]);
+    Ok(())
+}
+
+/// Write one event frame: length prefix + binary container. `scratch` is
+/// a recycled encode buffer (reaches frame size once, then reused).
+pub fn write_frame<W: Write>(w: &mut W, scratch: &mut Vec<u8>, events: &[Event]) -> Result<()> {
+    scratch.clear();
+    write_binary(&mut *scratch, events)?;
+    ensure!(
+        scratch.len() <= MAX_FRAME_BYTES,
+        "frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte cap — send smaller chunks",
+        scratch.len()
+    );
+    w.write_all(&(scratch.len() as u32).to_le_bytes())?;
+    w.write_all(scratch)?;
+    Ok(())
+}
+
+/// Write the end-of-stream marker (a zero-length frame).
+pub fn write_eos<W: Write>(w: &mut W) -> Result<()> {
+    w.write_all(&0u32.to_le_bytes())?;
+    Ok(())
+}
+
+/// The counters a served session reports back to its client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Summary {
+    /// Stream id echoed from the handshake.
+    pub stream_id: u32,
+    /// Events received.
+    pub events_in: u64,
+    /// Events surviving STCF.
+    pub events_signal: u64,
+    /// Corner tags.
+    pub corners_total: u64,
+    /// DVFS voltage switches.
+    pub dvfs_switches: u64,
+    /// Harris LUT refreshes consumed.
+    pub lut_refreshes: u64,
+    /// Server-side wall time (µs).
+    pub wall_us: u64,
+}
+
+impl Summary {
+    /// Condense a server-side [`RunReport`] into the wire summary.
+    pub fn from_report(stream_id: u32, report: &RunReport) -> Self {
+        Summary {
+            stream_id,
+            events_in: report.events_in as u64,
+            events_signal: report.events_signal as u64,
+            corners_total: report.corners_total,
+            dvfs_switches: report.dvfs_switches,
+            lut_refreshes: report.lut_refreshes,
+            wall_us: (report.wall_s * 1e6) as u64,
+        }
+    }
+}
+
+/// Write the end-of-session summary.
+pub fn write_summary<W: Write>(w: &mut W, s: &Summary) -> Result<()> {
+    w.write_all(SUMMARY_MAGIC)?;
+    w.write_all(&s.stream_id.to_le_bytes())?;
+    for v in [
+        s.events_in,
+        s.events_signal,
+        s.corners_total,
+        s.dvfs_switches,
+        s.lut_refreshes,
+        s.wall_us,
+    ] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the end-of-session summary.
+pub fn read_summary<R: Read>(r: &mut R) -> Result<Summary> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("connection closed before summary")?;
+    if &magic != SUMMARY_MAGIC {
+        bail!("bad summary magic: {magic:?}");
+    }
+    let mut id = [0u8; 4];
+    r.read_exact(&mut id).context("truncated summary")?;
+    let mut field = || -> Result<u64> {
+        let mut b = [0u8; 8];
+        r.read_exact(&mut b).context("truncated summary")?;
+        Ok(u64::from_le_bytes(b))
+    };
+    Ok(Summary {
+        stream_id: u32::from_le_bytes(id),
+        events_in: field()?,
+        events_signal: field()?,
+        corners_total: field()?,
+        dvfs_switches: field()?,
+        lut_refreshes: field()?,
+        wall_us: field()?,
+    })
+}
+
+/// Client side of a served session: handshake, stream every chunk of
+/// `source` as one frame, and return the server's summary. This is what
+/// `nmc-tos feed` runs; tests drive it against a loopback
+/// [`StreamServer`](super::StreamServer).
+pub fn feed<S: EventSource + ?Sized>(
+    stream: TcpStream,
+    hello: Hello,
+    source: &mut S,
+) -> Result<Summary> {
+    stream.set_nodelay(true).ok();
+    let mut w = BufWriter::new(stream.try_clone().context("cloning connection")?);
+    let mut r = BufReader::new(stream);
+    write_hello(&mut w, &hello)?;
+    w.flush()?;
+    read_ack(&mut r)?;
+
+    let mut chunk: Vec<Event> = Vec::new();
+    let mut scratch: Vec<u8> = Vec::new();
+    loop {
+        chunk.clear();
+        if source.next_chunk(&mut chunk)? == 0 {
+            break;
+        }
+        write_frame(&mut w, &mut scratch, &chunk)?;
+    }
+    write_eos(&mut w)?;
+    w.flush()?;
+    read_summary(&mut r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_roundtrip() {
+        let hello = Hello { stream_id: 42, res: Resolution::DAVIS240 };
+        let mut buf = Vec::new();
+        write_hello(&mut buf, &hello).unwrap();
+        assert_eq!(read_hello(&mut &buf[..]).unwrap(), hello);
+    }
+
+    #[test]
+    fn hello_rejects_garbage() {
+        assert!(read_hello(&mut &b"XXXXXXXX\x01\0\0\0\0\xf0\0\xb4\0"[..]).is_err());
+        // right magic, wrong version
+        let mut buf = Vec::new();
+        write_hello(&mut buf, &Hello { stream_id: 0, res: Resolution::TEST64 }).unwrap();
+        buf[8] = 9;
+        assert!(read_hello(&mut &buf[..]).is_err());
+        // degenerate resolution
+        let mut buf = Vec::new();
+        write_hello(&mut buf, &Hello { stream_id: 0, res: Resolution::new(0, 64) }).unwrap();
+        assert!(read_hello(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn ack_roundtrip() {
+        let mut buf = Vec::new();
+        write_ack(&mut buf, ACK_OK).unwrap();
+        assert!(read_ack(&mut &buf[..]).is_ok());
+        let mut buf = Vec::new();
+        write_ack(&mut buf, ACK_REJECTED).unwrap();
+        assert!(read_ack(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn summary_roundtrip() {
+        let s = Summary {
+            stream_id: 7,
+            events_in: 1,
+            events_signal: 2,
+            corners_total: 3,
+            dvfs_switches: 4,
+            lut_refreshes: 5,
+            wall_us: 6,
+        };
+        let mut buf = Vec::new();
+        write_summary(&mut buf, &s).unwrap();
+        assert_eq!(read_summary(&mut &buf[..]).unwrap(), s);
+        buf.truncate(buf.len() - 1);
+        assert!(read_summary(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn frames_decode_through_framed_source() {
+        use crate::events::source::FramedStreamSource;
+        let events: Vec<Event> =
+            (0..500).map(|i| Event::on((i % 60) as u16, (i % 40) as u16, i as u64)).collect();
+        let mut wire = Vec::new();
+        let mut scratch = Vec::new();
+        for chunk in events.chunks(123) {
+            write_frame(&mut wire, &mut scratch, chunk).unwrap();
+        }
+        write_eos(&mut wire).unwrap();
+        let mut src = FramedStreamSource::new(&wire[..]);
+        let mut out = Vec::new();
+        while src.next_chunk(&mut out).unwrap() > 0 {}
+        assert_eq!(out, events);
+    }
+}

@@ -41,6 +41,18 @@ pub struct BackendStats {
 /// nominal voltage / without error injection) — `tos_view` of any two
 /// backends fed the same stream must be identical.
 ///
+/// ```
+/// use nmc_tos::events::{Event, Resolution};
+/// use nmc_tos::tos::{TosBackend, TosConfig, TosSurface};
+///
+/// let mut tos = TosSurface::new(Resolution::TEST64, TosConfig::default())?;
+/// tos.process(&Event::on(10, 10, 0));
+/// // Algorithm 1: the event pixel is written to 255
+/// assert_eq!(tos.tos_view()[10 * 64 + 10], 255);
+/// assert_eq!(tos.stats().events, 1);
+/// # Ok::<(), nmc_tos::tos::TosConfigError>(())
+/// ```
+///
 /// Snapshot ownership rules: [`TosBackend::tos_view`] is the zero-copy
 /// accessor every hot path uses (the FBF refresh reads it straight into
 /// the f32 frame); [`TosBackend::snapshot_into`] fills a caller-owned

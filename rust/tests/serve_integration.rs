@@ -1,0 +1,260 @@
+//! Serving must be invisible to the pipeline semantics: K concurrent
+//! streams served over loopback TCP produce `RunReport`s bit-identical
+//! (surface, scores, corner indices, telemetry counters) to the same
+//! inputs run sequentially through `run_stream` — for the golden and
+//! sharded backends. Engine-less (eFAST detector), so these run without
+//! `make artifacts`.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::thread;
+
+use nmc_tos::coordinator::{BackendKind, DetectorKind, Pipeline, PipelineConfig, RunReport};
+use nmc_tos::datasets::synthetic::SceneConfig;
+use nmc_tos::events::{Event, Resolution};
+use nmc_tos::serve::wire::{self, Hello};
+use nmc_tos::serve::{ServeConfig, StreamServer};
+
+const K: usize = 4;
+const EVENTS_PER_STREAM: usize = 8_000;
+
+fn base_cfg(backend: BackendKind) -> PipelineConfig {
+    let mut cfg = PipelineConfig::test64();
+    cfg.backend = backend;
+    cfg.detector = DetectorKind::Fast; // SAE detector: no PJRT engine
+    cfg.shards = 3;
+    cfg
+}
+
+/// One TCP client: handshake, stream every chunk, hold at the barrier
+/// with the stream fully sent but unfinished (so all K sessions are
+/// provably concurrent), then end the stream and read the summary.
+fn client(
+    addr: std::net::SocketAddr,
+    stream_id: u32,
+    events: &[Event],
+    chunk: usize,
+    all_streaming: &Barrier,
+) -> wire::Summary {
+    let conn = TcpStream::connect(addr).unwrap();
+    let mut w = BufWriter::new(conn.try_clone().unwrap());
+    let mut r = BufReader::new(conn);
+    wire::write_hello(&mut w, &Hello { stream_id, res: Resolution::TEST64 }).unwrap();
+    w.flush().unwrap();
+    wire::read_ack(&mut r).unwrap(); // a worker owns this session now
+
+    let mut scratch = Vec::new();
+    for frame in events.chunks(chunk) {
+        wire::write_frame(&mut w, &mut scratch, frame).unwrap();
+    }
+    w.flush().unwrap();
+    // every client is past its handshake and has sent its whole stream:
+    // all K sessions are open inside the server at this point
+    all_streaming.wait();
+    wire::write_eos(&mut w).unwrap();
+    w.flush().unwrap();
+    wire::read_summary(&mut r).unwrap()
+}
+
+fn check_concurrent_serving(backend: BackendKind) {
+    let streams: Vec<Vec<Event>> = (0..K)
+        .map(|i| SceneConfig::test64().build(500 + i as u64).generate(EVENTS_PER_STREAM))
+        .collect();
+
+    // sequential ground truth: one fresh pipeline per stream
+    let want: Vec<RunReport> = streams
+        .iter()
+        .map(|evs| {
+            let mut pipe = Pipeline::from_config_without_engine(base_cfg(backend)).unwrap();
+            pipe.run(evs).unwrap()
+        })
+        .collect();
+
+    let mut serve_cfg = ServeConfig::new(base_cfg(backend));
+    serve_cfg.max_streams = K;
+    serve_cfg.keep_reports = true;
+    let server = StreamServer::new(serve_cfg).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let all_streaming = Arc::new(Barrier::new(K));
+    let clients: Vec<_> = streams
+        .iter()
+        .enumerate()
+        .map(|(i, evs)| {
+            let evs = evs.clone();
+            let barrier = Arc::clone(&all_streaming);
+            // distinct, non-divisor chunk sizes: chunking must not matter
+            let chunk = 301 + i * 157;
+            thread::spawn(move || client(addr, i as u32, &evs, chunk, &barrier))
+        })
+        .collect();
+
+    // accept exactly K connections on this thread, then stop listening
+    server.serve(&listener, Some(K)).unwrap();
+    for (i, c) in clients.into_iter().enumerate() {
+        let summary = c.join().unwrap();
+        assert_eq!(summary.stream_id, i as u32);
+        assert_eq!(summary.events_in as usize, EVENTS_PER_STREAM, "stream {i}");
+    }
+
+    let mut reports = server.take_reports();
+    let stats = server.shutdown();
+    assert_eq!(reports.len(), K);
+    reports.sort_by_key(|(id, _)| *id);
+    for (i, (id, got)) in reports.iter().enumerate() {
+        assert_eq!(*id as usize, i);
+        let want = &want[i];
+        assert_eq!(want.final_tos, got.final_tos, "{backend:?} stream {i}: surface diverged");
+        assert_eq!(want.scores, got.scores, "{backend:?} stream {i}: scores diverged");
+        assert_eq!(want.corners, got.corners, "{backend:?} stream {i}: corners diverged");
+        assert_eq!(want.events_in, got.events_in, "{backend:?} stream {i}: events_in");
+        assert_eq!(want.events_signal, got.events_signal, "{backend:?} stream {i}: signal");
+        assert_eq!(want.corners_total, got.corners_total, "{backend:?} stream {i}: corners");
+        assert_eq!(want.dvfs_switches, got.dvfs_switches, "{backend:?} stream {i}: dvfs");
+        assert_eq!(want.backend, got.backend, "{backend:?} stream {i}: backend stats");
+    }
+
+    assert_eq!(stats.sessions_accepted, K as u64);
+    assert_eq!(stats.sessions_completed, K as u64);
+    assert_eq!(stats.sessions_failed, 0);
+    assert_eq!(stats.events_in as usize, K * EVENTS_PER_STREAM);
+    // the barrier guarantees every session was open at once
+    assert_eq!(stats.peak_concurrent, K, "sessions were not concurrent");
+}
+
+#[test]
+fn concurrent_tcp_streams_bit_identical_golden() {
+    check_concurrent_serving(BackendKind::Golden);
+}
+
+#[test]
+fn concurrent_tcp_streams_bit_identical_sharded() {
+    check_concurrent_serving(BackendKind::Sharded);
+}
+
+#[test]
+fn garbage_handshake_is_cleaned_up_and_counted() {
+    let server = StreamServer::new(ServeConfig::new(base_cfg(BackendKind::Golden))).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let bad = thread::spawn(move || {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap(); // not our protocol
+        // server rejects and drops; reading the summary must fail
+        let mut r = BufReader::new(conn.try_clone().unwrap());
+        assert!(wire::read_summary(&mut r).is_err());
+    });
+    server.serve(&listener, Some(1)).unwrap();
+    bad.join().unwrap();
+
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_failed, 1);
+    assert_eq!(stats.sessions_completed, 0);
+}
+
+#[test]
+fn dropped_connection_mid_stream_is_counted() {
+    let server = StreamServer::new(ServeConfig::new(base_cfg(BackendKind::Golden))).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let dying = thread::spawn(move || {
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut w = BufWriter::new(conn.try_clone().unwrap());
+        let mut r = BufReader::new(conn);
+        wire::write_hello(&mut w, &Hello { stream_id: 9, res: Resolution::TEST64 }).unwrap();
+        w.flush().unwrap();
+        wire::read_ack(&mut r).unwrap();
+        let events = SceneConfig::test64().build(1).generate(500);
+        let mut scratch = Vec::new();
+        wire::write_frame(&mut w, &mut scratch, &events).unwrap();
+        w.flush().unwrap();
+        // drop without EOS: a vanished camera / killed client
+    });
+    server.serve(&listener, Some(1)).unwrap();
+    dying.join().unwrap();
+
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_failed, 1);
+    assert_eq!(stats.sessions_completed, 0);
+}
+
+#[test]
+fn out_of_bounds_events_fail_the_session_cleanly() {
+    // a client declaring test64 but streaming events outside 64x64 must
+    // fail its session (no panic, no silent row aliasing) and be counted
+    let server = StreamServer::new(ServeConfig::new(base_cfg(BackendKind::Golden))).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let liar = thread::spawn(move || {
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut w = BufWriter::new(conn.try_clone().unwrap());
+        let mut r = BufReader::new(conn);
+        wire::write_hello(&mut w, &Hello { stream_id: 3, res: Resolution::TEST64 }).unwrap();
+        w.flush().unwrap();
+        wire::read_ack(&mut r).unwrap();
+        // x=100 is outside the declared 64-wide sensor
+        let mut scratch = Vec::new();
+        wire::write_frame(&mut w, &mut scratch, &[Event::on(100, 5, 1)]).unwrap();
+        // the server may already have dropped us: remaining writes are
+        // best-effort, the assertion is that no summary ever comes back
+        let _ = wire::write_eos(&mut w);
+        let _ = w.flush();
+        assert!(wire::read_summary(&mut r).is_err());
+    });
+    server.serve(&listener, Some(1)).unwrap();
+    liar.join().unwrap();
+
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_failed, 1);
+    assert_eq!(stats.sessions_completed, 0);
+}
+
+#[test]
+fn mixed_tcp_and_local_sessions() {
+    // the same server serves an in-process session and a TCP session;
+    // both must match their sequential references
+    let events = SceneConfig::test64().build(77).generate(4_000);
+    let mut pipe = Pipeline::from_config_without_engine(base_cfg(BackendKind::Golden)).unwrap();
+    let want = pipe.run(&events).unwrap();
+
+    let mut serve_cfg = ServeConfig::new(base_cfg(BackendKind::Golden));
+    serve_cfg.keep_reports = true;
+    let server = StreamServer::new(serve_cfg).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    // local session through the public submit API
+    let local = server
+        .submit(
+            1,
+            Resolution::TEST64,
+            Box::new(SceneConfig::test64().build(77).into_source(4_000, 333)),
+        )
+        .unwrap();
+
+    // TCP session with the same events via the feed client
+    let tcp_events = events.clone();
+    let tcp = thread::spawn(move || {
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut src = nmc_tos::events::source::SliceSource::new(&tcp_events, 512);
+        wire::feed(conn, Hello { stream_id: 2, res: Resolution::TEST64 }, &mut src).unwrap()
+    });
+    server.serve(&listener, Some(1)).unwrap();
+
+    let local_report = local.join().unwrap();
+    let summary = tcp.join().unwrap();
+    assert_eq!(summary.events_in as usize, 4_000);
+    assert_eq!(want.final_tos, local_report.final_tos);
+    assert_eq!(want.scores, local_report.scores);
+
+    let reports = server.take_reports();
+    let tcp_report = &reports.iter().find(|(id, _)| *id == 2).unwrap().1;
+    assert_eq!(want.final_tos, tcp_report.final_tos);
+    assert_eq!(want.scores, tcp_report.scores);
+    assert_eq!(server.shutdown().sessions_completed, 2);
+}
