@@ -58,7 +58,9 @@ fn main() -> anyhow::Result<()> {
                 let scene = SceneConfig::dynamic_dof().build(90 + i as u64);
                 let mut source = scene.into_source(EVENTS_PER_STREAM, 16_384);
                 let conn = TcpStream::connect(addr)?;
-                let hello = Hello { stream_id: 100 + i, res: Resolution::DAVIS240 };
+                // summary-only v1 sessions; the live_corners example
+                // shows the v2 streamed-results path
+                let hello = Hello::v1(100 + i, Resolution::DAVIS240);
                 wire::feed(conn, hello, &mut source)
             })
         })

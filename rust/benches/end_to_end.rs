@@ -10,7 +10,7 @@
 mod common;
 
 use common::Harness;
-use nmc_tos::coordinator::{BackendKind, DetectorKind, Pipeline, PipelineConfig};
+use nmc_tos::coordinator::{BackendKind, DetectorKind, Pipeline, PipelineConfig, RecordingSink};
 use nmc_tos::datasets::synthetic::SceneConfig;
 use nmc_tos::events::source::SliceSource;
 use nmc_tos::events::Resolution;
@@ -41,6 +41,35 @@ fn main() {
         let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
         h.run(&format!("e2e/stream_chunk{chunk}/100k_events"), 1, 5, events.len() as f64, || {
             let r = pipe.run_stream(&mut SliceSource::new(&events, chunk)).unwrap();
+            std::hint::black_box(r.events_signal);
+        });
+    }
+
+    // sink-based results path: an external RecordingSink (full per-event
+    // recording through the observer API) and a stats-emitting run —
+    // both against the counters-only rows above, so the sink dispatch
+    // overhead on the hot path stays measured
+    {
+        let mut cfg = PipelineConfig::davis240();
+        cfg.lut_refresh_events = usize::MAX;
+        cfg.record_per_event = false;
+        let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
+        h.run("e2e/sink_recording/100k_events", 1, 5, events.len() as f64, || {
+            let mut sink = RecordingSink::default();
+            let r = pipe
+                .run_stream_with(&mut SliceSource::new(&events, 65_536), &mut sink)
+                .unwrap();
+            std::hint::black_box((r.events_signal, sink.scores.len()));
+        });
+    }
+    {
+        let mut cfg = PipelineConfig::davis240();
+        cfg.lut_refresh_events = usize::MAX;
+        cfg.record_per_event = false;
+        cfg.stats_interval_events = Some(1_000);
+        let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
+        h.run("e2e/sink_stats1k/100k_events", 1, 5, events.len() as f64, || {
+            let r = pipe.run_stream(&mut SliceSource::new(&events, 65_536)).unwrap();
             std::hint::black_box(r.events_signal);
         });
     }

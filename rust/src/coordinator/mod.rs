@@ -27,10 +27,20 @@
 //! at any chunk size. For unbounded runs, `record_per_event = false`
 //! keeps the [`RunReport`] to O(1) counters.
 //!
+//! Results are streaming-first too: [`Pipeline::run_stream_with`] drives
+//! a [`CornerSink`] observer at event rate — every corner, every score,
+//! and periodic [`LiveStats`](sink::LiveStats) flow out while the run is
+//! in flight. [`RunReport`] recording is itself just the built-in
+//! [`RecordingSink`](sink::RecordingSink); the serving layer's wire
+//! streaming is another sink (`serve::wire::WireSink`). See the
+//! [`sink`] module for the callback contract.
+//!
 //! SAE-based detectors don't consume LUTs, so for them the FBF stage (and
 //! the PJRT engine) is skipped entirely. Python never appears on any path
 //! — the Harris graph was AOT-lowered at build time and runs through the
 //! PJRT CPU client.
+
+pub mod sink;
 
 use std::path::PathBuf;
 use std::str::FromStr;
@@ -38,6 +48,8 @@ use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
+
+pub use sink::{Corner, CornerSink, LiveStats, NullSink, RecordingSink};
 
 use crate::conventional::ConventionalTos;
 use crate::detectors::arc::Arc as ArcDetector;
@@ -181,6 +193,11 @@ pub struct PipelineConfig {
     /// the [`RunReport`]. Disable for unbounded streamed runs so the
     /// report holds only O(1) counters instead of O(stream) vectors.
     pub record_per_event: bool,
+    /// Emit [`CornerSink::on_stats`] every this many *input* events
+    /// (pre-STCF; `None` = never). The cadence is counted in events, not
+    /// wall time, so stats emission is deterministic and independent of
+    /// source chunking. `Some(0)` behaves like `Some(1)`.
+    pub stats_interval_events: Option<u64>,
 }
 
 impl PipelineConfig {
@@ -205,6 +222,7 @@ impl PipelineConfig {
             async_refresh: false,
             corner_threshold: 0.55,
             record_per_event: true,
+            stats_interval_events: None,
         }
     }
 
@@ -222,8 +240,12 @@ impl PipelineConfig {
 ///
 /// The per-event vectors (`signal_events`, `scores`, `corners`) are
 /// populated only when [`PipelineConfig::record_per_event`] is on (the
-/// default); counters (`events_in`, `events_signal`, `corners_total`)
-/// are always exact, so unbounded streamed runs stay O(1) memory here.
+/// default) — internally they are accumulated by a [`RecordingSink`]
+/// driven through the same [`CornerSink`] callbacks as any caller sink;
+/// counters (`events_in`, `events_signal`, `corners_total`) are always
+/// exact, so unbounded streamed runs stay O(1) memory here. For results
+/// *during* the run instead of after it, attach a sink via
+/// [`Pipeline::run_stream_with`].
 #[derive(Debug, Clone)]
 pub struct RunReport {
     /// TOS backend that ran ([`TosBackend::name`]).
@@ -489,27 +511,56 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
         self.run_stream(&mut SliceSource::new(events, DEFAULT_CHUNK_EVENTS))
     }
 
+    /// [`Pipeline::run`] with a [`CornerSink`] attached: corners, scores
+    /// and live stats flow to `sink` while the slice is processed.
+    pub fn run_with<K: CornerSink + ?Sized>(
+        &mut self,
+        events: &[Event],
+        sink: &mut K,
+    ) -> Result<RunReport> {
+        self.run_stream_with(&mut SliceSource::new(events, DEFAULT_CHUNK_EVENTS), sink)
+    }
+
     /// Run the pipeline over a streaming [`EventSource`], keeping peak
     /// event-buffer memory O(chunk): DVFS, STCF, LUT-refresh and
     /// batch-flush state all carry across chunk boundaries, so the
     /// result is bit-identical to [`Pipeline::run`] on the concatenated
     /// stream at any chunk size.
     pub fn run_stream<S: EventSource + ?Sized>(&mut self, source: &mut S) -> Result<RunReport> {
+        self.run_stream_with(source, &mut NullSink)
+    }
+
+    /// Run a streaming source with a [`CornerSink`] observing results at
+    /// event rate (see [`sink`] for the callback contract). The sink is
+    /// *additive*: the returned [`RunReport`] is identical to a
+    /// [`Pipeline::run_stream`] of the same source — per-event vectors
+    /// still governed by [`PipelineConfig::record_per_event`] — and a
+    /// sink error aborts the run with that error (the backpressure
+    /// contract).
+    pub fn run_stream_with<S, K>(&mut self, source: &mut S, sink: &mut K) -> Result<RunReport>
+    where
+        S: EventSource + ?Sized,
+        K: CornerSink + ?Sized,
+    {
         // Async mode only applies when there is an FBF stage to decouple:
         // a LUT-consuming detector AND an engine (engine-less pipelines
         // stay headless — the worker must not load artifacts behind the
         // caller's back).
         if self.cfg.async_refresh && self.detector.wants_lut() && self.engine.is_some() {
-            self.run_stream_async(source)
+            self.run_stream_async(source, sink)
         } else {
-            self.run_stream_sync(source)
+            self.run_stream_sync(source, sink)
         }
     }
 
     /// Synchronous mode: inline LUT refresh every `lut_refresh_events`.
-    fn run_stream_sync<S: EventSource + ?Sized>(&mut self, source: &mut S) -> Result<RunReport> {
+    fn run_stream_sync<S, K>(&mut self, source: &mut S, sink: &mut K) -> Result<RunReport>
+    where
+        S: EventSource + ?Sized,
+        K: CornerSink + ?Sized,
+    {
         let start = Instant::now();
-        let mut st = StreamState::new(self.cfg.record_per_event, reserve_hint(source));
+        let mut st = StreamState::new(&self.cfg, reserve_hint(source));
         // without an FBF stage there is no refresh boundary — don't cap
         // the backend batches on a no-op schedule
         let refresh_enabled = self.engine.is_some() && self.detector.wants_lut();
@@ -521,8 +572,8 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
             if source.next_chunk(&mut chunk)? == 0 {
                 break;
             }
-            st.events_in += chunk.len();
             for ev in &chunk {
+                st.events_in += 1;
                 // --- DVFS monitors the *raw* event rate (paper Fig. 2) ---
                 if let Some(ctrl) = &mut self.dvfs {
                     if let Some(op) = ctrl.on_event(ev.t) {
@@ -533,35 +584,38 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
                     }
                 }
                 // --- STCF denoise ----------------------------------------
-                if let Some(f) = &mut self.stcf {
-                    if !f.check(ev) {
-                        continue;
+                let signal = match &mut self.stcf {
+                    Some(f) => f.check(ev),
+                    None => true,
+                };
+                if signal {
+                    // --- TOS update (the hot path): batch-parallel
+                    // backends get events buffered and flushed at snapshot
+                    // boundaries; per-event backends are fed directly -----
+                    if batching {
+                        st.pending.push(*ev);
+                        if st.pending.len() >= BACKEND_BATCH_MAX {
+                            flush_pending(&mut self.backend, &mut st.pending);
+                        }
+                    } else {
+                        self.backend.process(ev);
                     }
-                }
-                // --- TOS update (the hot path): batch-parallel backends
-                // get events buffered and flushed at snapshot boundaries;
-                // per-event backends are fed directly ---------------------
-                if batching {
-                    st.pending.push(*ev);
-                    if st.pending.len() >= BACKEND_BATCH_MAX {
+                    // --- FBF Harris refresh (inline in sync mode) --------
+                    st.since_refresh += 1;
+                    if refresh_enabled && st.since_refresh >= self.cfg.lut_refresh_events {
+                        st.since_refresh = 0;
                         flush_pending(&mut self.backend, &mut st.pending);
+                        if self.refresh_lut()? {
+                            st.lut_refreshes += 1;
+                        }
                     }
-                } else {
-                    self.backend.process(ev);
+                    // --- tag ---------------------------------------------
+                    let score = self.detector.score(ev);
+                    st.tag(ev, score, self.cfg.corner_threshold, sink)?;
                 }
-                // --- FBF Harris refresh (inline in sync mode) ------------
-                st.since_refresh += 1;
-                if refresh_enabled && st.since_refresh >= self.cfg.lut_refresh_events {
-                    st.since_refresh = 0;
-                    flush_pending(&mut self.backend, &mut st.pending);
-                    if self.refresh_lut()? {
-                        st.lut_refreshes += 1;
-                    }
-                }
-                // --- tag -------------------------------------------------
-                let score = self.detector.score(ev);
-                st.tag(ev, score, self.cfg.corner_threshold);
+                st.stats_tick(sink)?;
             }
+            sink.on_chunk_end(&st.live_stats())?;
         }
         flush_pending(&mut self.backend, &mut st.pending);
 
@@ -570,7 +624,11 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
 
     /// Asynchronous mode: the LUT worker owns its own engine and consumes
     /// TOS snapshots through a depth-1 channel; busy -> snapshot dropped.
-    fn run_stream_async<S: EventSource + ?Sized>(&mut self, source: &mut S) -> Result<RunReport> {
+    fn run_stream_async<S, K>(&mut self, source: &mut S, sink: &mut K) -> Result<RunReport>
+    where
+        S: EventSource + ?Sized,
+        K: CornerSink + ?Sized,
+    {
         let start = Instant::now();
         let dir = self.cfg.artifact_dir.clone().unwrap_or_else(default_artifact_dir);
         let artifact = self.cfg.artifact.clone();
@@ -607,7 +665,7 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
         // full frame was cloned per offer and dropped whenever the
         // channel was full.
         let mut snap_bufs: Vec<Vec<u8>> = vec![Vec::new(), Vec::new()];
-        let mut st = StreamState::new(self.cfg.record_per_event, reserve_hint(source));
+        let mut st = StreamState::new(&self.cfg, reserve_hint(source));
         let mut since_snapshot = 0usize;
         let batching = self.backend.prefers_batching();
         // offer a snapshot at least this often (events); the worker decides
@@ -620,8 +678,8 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
             if source.next_chunk(&mut chunk)? == 0 {
                 break;
             }
-            st.events_in += chunk.len();
             for ev in &chunk {
+                st.events_in += 1;
                 if let Some(ctrl) = &mut self.dvfs {
                     if let Some(op) = ctrl.on_event(ev.t) {
                         flush_pending(&mut self.backend, &mut st.pending);
@@ -629,58 +687,63 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
                         st.dvfs_switches += 1;
                     }
                 }
-                if let Some(f) = &mut self.stcf {
-                    if !f.check(ev) {
-                        continue;
+                let signal = match &mut self.stcf {
+                    Some(f) => f.check(ev),
+                    None => true,
+                };
+                if signal {
+                    if batching {
+                        st.pending.push(*ev);
+                        if st.pending.len() >= BACKEND_BATCH_MAX {
+                            flush_pending(&mut self.backend, &mut st.pending);
+                        }
+                    } else {
+                        self.backend.process(ev);
                     }
-                }
-                if batching {
-                    st.pending.push(*ev);
-                    if st.pending.len() >= BACKEND_BATCH_MAX {
-                        flush_pending(&mut self.backend, &mut st.pending);
-                    }
-                } else {
-                    self.backend.process(ev);
-                }
 
-                // non-blocking LUT pickup; `lut_refreshes` counts LUTs the
-                // detector actually consumed, not what the worker computed
-                // (a final in-flight LUT may arrive after the last score)
-                while let Ok(lut) = lut_rx.try_recv() {
-                    self.detector.refresh_lut(&lut);
-                    st.lut_refreshes += 1;
-                    // return the consumed buffer for the next refresh
-                    let _ = lut_recycle_tx.send(lut);
-                }
-                since_snapshot += 1;
-                if since_snapshot >= offer_every {
-                    since_snapshot = 0;
-                    flush_pending(&mut self.backend, &mut st.pending);
-                    // drop the offer if the worker is busy (luvHarris "as
-                    // fast as possible" semantics, no backpressure on
-                    // events): reclaim buffers the worker has finished
-                    // with, and only snapshot if one is free
-                    while let Ok(buf) = recycle_rx.try_recv() {
-                        snap_bufs.push(buf);
+                    // non-blocking LUT pickup; `lut_refreshes` counts LUTs
+                    // the detector actually consumed, not what the worker
+                    // computed (a final in-flight LUT may arrive after the
+                    // last score)
+                    while let Ok(lut) = lut_rx.try_recv() {
+                        self.detector.refresh_lut(&lut);
+                        st.lut_refreshes += 1;
+                        // return the consumed buffer for the next refresh
+                        let _ = lut_recycle_tx.send(lut);
                     }
-                    if let Some(mut buf) = snap_bufs.pop() {
-                        self.backend.snapshot_into(&mut buf);
-                        match snap_tx.try_send(buf) {
-                            Ok(()) => {}
-                            Err(mpsc::TrySendError::Full(buf))
-                            | Err(mpsc::TrySendError::Disconnected(buf)) => {
-                                // channel full (offer dropped) or worker
-                                // exited early (join surfaces the error);
-                                // either way keep the buffer
-                                snap_bufs.push(buf);
+                    since_snapshot += 1;
+                    if since_snapshot >= offer_every {
+                        since_snapshot = 0;
+                        flush_pending(&mut self.backend, &mut st.pending);
+                        // drop the offer if the worker is busy (luvHarris
+                        // "as fast as possible" semantics, no backpressure
+                        // on events): reclaim buffers the worker has
+                        // finished with, and only snapshot if one is free
+                        while let Ok(buf) = recycle_rx.try_recv() {
+                            snap_bufs.push(buf);
+                        }
+                        if let Some(mut buf) = snap_bufs.pop() {
+                            self.backend.snapshot_into(&mut buf);
+                            match snap_tx.try_send(buf) {
+                                Ok(()) => {}
+                                Err(mpsc::TrySendError::Full(buf))
+                                | Err(mpsc::TrySendError::Disconnected(buf)) => {
+                                    // channel full (offer dropped) or
+                                    // worker exited early (join surfaces
+                                    // the error); either way keep the
+                                    // buffer
+                                    snap_bufs.push(buf);
+                                }
                             }
                         }
                     }
-                }
 
-                let score = self.detector.score(ev);
-                st.tag(ev, score, self.cfg.corner_threshold);
+                    let score = self.detector.score(ev);
+                    st.tag(ev, score, self.cfg.corner_threshold, sink)?;
+                }
+                st.stats_tick(sink)?;
             }
+            sink.on_chunk_end(&st.live_stats())?;
         }
         flush_pending(&mut self.backend, &mut st.pending);
 
@@ -721,14 +784,16 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
     }
 
     fn report(&self, st: StreamState, wall_s: f64) -> RunReport {
+        // recording was just another sink: its vectors become the report's
+        let rec = st.recorder.unwrap_or_default();
         RunReport {
             backend_name: self.backend.name(),
             detector_name: self.detector.name(),
             events_in: st.events_in,
             events_signal: st.events_signal,
-            signal_events: st.signal_events,
-            scores: st.scores,
-            corners: st.corners,
+            signal_events: rec.signal_events,
+            scores: rec.scores,
+            corners: rec.corners,
             corners_total: st.corners_total,
             backend: self.backend.stats(),
             dvfs_switches: st.dvfs_switches,
@@ -744,11 +809,10 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
 /// per-event loop accumulates lives here, so a streamed run is
 /// bit-identical to a load-all run at any chunk size.
 struct StreamState {
-    /// Record per-event vectors (off = counters only, O(1) memory).
-    record: bool,
-    signal_events: Vec<Event>,
-    scores: Vec<f64>,
-    corners: Vec<usize>,
+    /// The internal [`RecordingSink`] behind [`RunReport`]'s per-event
+    /// vectors (`None` = counters only, O(1) memory). Driven through the
+    /// same callbacks as the caller's sink.
+    recorder: Option<RecordingSink>,
     corners_total: u64,
     events_in: usize,
     events_signal: usize,
@@ -758,6 +822,10 @@ struct StreamState {
     since_refresh: usize,
     dvfs_switches: u64,
     lut_refreshes: u64,
+    /// `on_stats` cadence in input events (`None` = never emit).
+    stats_every: Option<u64>,
+    /// Input events since the last `on_stats` emission.
+    since_stats: u64,
 }
 
 /// Cap on speculative per-event-vector preallocation. Size hints can
@@ -772,13 +840,9 @@ fn reserve_hint<S: EventSource + ?Sized>(source: &S) -> usize {
 }
 
 impl StreamState {
-    fn new(record: bool, reserve: usize) -> Self {
-        let reserve = if record { reserve } else { 0 };
+    fn new(cfg: &PipelineConfig, reserve: usize) -> Self {
         Self {
-            record,
-            signal_events: Vec::with_capacity(reserve),
-            scores: Vec::with_capacity(reserve),
-            corners: Vec::new(),
+            recorder: cfg.record_per_event.then(|| RecordingSink::with_capacity(reserve)),
             corners_total: 0,
             events_in: 0,
             events_signal: 0,
@@ -786,23 +850,63 @@ impl StreamState {
             since_refresh: 0,
             dvfs_switches: 0,
             lut_refreshes: 0,
+            stats_every: cfg.stats_interval_events.map(|n| n.max(1)),
+            since_stats: 0,
         }
     }
 
-    /// Record one scored signal event (the tag stage).
-    #[inline]
-    fn tag(&mut self, ev: &Event, score: f64, threshold: f64) {
-        if score >= threshold {
-            if self.record {
-                self.corners.push(self.events_signal);
-            }
-            self.corners_total += 1;
+    /// Counters as of now, for [`CornerSink::on_stats`] /
+    /// [`CornerSink::on_chunk_end`].
+    fn live_stats(&self) -> LiveStats {
+        LiveStats {
+            events_in: self.events_in as u64,
+            events_signal: self.events_signal as u64,
+            corners_total: self.corners_total,
+            dvfs_switches: self.dvfs_switches,
+            lut_refreshes: self.lut_refreshes,
         }
-        if self.record {
-            self.scores.push(score);
-            self.signal_events.push(*ev);
+    }
+
+    /// The tag stage: count the scored signal event and deliver it to
+    /// the internal recorder (if any) and the caller's sink.
+    #[inline]
+    fn tag<K: CornerSink + ?Sized>(
+        &mut self,
+        ev: &Event,
+        score: f64,
+        threshold: f64,
+        sink: &mut K,
+    ) -> Result<()> {
+        let seq = self.events_signal as u64;
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.on_score(seq, ev, score)?;
+        }
+        sink.on_score(seq, ev, score)?;
+        if score >= threshold {
+            self.corners_total += 1;
+            let corner = Corner { seq, ev: *ev, score };
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.on_corner(&corner)?;
+            }
+            sink.on_corner(&corner)?;
         }
         self.events_signal += 1;
+        Ok(())
+    }
+
+    /// The `on_stats` cadence: called once per *input* event, after that
+    /// event finished the pipeline stages (so the emitted counters
+    /// include it).
+    #[inline]
+    fn stats_tick<K: CornerSink + ?Sized>(&mut self, sink: &mut K) -> Result<()> {
+        if let Some(every) = self.stats_every {
+            self.since_stats += 1;
+            if self.since_stats >= every {
+                self.since_stats = 0;
+                sink.on_stats(&self.live_stats())?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -972,6 +1076,147 @@ mod tests {
         assert_eq!(lean.corners_total, full.corners_total);
         assert_eq!(full.corners_total as usize, full.corners.len());
         assert_eq!(lean.final_tos, full.final_tos);
+    }
+
+    #[test]
+    fn external_recording_sink_matches_report_vectors() {
+        // the caller's RecordingSink and the internal one ride the same
+        // callbacks: their contents must be identical
+        let mut scene = SceneConfig::test64().build(21);
+        let events = scene.generate(9_000);
+        let mut cfg = PipelineConfig::test64();
+        cfg.detector = DetectorKind::Fast;
+        let mut pipe = Pipeline::from_config_without_engine(cfg).unwrap();
+        let mut sink = RecordingSink::default();
+        let report = pipe.run_with(&events, &mut sink).unwrap();
+        assert_eq!(sink.signal_events, report.signal_events);
+        assert_eq!(sink.scores, report.scores);
+        assert_eq!(sink.corners, report.corners);
+        assert_eq!(report.corners_total as usize, sink.corners.len());
+    }
+
+    #[test]
+    fn corner_callbacks_carry_seq_event_and_score() {
+        struct Check {
+            report_like: Vec<(u64, Event, f64)>,
+        }
+        impl CornerSink for Check {
+            fn on_corner(&mut self, c: &Corner) -> Result<()> {
+                self.report_like.push((c.seq, c.ev, c.score));
+                Ok(())
+            }
+        }
+        let mut scene = SceneConfig::test64().build(22);
+        let events = scene.generate(6_000);
+        let mut cfg = PipelineConfig::test64();
+        cfg.detector = DetectorKind::Fast;
+        let mut pipe = Pipeline::from_config_without_engine(cfg).unwrap();
+        let mut sink = Check { report_like: Vec::new() };
+        let report = pipe.run_with(&events, &mut sink).unwrap();
+        assert_eq!(sink.report_like.len(), report.corners.len());
+        for ((seq, ev, score), &idx) in sink.report_like.iter().zip(&report.corners) {
+            assert_eq!(*seq as usize, idx);
+            assert_eq!(*ev, report.signal_events[idx]);
+            assert_eq!(score.to_bits(), report.scores[idx].to_bits());
+        }
+    }
+
+    #[test]
+    fn stats_cadence_is_deterministic_and_chunk_independent() {
+        #[derive(Default)]
+        struct Stats {
+            seen: Vec<LiveStats>,
+        }
+        impl CornerSink for Stats {
+            fn on_corner(&mut self, _c: &Corner) -> Result<()> {
+                Ok(())
+            }
+            fn on_stats(&mut self, s: &LiveStats) -> Result<()> {
+                self.seen.push(*s);
+                Ok(())
+            }
+        }
+        let mut scene = SceneConfig::test64().build(23);
+        let events = scene.generate(5_000);
+        let mut cfg = PipelineConfig::test64();
+        cfg.detector = DetectorKind::Fast;
+        cfg.stats_interval_events = Some(500);
+        let mut runs = Vec::new();
+        for chunk in [64usize, 997, 5_000] {
+            let mut pipe = Pipeline::from_config_without_engine(cfg.clone()).unwrap();
+            let mut sink = Stats::default();
+            pipe.run_stream_with(
+                &mut crate::events::source::SliceSource::new(&events, chunk),
+                &mut sink,
+            )
+            .unwrap();
+            assert_eq!(sink.seen.len(), 10, "chunk {chunk}");
+            for (i, s) in sink.seen.iter().enumerate() {
+                assert_eq!(s.events_in, 500 * (i as u64 + 1), "chunk {chunk}");
+            }
+            // monotone counters
+            for w in sink.seen.windows(2) {
+                assert!(w[1].events_signal >= w[0].events_signal);
+                assert!(w[1].corners_total >= w[0].corners_total);
+            }
+            runs.push(sink.seen);
+        }
+        // the cadence is counted in events, so the emitted snapshots are
+        // identical whatever the source chunking
+        assert_eq!(runs[0], runs[1]);
+        assert_eq!(runs[0], runs[2]);
+    }
+
+    #[test]
+    fn sink_error_aborts_the_run() {
+        struct Failing {
+            after: usize,
+        }
+        impl CornerSink for Failing {
+            fn on_corner(&mut self, _c: &Corner) -> Result<()> {
+                Ok(())
+            }
+            fn on_score(&mut self, seq: u64, _ev: &Event, _score: f64) -> Result<()> {
+                anyhow::ensure!((seq as usize) < self.after, "sink full");
+                Ok(())
+            }
+        }
+        let mut scene = SceneConfig::test64().build(24);
+        let events = scene.generate(4_000);
+        let mut cfg = PipelineConfig::test64();
+        cfg.detector = DetectorKind::Fast;
+        let mut pipe = Pipeline::from_config_without_engine(cfg).unwrap();
+        let err = pipe.run_with(&events, &mut Failing { after: 100 }).unwrap_err();
+        assert!(format!("{err:#}").contains("sink full"), "{err:#}");
+    }
+
+    #[test]
+    fn chunk_end_fires_once_per_source_chunk() {
+        #[derive(Default)]
+        struct Chunks {
+            ends: usize,
+        }
+        impl CornerSink for Chunks {
+            fn on_corner(&mut self, _c: &Corner) -> Result<()> {
+                Ok(())
+            }
+            fn on_chunk_end(&mut self, _s: &LiveStats) -> Result<()> {
+                self.ends += 1;
+                Ok(())
+            }
+        }
+        let mut scene = SceneConfig::test64().build(25);
+        let events = scene.generate(1_000);
+        let mut cfg = PipelineConfig::test64();
+        cfg.detector = DetectorKind::Fast;
+        let mut pipe = Pipeline::from_config_without_engine(cfg).unwrap();
+        let mut sink = Chunks::default();
+        pipe.run_stream_with(
+            &mut crate::events::source::SliceSource::new(&events, 256),
+            &mut sink,
+        )
+        .unwrap();
+        assert_eq!(sink.ends, 4); // 256 + 256 + 256 + 232
     }
 
     #[test]

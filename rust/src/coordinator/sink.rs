@@ -1,0 +1,263 @@
+//! The pipeline's output API: [`CornerSink`], an observer that receives
+//! corners, scores, and live counters *at event rate* while a run is in
+//! flight — instead of waiting for the end-of-run
+//! [`RunReport`](super::RunReport).
+//!
+//! The paper's whole pitch is latency: NM-TOS exists so corner decisions
+//! come out at event rate, not after buffering. The results path mirrors
+//! that — [`Pipeline::run_stream_with`](super::Pipeline::run_stream_with)
+//! drives a sink as it processes, so a consumer (a wire protocol, a
+//! visualizer, a downstream tracker) sees each corner the moment it is
+//! tagged. luvHarris frames practical event-camera corner detection as
+//! exactly this kind of throughput pipeline with continuous consumers.
+//!
+//! Contract (enforced by the coordinator's run loops):
+//!
+//! * [`on_score`](CornerSink::on_score) fires once per **signal** event
+//!   (post-STCF), in stream order. `seq` is the event's 0-based index
+//!   among signal events — the same indexing
+//!   [`RunReport::corners`](super::RunReport::corners) uses.
+//! * [`on_corner`](CornerSink::on_corner) fires additionally, right
+//!   after that event's `on_score`, when its score reaches the corner
+//!   threshold.
+//! * [`on_stats`](CornerSink::on_stats) fires every
+//!   [`stats_interval_events`](super::PipelineConfig::stats_interval_events)
+//!   **input** events (pre-STCF), so its cadence — like every per-event
+//!   callback — is independent of source chunking.
+//! * [`on_chunk_end`](CornerSink::on_chunk_end) fires after each source
+//!   chunk is fully processed. This is the natural flush point for
+//!   batching sinks; unlike the other callbacks its cadence *does*
+//!   depend on how the source chunks the stream.
+//!
+//! Every callback is fallible, and that is the backpressure contract: a
+//! sink error aborts the run with that error. A sink may also simply
+//! block (a TCP writer with a full send buffer blocks in `on_corner`),
+//! which stalls the pipeline — backpressure, not data loss. Sinks that
+//! must never stall the event path should buffer internally and shed
+//! load themselves.
+//!
+//! [`RunReport`](super::RunReport) recording is itself just a sink:
+//! [`RecordingSink`] is what the coordinator drives internally when
+//! [`record_per_event`](super::PipelineConfig::record_per_event) is on,
+//! so the load-all, streamed, and served paths all share one recording
+//! implementation.
+//!
+//! ```
+//! use nmc_tos::coordinator::sink::{Corner, CornerSink};
+//!
+//! /// Counts corners; never blocks, never fails.
+//! #[derive(Default)]
+//! struct Counter {
+//!     corners: u64,
+//! }
+//!
+//! impl CornerSink for Counter {
+//!     fn on_corner(&mut self, _c: &Corner) -> anyhow::Result<()> {
+//!         self.corners += 1;
+//!         Ok(())
+//!     }
+//! }
+//!
+//! # use nmc_tos::prelude::*;
+//! let mut cfg = PipelineConfig::test64();
+//! cfg.detector = DetectorKind::Fast; // SAE detector: no Harris engine
+//! let mut pipe = Pipeline::from_config_without_engine(cfg)?;
+//! let events = SceneConfig::test64().build(1).generate(2_000);
+//! let mut sink = Counter::default();
+//! let report = pipe.run_with(&events, &mut sink)?;
+//! assert_eq!(sink.corners, report.corners_total);
+//! # anyhow::Ok(())
+//! ```
+
+use anyhow::Result;
+
+use crate::events::Event;
+
+/// One corner decision, delivered at event rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Corner {
+    /// 0-based index of this event among the stream's signal events
+    /// (the index [`RunReport::corners`](super::RunReport::corners)
+    /// would record).
+    pub seq: u64,
+    /// The event that was tagged.
+    pub ev: Event,
+    /// Its detector score (≥ the configured corner threshold).
+    pub score: f64,
+}
+
+/// A live snapshot of the run counters, as of the emitting callback.
+///
+/// All fields are monotone over a run and match the corresponding
+/// [`RunReport`](super::RunReport) counters at end of stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LiveStats {
+    /// Events fed in so far (pre-STCF).
+    pub events_in: u64,
+    /// Events surviving STCF so far.
+    pub events_signal: u64,
+    /// Corners tagged so far.
+    pub corners_total: u64,
+    /// DVFS voltage switches so far.
+    pub dvfs_switches: u64,
+    /// Harris LUT refreshes consumed so far.
+    pub lut_refreshes: u64,
+}
+
+/// Observer of a pipeline run's results (see the [module docs](self)
+/// for the callback contract). Only [`on_corner`](CornerSink::on_corner)
+/// is required; the other callbacks default to no-ops.
+pub trait CornerSink {
+    /// A signal event's score reached the corner threshold.
+    fn on_corner(&mut self, corner: &Corner) -> Result<()>;
+
+    /// A signal event was scored (fires for *every* signal event, corner
+    /// or not, immediately before any `on_corner` for the same event).
+    fn on_score(&mut self, seq: u64, ev: &Event, score: f64) -> Result<()> {
+        let _ = (seq, ev, score);
+        Ok(())
+    }
+
+    /// Periodic live counters, every
+    /// [`stats_interval_events`](super::PipelineConfig::stats_interval_events)
+    /// input events (never fires when that is `None`).
+    fn on_stats(&mut self, stats: &LiveStats) -> Result<()> {
+        let _ = stats;
+        Ok(())
+    }
+
+    /// A source chunk was fully processed (batching sinks flush here).
+    fn on_chunk_end(&mut self, stats: &LiveStats) -> Result<()> {
+        let _ = stats;
+        Ok(())
+    }
+}
+
+impl<K: CornerSink + ?Sized> CornerSink for &mut K {
+    fn on_corner(&mut self, corner: &Corner) -> Result<()> {
+        (**self).on_corner(corner)
+    }
+    fn on_score(&mut self, seq: u64, ev: &Event, score: f64) -> Result<()> {
+        (**self).on_score(seq, ev, score)
+    }
+    fn on_stats(&mut self, stats: &LiveStats) -> Result<()> {
+        (**self).on_stats(stats)
+    }
+    fn on_chunk_end(&mut self, stats: &LiveStats) -> Result<()> {
+        (**self).on_chunk_end(stats)
+    }
+}
+
+impl<K: CornerSink + ?Sized> CornerSink for Box<K> {
+    fn on_corner(&mut self, corner: &Corner) -> Result<()> {
+        (**self).on_corner(corner)
+    }
+    fn on_score(&mut self, seq: u64, ev: &Event, score: f64) -> Result<()> {
+        (**self).on_score(seq, ev, score)
+    }
+    fn on_stats(&mut self, stats: &LiveStats) -> Result<()> {
+        (**self).on_stats(stats)
+    }
+    fn on_chunk_end(&mut self, stats: &LiveStats) -> Result<()> {
+        (**self).on_chunk_end(stats)
+    }
+}
+
+/// Discards everything. What [`run_stream`](super::Pipeline::run_stream)
+/// drives when no external consumer is attached.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl CornerSink for NullSink {
+    fn on_corner(&mut self, _corner: &Corner) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Records the full per-event result vectors — the sink behind
+/// [`RunReport`](super::RunReport)'s `signal_events` / `scores` /
+/// `corners` fields. Memory is O(stream); for unbounded streams attach a
+/// bounded sink instead.
+#[derive(Debug, Clone, Default)]
+pub struct RecordingSink {
+    /// Every signal event, in order (index-aligned with `scores`).
+    pub signal_events: Vec<Event>,
+    /// Per-signal-event corner score.
+    pub scores: Vec<f64>,
+    /// `seq` of each tagged corner (indices into `signal_events`).
+    pub corners: Vec<usize>,
+}
+
+impl RecordingSink {
+    /// A recorder with per-event vectors preallocated for `n` events.
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            signal_events: Vec::with_capacity(n),
+            scores: Vec::with_capacity(n),
+            corners: Vec::new(),
+        }
+    }
+}
+
+impl CornerSink for RecordingSink {
+    fn on_corner(&mut self, corner: &Corner) -> Result<()> {
+        self.corners.push(corner.seq as usize);
+        Ok(())
+    }
+
+    fn on_score(&mut self, _seq: u64, ev: &Event, score: f64) -> Result<()> {
+        self.signal_events.push(*ev);
+        self.scores.push(score);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recording_sink_records_in_order() {
+        let mut rec = RecordingSink::with_capacity(4);
+        let e0 = Event::on(1, 2, 10);
+        let e1 = Event::on(3, 4, 20);
+        rec.on_score(0, &e0, 0.1).unwrap();
+        rec.on_score(1, &e1, 0.9).unwrap();
+        rec.on_corner(&Corner { seq: 1, ev: e1, score: 0.9 }).unwrap();
+        assert_eq!(rec.signal_events, vec![e0, e1]);
+        assert_eq!(rec.scores, vec![0.1, 0.9]);
+        assert_eq!(rec.corners, vec![1]);
+    }
+
+    #[test]
+    fn null_sink_accepts_everything() {
+        let mut sink = NullSink;
+        let ev = Event::on(0, 0, 0);
+        sink.on_score(0, &ev, 1.0).unwrap();
+        sink.on_corner(&Corner { seq: 0, ev, score: 1.0 }).unwrap();
+        sink.on_stats(&LiveStats::default()).unwrap();
+        sink.on_chunk_end(&LiveStats::default()).unwrap();
+    }
+
+    #[test]
+    fn blanket_impls_forward_every_callback() {
+        // boxed and borrowed sinks must forward on_score to the inner
+        // recorder, not swallow it through the trait's provided default
+        let mut rec = RecordingSink::default();
+        let ev = Event::on(5, 6, 7);
+        {
+            let mut boxed: Box<&mut RecordingSink> = Box::new(&mut rec);
+            boxed.on_score(0, &ev, 0.5).unwrap();
+        }
+        {
+            let mut inner: &mut RecordingSink = &mut rec;
+            let by_ref: &mut &mut RecordingSink = &mut inner;
+            by_ref.on_score(1, &ev, 0.6).unwrap();
+        }
+        {
+            let dynamic: &mut dyn CornerSink = &mut rec;
+            dynamic.on_score(2, &ev, 0.7).unwrap();
+        }
+        assert_eq!(rec.scores, vec![0.5, 0.6, 0.7]);
+    }
+}

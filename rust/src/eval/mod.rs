@@ -6,6 +6,60 @@
 //! the score produces the PR curve; the area under it (trapezoid over
 //! recall) is the headline AUC metric whose degradation under BER the
 //! paper reports.
+//!
+//! The pairs can come from a finished
+//! [`RunReport::scored_events`](crate::coordinator::RunReport::scored_events)
+//! (needs `record_per_event`, O(stream) event+score vectors) or be
+//! labelled on the fly by a [`ScoredSink`] attached to
+//! [`run_stream_with`](crate::coordinator::Pipeline::run_stream_with) —
+//! the evaluation path for streamed runs, which keeps only the
+//! `(score, label)` pairs themselves.
+
+use anyhow::Result;
+
+use crate::coordinator::sink::{Corner, CornerSink};
+use crate::datasets::gt::GroundTruth;
+use crate::events::Event;
+
+/// A [`CornerSink`] that labels every scored signal event against
+/// ground truth as it streams past, accumulating the `(score, label)`
+/// pairs [`PrCurve::from_scores`] consumes — AUC without a recorded
+/// [`RunReport`](crate::coordinator::RunReport).
+///
+/// Labelling order and values are identical to
+/// [`RunReport::scored_events`](crate::coordinator::RunReport::scored_events)
+/// on the same run, so both evaluation paths produce the same curve.
+#[derive(Debug)]
+pub struct ScoredSink<'a> {
+    gt: &'a GroundTruth,
+    radius_px: f32,
+    /// Accumulated `(score, is_true_corner)` pairs, in stream order.
+    pub scored: Vec<(f64, bool)>,
+}
+
+impl<'a> ScoredSink<'a> {
+    /// Label against `gt` with the paper's match radius (px).
+    pub fn new(gt: &'a GroundTruth, radius_px: f32) -> Self {
+        Self { gt, radius_px, scored: Vec::new() }
+    }
+
+    /// The PR curve of everything scored so far.
+    pub fn curve(&self, n_thresholds: usize) -> PrCurve {
+        PrCurve::from_scores(&self.scored, n_thresholds)
+    }
+}
+
+impl CornerSink for ScoredSink<'_> {
+    fn on_corner(&mut self, _corner: &Corner) -> Result<()> {
+        Ok(()) // the per-score callback below already saw this event
+    }
+
+    fn on_score(&mut self, _seq: u64, ev: &Event, score: f64) -> Result<()> {
+        let label = self.gt.near_corner(ev.x as f32, ev.y as f32, ev.t, self.radius_px);
+        self.scored.push((score, label));
+        Ok(())
+    }
+}
 
 /// One point of a PR curve.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -162,6 +216,33 @@ mod tests {
         let c = PrCurve::from_scores(&all_same, 11);
         assert!(!c.points.is_empty());
         assert!(c.auc().is_finite());
+    }
+
+    #[test]
+    fn scored_sink_matches_report_scored_events() {
+        // the streamed evaluation path must label exactly like the
+        // RunReport one: same pairs, same order, same AUC
+        use crate::coordinator::{DetectorKind, Pipeline, PipelineConfig};
+        use crate::datasets::synthetic::SceneConfig;
+
+        let mut scene = SceneConfig::test64().build(31);
+        let (events, gt) = scene.generate_with_gt(6_000);
+        let mut cfg = PipelineConfig::test64();
+        cfg.detector = DetectorKind::Fast;
+
+        let mut pipe = Pipeline::from_config_without_engine(cfg.clone()).unwrap();
+        let report = pipe.run(&events).unwrap();
+        let want = report.scored_events(&gt, 3.0);
+
+        cfg.record_per_event = false; // the sink path needs no vectors
+        let mut pipe = Pipeline::from_config_without_engine(cfg).unwrap();
+        let mut sink = ScoredSink::new(&gt, 3.0);
+        let lean = pipe.run_with(&events, &mut sink).unwrap();
+        assert!(lean.signal_events.is_empty());
+        assert_eq!(sink.scored, want);
+        let a = PrCurve::from_scores(&want, 51).auc();
+        let b = sink.curve(51).auc();
+        assert_eq!(a.to_bits(), b.to_bits());
     }
 
     #[test]

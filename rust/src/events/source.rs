@@ -156,11 +156,38 @@ impl<R: Read> FramedStreamSource<R> {
     }
 }
 
+/// `read_exact` that reports a vanished peer (EOF mid-protocol) with
+/// `dropped()`'s message instead of a bare failed-to-fill error; other
+/// I/O errors keep `what` as context. The message closure runs only on
+/// the error path, so the success path allocates nothing.
+fn read_exact_or_dropped<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    what: &str,
+    dropped: impl FnOnce() -> String,
+) -> Result<()> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            anyhow::anyhow!(dropped())
+        } else {
+            anyhow::Error::new(e).context(what.to_string())
+        }
+    })
+}
+
 impl<R: Read> EventSource for FramedStreamSource<R> {
     fn next_chunk(&mut self, out: &mut Vec<Event>) -> Result<usize> {
         while !self.done {
             let mut len = [0u8; 4];
-            self.r.read_exact(&mut len).context("reading frame length")?;
+            // a peer that vanishes (dropped connection, killed client)
+            // must read as exactly that, not a bare failed-to-fill EOF —
+            // and a close between frames is distinguished from one
+            // mid-frame
+            read_exact_or_dropped(&mut self.r, &mut len, "reading frame length", || {
+                "stream closed at a frame boundary without the end-of-stream marker — \
+                 the peer dropped mid-session"
+                    .into()
+            })?;
             let len = u32::from_le_bytes(len) as usize;
             if len == 0 {
                 self.done = true;
@@ -170,7 +197,9 @@ impl<R: Read> EventSource for FramedStreamSource<R> {
                 bail!("frame of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte cap");
             }
             self.payload.resize(len, 0);
-            self.r.read_exact(&mut self.payload).context("reading frame payload")?;
+            read_exact_or_dropped(&mut self.r, &mut self.payload, "reading frame payload", || {
+                format!("stream closed inside a {len}-byte frame — the peer dropped mid-frame")
+            })?;
             // one frame = one container, decoded straight from the
             // recycled payload buffer (no reader or per-frame record
             // buffer on the serving hot path); a frame carrying zero
@@ -313,11 +342,13 @@ mod tests {
         let err = src.next_chunk(&mut Vec::new()).unwrap_err();
         assert!(format!("{err:#}").contains("cap"), "{err:#}");
 
-        // frame cut off mid-payload is a clean error, not a hang
+        // frame cut off mid-payload is a clean "dropped mid-frame" error,
+        // not a hang or a bare failed-to-fill EOF
         let mut wire = frame(&ramp(5));
         wire.truncate(wire.len() - 3);
         let mut src = FramedStreamSource::new(&wire[..]);
-        assert!(src.next_chunk(&mut Vec::new()).is_err());
+        let err = src.next_chunk(&mut Vec::new()).unwrap_err();
+        assert!(format!("{err:#}").contains("mid-frame"), "{err:#}");
 
         // stream ending without the zero-length EOS frame is an error
         // (a dropped connection must be distinguishable from a clean end)
@@ -325,7 +356,8 @@ mod tests {
         let mut src = FramedStreamSource::new(&wire[..]);
         let mut out = Vec::new();
         assert_eq!(src.next_chunk(&mut out).unwrap(), 5);
-        assert!(src.next_chunk(&mut out).is_err());
+        let err = src.next_chunk(&mut out).unwrap_err();
+        assert!(format!("{err:#}").contains("dropped mid-session"), "{err:#}");
     }
 
     #[test]

@@ -60,9 +60,12 @@
 //! ```
 //!
 //! The same pipeline consumes unbounded streams chunk by chunk — see
-//! [`coordinator::Pipeline::run_stream`] — and many streams at once
-//! through [`serve::StreamServer`]. The paper's default combination (NMC
-//! macro + luvHarris LUT) needs the AOT artifacts: `Pipeline::new(
+//! [`coordinator::Pipeline::run_stream`] — emits results at event rate
+//! to any [`CornerSink`](coordinator::CornerSink) observer
+//! ([`coordinator::Pipeline::run_stream_with`], also streamed over the
+//! wire by the serving layer's protocol v2), and serves many streams at
+//! once through [`serve::StreamServer`]. The paper's default combination
+//! (NMC macro + luvHarris LUT) needs the AOT artifacts: `Pipeline::new(
 //! PipelineConfig::davis240())` after `make artifacts`.
 
 #![warn(missing_docs)]
@@ -86,8 +89,8 @@ pub mod tos;
 pub mod prelude {
     pub use crate::conventional::ConventionalTos;
     pub use crate::coordinator::{
-        BackendKind, DetectorKind, DynPipeline, Pipeline, PipelineConfig, PipelineScratch,
-        RunReport,
+        BackendKind, Corner, CornerSink, DetectorKind, DynPipeline, LiveStats, NullSink, Pipeline,
+        PipelineConfig, PipelineScratch, RecordingSink, RunReport,
     };
     pub use crate::datasets::{synthetic::SceneConfig, synthetic::SceneSource, DatasetKind};
     pub use crate::detectors::{harris::HarrisDetector, EventScorer};

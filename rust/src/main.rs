@@ -17,11 +17,14 @@
 //!                                    # end-to-end demo on shapes_dof, or
 //!                                    # stream a recording with bounded memory
 //! nmc-tos serve  [--listen ADDR] [--max-streams N] [--sessions N]
-//!                [--backend B] [--detector D]
-//!                                    # multi-stream server over TCP
+//!                [--backend B] [--detector D] [--stats-interval N]
+//!                                    # multi-stream server over TCP;
+//!                                    # v2 sessions stream corners + stats
 //! nmc-tos feed   --input FILE [--connect ADDR] [--res WxH]
 //!                [--chunk-events N] [--stream-id N]
-//!                                    # stream a recording to a server
+//!                [--print-corners] [--wire-version 1|2]
+//!                                    # stream a recording to a server and
+//!                                    # receive corners live (protocol v2)
 //! nmc-tos lut                        # DVFS V/f lookup table
 //! ```
 //!
@@ -33,11 +36,11 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use nmc_tos::conventional::ConventionalModel;
-use nmc_tos::coordinator::{Pipeline, PipelineConfig};
+use nmc_tos::coordinator::{Corner, CornerSink, LiveStats, Pipeline, PipelineConfig};
 use nmc_tos::datasets::{profiles::RateProfile, synthetic::SceneConfig, DatasetKind};
 use nmc_tos::detectors::{self, eharris::EHarris, EventScorer};
 use nmc_tos::dvfs::DvfsConfig;
-use nmc_tos::eval::PrCurve;
+use nmc_tos::eval::{PrCurve, ScoredSink};
 use nmc_tos::events::Resolution;
 use nmc_tos::nmc::{calib, energy::EnergyModel, montecarlo, timing::TimingModel};
 use nmc_tos::power;
@@ -125,9 +128,12 @@ run flags:    --backend nmc|conventional|golden|sharded  --detector harris|eharr
 serve flags:  --listen ADDR (default 127.0.0.1:7700)  --max-streams N (default 4)
               --sessions N (serve N connections then exit; default: run until killed)
               --backend B  --detector D  --shards N  --eharris-window N
+              --stats-interval N (stream live stats to v2 clients every N events)
 feed flags:   --input FILE (required)  --connect ADDR (default 127.0.0.1:7700)
               --res WxH|davis240|davis346|hd720|test64 (default davis240)
               --chunk-events N (default 16384)  --stream-id N
+              --print-corners (print corners as they stream back)
+              --wire-version 1|2 (default 2; 1 = summary-only legacy session)
 see DESIGN.md for the experiment index";
 
 // ---------------------------------------------------------------------------
@@ -415,10 +421,13 @@ fn cmd_fig11(args: &Args) -> Result<Json> {
             cfg.fixed_vdd = vdd;
             cfg.inject_errors = inject;
             cfg.seed = 7;
+            // AUC through the streaming evaluation path: a ScoredSink
+            // labels events as they flow, so no per-event report vectors
+            cfg.record_per_event = false;
             let mut pipe = Pipeline::new(cfg)?;
-            let report = pipe.run(&events)?;
-            let scored = report.scored_events(&gt, radius);
-            let curve = PrCurve::from_scores(&scored, 101);
+            let mut sink = ScoredSink::new(&gt, radius);
+            let report = pipe.run_with(&events, &mut sink)?;
+            let curve = sink.curve(101);
             let auc = curve.auc();
             println!(
                 "{:<20} AUC {:.3}  (signal events {}, LUT refreshes {}, flipped bits {})",
@@ -583,10 +592,12 @@ fn parse_res(s: &str) -> Result<Resolution> {
 /// `serve`: accept event streams over TCP and drive each through the
 /// pipeline on a worker pool — one `TosBackend` + detector per stream,
 /// Harris engines shared through a per-resolution pool. Each session's
-/// resolution comes from the client handshake; backend/detector are
-/// server policy. `--sessions N` serves N connections then prints the
-/// aggregate stats (scripted runs); without it the server runs until
-/// killed.
+/// resolution and protocol version come from the client handshake;
+/// backend/detector are server policy. Protocol-v2 sessions stream
+/// corner batches back as they are tagged, plus live per-session stats
+/// every `--stats-interval N` events. `--sessions N` serves N
+/// connections then prints the aggregate stats (scripted runs); without
+/// it the server runs until killed.
 fn cmd_serve(args: &Args) -> Result<Json> {
     use nmc_tos::serve::{ServeConfig, StreamServer};
     let listen = args.get("listen").unwrap_or("127.0.0.1:7700").to_string();
@@ -601,8 +612,13 @@ fn cmd_serve(args: &Args) -> Result<Json> {
     cfg.eharris_window = args.num("eharris-window", cfg.eharris_window as f64) as usize;
     // counters only: streams may be unbounded, and the CLI server has no
     // consumer for per-event vectors (library embedders that want full
-    // reports use ServeConfig::keep_reports + StreamServer::take_reports)
+    // reports use ServeConfig::keep_reports + StreamServer::take_reports;
+    // wire clients get per-corner results streamed over protocol v2)
     cfg.record_per_event = false;
+    if let Some(v) = args.get("stats-interval") {
+        // live per-session stats to v2 clients every N input events
+        cfg.stats_interval_events = Some(v.parse::<u64>().context("bad --stats-interval value")?);
+    }
     let backend = cfg.backend;
     let detector = cfg.detector;
     let mut serve_cfg = ServeConfig::new(cfg);
@@ -636,6 +652,9 @@ fn cmd_serve(args: &Args) -> Result<Json> {
     println!("peak concurrency     : {}", stats.peak_concurrent);
     println!("mean ingest rate     : {:.0} keps", stats.events_per_sec() / 1e3);
     println!("worst realtime lag   : {:+.3} s", stats.worst_lag_s);
+    println!("v2 sessions          : {}", stats.sessions_v2);
+    println!("corners streamed     : {}", stats.corners_streamed);
+    println!("stats frames sent    : {}", stats.stats_frames);
     println!(
         "engines compiled/reused: {}/{}",
         stats.pool.engines_created, stats.pool.engines_reused
@@ -650,15 +669,53 @@ fn cmd_serve(args: &Args) -> Result<Json> {
         ("peak_concurrent", Json::Num(stats.peak_concurrent as f64)),
         ("events_per_sec", Json::Num(stats.events_per_sec())),
         ("worst_lag_s", Json::Num(stats.worst_lag_s)),
+        ("sessions_v2", Json::Num(stats.sessions_v2 as f64)),
+        ("corners_streamed", Json::Num(stats.corners_streamed as f64)),
+        ("stats_frames", Json::Num(stats.stats_frames as f64)),
         ("engines_created", Json::Num(stats.pool.engines_created as f64)),
         ("engines_reused", Json::Num(stats.pool.engines_reused as f64)),
     ]))
 }
 
+/// The `feed` client's sink: counts (and optionally prints) corners and
+/// live stats as the server streams them back over protocol v2.
+#[derive(Default)]
+struct FeedSink {
+    print_corners: bool,
+    corners: u64,
+    stats_frames: u64,
+}
+
+impl CornerSink for FeedSink {
+    fn on_corner(&mut self, c: &Corner) -> Result<()> {
+        self.corners += 1;
+        if self.print_corners {
+            println!(
+                "corner seq {:<9} ({:>4},{:>4})  t {:>12} µs  score {:.5}",
+                c.seq, c.ev.x, c.ev.y, c.ev.t, c.score
+            );
+        }
+        Ok(())
+    }
+
+    fn on_stats(&mut self, s: &LiveStats) -> Result<()> {
+        self.stats_frames += 1;
+        // stderr so piped corner output stays clean
+        eprintln!(
+            "stats: {} in / {} signal / {} corners / {} dvfs switches / {} lut refreshes",
+            s.events_in, s.events_signal, s.corners_total, s.dvfs_switches, s.lut_refreshes
+        );
+        Ok(())
+    }
+}
+
 /// `feed`: stream a recording to a running `serve` instance over TCP
 /// (the loopback test client: `gen-data` + `serve` + `feed` is a full
-/// serving smoke test on one machine). Prints the server's end-of-stream
-/// summary.
+/// serving smoke test on one machine). By default a protocol-v2 session:
+/// corners and live stats stream back while the recording is sent
+/// (`--print-corners` prints each one); `--wire-version 1` speaks the
+/// legacy summary-only protocol. Prints the server's end-of-stream
+/// summary either way.
 fn cmd_feed(args: &Args) -> Result<Json> {
     use nmc_tos::serve::wire::{self, Hello};
     let input = args.get("input").context("feed needs --input FILE")?;
@@ -666,18 +723,33 @@ fn cmd_feed(args: &Args) -> Result<Json> {
     let chunk = args.num("chunk-events", 16_384.0) as usize;
     let stream_id = args.num("stream-id", 0.0) as u32;
     let res = parse_res(args.get("res").unwrap_or("davis240"))?;
+    let version = match args.get("wire-version") {
+        None => wire::WIRE_V2,
+        // strict parse: a typo must not silently fall back to v2
+        Some(s) => s.parse::<u8>().with_context(|| format!("bad --wire-version `{s}` (1|2)"))?,
+    };
+    let hello = match version {
+        1 => Hello::v1(stream_id, res),
+        2 => Hello::v2(stream_id, res),
+        other => bail!("--wire-version {other} is not a protocol this client speaks (1|2)"),
+    };
 
     let mut source = nmc_tos::events::source::open(std::path::Path::new(input), chunk)?;
     let stream = std::net::TcpStream::connect(connect)
         .with_context(|| format!("connecting to {connect}"))?;
+    let mut sink = FeedSink { print_corners: args.flag("print-corners"), ..FeedSink::default() };
     let t0 = std::time::Instant::now();
-    let summary = wire::feed(stream, Hello { stream_id, res }, &mut source)?;
+    let summary = wire::feed_with_sink(stream, hello, &mut source, &mut sink)?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("== fed {input} to {connect} (stream {stream_id}, chunks of {chunk}) ==");
     println!("events sent          : {}", summary.events_in);
     println!("signal after STCF    : {}", summary.events_signal);
     println!("corners tagged       : {}", summary.corners_total);
+    if hello.version >= wire::WIRE_V2 {
+        println!("corners streamed     : {}", sink.corners);
+        println!("stats frames         : {}", sink.stats_frames);
+    }
     println!("LUT refreshes        : {}", summary.lut_refreshes);
     println!("DVFS switches        : {}", summary.dvfs_switches);
     println!("server busy          : {:.3} s", summary.wall_us as f64 / 1e6);
@@ -690,9 +762,12 @@ fn cmd_feed(args: &Args) -> Result<Json> {
         ("input", Json::Str(input.into())),
         ("connect", Json::Str(connect.into())),
         ("stream_id", Json::Num(stream_id as f64)),
+        ("wire_version", Json::Num(hello.version as f64)),
         ("events_in", Json::Num(summary.events_in as f64)),
         ("events_signal", Json::Num(summary.events_signal as f64)),
         ("corners", Json::Num(summary.corners_total as f64)),
+        ("corners_streamed", Json::Num(sink.corners as f64)),
+        ("stats_frames", Json::Num(sink.stats_frames as f64)),
         ("lut_refreshes", Json::Num(summary.lut_refreshes as f64)),
         ("dvfs_switches", Json::Num(summary.dvfs_switches as f64)),
         ("server_wall_s", Json::Num(summary.wall_us as f64 / 1e6)),

@@ -5,11 +5,15 @@
 //! worker, `max_streams` total) and two front doors:
 //!
 //! * **TCP** ([`StreamServer::serve`]) — each connection is one session:
-//!   a handshake declaring the stream's resolution
+//!   a handshake declaring the stream's resolution and protocol version
 //!   ([`wire::Hello`]), then length-prefixed binary event frames
 //!   (the on-disk codec, relayed without re-encoding), answered with a
-//!   counters [`wire::Summary`] when the stream ends. `nmc-tos feed`
-//!   is the matching client.
+//!   counters [`wire::Summary`] when the stream ends. Protocol-v2
+//!   sessions additionally receive corner batches and live per-session
+//!   stats *while* the stream runs — a [`wire::WireSink`] attached to
+//!   the session's pipeline (`--stats-interval` sets the stats cadence);
+//!   v1 clients get the summary-only session unchanged. `nmc-tos feed`
+//!   is the matching client for both versions.
 //! * **in-process** ([`StreamServer::submit`]) — tests, benches and
 //!   embedding applications hand the server an [`EventSource`] directly
 //!   and get the full [`RunReport`] back through a [`SessionHandle`].
@@ -33,7 +37,7 @@
 pub mod pool;
 pub mod wire;
 
-use std::io::{BufReader, Write};
+use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -42,12 +46,13 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::sink::{CornerSink, NullSink};
 use crate::coordinator::{make_backend, make_detector, DynPipeline, PipelineConfig, RunReport};
 use crate::events::source::{EventSource, TcpStreamSource};
 use crate::events::{Event, Resolution};
 
 pub use pool::{EnginePool, PoolStats};
-pub use wire::{Hello, Summary};
+pub use wire::{Hello, Summary, WireSink};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -56,6 +61,8 @@ pub struct ServeConfig {
     /// `res` with the handshake's geometry; `async_refresh` is forced off
     /// (the async worker loads a private engine, which would bypass the
     /// shared pool). For unbounded streams keep `record_per_event` off.
+    /// `base.stats_interval_events` sets the cadence of the live `Stats`
+    /// messages v2 sessions stream back (`serve --stats-interval`).
     pub base: PipelineConfig,
     /// Worker count = max concurrent sessions. Further connections queue
     /// in the listener backlog until a worker frees up (no event loss —
@@ -116,6 +123,14 @@ pub struct ServerStats {
     /// a live sensor; negative = processed faster than real time. 0
     /// until the first session completes.
     pub worst_lag_s: f64,
+    /// Completed TCP sessions that negotiated protocol v2 (streamed
+    /// results).
+    pub sessions_v2: u64,
+    /// Corners streamed to v2 clients in `CornerBatch` messages.
+    pub corners_streamed: u64,
+    /// Live `Stats` messages sent to v2 clients
+    /// (`--stats-interval` cadence).
+    pub stats_frames: u64,
     /// Engine-pool counters (cold compiles vs pooled reuses).
     pub pool: PoolStats,
 }
@@ -310,7 +325,7 @@ fn worker_loop(shared: &Shared, rx: &Mutex<mpsc::Receiver<Session>>) {
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match session {
             Session::Tcp(stream) => run_tcp_session(shared, stream),
             Session::Local { stream_id, res, mut source, reply } => {
-                let result = run_session(shared, stream_id, res, &mut source);
+                let result = run_session(shared, stream_id, res, &mut source, &mut NullSink);
                 match result {
                     Ok((report, lag_s)) => {
                         record_completion(shared, stream_id, &report, lag_s);
@@ -345,12 +360,16 @@ fn worker_loop(shared: &Shared, rx: &Mutex<mpsc::Receiver<Session>>) {
 /// bogus `Hello` gets `ACK_REJECTED`, not a multi-GB allocation.
 const MAX_SESSION_PIXELS: usize = 4096 * 4096;
 
-/// One TCP session: handshake, stream, summary. Any error mid-way drops
-/// the connection; the caller counts it as failed.
+/// One TCP session: handshake (negotiating the protocol version),
+/// stream — with results flowing back through a [`WireSink`] for v2
+/// clients — then the summary. Any error mid-way drops the connection;
+/// the caller counts it as failed.
 fn run_tcp_session(shared: &Shared, stream: TcpStream) -> Result<()> {
     stream.set_nodelay(true).ok();
     // a silent peer must not pin this worker forever: reads and writes
-    // give up after the configured timeout and fail the session
+    // give up after the configured timeout and fail the session — for v2
+    // sessions that includes a client that stops draining its corner
+    // batches (the write stalls, times out, and frees the worker)
     stream.set_read_timeout(shared.cfg.io_timeout).ok();
     stream.set_write_timeout(shared.cfg.io_timeout).ok();
     let mut reader = BufReader::new(stream.try_clone().context("cloning connection")?);
@@ -369,26 +388,47 @@ fn run_tcp_session(shared: &Shared, stream: TcpStream) -> Result<()> {
             return Err(e.context("handshake"));
         }
     };
-    wire::write_ack(&mut &stream, wire::ACK_OK)?;
+    wire::write_ack_for(&mut &stream, wire::ACK_OK, hello.version)?;
     (&stream).flush()?;
 
     let framed: TcpStreamSource = crate::events::source::FramedStreamSource::new(reader);
     let mut source = BoundsCheckedSource { inner: framed, res: hello.res };
-    let (report, lag_s) = run_session(shared, hello.stream_id, hello.res, &mut source)?;
-    wire::write_summary(&mut &stream, &wire::Summary::from_report(hello.stream_id, &report))?;
-    (&stream).flush()?;
-    record_completion(shared, hello.stream_id, &report, lag_s);
+    if hello.version >= wire::WIRE_V2 {
+        // v2: a WireSink rides the pipeline, streaming corner batches at
+        // chunk boundaries and stats at the configured interval; the
+        // tagged summary goes through the same writer so ordering holds
+        let writer = BufWriter::new(stream.try_clone().context("cloning connection")?);
+        let mut sink = WireSink::new(writer);
+        let (report, lag_s) =
+            run_session(shared, hello.stream_id, hello.res, &mut source, &mut sink)?;
+        let (corners_streamed, stats_frames) =
+            sink.finish(&wire::Summary::from_report(hello.stream_id, &report))?;
+        record_completion(shared, hello.stream_id, &report, lag_s);
+        let mut stats = shared.stats.lock().unwrap();
+        stats.sessions_v2 += 1;
+        stats.corners_streamed += corners_streamed;
+        stats.stats_frames += stats_frames;
+    } else {
+        // v1: summary-only, byte-compatible with pre-v2 servers
+        let (report, lag_s) =
+            run_session(shared, hello.stream_id, hello.res, &mut source, &mut NullSink)?;
+        wire::write_summary(&mut &stream, &wire::Summary::from_report(hello.stream_id, &report))?;
+        (&stream).flush()?;
+        record_completion(shared, hello.stream_id, &report, lag_s);
+    }
     Ok(())
 }
 
 /// Build a pipeline for one session (engine + scratch from the pool),
-/// run the stream, and return the report plus the session's real-time
+/// run the stream — driving `sink` with corners, scores and live stats
+/// at event rate — and return the report plus the session's real-time
 /// lag (wall seconds minus event-time span).
 fn run_session<S: EventSource + ?Sized>(
     shared: &Shared,
     stream_id: u32,
     res: Resolution,
     source: &mut S,
+    sink: &mut dyn CornerSink,
 ) -> Result<(RunReport, f64)> {
     let mut cfg = shared.cfg.base.clone();
     cfg.res = res;
@@ -418,7 +458,7 @@ fn run_session<S: EventSource + ?Sized>(
 
     let mut pipe = DynPipeline::with_parts_and_scratch(cfg, backend, detector, engine, scratch)?;
     let mut tracked = SpanSource::new(source);
-    let result = pipe.run_stream(&mut tracked);
+    let result = pipe.run_stream_with(&mut tracked, sink);
     let span_s = tracked.span_s();
     // engine + scratch go back to the pool whether the run succeeded or
     // not — a failed stream must not leak the shared engine

@@ -1,73 +1,152 @@
-//! The `nmc-tos serve` wire protocol: handshake, event frames, and the
-//! end-of-stream summary.
+//! The `nmc-tos serve` wire protocol: handshake, event frames, streamed
+//! results (protocol v2), and the end-of-stream summary.
 //!
 //! A session is one TCP connection carrying one event stream:
 //!
 //! ```text
-//! client -> server   Hello     "NMCTOSRV" | version u8 | stream_id u32
-//!                              | width u16 | height u16      (all LE)
-//! server -> client   Ack       status u8 (0 = accepted)
+//! client -> server   Hello     "NMCTOSRV" | version u8 (1 or 2)
+//!                              | stream_id u32 | width u16 | height u16
+//! server -> client   Ack       status u8 (0 = accepted); when the Hello
+//!                              asked for v2, an accepted ack carries one
+//!                              more byte: the negotiated version
 //! client -> server   frames    u32 payload length, then the payload:
 //!                              one complete binary event container
 //!                              (`events::codec::write_binary` format).
 //!                              A zero-length frame is end of stream.
-//! server -> client   Summary   "NMCTOSRP" | stream_id u32 | events_in,
-//!                              events_signal, corners_total,
-//!                              dvfs_switches, lut_refreshes, wall_us
-//!                              (all u64 LE)
 //! ```
 //!
-//! Each frame decodes to one pipeline chunk
+//! **v1 sessions** (summary-only): after the client's end-of-stream
+//! frame the server answers a single `Summary` and the session is over.
+//! A v1 client against a v2 server gets exactly the v1 byte stream — the
+//! ack stays one byte, nothing is interleaved.
+//!
+//! **v2 sessions** stream results back *while* the client is still
+//! sending events. Every server→client message is tagged with one kind
+//! byte:
+//!
+//! ```text
+//! server -> client   'C' CornerBatch   u32 count, then per corner:
+//!                                      seq u64 | x u16 | y u16 | t u64
+//!                                      | p u8 | score f64-bits u64
+//!                    'S' Stats         events_in, events_signal,
+//!                                      corners_total, dvfs_switches,
+//!                                      lut_refreshes   (all u64)
+//!                    'R' Summary       the v1 summary block, verbatim
+//! ```
+//!
+//! All integers little-endian. Corner scores travel as raw `f64` bits,
+//! so a v2 client reassembles corners **bit-identical** to what a
+//! sequential `run_stream` with a
+//! [`RecordingSink`](crate::coordinator::RecordingSink) records
+//! (`rust/tests/serve_integration.rs` proves it). `CornerBatch` cadence
+//! follows the pipeline's chunk boundaries (plus a
+//! [`MAX_CORNER_BATCH`] cap); `Stats` cadence is the server's
+//! `--stats-interval` (see
+//! [`PipelineConfig::stats_interval_events`](crate::coordinator::PipelineConfig::stats_interval_events)).
+//!
+//! Each event frame decodes to one pipeline chunk
 //! ([`FramedStreamSource`](crate::events::source::FramedStreamSource)),
 //! so the sender's frame size is the server's per-stream memory bound;
 //! frames above [`MAX_FRAME_BYTES`](crate::events::source::MAX_FRAME_BYTES)
-//! are rejected. The container format inside each frame is exactly the
-//! on-disk codec, so a recording can be relayed without re-encoding.
+//! are rejected, and a `CornerBatch` count (also untrusted input on the
+//! client side) above [`MAX_CORNER_BATCH`] is rejected before any
+//! allocation. The container format inside each event frame is exactly
+//! the on-disk codec, so a recording can be relayed without re-encoding.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
+use crate::coordinator::sink::{Corner, CornerSink, LiveStats, NullSink};
 use crate::coordinator::RunReport;
 use crate::events::codec::write_binary;
 use crate::events::source::{EventSource, MAX_FRAME_BYTES};
-use crate::events::{Event, Resolution};
+use crate::events::{Event, Polarity, Resolution};
 
 /// Handshake magic (client -> server).
 pub const HELLO_MAGIC: &[u8; 8] = b"NMCTOSRV";
 /// Summary magic (server -> client).
 pub const SUMMARY_MAGIC: &[u8; 8] = b"NMCTOSRP";
-/// Protocol version negotiated by the handshake.
-pub const WIRE_VERSION: u8 = 1;
+/// Protocol v1: event frames in, one summary back at end of stream.
+pub const WIRE_V1: u8 = 1;
+/// Protocol v2: v1 plus server→client `CornerBatch`/`Stats` messages
+/// interleaved while the stream runs.
+pub const WIRE_V2: u8 = 2;
+/// Newest protocol version this build speaks (what negotiation caps at).
+pub const WIRE_VERSION: u8 = WIRE_V2;
 
 /// Ack status: session accepted.
 pub const ACK_OK: u8 = 0;
 /// Ack status: handshake rejected (bad resolution / unsupported config).
 pub const ACK_REJECTED: u8 = 1;
 
+/// v2 server→client message kind: a batch of corner decisions.
+pub const MSG_CORNERS: u8 = b'C';
+/// v2 server→client message kind: a live per-session stats snapshot.
+pub const MSG_STATS: u8 = b'S';
+/// v2 server→client message kind: the end-of-session summary.
+pub const MSG_SUMMARY: u8 = b'R';
+
+/// Most corners one `CornerBatch` message may carry. The server flushes
+/// before exceeding it; the client rejects counts above it (the count is
+/// untrusted input and must never size an allocation).
+pub const MAX_CORNER_BATCH: usize = 1 << 16;
+
+/// Bytes of one wire corner record (`seq | x | y | t | p | score bits`).
+const CORNER_RECORD_BYTES: usize = 8 + 2 + 2 + 8 + 1 + 8;
+
+/// Default socket read/write timeout [`feed`] installs when the caller
+/// has not set one: generous enough for a server chewing through a long
+/// v1 stream before its summary, finite so a hung server is a clean
+/// error instead of a forever-blocked client.
+pub const FEED_IO_TIMEOUT: Duration = Duration::from_secs(300);
+
 /// The client's session declaration: a caller-chosen stream id (echoed in
-/// the summary and used to label server-side reports) and the sensor
-/// geometry of the events that will follow.
+/// the summary and used to label server-side reports), the sensor
+/// geometry of the events that will follow, and the protocol version the
+/// client wants to speak.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Hello {
     /// Caller-chosen stream label (not required to be unique).
     pub stream_id: u32,
     /// Sensor geometry of the stream's events.
     pub res: Resolution,
+    /// Requested protocol version ([`WIRE_V1`] or [`WIRE_V2`]); the
+    /// server may negotiate down, never up.
+    pub version: u8,
+}
+
+impl Hello {
+    /// A summary-only v1 session.
+    pub fn v1(stream_id: u32, res: Resolution) -> Self {
+        Self { stream_id, res, version: WIRE_V1 }
+    }
+
+    /// A v2 session with streamed corners and stats.
+    pub fn v2(stream_id: u32, res: Resolution) -> Self {
+        Self { stream_id, res, version: WIRE_V2 }
+    }
 }
 
 /// Write the handshake.
 pub fn write_hello<W: Write>(w: &mut W, hello: &Hello) -> Result<()> {
+    ensure!(
+        hello.version >= WIRE_V1 && hello.version <= WIRE_VERSION,
+        "unsupported wire version {}",
+        hello.version
+    );
     w.write_all(HELLO_MAGIC)?;
-    w.write_all(&[WIRE_VERSION])?;
+    w.write_all(&[hello.version])?;
     w.write_all(&hello.stream_id.to_le_bytes())?;
     w.write_all(&hello.res.width.to_le_bytes())?;
     w.write_all(&hello.res.height.to_le_bytes())?;
     Ok(())
 }
 
-/// Read and validate the handshake.
+/// Read and validate the handshake (server side). Accepts any version
+/// this build speaks (v1 and v2).
 pub fn read_hello<R: Read>(r: &mut R) -> Result<Hello> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic).context("truncated handshake")?;
@@ -76,7 +155,7 @@ pub fn read_hello<R: Read>(r: &mut R) -> Result<Hello> {
     }
     let mut ver = [0u8; 1];
     r.read_exact(&mut ver).context("truncated handshake")?;
-    if ver[0] != WIRE_VERSION {
+    if ver[0] < WIRE_V1 || ver[0] > WIRE_VERSION {
         bail!("unsupported wire version {}", ver[0]);
     }
     let mut id = [0u8; 4];
@@ -87,21 +166,64 @@ pub fn read_hello<R: Read>(r: &mut R) -> Result<Hello> {
     r.read_exact(&mut dim).context("truncated handshake")?;
     let height = u16::from_le_bytes(dim);
     ensure!(width > 0 && height > 0, "degenerate resolution {width}x{height}");
-    Ok(Hello { stream_id: u32::from_le_bytes(id), res: Resolution::new(width, height) })
+    Ok(Hello {
+        stream_id: u32::from_le_bytes(id),
+        res: Resolution::new(width, height),
+        version: ver[0],
+    })
 }
 
-/// Write the handshake ack (`ACK_OK` / `ACK_REJECTED`).
+/// Write a bare v1 handshake ack (`ACK_OK` / `ACK_REJECTED`).
 pub fn write_ack<W: Write>(w: &mut W, status: u8) -> Result<()> {
     w.write_all(&[status])?;
     Ok(())
 }
 
-/// Read the handshake ack; a non-OK status is an error.
-pub fn read_ack<R: Read>(r: &mut R) -> Result<()> {
-    let mut status = [0u8; 1];
-    r.read_exact(&mut status).context("connection closed before ack")?;
-    ensure!(status[0] == ACK_OK, "server rejected the stream (status {})", status[0]);
+/// Write the ack matching a client's `Hello`: the status byte, and — only
+/// when the client asked for v2 *and* was accepted — the negotiated
+/// version byte. A v1 client therefore sees exactly the v1 ack, and a
+/// rejected client of either version sees just the status.
+pub fn write_ack_for<W: Write>(w: &mut W, status: u8, hello_version: u8) -> Result<()> {
+    w.write_all(&[status])?;
+    if status == ACK_OK && hello_version >= WIRE_V2 {
+        w.write_all(&[hello_version.min(WIRE_VERSION)])?;
+    }
     Ok(())
+}
+
+/// Read a v1 handshake ack; a non-OK status is an error.
+pub fn read_ack<R: Read>(r: &mut R) -> Result<()> {
+    read_ack_negotiated(r, WIRE_V1).map(|_| ())
+}
+
+/// Read the ack for a `Hello` that requested `sent_version` and return
+/// the version the server will speak. Rejection is an error (including
+/// the rejection an old v1-only server gives a v2 hello — retry with
+/// [`Hello::v1`] to talk to such servers).
+pub fn read_ack_negotiated<R: Read>(r: &mut R, sent_version: u8) -> Result<u8> {
+    let mut status = [0u8; 1];
+    read_exact_or_closed(r, &mut status, "waiting for the handshake ack")?;
+    ensure!(
+        status[0] == ACK_OK,
+        "server rejected the stream (status {}){}",
+        status[0],
+        if sent_version >= WIRE_V2 {
+            " — a v1-only server rejects v2 hellos; retry with wire version 1"
+        } else {
+            ""
+        }
+    );
+    if sent_version < WIRE_V2 {
+        return Ok(WIRE_V1);
+    }
+    let mut ver = [0u8; 1];
+    read_exact_or_closed(r, &mut ver, "waiting for the negotiated version")?;
+    ensure!(
+        ver[0] >= WIRE_V1 && ver[0] <= sent_version.min(WIRE_VERSION),
+        "server negotiated impossible wire version {}",
+        ver[0]
+    );
+    Ok(ver[0])
 }
 
 /// Write one event frame: length prefix + binary container. `scratch` is
@@ -159,7 +281,8 @@ impl Summary {
     }
 }
 
-/// Write the end-of-session summary.
+/// Write the end-of-session summary (v1 encoding; v2 prefixes it with
+/// [`MSG_SUMMARY`] — see [`WireSink::finish`]).
 pub fn write_summary<W: Write>(w: &mut W, s: &Summary) -> Result<()> {
     w.write_all(SUMMARY_MAGIC)?;
     w.write_all(&s.stream_id.to_le_bytes())?;
@@ -179,15 +302,15 @@ pub fn write_summary<W: Write>(w: &mut W, s: &Summary) -> Result<()> {
 /// Read the end-of-session summary.
 pub fn read_summary<R: Read>(r: &mut R) -> Result<Summary> {
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic).context("connection closed before summary")?;
+    read_exact_or_closed(r, &mut magic, "waiting for the end-of-stream summary")?;
     if &magic != SUMMARY_MAGIC {
         bail!("bad summary magic: {magic:?}");
     }
     let mut id = [0u8; 4];
-    r.read_exact(&mut id).context("truncated summary")?;
+    read_exact_or_closed(r, &mut id, "reading the summary")?;
     let mut field = || -> Result<u64> {
         let mut b = [0u8; 8];
-        r.read_exact(&mut b).context("truncated summary")?;
+        read_exact_or_closed(r, &mut b, "reading the summary")?;
         Ok(u64::from_le_bytes(b))
     };
     Ok(Summary {
@@ -201,22 +324,202 @@ pub fn read_summary<R: Read>(r: &mut R) -> Result<Summary> {
     })
 }
 
-/// Client side of a served session: handshake, stream every chunk of
-/// `source` as one frame, and return the server's summary. This is what
-/// `nmc-tos feed` runs; tests drive it against a loopback
-/// [`StreamServer`](super::StreamServer).
-pub fn feed<S: EventSource + ?Sized>(
-    stream: TcpStream,
-    hello: Hello,
-    source: &mut S,
-) -> Result<Summary> {
-    stream.set_nodelay(true).ok();
-    let mut w = BufWriter::new(stream.try_clone().context("cloning connection")?);
-    let mut r = BufReader::new(stream);
-    write_hello(&mut w, &hello)?;
-    w.flush()?;
-    read_ack(&mut r)?;
+/// Write one v2 `CornerBatch` message (at most [`MAX_CORNER_BATCH`]
+/// corners — the server-side [`WireSink`] flushes before exceeding it).
+pub fn write_corner_batch<W: Write>(w: &mut W, corners: &[Corner]) -> Result<()> {
+    ensure!(
+        corners.len() <= MAX_CORNER_BATCH,
+        "corner batch of {} exceeds the {MAX_CORNER_BATCH} cap",
+        corners.len()
+    );
+    w.write_all(&[MSG_CORNERS])?;
+    w.write_all(&(corners.len() as u32).to_le_bytes())?;
+    for c in corners {
+        w.write_all(&c.seq.to_le_bytes())?;
+        w.write_all(&c.ev.x.to_le_bytes())?;
+        w.write_all(&c.ev.y.to_le_bytes())?;
+        w.write_all(&c.ev.t.to_le_bytes())?;
+        w.write_all(&[c.ev.p.bit()])?;
+        // raw bits: the client reassembles the exact f64 the detector
+        // produced (the bit-equivalence contract of the v2 protocol)
+        w.write_all(&c.score.to_bits().to_le_bytes())?;
+    }
+    Ok(())
+}
 
+/// Write one v2 `Stats` message.
+pub fn write_stats_msg<W: Write>(w: &mut W, s: &LiveStats) -> Result<()> {
+    w.write_all(&[MSG_STATS])?;
+    for v in [s.events_in, s.events_signal, s.corners_total, s.dvfs_switches, s.lut_refreshes] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// One tagged server→client message of a v2 session.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServerMsg {
+    /// A batch of corner decisions, in stream order.
+    Corners(Vec<Corner>),
+    /// A live per-session stats snapshot.
+    Stats(LiveStats),
+    /// The end-of-session summary; no further messages follow.
+    Summary(Summary),
+}
+
+/// Read the next tagged server→client message of a v2 session.
+pub fn read_server_msg<R: Read>(r: &mut R) -> Result<ServerMsg> {
+    let mut kind = [0u8; 1];
+    read_exact_or_closed(r, &mut kind, "waiting for the next server message")?;
+    match kind[0] {
+        MSG_CORNERS => {
+            let mut len = [0u8; 4];
+            read_exact_or_closed(r, &mut len, "reading a corner batch")?;
+            let count = u32::from_le_bytes(len) as usize;
+            // untrusted count: validate before it sizes anything
+            ensure!(
+                count <= MAX_CORNER_BATCH,
+                "corner batch of {count} exceeds the {MAX_CORNER_BATCH} cap"
+            );
+            let mut corners = Vec::with_capacity(count);
+            let mut rec = [0u8; CORNER_RECORD_BYTES];
+            for _ in 0..count {
+                read_exact_or_closed(r, &mut rec, "reading a corner batch")?;
+                corners.push(Corner {
+                    seq: u64::from_le_bytes(rec[0..8].try_into().unwrap()),
+                    ev: Event {
+                        x: u16::from_le_bytes(rec[8..10].try_into().unwrap()),
+                        y: u16::from_le_bytes(rec[10..12].try_into().unwrap()),
+                        t: u64::from_le_bytes(rec[12..20].try_into().unwrap()),
+                        p: Polarity::from_bit(rec[20]),
+                    },
+                    score: f64::from_bits(u64::from_le_bytes(rec[21..29].try_into().unwrap())),
+                });
+            }
+            Ok(ServerMsg::Corners(corners))
+        }
+        MSG_STATS => {
+            let mut field = || -> Result<u64> {
+                let mut b = [0u8; 8];
+                read_exact_or_closed(r, &mut b, "reading a stats message")?;
+                Ok(u64::from_le_bytes(b))
+            };
+            Ok(ServerMsg::Stats(LiveStats {
+                events_in: field()?,
+                events_signal: field()?,
+                corners_total: field()?,
+                dvfs_switches: field()?,
+                lut_refreshes: field()?,
+            }))
+        }
+        MSG_SUMMARY => Ok(ServerMsg::Summary(read_summary(r)?)),
+        other => bail!("unknown server message kind {other:#04x}"),
+    }
+}
+
+/// `read_exact` with client-grade error reporting: a connection the peer
+/// closed mid-protocol is reported as exactly that (the most common
+/// failure — the server failed the session and dropped the socket), and
+/// a socket-timeout expiry is distinguished from other I/O errors.
+fn read_exact_or_closed<R: Read>(r: &mut R, buf: &mut [u8], what: &str) -> Result<()> {
+    r.read_exact(buf).map_err(|e| match e.kind() {
+        std::io::ErrorKind::UnexpectedEof => anyhow!(
+            "server closed the connection while {what} — the session likely failed \
+             server-side (rejected events, I/O timeout, or server shutdown); check the \
+             server log"
+        ),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            anyhow!("timed out while {what} — no data from the server within the read timeout")
+        }
+        _ => anyhow::Error::new(e).context(format!("while {what}")),
+    })
+}
+
+/// The server side of v2 result streaming: a [`CornerSink`] that encodes
+/// corners and stats onto the session's connection as the pipeline runs.
+///
+/// Corners are buffered and flushed as one `CornerBatch` per pipeline
+/// chunk (`on_chunk_end`) and whenever [`MAX_CORNER_BATCH`] is reached;
+/// stats messages flush immediately (they exist to be timely). The
+/// writer is typically a `BufWriter<TcpStream>` with a write timeout:
+/// a client that stops draining results eventually stalls the socket,
+/// the write errors, and the session fails — the fallible-backpressure
+/// contract protecting the server's workers.
+#[derive(Debug)]
+pub struct WireSink<W: Write> {
+    w: W,
+    batch: Vec<Corner>,
+    corners_sent: u64,
+    stats_sent: u64,
+}
+
+impl<W: Write> WireSink<W> {
+    /// A sink encoding onto `w` (wrap sockets in a `BufWriter`).
+    pub fn new(w: W) -> Self {
+        Self { w, batch: Vec::new(), corners_sent: 0, stats_sent: 0 }
+    }
+
+    /// Corners encoded so far (including the buffered, unflushed tail).
+    pub fn corners_sent(&self) -> u64 {
+        self.corners_sent + self.batch.len() as u64
+    }
+
+    /// Stats messages sent so far.
+    pub fn stats_sent(&self) -> u64 {
+        self.stats_sent
+    }
+
+    fn flush_batch(&mut self) -> Result<()> {
+        if !self.batch.is_empty() {
+            write_corner_batch(&mut self.w, &self.batch)?;
+            self.corners_sent += self.batch.len() as u64;
+            self.batch.clear();
+        }
+        Ok(())
+    }
+
+    /// Flush everything, send the tagged end-of-session summary, and
+    /// return `(corners_sent, stats_sent)`.
+    pub fn finish(mut self, summary: &Summary) -> Result<(u64, u64)> {
+        self.flush_batch()?;
+        self.w.write_all(&[MSG_SUMMARY])?;
+        write_summary(&mut self.w, summary)?;
+        self.w.flush()?;
+        Ok((self.corners_sent, self.stats_sent))
+    }
+}
+
+impl<W: Write> CornerSink for WireSink<W> {
+    fn on_corner(&mut self, corner: &Corner) -> Result<()> {
+        self.batch.push(*corner);
+        if self.batch.len() >= MAX_CORNER_BATCH {
+            self.flush_batch()?;
+        }
+        Ok(())
+    }
+
+    fn on_stats(&mut self, stats: &LiveStats) -> Result<()> {
+        // corners first, so a stats snapshot never counts corners the
+        // client has not yet been sent
+        self.flush_batch()?;
+        write_stats_msg(&mut self.w, stats)?;
+        self.w.flush()?;
+        self.stats_sent += 1;
+        Ok(())
+    }
+
+    fn on_chunk_end(&mut self, _stats: &LiveStats) -> Result<()> {
+        // the chunk boundary bounds corner latency: nothing sits in the
+        // batch buffer longer than one pipeline chunk
+        self.flush_batch()?;
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Stream every chunk of `source` as one frame, then the end-of-stream
+/// marker.
+fn send_all_frames<W: Write, S: EventSource + ?Sized>(w: &mut W, source: &mut S) -> Result<()> {
     let mut chunk: Vec<Event> = Vec::new();
     let mut scratch: Vec<u8> = Vec::new();
     loop {
@@ -224,11 +527,107 @@ pub fn feed<S: EventSource + ?Sized>(
         if source.next_chunk(&mut chunk)? == 0 {
             break;
         }
-        write_frame(&mut w, &mut scratch, &chunk)?;
+        write_frame(w, &mut scratch, &chunk)?;
     }
-    write_eos(&mut w)?;
+    write_eos(w)?;
     w.flush()?;
-    read_summary(&mut r)
+    Ok(())
+}
+
+/// Client side of a served session: handshake at `hello.version`, stream
+/// every chunk of `source` as one frame, and return the server's
+/// summary. Results streamed back by a v2 session are discarded — use
+/// [`feed_with_sink`] to observe them. This is what `nmc-tos feed` runs;
+/// tests drive it against a loopback
+/// [`StreamServer`](super::StreamServer).
+pub fn feed<S: EventSource + ?Sized>(
+    stream: TcpStream,
+    hello: Hello,
+    source: &mut S,
+) -> Result<Summary> {
+    feed_with_sink(stream, hello, source, &mut NullSink)
+}
+
+/// [`feed`] with a [`CornerSink`] observing the session's streamed
+/// results: every v2 `CornerBatch` corner arrives through
+/// `sink.on_corner` (in stream order) and every `Stats` message through
+/// `sink.on_stats`, while the events are still being sent (`on_score` /
+/// `on_chunk_end` never fire client-side — the wire only carries
+/// corners). For v1 sessions — requested or negotiated down — the sink
+/// sees nothing and only the summary returns.
+///
+/// Reading and writing run concurrently (a reader thread drains the
+/// server while the stream is sent), so a corner-dense session cannot
+/// deadlock on two full socket buffers. If the caller has not set socket
+/// timeouts, [`FEED_IO_TIMEOUT`] is installed so a hung server is a
+/// clean error; a server that closes the connection mid-stream (its
+/// session failed) is likewise reported as that, not as a bare EOF.
+pub fn feed_with_sink<S, K>(
+    stream: TcpStream,
+    hello: Hello,
+    source: &mut S,
+    sink: &mut K,
+) -> Result<Summary>
+where
+    S: EventSource + ?Sized,
+    K: CornerSink + Send + ?Sized,
+{
+    stream.set_nodelay(true).ok();
+    if stream.read_timeout().unwrap_or(None).is_none() {
+        stream.set_read_timeout(Some(FEED_IO_TIMEOUT)).ok();
+    }
+    if stream.write_timeout().unwrap_or(None).is_none() {
+        stream.set_write_timeout(Some(FEED_IO_TIMEOUT)).ok();
+    }
+    let mut w = BufWriter::new(stream.try_clone().context("cloning connection")?);
+    let mut r = BufReader::new(stream);
+    write_hello(&mut w, &hello)?;
+    w.flush()?;
+    let negotiated = read_ack_negotiated(&mut r, hello.version)?;
+
+    if negotiated < WIRE_V2 {
+        // summary-only session: write everything, then one read
+        send_all_frames(&mut w, source)?;
+        return read_summary(&mut r);
+    }
+
+    // v2: drain server messages concurrently with sending, so corner
+    // traffic cannot fill both socket buffers and deadlock the session
+    std::thread::scope(|scope| {
+        let recv = scope.spawn(move || -> Result<Summary> {
+            let result: Result<Summary> = (|| loop {
+                match read_server_msg(&mut r)? {
+                    ServerMsg::Corners(batch) => {
+                        for c in &batch {
+                            sink.on_corner(c)?;
+                        }
+                    }
+                    ServerMsg::Stats(stats) => sink.on_stats(&stats)?,
+                    ServerMsg::Summary(summary) => return Ok(summary),
+                }
+            })();
+            if result.is_err() {
+                // unblock the sending side right away: without this the
+                // writer would keep streaming into an undrained socket
+                // until the server's own I/O timeout killed the session
+                let _ = r.get_ref().shutdown(std::net::Shutdown::Both);
+            }
+            result
+        });
+        let sent = send_all_frames(&mut w, source);
+        let received = recv.join().map_err(|_| anyhow!("feed reader thread panicked"))?;
+        match (sent, received) {
+            // the summary arrived: the server saw the whole stream
+            (_, Ok(summary)) => Ok(summary),
+            (Ok(()), Err(e)) => Err(e),
+            // sending failed too (the usual cause: the server failed the
+            // session and closed); the read-side error is the informative
+            // one, keep the send error as context
+            (Err(send_err), Err(recv_err)) => {
+                Err(recv_err.context(format!("while also failing to send events: {send_err:#}")))
+            }
+        }
+    })
 }
 
 #[cfg(test)]
@@ -236,35 +635,66 @@ mod tests {
     use super::*;
 
     #[test]
-    fn hello_roundtrip() {
-        let hello = Hello { stream_id: 42, res: Resolution::DAVIS240 };
-        let mut buf = Vec::new();
-        write_hello(&mut buf, &hello).unwrap();
-        assert_eq!(read_hello(&mut &buf[..]).unwrap(), hello);
+    fn hello_roundtrip_both_versions() {
+        for hello in [Hello::v1(42, Resolution::DAVIS240), Hello::v2(43, Resolution::TEST64)] {
+            let mut buf = Vec::new();
+            write_hello(&mut buf, &hello).unwrap();
+            assert_eq!(read_hello(&mut &buf[..]).unwrap(), hello);
+        }
     }
 
     #[test]
     fn hello_rejects_garbage() {
         assert!(read_hello(&mut &b"XXXXXXXX\x01\0\0\0\0\xf0\0\xb4\0"[..]).is_err());
-        // right magic, wrong version
+        // right magic, wrong version — on the wire and at write time
         let mut buf = Vec::new();
-        write_hello(&mut buf, &Hello { stream_id: 0, res: Resolution::TEST64 }).unwrap();
+        write_hello(&mut buf, &Hello::v1(0, Resolution::TEST64)).unwrap();
         buf[8] = 9;
         assert!(read_hello(&mut &buf[..]).is_err());
+        let bad = Hello { stream_id: 0, res: Resolution::TEST64, version: 3 };
+        assert!(write_hello(&mut Vec::new(), &bad).is_err());
         // degenerate resolution
         let mut buf = Vec::new();
-        write_hello(&mut buf, &Hello { stream_id: 0, res: Resolution::new(0, 64) }).unwrap();
+        write_hello(&mut buf, &Hello::v1(0, Resolution::new(0, 64))).unwrap();
         assert!(read_hello(&mut &buf[..]).is_err());
     }
 
     #[test]
-    fn ack_roundtrip() {
+    fn ack_roundtrip_v1() {
         let mut buf = Vec::new();
         write_ack(&mut buf, ACK_OK).unwrap();
         assert!(read_ack(&mut &buf[..]).is_ok());
         let mut buf = Vec::new();
         write_ack(&mut buf, ACK_REJECTED).unwrap();
         assert!(read_ack(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn ack_negotiation_v1_and_v2() {
+        // v1 hello -> v1 single-byte ack, negotiated version 1
+        let mut buf = Vec::new();
+        write_ack_for(&mut buf, ACK_OK, WIRE_V1).unwrap();
+        assert_eq!(buf.len(), 1, "v1 ack must stay one byte");
+        assert_eq!(read_ack_negotiated(&mut &buf[..], WIRE_V1).unwrap(), WIRE_V1);
+
+        // v2 hello -> status + negotiated version byte
+        let mut buf = Vec::new();
+        write_ack_for(&mut buf, ACK_OK, WIRE_V2).unwrap();
+        assert_eq!(buf.len(), 2);
+        assert_eq!(read_ack_negotiated(&mut &buf[..], WIRE_V2).unwrap(), WIRE_V2);
+
+        // rejection carries no version byte for either hello version
+        for hv in [WIRE_V1, WIRE_V2] {
+            let mut buf = Vec::new();
+            write_ack_for(&mut buf, ACK_REJECTED, hv).unwrap();
+            assert_eq!(buf.len(), 1);
+            assert!(read_ack_negotiated(&mut &buf[..], hv).is_err());
+        }
+
+        // a server that claims a version above what the client asked for
+        // is a protocol violation
+        let buf = [ACK_OK, 3u8];
+        assert!(read_ack_negotiated(&mut &buf[..], WIRE_V2).is_err());
     }
 
     #[test]
@@ -283,6 +713,101 @@ mod tests {
         assert_eq!(read_summary(&mut &buf[..]).unwrap(), s);
         buf.truncate(buf.len() - 1);
         assert!(read_summary(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn truncated_summary_reports_server_close() {
+        // the satellite fix: a dropped connection is a clean "server
+        // closed" error, not a bare failed-to-fill-buffer EOF
+        let err = read_summary(&mut &b"NMCTOSR"[..]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("server closed the connection"), "{msg}");
+    }
+
+    #[test]
+    fn corner_batch_roundtrip_is_bit_exact() {
+        let corners = vec![
+            Corner { seq: 0, ev: Event::on(0, 0, 0), score: 0.0 },
+            Corner { seq: 7, ev: Event::off(239, 179, u64::MAX / 3), score: -1.25e-300 },
+            Corner { seq: u64::MAX, ev: Event::on(1, 2, 3), score: f64::MIN_POSITIVE },
+            Corner { seq: 9, ev: Event::on(63, 63, 1_000_000), score: 0.1 + 0.2 },
+        ];
+        let mut buf = Vec::new();
+        write_corner_batch(&mut buf, &corners).unwrap();
+        match read_server_msg(&mut &buf[..]).unwrap() {
+            ServerMsg::Corners(got) => {
+                assert_eq!(got.len(), corners.len());
+                for (g, w) in got.iter().zip(&corners) {
+                    assert_eq!(g.seq, w.seq);
+                    assert_eq!(g.ev, w.ev);
+                    assert_eq!(g.score.to_bits(), w.score.to_bits(), "score bits");
+                }
+            }
+            other => panic!("expected corners, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_msg_roundtrip() {
+        let s = LiveStats {
+            events_in: 10,
+            events_signal: 8,
+            corners_total: 3,
+            dvfs_switches: 1,
+            lut_refreshes: 2,
+        };
+        let mut buf = Vec::new();
+        write_stats_msg(&mut buf, &s).unwrap();
+        assert_eq!(read_server_msg(&mut &buf[..]).unwrap(), ServerMsg::Stats(s));
+    }
+
+    #[test]
+    fn server_msg_rejects_garbage() {
+        // unknown kind byte
+        assert!(read_server_msg(&mut &[0xFFu8, 0, 0][..]).is_err());
+        // corner batch with a count beyond the cap must error before
+        // allocating
+        let mut buf = vec![MSG_CORNERS];
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_server_msg(&mut &buf[..]).is_err());
+        // oversized batch refused at write time too
+        let big = vec![Corner { seq: 0, ev: Event::on(0, 0, 0), score: 0.0 }; MAX_CORNER_BATCH + 1];
+        assert!(write_corner_batch(&mut Vec::new(), &big).is_err());
+    }
+
+    #[test]
+    fn wire_sink_batches_per_chunk_and_orders_stats_after_corners() {
+        let mut buf = Vec::new();
+        {
+            let mut sink = WireSink::new(&mut buf);
+            let c = |seq| Corner { seq, ev: Event::on(1, 1, seq), score: 1.0 };
+            sink.on_corner(&c(0)).unwrap();
+            sink.on_corner(&c(1)).unwrap();
+            assert_eq!(sink.corners_sent(), 2, "buffered corners count");
+            sink.on_chunk_end(&LiveStats::default()).unwrap(); // flush: batch of 2
+            sink.on_corner(&c(2)).unwrap();
+            let stats = LiveStats { corners_total: 3, ..LiveStats::default() };
+            sink.on_stats(&stats).unwrap(); // flush: batch of 1, then stats
+            let (corners, stats_n) = sink
+                .finish(&Summary { stream_id: 5, ..Summary::default() })
+                .unwrap();
+            assert_eq!((corners, stats_n), (3, 1));
+        }
+        let mut r = &buf[..];
+        match read_server_msg(&mut r).unwrap() {
+            ServerMsg::Corners(b) => assert_eq!(b.len(), 2),
+            other => panic!("expected first batch, got {other:?}"),
+        }
+        match read_server_msg(&mut r).unwrap() {
+            ServerMsg::Corners(b) => assert_eq!(b.len(), 1),
+            other => panic!("expected second batch, got {other:?}"),
+        }
+        assert!(matches!(read_server_msg(&mut r).unwrap(), ServerMsg::Stats(_)));
+        match read_server_msg(&mut r).unwrap() {
+            ServerMsg::Summary(s) => assert_eq!(s.stream_id, 5),
+            other => panic!("expected summary, got {other:?}"),
+        }
+        assert!(r.is_empty(), "no trailing bytes");
     }
 
     #[test]

@@ -2,16 +2,21 @@
 //! streams served over loopback TCP produce `RunReport`s bit-identical
 //! (surface, scores, corner indices, telemetry counters) to the same
 //! inputs run sequentially through `run_stream` — for the golden and
-//! sharded backends. Engine-less (eFAST detector), so these run without
-//! `make artifacts`.
+//! sharded backends, and for both protocol versions: v1 clients get the
+//! summary-only session unchanged, v2 clients additionally receive
+//! corner batches bit-identical to what a sequential `run_stream` with a
+//! `RecordingSink` records, plus live stats at the configured interval.
+//! Engine-less (eFAST detector), so these run without `make artifacts`.
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Barrier};
 use std::thread;
 
+use nmc_tos::coordinator::sink::{Corner, CornerSink, LiveStats, RecordingSink};
 use nmc_tos::coordinator::{BackendKind, DetectorKind, Pipeline, PipelineConfig, RunReport};
 use nmc_tos::datasets::synthetic::SceneConfig;
+use nmc_tos::events::source::SliceSource;
 use nmc_tos::events::{Event, Resolution};
 use nmc_tos::serve::wire::{self, Hello};
 use nmc_tos::serve::{ServeConfig, StreamServer};
@@ -40,7 +45,8 @@ fn client(
     let conn = TcpStream::connect(addr).unwrap();
     let mut w = BufWriter::new(conn.try_clone().unwrap());
     let mut r = BufReader::new(conn);
-    wire::write_hello(&mut w, &Hello { stream_id, res: Resolution::TEST64 }).unwrap();
+    // hand-rolled v1 client: the pre-v2 byte stream must keep working
+    wire::write_hello(&mut w, &Hello::v1(stream_id, Resolution::TEST64)).unwrap();
     w.flush().unwrap();
     wire::read_ack(&mut r).unwrap(); // a worker owns this session now
 
@@ -165,7 +171,7 @@ fn dropped_connection_mid_stream_is_counted() {
         let conn = TcpStream::connect(addr).unwrap();
         let mut w = BufWriter::new(conn.try_clone().unwrap());
         let mut r = BufReader::new(conn);
-        wire::write_hello(&mut w, &Hello { stream_id: 9, res: Resolution::TEST64 }).unwrap();
+        wire::write_hello(&mut w, &Hello::v1(9, Resolution::TEST64)).unwrap();
         w.flush().unwrap();
         wire::read_ack(&mut r).unwrap();
         let events = SceneConfig::test64().build(1).generate(500);
@@ -194,7 +200,7 @@ fn out_of_bounds_events_fail_the_session_cleanly() {
         let conn = TcpStream::connect(addr).unwrap();
         let mut w = BufWriter::new(conn.try_clone().unwrap());
         let mut r = BufReader::new(conn);
-        wire::write_hello(&mut w, &Hello { stream_id: 3, res: Resolution::TEST64 }).unwrap();
+        wire::write_hello(&mut w, &Hello::v1(3, Resolution::TEST64)).unwrap();
         w.flush().unwrap();
         wire::read_ack(&mut r).unwrap();
         // x=100 is outside the declared 64-wide sensor
@@ -212,6 +218,159 @@ fn out_of_bounds_events_fail_the_session_cleanly() {
     let stats = server.shutdown();
     assert_eq!(stats.sessions_failed, 1);
     assert_eq!(stats.sessions_completed, 0);
+}
+
+/// Client-side collector for v2 streamed results.
+#[derive(Default)]
+struct Collect {
+    corners: Vec<Corner>,
+    stats: Vec<LiveStats>,
+}
+
+impl CornerSink for Collect {
+    fn on_corner(&mut self, c: &Corner) -> anyhow::Result<()> {
+        self.corners.push(*c);
+        Ok(())
+    }
+    fn on_stats(&mut self, s: &LiveStats) -> anyhow::Result<()> {
+        self.stats.push(*s);
+        Ok(())
+    }
+}
+
+#[test]
+fn v2_client_receives_bit_identical_corner_batches() {
+    // threshold 0 makes every signal event a corner: the corner stream
+    // is dense, so batch building/flushing is exercised for real, and
+    // the bit-identity assertion covers thousands of corners
+    let mut cfg = base_cfg(BackendKind::Golden);
+    cfg.corner_threshold = 0.0;
+    let events = SceneConfig::test64().build(900).generate(EVENTS_PER_STREAM);
+
+    // sequential ground truth through an external RecordingSink — the
+    // acceptance contract: what the wire delivers must equal what a
+    // sequential run records
+    let mut pipe = Pipeline::from_config_without_engine(cfg.clone()).unwrap();
+    let mut want = RecordingSink::default();
+    let want_report = pipe.run_with(&events, &mut want).unwrap();
+    assert!(!want.corners.is_empty(), "test needs a non-empty corner stream");
+
+    let server = StreamServer::new(ServeConfig::new(cfg)).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let evs = events.clone();
+    let v2 = thread::spawn(move || {
+        let conn = TcpStream::connect(addr).unwrap();
+        // chunk size that divides nothing: frame boundaries must not
+        // show in the reassembled corner stream
+        let mut src = SliceSource::new(&evs, 401);
+        let mut sink = Collect::default();
+        let summary =
+            wire::feed_with_sink(conn, Hello::v2(7, Resolution::TEST64), &mut src, &mut sink)
+                .unwrap();
+        (summary, sink)
+    });
+    server.serve(&listener, Some(1)).unwrap();
+    let (summary, got) = v2.join().unwrap();
+
+    assert_eq!(summary.corners_total, want_report.corners_total);
+    assert_eq!(got.corners.len(), want.corners.len(), "corner count over the wire");
+    for (c, &idx) in got.corners.iter().zip(&want.corners) {
+        assert_eq!(c.seq as usize, idx, "corner seq");
+        assert_eq!(c.ev, want.signal_events[idx], "corner event");
+        assert_eq!(c.score.to_bits(), want.scores[idx].to_bits(), "corner score bits");
+    }
+
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_completed, 1);
+    assert_eq!(stats.sessions_v2, 1);
+    assert_eq!(stats.corners_streamed, want.corners.len() as u64);
+}
+
+#[test]
+fn v1_and_v2_clients_get_equal_sessions_from_one_server() {
+    // same events through a v1 and a v2 session of one server: the v1
+    // client sees the unchanged summary-only protocol, the v2 client
+    // sees the same summary plus the streamed corners
+    let events = SceneConfig::test64().build(901).generate(4_000);
+    let mut cfg = base_cfg(BackendKind::Golden);
+    cfg.corner_threshold = 0.0;
+    let server = StreamServer::new(ServeConfig::new(cfg)).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let evs = events.clone();
+    let v1 = thread::spawn(move || {
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut src = SliceSource::new(&evs, 512);
+        wire::feed(conn, Hello::v1(1, Resolution::TEST64), &mut src).unwrap()
+    });
+    server.serve(&listener, Some(1)).unwrap();
+    let s1 = v1.join().unwrap();
+
+    let evs = events.clone();
+    let v2 = thread::spawn(move || {
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut src = SliceSource::new(&evs, 512);
+        let mut sink = Collect::default();
+        let s = wire::feed_with_sink(conn, Hello::v2(2, Resolution::TEST64), &mut src, &mut sink)
+            .unwrap();
+        (s, sink)
+    });
+    server.serve(&listener, Some(1)).unwrap();
+    let (s2, got) = v2.join().unwrap();
+
+    assert_eq!(s1.events_in, s2.events_in);
+    assert_eq!(s1.events_signal, s2.events_signal);
+    assert_eq!(s1.corners_total, s2.corners_total);
+    assert_eq!(got.corners.len() as u64, s2.corners_total);
+    assert!(got.stats.is_empty(), "no stats frames without --stats-interval");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.sessions_completed, 2);
+    assert_eq!(stats.sessions_v2, 1, "only the v2 session streams");
+}
+
+#[test]
+fn v2_sessions_stream_live_stats_at_the_configured_interval() {
+    let mut cfg = base_cfg(BackendKind::Golden);
+    cfg.stats_interval_events = Some(1_000);
+    let server = StreamServer::new(ServeConfig::new(cfg)).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let client = thread::spawn(move || {
+        let events = SceneConfig::test64().build(902).generate(EVENTS_PER_STREAM);
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut src = SliceSource::new(&events, 700);
+        let mut sink = Collect::default();
+        let summary =
+            wire::feed_with_sink(conn, Hello::v2(9, Resolution::TEST64), &mut src, &mut sink)
+                .unwrap();
+        (summary, sink)
+    });
+    server.serve(&listener, Some(1)).unwrap();
+    let (summary, got) = client.join().unwrap();
+
+    // 8000 events at one snapshot per 1000: exactly 8, counters monotone,
+    // and the last snapshot equals the summary's final counters
+    assert_eq!(got.stats.len(), 8);
+    for (i, s) in got.stats.iter().enumerate() {
+        assert_eq!(s.events_in, 1_000 * (i as u64 + 1));
+    }
+    for w in got.stats.windows(2) {
+        assert!(w[1].events_signal >= w[0].events_signal);
+        assert!(w[1].corners_total >= w[0].corners_total);
+    }
+    let last = got.stats.last().unwrap();
+    assert_eq!(last.events_in, summary.events_in);
+    assert_eq!(last.events_signal, summary.events_signal);
+    assert_eq!(last.corners_total, summary.corners_total);
+    assert_eq!(last.dvfs_switches, summary.dvfs_switches);
+    assert_eq!(last.lut_refreshes, summary.lut_refreshes);
+
+    assert_eq!(server.shutdown().stats_frames, 8);
 }
 
 #[test]
@@ -237,12 +396,13 @@ fn mixed_tcp_and_local_sessions() {
         )
         .unwrap();
 
-    // TCP session with the same events via the feed client
+    // TCP session with the same events via the feed client — a v2
+    // session whose streamed results the plain `feed` wrapper discards
     let tcp_events = events.clone();
     let tcp = thread::spawn(move || {
         let conn = TcpStream::connect(addr).unwrap();
         let mut src = nmc_tos::events::source::SliceSource::new(&tcp_events, 512);
-        wire::feed(conn, Hello { stream_id: 2, res: Resolution::TEST64 }, &mut src).unwrap()
+        wire::feed(conn, Hello::v2(2, Resolution::TEST64), &mut src).unwrap()
     });
     server.serve(&listener, Some(1)).unwrap();
 

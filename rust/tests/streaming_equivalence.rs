@@ -5,6 +5,7 @@
 //! indices, telemetry counters) to `run` on the fully materialized
 //! stream. Engine-less, so these run without `make artifacts`.
 
+use nmc_tos::coordinator::sink::RecordingSink;
 use nmc_tos::coordinator::{BackendKind, DetectorKind, Pipeline, PipelineConfig};
 use nmc_tos::datasets::synthetic::SceneConfig;
 use nmc_tos::events::codec::{self, BinaryStreamSource};
@@ -79,6 +80,34 @@ fn text_streamed_run_matches_binary_streamed_run() {
     assert_eq!(from_bin.events_in, 4_000);
     assert_eq!(from_bin.final_tos, from_txt.final_tos);
     assert_eq!(from_bin.scores, from_txt.scores);
+}
+
+#[test]
+fn file_streamed_sink_matches_load_all_report() {
+    // a RecordingSink attached to a file-backed streamed run (recording
+    // off — the sink is the only consumer) reproduces the load-all
+    // report's per-event vectors exactly, at an awkward chunk size
+    let mut scene = SceneConfig::test64().build(222);
+    let events = scene.generate(7_000);
+    let path = scratch("sink_eq.bin");
+    codec::save(&path, &events).unwrap();
+
+    let mut cfg = PipelineConfig::test64();
+    cfg.detector = DetectorKind::Arc;
+    let mut pipe = Pipeline::from_config_without_engine(cfg.clone()).unwrap();
+    let want = pipe.run(&events).unwrap();
+
+    cfg.record_per_event = false;
+    let mut pipe = Pipeline::from_config_without_engine(cfg).unwrap();
+    let mut src = BinaryStreamSource::new(std::fs::File::open(&path).unwrap(), 313).unwrap();
+    let mut sink = RecordingSink::default();
+    let got = pipe.run_stream_with(&mut src, &mut sink).unwrap();
+
+    assert!(got.signal_events.is_empty(), "recording off keeps the report lean");
+    assert_eq!(got.corners_total, want.corners_total);
+    assert_eq!(sink.signal_events, want.signal_events);
+    assert_eq!(sink.scores, want.scores);
+    assert_eq!(sink.corners, want.corners);
 }
 
 #[test]
