@@ -125,6 +125,10 @@ impl Harness {
             ("schema", Json::Str("nmc-tos-bench-v1".into())),
             ("bench", Json::Str(self.bench.into())),
             ("smoke", Json::Bool(self.smoke)),
+            // which decrement/clamp path the dispatcher selected on the
+            // machine that produced these numbers — the regression gate
+            // refuses to compare across different paths
+            ("kernel", Json::Str(nmc_tos::tos::kernel::active_path().as_str().into())),
             ("rows", Json::Arr(rows)),
         ]);
         std::fs::write(&self.out, doc.render())

@@ -1,9 +1,13 @@
 //! Bench: STCF denoising filter throughput on clustered vs scattered
-//! streams (branch behaviour differs: clusters exit the support scan
-//! early).
+//! streams, vectorized masked-lane classifier vs the scalar early-exit
+//! reference (branch behaviour differs: clusters exit the scalar support
+//! scan early, while the vectorized count is branch-free either way).
+//! Emits `BENCH_stcf.json`; the bench-regression gate tracks the
+//! vectorized-vs-scalar ratio per stream shape.
 
 mod common;
 
+use common::Harness;
 use nmc_tos::events::{Event, Resolution};
 use nmc_tos::stcf::{Stcf, StcfConfig};
 use nmc_tos::util::rng::Rng;
@@ -41,25 +45,44 @@ fn clustered(res: Resolution, n: usize) -> Vec<Event> {
 }
 
 fn main() {
-    println!("== bench: STCF filter ==");
+    let mut h = Harness::new("stcf_filter", "BENCH_stcf.json");
+
+    println!("== bench: STCF filter (vectorized vs scalar reference) ==");
     let res = Resolution::DAVIS240;
-    for (label, evs) in
-        [("scattered", scattered(res, 200_000)), ("clustered", clustered(res, 200_000))]
-    {
+    let n = h.events(200_000);
+    for (label, evs) in [("scattered", scattered(res, n)), ("clustered", clustered(res, n))] {
         for radius in [1u16, 2] {
             let cfg = StcfConfig { radius, ..StcfConfig::default() };
             let mut f = Stcf::new(res, cfg);
-            let (med, mean) = common::measure(2, 10, || {
+            h.run(&format!("stcf/{label}/r{radius}/200k_events"), 2, 10, evs.len() as f64, || {
                 for e in &evs {
                     std::hint::black_box(f.check(e));
                 }
             });
-            common::report(
-                &format!("stcf/{label}/r{radius}/200k_events"),
-                med,
-                mean,
-                evs.len() as f64,
-            );
+            let mut s = Stcf::new(res, cfg);
+            h.run(&format!("stcf/{label}/r{radius}/scalar_ref"), 2, 10, evs.len() as f64, || {
+                for e in &evs {
+                    std::hint::black_box(s.check_scalar(e));
+                }
+            });
         }
     }
+
+    // equivalence spot check on the exact bench streams: per-event
+    // verdicts and telemetry must agree (the randomized sweep lives in
+    // rust/tests/properties.rs)
+    for (label, evs) in [("scattered", scattered(res, n)), ("clustered", clustered(res, n))] {
+        for radius in [1u16, 2] {
+            let cfg = StcfConfig { radius, ..StcfConfig::default() };
+            let mut v = Stcf::new(res, cfg);
+            let mut s = Stcf::new(res, cfg);
+            for e in &evs {
+                assert_eq!(v.check(e), s.check_scalar(e), "{label} r{radius} diverged");
+            }
+            assert_eq!(v.stats(), s.stats(), "{label} r{radius} stats diverged");
+        }
+    }
+    println!("\nvectorized == scalar reference on both bench streams: OK");
+
+    h.finish();
 }

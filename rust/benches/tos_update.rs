@@ -1,7 +1,9 @@
 //! Bench: TOS update throughput — the paper's hot path in software.
 //!
-//! Rows cover the SWAR-vectorized golden kernel against the scalar
-//! reference loop (the pre-vectorization baseline, kept in-tree as
+//! Rows cover every kernel dispatch path the host can run (scalar, SWAR,
+//! SSE2/AVX2/NEON — the `kernel_{path}` rows the bench-regression gate
+//! tracks), the dispatched golden kernel against the scalar reference
+//! loop (the pre-vectorization baseline, kept in-tree as
 //! `decrement_clamp_scalar`), every backend at DAVIS240/HD720, and the
 //! sharded parallel model against the single-threaded golden model.
 //! Emits `BENCH_tos.json` at the repo root (see DESIGN.md §Hot paths) so
@@ -15,6 +17,7 @@ use nmc_tos::conventional::ConventionalTos;
 use nmc_tos::events::{Event, Resolution};
 use nmc_tos::nmc::{NmcConfig, NmcMacro};
 use nmc_tos::tos::backend::{clip_patch, decrement_clamp_scalar};
+use nmc_tos::tos::kernel::{active_path, available_paths, decrement_clamp_with};
 use nmc_tos::tos::{ShardedTos, TosBackend, TosConfig, TosSurface};
 use nmc_tos::util::rng::Rng;
 
@@ -34,7 +37,37 @@ fn events(res: Resolution, n: usize, seed: u64) -> Vec<Event> {
 fn main() {
     let mut h = Harness::new("tos_update", "BENCH_tos.json");
 
-    println!("== bench: golden (SWAR) vs scalar-reference TOS update ==");
+    // Every kernel path this host can dispatch, on the same stream: the
+    // bench-regression gate tracks the widest SIMD row against the
+    // swar64 row (ISSUE 6 acceptance: >= 1.5x) and golden against
+    // scalar_ref. Each path is also cross-checked bit-exact right here on
+    // its own bench stream.
+    println!("== bench: decrement/clamp kernel per dispatch path ==");
+    println!("   (startup-selected path: {})", active_path());
+    {
+        let res = Resolution::DAVIS240;
+        let cfg = TosConfig::default();
+        let n = h.events(100_000);
+        let evs = events(res, n, 7);
+        let width = res.width as usize;
+        let mut reference: Option<Vec<u8>> = None;
+        for path in available_paths() {
+            let mut data = vec![0u8; res.pixels()];
+            h.run(&format!("tos_update/davis240/p7/kernel_{path}"), 2, 10, n as f64, || {
+                for ev in &evs {
+                    let rect = clip_patch(res, ev.x, ev.y, cfg.half());
+                    decrement_clamp_with(path, &mut data, width, 0, rect, cfg.threshold);
+                    data[res.index(ev.x, ev.y)] = 255;
+                }
+            });
+            match &reference {
+                None => reference = Some(data),
+                Some(r) => assert_eq!(r, &data, "kernel path {path} diverged on bench stream"),
+            }
+        }
+    }
+
+    println!("\n== bench: golden vs scalar-reference TOS update ==");
     for (label, res) in [("davis240", Resolution::DAVIS240), ("hd720", Resolution::HD720)] {
         for patch in [5u16, 7, 9] {
             let n = h.events(100_000);
@@ -104,9 +137,10 @@ fn main() {
         }
     }
 
-    // bit-exactness spot check on the exact bench stream: SWAR golden,
-    // scalar reference, and the sharded batch path must agree (the full
-    // sweep lives in rust/tests/properties.rs)
+    // bit-exactness spot check on the exact bench stream: dispatched
+    // golden, scalar reference, and the sharded batch path must agree
+    // (the full sweep lives in rust/tests/properties.rs and
+    // rust/tests/kernel_dispatch.rs)
     let cfg = TosConfig::default();
     let n = h.events(200_000);
     let evs = events(Resolution::DAVIS240, n, 3);
@@ -122,8 +156,11 @@ fn main() {
         decrement_clamp_scalar(&mut c, res.width as usize, 0, rect, cfg.threshold);
         c[res.index(ev.x, ev.y)] = 255;
     }
-    assert_eq!(a.data(), &c[..], "SWAR kernel diverged from scalar reference");
-    println!("\ngolden (SWAR) == scalar reference == sharded on the bench stream: OK");
+    assert_eq!(a.data(), &c[..], "dispatched kernel diverged from scalar reference");
+    println!(
+        "\ngolden ({}) == scalar reference == sharded on the bench stream: OK",
+        active_path()
+    );
 
     h.finish();
 }

@@ -102,6 +102,6 @@ pub mod prelude {
     pub use crate::serve::{ServeConfig, ServerStats, SessionHandle, StreamServer};
     pub use crate::stcf::{Stcf, StcfConfig};
     pub use crate::tos::{
-        BackendStats, ShardedTos, TosBackend, TosConfig, TosConfigError, TosSurface,
+        BackendStats, KernelPath, ShardedTos, TosBackend, TosConfig, TosConfigError, TosSurface,
     };
 }

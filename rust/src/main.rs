@@ -515,6 +515,7 @@ fn cmd_run(args: &Args) -> Result<Json> {
     println!("PR-AUC vs ground truth: {auc:.3}");
     println!("simulated busy       : {:.3} ms", report.backend.busy_ns / 1e6);
     println!("simulated energy     : {:.3} µJ", report.backend.energy_pj / 1e6);
+    println!("TOS kernel path      : {}", report.backend.kernel);
     println!("wall time            : {:.2} s ({:.0} keps)",
         report.wall_s, report.events_in as f64 / report.wall_s / 1e3);
     Ok(Json::obj(vec![
@@ -527,6 +528,7 @@ fn cmd_run(args: &Args) -> Result<Json> {
         ("auc", Json::Num(auc)),
         ("busy_ns", Json::Num(report.backend.busy_ns)),
         ("energy_pj", Json::Num(report.backend.energy_pj)),
+        ("kernel", Json::Str(report.backend.kernel.as_str().into())),
         ("wall_s", Json::Num(report.wall_s)),
     ]))
 }
@@ -549,6 +551,7 @@ fn cmd_run_stream(args: &Args, mut cfg: PipelineConfig, input: &str) -> Result<J
     println!("DVFS switches        : {}", report.dvfs_switches);
     println!("simulated busy       : {:.3} ms", report.backend.busy_ns / 1e6);
     println!("simulated energy     : {:.3} µJ", report.backend.energy_pj / 1e6);
+    println!("TOS kernel path      : {}", report.backend.kernel);
     println!(
         "wall time            : {:.2} s ({:.0} keps)",
         report.wall_s,
@@ -566,6 +569,7 @@ fn cmd_run_stream(args: &Args, mut cfg: PipelineConfig, input: &str) -> Result<J
         ("dvfs_switches", Json::Num(report.dvfs_switches as f64)),
         ("busy_ns", Json::Num(report.backend.busy_ns)),
         ("energy_pj", Json::Num(report.backend.energy_pj)),
+        ("kernel", Json::Str(report.backend.kernel.as_str().into())),
         ("wall_s", Json::Num(report.wall_s)),
     ]))
 }

@@ -230,6 +230,14 @@ impl TosBackend for NmcMacro {
             busy_ns: s.busy_ns,
             energy_pj: s.energy_pj,
             flipped_bits: s.flipped_bits,
+            // error injection forces the gate-level per-pixel walk, which
+            // is a scalar datapath; otherwise the macro's functional step
+            // runs the process-wide kernel
+            kernel: if self.injector.is_some() {
+                crate::tos::KernelPath::Scalar
+            } else {
+                crate::tos::kernel::active_path()
+            },
         }
     }
 

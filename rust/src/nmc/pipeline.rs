@@ -7,7 +7,8 @@
 //! *energy* of the traversal come from [`super::timing`] / [`super::energy`].
 
 use crate::events::Event;
-use crate::tos::backend::clip_patch;
+use crate::tos::backend::{clip_patch, decrement_clamp};
+use crate::tos::encoding;
 
 use super::cmp::compare_geq;
 use super::energy::EnergyModel;
@@ -71,8 +72,56 @@ pub struct PatchCost {
 /// `patch`/`threshold` are the Algorithm-1 parameters (threshold in the
 /// 8-bit domain, `>= 225`); `pipelined` selects the Fig. 4(b) schedule;
 /// `injector` (if any) corrupts every word read per the BER model.
+///
+/// Without an injector the per-pixel gate-level walk is skipped entirely:
+/// the functional outcome of an error-free patch update is exactly
+/// Algorithm 1 on the decoded 8-bit mirror (the gate-level datapath is
+/// bit-exact against the golden model, a property-test invariant), and the
+/// [`PatchCost`] depends only on the clipped rect's geometry — so the fast
+/// path runs the shared SIMD kernel on the mirror and resyncs the 5-bit
+/// words ([`encoding::store`]). Monte-Carlo runs (`injector` present)
+/// still take [`process_event_gate_level`], whose per-read corruption
+/// hooks the simulated bitcells.
 #[allow(clippy::too_many_arguments)]
 pub fn process_event(
+    array: &mut TypeAArray,
+    ev: &Event,
+    patch: u16,
+    threshold: u8,
+    pipelined: bool,
+    timing: &TimingModel,
+    energy: &EnergyModel,
+    injector: Option<&mut ErrorInjector>,
+    table: Option<&WbTable>,
+) -> PatchCost {
+    debug_assert!(threshold >= 225, "5-bit datapath requires TH >= 225");
+    if injector.is_none() {
+        let res = array.grid().res;
+        let half = (patch as i32 - 1) / 2;
+        let rect = clip_patch(res, ev.x, ev.y, half);
+        let (words, decoded, width) = array.split_mut();
+        decrement_clamp(decoded, width, 0, rect, threshold);
+        decoded[ev.y as usize * width + ev.x as usize] = 255;
+        for y in rect.y0..=rect.y1 {
+            let row = y as usize * width;
+            for i in row + rect.x0 as usize..=row + rect.x1 as usize {
+                words[i] = encoding::store(decoded[i]);
+            }
+        }
+        return cost_of(rect.height(), rect.pixels(), pipelined, timing, energy);
+    }
+    process_event_gate_level(
+        array, ev, patch, threshold, pipelined, timing, energy, injector, table,
+    )
+}
+
+/// The reference per-pixel gate-level walk (MO -> CMP -> WR phase per
+/// pixel, paper Fig. 7). [`process_event`] routes here whenever an
+/// [`ErrorInjector`] is attached; the error-free fast path is checked
+/// bit-exact against this walk by `fast_path_equals_gate_level` below and
+/// by the backend property tests.
+#[allow(clippy::too_many_arguments)]
+pub fn process_event_gate_level(
     array: &mut TypeAArray,
     ev: &Event,
     patch: u16,
@@ -128,8 +177,21 @@ pub fn process_event(
         }
     }
 
-    let rows = rect.height();
-    let pixels = rect.pixels();
+    cost_of(rect.height(), rect.pixels(), pipelined, timing, energy)
+}
+
+/// Latency/energy of a patch update — a pure function of the clipped
+/// rect's geometry (rows drive the phase schedule, pixels the energy),
+/// which is what makes the error-free fast path's cost identical to the
+/// gate-level walk's.
+#[inline]
+fn cost_of(
+    rows: usize,
+    pixels: usize,
+    pipelined: bool,
+    timing: &TimingModel,
+    energy: &EnergyModel,
+) -> PatchCost {
     let latency_ns = if pipelined {
         timing.patch_latency_pipelined_ns(rows)
     } else {
@@ -233,6 +295,38 @@ mod tests {
         assert!(a.latency_ns < b.latency_ns);
         let ratio = b.latency_ns / a.latency_ns;
         assert!(ratio > 1.8 && ratio < 2.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fast_path_equals_gate_level() {
+        // the error-free SIMD fast path and the per-pixel gate-level walk
+        // must agree on surface contents, the 5-bit words AND the cost
+        // record, event by event
+        let res = Resolution::TEST64;
+        let cfg = TosConfig::default();
+        let timing = TimingModel::at(1.2);
+        let energy = EnergyModel::at(1.2);
+        let table = WbTable::build(cfg.threshold);
+        let mut fast = TypeAArray::new(res);
+        let mut gate = TypeAArray::new(res);
+        for i in 0..2000u64 {
+            let e = Event::on((i * 17 % 64) as u16, (i * 29 % 64) as u16, i);
+            let a = process_event(
+                &mut fast, &e, cfg.patch, cfg.threshold, true, &timing, &energy, None,
+                Some(&table),
+            );
+            let b = process_event_gate_level(
+                &mut gate, &e, cfg.patch, cfg.threshold, true, &timing, &energy, None,
+                Some(&table),
+            );
+            assert_eq!(a, b, "cost diverged at event {i}");
+        }
+        assert_eq!(fast.snapshot_u8(), gate.snapshot_u8());
+        // the fast path's word resync must leave words/mirror consistent
+        let (words, decoded, _) = fast.split_mut();
+        for (i, (&w, &d)) in words.iter().zip(decoded.iter()).enumerate() {
+            assert_eq!(w, crate::tos::encoding::store(d), "pixel {i}");
+        }
     }
 
     #[test]

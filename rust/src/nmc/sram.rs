@@ -137,6 +137,17 @@ impl TypeAArray {
         self.decoded.clone()
     }
 
+    /// Simultaneous mutable access to the 5-bit words, the decoded 8-bit
+    /// mirror and the row width — the vectorized error-free patch path
+    /// ([`super::pipeline::process_event`]) updates the mirror with the
+    /// shared SIMD kernel and then resyncs the words. Callers must keep
+    /// the two views consistent (`words[i] == decoded[i] & 0x1F` for every
+    /// touched pixel, i.e. [`crate::tos::encoding::store`]).
+    #[inline]
+    pub fn split_mut(&mut self) -> (&mut [u8], &mut [u8], usize) {
+        (&mut self.words, &mut self.decoded, self.width)
+    }
+
     /// Erase all cells.
     pub fn clear(&mut self) {
         self.words.fill(0);

@@ -6,10 +6,25 @@
 //! the timestamp of the most recent event; an incoming event is *signal*
 //! iff at least `support` pixels in its `(2r+1)^2` neighbourhood (centre
 //! excluded) fired within the trailing window `tw_us`.
-
-
+//!
+//! ## Vectorized support counting
+//!
+//! The per-neighbour test collapses to one unsigned compare: a pixel's
+//! stored value is `s = t + 1` (`0` = never fired), and with
+//! `lo = ev.t - tw + 1` (saturating at the bottom), *"fired within the
+//! trailing window"* is exactly `s >= lo` — never-fired pixels fail
+//! automatically because `lo >= 1`. [`Stcf::check`] therefore counts the
+//! whole clipped neighbourhood with branch-free masked-lane compares
+//! (AVX2 / NEON `u64` lanes when the TOS kernel dispatcher selected those
+//! paths, a branch-free scalar sum otherwise — see
+//! [`crate::tos::kernel`]), then subtracts the centre pixel's own
+//! contribution instead of branching around it per lane.
+//! [`Stcf::check_scalar`] keeps the original early-exit nested loop as the
+//! behavioural oracle; `prop_stcf_vectorized_equals_scalar` feeds both the
+//! same random streams.
 
 use crate::events::{Event, Resolution};
+use crate::tos::kernel::{active_path, KernelPath};
 
 /// STCF parameters.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -58,7 +73,55 @@ impl Stcf {
 
     /// Classify an event as signal (`true`) or BA noise (`false`), and
     /// record it in the timestamp map either way.
+    ///
+    /// Vectorized: counts the whole clipped neighbourhood with branch-free
+    /// `s >= lo` lane compares and subtracts the centre's own
+    /// contribution. Bit-identical to [`Stcf::check_scalar`] (property
+    /// tested), including stats and timestamp-map updates.
     pub fn check(&mut self, ev: &Event) -> bool {
+        self.stats.seen += 1;
+        let support = self.count_support(ev);
+        self.last_t[self.res.index(ev.x, ev.y)] = ev.t + 1;
+        let signal = support >= self.cfg.support;
+        if signal {
+            self.stats.passed += 1;
+        }
+        signal
+    }
+
+    /// Branch-free support count over the clipped neighbourhood, centre
+    /// excluded.
+    #[inline]
+    fn count_support(&self, ev: &Event) -> u32 {
+        // supports <=> s >= lo (module docs); lo overflows only for
+        // ev.t == u64::MAX with tw == 0, where no stored s can qualify
+        let lo = match ev.t.saturating_sub(self.cfg.tw_us).checked_add(1) {
+            Some(lo) => lo,
+            None => return 0,
+        };
+        let r = self.cfg.radius as i32;
+        let (w, h) = (self.res.width as i32, self.res.height as i32);
+        let (ex, ey) = (ev.x as i32, ev.y as i32);
+        let x0 = (ex - r).max(0) as usize;
+        let x1 = (ex + r).min(w - 1) as usize;
+        let y0 = (ey - r).max(0) as usize;
+        let y1 = (ey + r).min(h - 1) as usize;
+        let width = w as usize;
+        let path = active_path();
+        let mut n = 0u32;
+        for y in y0..=y1 {
+            let row = &self.last_t[y * width + x0..=y * width + x1];
+            n += count_in_window(path, row, lo);
+        }
+        // the centre was counted with its row; remove its contribution
+        // instead of branching on it in every lane
+        n - (self.last_t[self.res.index(ev.x, ev.y)] >= lo) as u32
+    }
+
+    /// The original early-exit nested-loop classifier, kept as the
+    /// behavioural oracle for the vectorized [`Stcf::check`] (same
+    /// observable effects: return value, stats, timestamp map).
+    pub fn check_scalar(&mut self, ev: &Event) -> bool {
         self.stats.seen += 1;
         let r = self.cfg.radius as i32;
         let (w, h) = (self.res.width as i32, self.res.height as i32);
@@ -110,6 +173,85 @@ impl Stcf {
             return 0.0;
         }
         self.stats.passed as f64 / self.stats.seen as f64
+    }
+}
+
+/// Count the values `s >= lo` in one neighbourhood row, through the lane
+/// path the TOS dispatcher selected. SSE2 has no unsigned 64-bit compare,
+/// so only the AVX2 and NEON paths vectorize here; every other path takes
+/// the branch-free scalar sum (still no per-lane branches — the compare
+/// result is accumulated arithmetically).
+#[inline]
+fn count_in_window(path: KernelPath, row: &[u64], lo: u64) -> u32 {
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx2 if std::arch::is_x86_feature_detected!("avx2") => {
+            // SAFETY: feature presence just checked.
+            unsafe { count_in_window_avx2(row, lo) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelPath::Neon => count_in_window_neon(row, lo),
+        _ => row.iter().map(|&s| (s >= lo) as u32).sum(),
+    }
+}
+
+/// `[-1, -1, -1, -1, 0, 0, 0, 0]`: loading 4 lanes at offset `4 - rem`
+/// yields a maskload mask enabling the first `rem` lanes; disabled lanes
+/// read as 0, which never counts because `lo >= 1`.
+#[cfg(target_arch = "x86_64")]
+static TAIL64: [i64; 8] = [-1, -1, -1, -1, 0, 0, 0, 0];
+
+/// Four `u64` lanes per compare; unsigned `>= lo` is done as signed
+/// `> (lo - 1)` after flipping the sign bit of both operands (`lo >= 1`
+/// always, so `lo - 1` cannot underflow).
+///
+/// # Safety
+/// The CPU must support AVX2.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn count_in_window_avx2(row: &[u64], lo: u64) -> u32 {
+    use core::arch::x86_64::*;
+    let sign = _mm256_set1_epi64x(i64::MIN);
+    let lov = _mm256_set1_epi64x(((lo - 1) ^ (1u64 << 63)) as i64);
+    let mut n = 0u32;
+    let mut i = 0;
+    while i + 4 <= row.len() {
+        let v = _mm256_loadu_si256(row.as_ptr().add(i) as *const __m256i);
+        let ge = _mm256_cmpgt_epi64(_mm256_xor_si256(v, sign), lov);
+        n += (_mm256_movemask_pd(_mm256_castsi256_pd(ge)) as u32).count_ones();
+        i += 4;
+    }
+    if i < row.len() {
+        let rem = row.len() - i;
+        let mask = _mm256_loadu_si256(TAIL64.as_ptr().add(4 - rem) as *const __m256i);
+        let v = _mm256_maskload_epi64(row.as_ptr().add(i) as *const i64, mask);
+        let ge = _mm256_cmpgt_epi64(_mm256_xor_si256(v, sign), lov);
+        n += (_mm256_movemask_pd(_mm256_castsi256_pd(ge)) as u32).count_ones();
+    }
+    n
+}
+
+/// Two `u64` lanes per compare (`vcgeq_u64` is a native unsigned >=);
+/// each all-ones compare result is accumulated by lane subtraction
+/// (`acc - (-1) = acc + 1`), with a scalar pickup for the odd tail lane.
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn count_in_window_neon(row: &[u64], lo: u64) -> u32 {
+    use core::arch::aarch64::*;
+    // SAFETY: NEON is baseline on aarch64; loads are bounded by `row`.
+    unsafe {
+        let lov = vdupq_n_u64(lo);
+        let mut acc = vdupq_n_u64(0);
+        let mut i = 0;
+        while i + 2 <= row.len() {
+            acc = vsubq_u64(acc, vcgeq_u64(vld1q_u64(row.as_ptr().add(i)), lov));
+            i += 2;
+        }
+        let mut n = (vgetq_lane_u64(acc, 0) + vgetq_lane_u64(acc, 1)) as u32;
+        if i < row.len() {
+            n += (row[i] >= lo) as u32;
+        }
+        n
     }
 }
 
@@ -176,6 +318,51 @@ mod tests {
         let s = f.stats();
         assert_eq!(s.seen, 200);
         assert!(s.passed > 80 && s.passed < 120, "passed {}", s.passed);
+    }
+
+    #[test]
+    fn count_in_window_matches_scalar_on_every_path() {
+        // window lengths 0..=9 x values straddling lo x every runnable
+        // lane path, including the u64 extremes
+        let values = [0u64, 1, 2, 99, 100, 101, 1_000, u64::MAX - 1, u64::MAX];
+        for path in crate::tos::kernel::available_paths() {
+            for len in 0usize..=9 {
+                for salt in 0..values.len() {
+                    let row: Vec<u64> =
+                        (0..len).map(|i| values[(i + salt) % values.len()]).collect();
+                    for lo in [1u64, 100, 101, u64::MAX] {
+                        let want: u32 = row.iter().map(|&s| (s >= lo) as u32).sum();
+                        assert_eq!(
+                            count_in_window(path, &row, lo),
+                            want,
+                            "{path} len {len} salt {salt} lo {lo}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vectorized_check_equals_scalar_reference() {
+        // identical streams through both classifiers: same verdicts, same
+        // stats, same timestamp map — including border pixels and stale
+        // neighbourhoods
+        for (radius, support) in [(1u16, 2u32), (2, 3), (1, 1), (3, 2)] {
+            let cfg = StcfConfig { radius, support, ..StcfConfig::default() };
+            let mut vec = Stcf::new(Resolution::TEST64, cfg);
+            let mut scl = Stcf::new(Resolution::TEST64, cfg);
+            for i in 0..4_000u64 {
+                let e = Event::on(
+                    (i * 23 % 64) as u16,
+                    (i * 41 % 64) as u16,
+                    i * 700 % 40_000, // non-monotone: exercises future timestamps
+                );
+                assert_eq!(vec.check(&e), scl.check_scalar(&e), "r{radius} s{support} ev {i}");
+            }
+            assert_eq!(vec.stats(), scl.stats());
+            assert_eq!(vec.last_t, scl.last_t);
+        }
     }
 
     #[test]

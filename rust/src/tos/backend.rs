@@ -4,7 +4,9 @@
 //! ([`crate::conventional::ConventionalTos`]), the NMC macro
 //! ([`crate::nmc::NmcMacro`]) and the sharded parallel software model
 //! ([`crate::tos::sharded::ShardedTos`]) — plus the single shared
-//! Algorithm-1 patch core they all route through.
+//! Algorithm-1 patch core they all route through, which lives in
+//! [`crate::tos::kernel`] behind a startup-selected SIMD dispatch and is
+//! re-exported here for compatibility.
 //!
 //! The coordinator ([`crate::coordinator::Pipeline`]) is generic over
 //! `B: TosBackend`, so every experiment harness (PR sweeps, DVFS traces,
@@ -14,7 +16,10 @@
 
 use crate::events::{Event, Resolution};
 
+use super::kernel::KernelPath;
 use super::TosConfig;
+
+pub use super::kernel::{decrement_clamp, decrement_clamp_scalar};
 
 /// Unified telemetry every backend accumulates.
 ///
@@ -33,6 +38,12 @@ pub struct BackendStats {
     pub energy_pj: f64,
     /// Bits corrupted by Monte-Carlo read-error injection (NMC only).
     pub flipped_bits: u64,
+    /// The decrement/clamp kernel the dispatcher selected at startup
+    /// ([`crate::tos::kernel::active_path`]). The NMC macro reports
+    /// [`KernelPath::Scalar`] while Monte-Carlo error injection forces its
+    /// gate-level per-pixel walk; every other backend reports the
+    /// process-wide selection (override with `NMC_TOS_KERNEL`).
+    pub kernel: KernelPath,
 }
 
 /// A TOS implementation the coordinator can drive.
@@ -195,120 +206,6 @@ pub fn clip_patch(res: Resolution, x: u16, y: u16, half: i32) -> PatchRect {
     }
 }
 
-/// High bits of each byte lane (SWAR).
-const H64: u64 = 0x8080_8080_8080_8080;
-/// Low bits of each byte lane (SWAR); also the per-byte decrement operand.
-const L64: u64 = 0x0101_0101_0101_0101;
-
-/// Per-byte wrapping subtraction with no cross-byte borrow
-/// (Hacker's Delight §2-18).
-#[inline(always)]
-fn packed_sub(x: u64, y: u64) -> u64 {
-    ((x | H64).wrapping_sub(y & !H64)) ^ ((x ^ !y) & H64)
-}
-
-/// Eight pixels of Algorithm 1's decrement/clamp in one u64: per byte,
-/// `saturating_sub(v, 1)` followed by the `< TH -> 0` clamp collapses to
-/// `(v > TH) ? v - 1 : 0` (a zero byte can never exceed `TH`, and any
-/// byte above `TH` is nonzero, so the saturation never fires separately).
-/// `t` is the threshold broadcast to all lanes (`th * L64`).
-///
-/// The lane math: `borrow` marks the bytes where `t - v` underflows, i.e.
-/// where `v > TH`; those lanes keep their decremented value, the rest
-/// clamp to zero. Equivalence with the scalar loop is enforced
-/// exhaustively over all `(v, TH)` pairs by `swar_word_matches_scalar`
-/// and on random windows by `prop_vector_kernel_equals_scalar`.
-#[inline(always)]
-fn swar_dec_clamp(x: u64, t: u64) -> u64 {
-    let z = packed_sub(t, x);
-    let borrow = ((!t & x) | (!(t ^ x) & z)) & H64;
-    let keep = (borrow >> 7).wrapping_mul(0xFF);
-    packed_sub(x, L64) & keep
-}
-
-/// Scalar reference form of the decrement/clamp core. This is the exact
-/// pre-vectorization hot loop; it stays as the bit-exactness oracle the
-/// SWAR kernel is property-tested against, and as the fallback for row
-/// windows too close to the end of a band slice for a full 8-byte load.
-#[inline]
-pub fn decrement_clamp_scalar(
-    data: &mut [u8],
-    width: usize,
-    base_row: u16,
-    rect: PatchRect,
-    th: u8,
-) {
-    for y in rect.y0..=rect.y1 {
-        let row = (y - base_row) as usize * width;
-        scalar_row(&mut data[row + rect.x0 as usize..=row + rect.x1 as usize], th);
-    }
-}
-
-/// Scalar decrement/clamp of one row window.
-#[inline(always)]
-fn scalar_row(row: &mut [u8], th: u8) {
-    for v in row {
-        let d = v.saturating_sub(1);
-        *v = if d < th { 0 } else { d };
-    }
-}
-
-/// SWAR decrement/clamp of one row window of at least 8 pixels: full
-/// 8-byte lanes, then one overlapped window over the last 8 bytes whose
-/// already-processed low lanes are blended back unchanged (the op is not
-/// idempotent, so overlap must not re-apply).
-#[inline]
-fn swar_row_wide(row: &mut [u8], t: u64) {
-    let w = row.len();
-    let mut i = 0;
-    while i + 8 <= w {
-        let win: &mut [u8; 8] = (&mut row[i..i + 8]).try_into().unwrap();
-        *win = swar_dec_clamp(u64::from_le_bytes(*win), t).to_le_bytes();
-        i += 8;
-    }
-    if i < w {
-        let off = w - 8;
-        let done = i - off; // low bytes already processed: 1..=7
-        let win: &mut [u8; 8] = (&mut row[off..off + 8]).try_into().unwrap();
-        let x = u64::from_le_bytes(*win);
-        let keep = (1u64 << (done * 8)) - 1;
-        *win = ((swar_dec_clamp(x, t) & !keep) | (x & keep)).to_le_bytes();
-    }
-}
-
-/// The shared Algorithm-1 decrement/clamp core over `rect`, restricted to
-/// a row window: `data` holds consecutive rows starting at sensor row
-/// `base_row` (`base_row = 0` for a full surface; a shard passes its
-/// band's first row). `rect` must already be clipped to the rows `data`
-/// holds. This is the one copy of the hot loop every software backend and
-/// the conventional baseline share.
-///
-/// Vectorized: each row window runs in 8-pixel SWAR lanes
-/// ([`swar_dec_clamp`]). Rows narrower than 8 pixels (the common 7-wide
-/// patch) use a single 8-byte window whose out-of-rect bytes are blended
-/// back unchanged — the window never extends past `data`, so a sharded
-/// band can never touch another band's rows, and the rare narrow row at
-/// the very end of `data` falls back to the scalar loop. Bit-exactness
-/// against [`decrement_clamp_scalar`] is a test invariant.
-#[inline]
-pub fn decrement_clamp(data: &mut [u8], width: usize, base_row: u16, rect: PatchRect, th: u8) {
-    let w = rect.width();
-    let t = (th as u64).wrapping_mul(L64);
-    for y in rect.y0..=rect.y1 {
-        let start = (y - base_row) as usize * width + rect.x0 as usize;
-        if w >= 8 {
-            swar_row_wide(&mut data[start..start + w], t);
-        } else if start + 8 <= data.len() {
-            let win: &mut [u8; 8] = (&mut data[start..start + 8]).try_into().unwrap();
-            let x = u64::from_le_bytes(*win);
-            let keep = !0u64 << (w * 8); // bytes beyond the rect: unchanged
-            *win = ((swar_dec_clamp(x, t) & !keep) | (x & keep)).to_le_bytes();
-        } else {
-            scalar_row(&mut data[start..start + w], th);
-        }
-    }
-}
-
 /// One full golden event update on a whole surface: decrement/clamp the
 /// clipped patch, then write 255 at the event pixel. Returns the pixel
 /// count of the clipped patch.
@@ -356,65 +253,6 @@ mod tests {
         let rect = PatchRect { x0: 0, x1: 3, y0: 0, y1: 0 };
         decrement_clamp(&mut data, 4, 0, rect, 225);
         assert!(data.iter().all(|&v| v == 0), "224 < TH must clamp to 0");
-    }
-
-    #[test]
-    fn swar_word_matches_scalar_exhaustively() {
-        // every (pixel value, threshold) pair through the 8-lane word,
-        // with a different neighbour value in every other lane to catch
-        // cross-byte borrow/carry contamination
-        for th in 0u16..=255 {
-            let t = (th as u64).wrapping_mul(super::L64);
-            for base in (0u16..=255).step_by(8) {
-                let lanes: [u8; 8] = std::array::from_fn(|i| (base as usize + i) as u8);
-                let out = super::swar_dec_clamp(u64::from_le_bytes(lanes), t).to_le_bytes();
-                for (i, &v) in lanes.iter().enumerate() {
-                    let d = v.saturating_sub(1);
-                    let want = if d < th as u8 { 0 } else { d };
-                    assert_eq!(out[i], want, "lane {i} v {v} th {th}");
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn vector_kernel_equals_scalar_all_alignments_widths_borders() {
-        // all row widths x rect alignments x rect widths x threshold
-        // classes, at every vertical position of a 3-row buffer (the last
-        // row exercises the end-of-slice scalar fallback) plus the full
-        // 3-row rect
-        let thresholds = [0u8, 1, 2, 127, 128, 224, 225, 226, 254, 255];
-        for width in 1usize..=24 {
-            let data: Vec<u8> = (0..width * 3).map(|i| (i * 37 + 3) as u8).collect();
-            for x0 in 0..width {
-                for x1 in x0..width {
-                    for (y0, y1) in [(0u16, 0u16), (1, 1), (2, 2), (0, 2)] {
-                        let rect = PatchRect { x0: x0 as u16, x1: x1 as u16, y0, y1 };
-                        for &th in &thresholds {
-                            let mut a = data.clone();
-                            let mut b = data.clone();
-                            decrement_clamp(&mut a, width, 0, rect, th);
-                            decrement_clamp_scalar(&mut b, width, 0, rect, th);
-                            assert_eq!(a, b, "width {width} rect {rect:?} th {th} diverged");
-                        }
-                    }
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn vector_kernel_respects_base_row_offset() {
-        // a band slice starting at sensor row 100: both kernels must
-        // address rows relative to the base
-        let width = 13usize;
-        let data: Vec<u8> = (0..width * 5).map(|i| (i * 29 + 1) as u8).collect();
-        let rect = PatchRect { x0: 2, x1: 11, y0: 101, y1: 103 };
-        let mut a = data.clone();
-        let mut b = data;
-        decrement_clamp(&mut a, width, 100, rect, 225);
-        decrement_clamp_scalar(&mut b, width, 100, rect, 225);
-        assert_eq!(a, b);
     }
 
     #[test]

@@ -1,0 +1,660 @@
+//! Explicit-SIMD dispatch layer for the Algorithm-1 decrement/clamp core.
+//!
+//! PR 3 vectorized the shared patch kernel as a SWAR `u64` word (8 pixels
+//! per lane word). This module goes wider: 16-byte SSE2 / NEON and 32-byte
+//! AVX2 implementations of the same per-byte operation
+//! `(v > TH) ? v - 1 : 0`, behind a [`KernelPath`] selected **once at
+//! startup** ([`active_path`]) and reported by every backend in
+//! [`BackendStats::kernel`](super::backend::BackendStats::kernel).
+//!
+//! Dispatch contract (see DESIGN.md §Hot paths & memory traffic):
+//!
+//! * **Selection.** x86_64 picks AVX2 when the CPU reports it at runtime
+//!   (`std::arch::is_x86_feature_detected!`), else SSE2 (baseline for the
+//!   architecture, no detection needed); aarch64 picks NEON (baseline);
+//!   everything else falls back to the SWAR word kernel. The
+//!   `NMC_TOS_KERNEL` environment variable (`scalar`/`swar`/`sse2`/
+//!   `avx2`/`neon`/`auto`) overrides selection for benchmarking and
+//!   debugging; a path the host cannot run falls back to auto-detection.
+//! * **Row-window rule.** A vector path never loads or stores outside the
+//!   `data` slice it is handed. Rows at least one vector wide run full
+//!   lanes plus one *overlapped* tail window whose already-processed low
+//!   lanes are masked back unchanged (the op is not idempotent — overlap
+//!   must never re-apply). Narrow rows and end-of-slice tails *slide the
+//!   window backward* (`wstart = min(start, len - LANES)`) instead of
+//!   falling back to scalar, so interior rows of a sharded band slice or a
+//!   patch rect never pay the scalar loop; only a whole buffer narrower
+//!   than one vector degrades, first to SWAR (8-byte windows), then to the
+//!   scalar loop.
+//! * **Oracle.** [`decrement_clamp_scalar`] is the bit-exactness oracle:
+//!   every path is checked against it by the exhaustive
+//!   alignment × width × threshold sweep below, the per-path sweep in
+//!   `rust/tests/kernel_dispatch.rs`, and
+//!   `prop_vector_kernel_equals_scalar` in `rust/tests/properties.rs`.
+//!
+//! Masked blends use [`lane mask tables`](self) built in const context, so
+//! tail handling is branch-free (two unaligned mask loads + AND).
+
+use std::sync::OnceLock;
+
+use super::backend::PatchRect;
+
+/// Which decrement/clamp implementation the startup dispatcher selected.
+///
+/// Reported by every backend in
+/// [`BackendStats::kernel`](super::backend::BackendStats::kernel); the
+/// NMC macro reports [`KernelPath::Scalar`] while Monte-Carlo error
+/// injection forces its gate-level per-pixel walk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelPath {
+    /// Per-byte scalar loop — the bit-exactness oracle and last-resort
+    /// fallback for buffers narrower than one SWAR word.
+    #[default]
+    Scalar,
+    /// 8 pixels per `u64` word (Hacker's-Delight packed arithmetic, PR 3).
+    Swar64,
+    /// 16 pixels per `__m128i` (x86_64 baseline — always available there).
+    Sse2,
+    /// 32 pixels per `__m256i` (runtime-detected).
+    Avx2,
+    /// 16 pixels per `uint8x16_t` (aarch64 baseline).
+    Neon,
+}
+
+impl KernelPath {
+    /// Stable lowercase name (bench row labels, `BENCH_*.json`, CLI).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Swar64 => "swar64",
+            KernelPath::Sse2 => "sse2",
+            KernelPath::Avx2 => "avx2",
+            KernelPath::Neon => "neon",
+        }
+    }
+
+    /// Pixels processed per lane word / vector register.
+    pub fn lanes(&self) -> usize {
+        match self {
+            KernelPath::Scalar => 1,
+            KernelPath::Swar64 => 8,
+            KernelPath::Sse2 | KernelPath::Neon => 16,
+            KernelPath::Avx2 => 32,
+        }
+    }
+
+    /// Parse a `NMC_TOS_KERNEL` / CLI spelling. `auto` (and anything
+    /// unrecognised) yields `None`, which callers treat as "detect".
+    pub fn parse(s: &str) -> Option<KernelPath> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelPath::Scalar),
+            "swar" | "swar64" => Some(KernelPath::Swar64),
+            "sse2" => Some(KernelPath::Sse2),
+            "avx2" => Some(KernelPath::Avx2),
+            "neon" => Some(KernelPath::Neon),
+            _ => None,
+        }
+    }
+
+    /// Can this host actually execute the path?
+    pub fn runnable(&self) -> bool {
+        match self {
+            KernelPath::Scalar | KernelPath::Swar64 => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Sse2 => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            KernelPath::Neon => true,
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+}
+
+impl std::fmt::Display for KernelPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Every path the current host can run, widest last (bench sweeps iterate
+/// this so `BENCH_tos.json` records one row per dispatchable path).
+pub fn available_paths() -> Vec<KernelPath> {
+    [
+        KernelPath::Scalar,
+        KernelPath::Swar64,
+        KernelPath::Sse2,
+        KernelPath::Avx2,
+        KernelPath::Neon,
+    ]
+    .into_iter()
+    .filter(KernelPath::runnable)
+    .collect()
+}
+
+/// Pick the widest path the host supports.
+fn detect() -> KernelPath {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            KernelPath::Avx2
+        } else {
+            KernelPath::Sse2
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        KernelPath::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        KernelPath::Swar64
+    }
+}
+
+static ACTIVE: OnceLock<KernelPath> = OnceLock::new();
+
+/// The path the dispatcher selected at startup: auto-detection, overridden
+/// by `NMC_TOS_KERNEL` when set to a path this host can run. Computed once
+/// and cached for the process lifetime — per-call dispatch is one
+/// predictable load + match.
+pub fn active_path() -> KernelPath {
+    *ACTIVE.get_or_init(|| match std::env::var("NMC_TOS_KERNEL") {
+        Ok(v) => KernelPath::parse(&v).filter(KernelPath::runnable).unwrap_or_else(detect),
+        Err(_) => detect(),
+    })
+}
+
+/// The shared Algorithm-1 decrement/clamp core over `rect`, restricted to
+/// a row window: `data` holds consecutive rows starting at sensor row
+/// `base_row` (`base_row = 0` for a full surface; a shard passes its
+/// band's first row). `rect` must already be clipped to the rows `data`
+/// holds. This is the one copy of the hot loop every software backend,
+/// the conventional baseline and the NMC macro's error-free fast path
+/// share; it dispatches to the [`active_path`] kernel.
+#[inline]
+pub fn decrement_clamp(data: &mut [u8], width: usize, base_row: u16, rect: PatchRect, th: u8) {
+    decrement_clamp_with(active_path(), data, width, base_row, rect, th)
+}
+
+/// [`decrement_clamp`] through an explicit path (bench sweeps and the
+/// per-path equivalence tests). A path the host cannot run (or a buffer
+/// narrower than the path's vector) degrades to the next-narrower kernel;
+/// the functional result is identical on every path by construction.
+#[inline]
+pub fn decrement_clamp_with(
+    path: KernelPath,
+    data: &mut [u8],
+    width: usize,
+    base_row: u16,
+    rect: PatchRect,
+    th: u8,
+) {
+    match path {
+        KernelPath::Scalar => decrement_clamp_scalar(data, width, base_row, rect, th),
+        KernelPath::Swar64 => decrement_clamp_swar(data, width, base_row, rect, th),
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Sse2 => x86::decrement_clamp_sse2(data, width, base_row, rect, th),
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx2 => {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                // SAFETY: feature presence just checked.
+                unsafe { x86::decrement_clamp_avx2(data, width, base_row, rect, th) }
+            } else {
+                x86::decrement_clamp_sse2(data, width, base_row, rect, th)
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelPath::Neon => arm::decrement_clamp_neon(data, width, base_row, rect, th),
+        // a path this architecture has no code for: SWAR is always safe
+        #[allow(unreachable_patterns)]
+        _ => decrement_clamp_swar(data, width, base_row, rect, th),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scalar oracle
+// ---------------------------------------------------------------------------
+
+/// Scalar reference form of the decrement/clamp core. This is the exact
+/// pre-vectorization hot loop; it stays as the bit-exactness oracle every
+/// vector kernel is tested against, and as the fallback for buffers too
+/// small for even one 8-byte SWAR window.
+#[inline]
+pub fn decrement_clamp_scalar(
+    data: &mut [u8],
+    width: usize,
+    base_row: u16,
+    rect: PatchRect,
+    th: u8,
+) {
+    for y in rect.y0..=rect.y1 {
+        let row = (y - base_row) as usize * width;
+        scalar_row(&mut data[row + rect.x0 as usize..=row + rect.x1 as usize], th);
+    }
+}
+
+/// Scalar decrement/clamp of one row window.
+#[inline(always)]
+fn scalar_row(row: &mut [u8], th: u8) {
+    for v in row {
+        let d = v.saturating_sub(1);
+        *v = if d < th { 0 } else { d };
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SWAR u64 (8 lanes) — PR 3's kernel, kept as the portable vector floor
+// ---------------------------------------------------------------------------
+
+/// High bits of each byte lane (SWAR).
+const H64: u64 = 0x8080_8080_8080_8080;
+/// Low bits of each byte lane (SWAR); also the per-byte decrement operand.
+const L64: u64 = 0x0101_0101_0101_0101;
+
+/// Per-byte wrapping subtraction with no cross-byte borrow
+/// (Hacker's Delight §2-18).
+#[inline(always)]
+fn packed_sub(x: u64, y: u64) -> u64 {
+    ((x | H64).wrapping_sub(y & !H64)) ^ ((x ^ !y) & H64)
+}
+
+/// Eight pixels of Algorithm 1's decrement/clamp in one u64: per byte,
+/// `saturating_sub(v, 1)` followed by the `< TH -> 0` clamp collapses to
+/// `(v > TH) ? v - 1 : 0` (a zero byte can never exceed `TH`, and any
+/// byte above `TH` is nonzero, so the saturation never fires separately).
+/// `t` is the threshold broadcast to all lanes (`th * L64`).
+///
+/// The lane math: `borrow` marks the bytes where `t - v` underflows, i.e.
+/// where `v > TH`; those lanes keep their decremented value, the rest
+/// clamp to zero.
+#[inline(always)]
+fn swar_dec_clamp(x: u64, t: u64) -> u64 {
+    let z = packed_sub(t, x);
+    let borrow = ((!t & x) | (!(t ^ x) & z)) & H64;
+    let keep = (borrow >> 7).wrapping_mul(0xFF);
+    packed_sub(x, L64) & keep
+}
+
+/// SWAR decrement/clamp of one row window of at least 8 pixels: full
+/// 8-byte lanes, then one overlapped window over the last 8 bytes whose
+/// already-processed low lanes are blended back unchanged (the op is not
+/// idempotent, so overlap must not re-apply).
+#[inline]
+fn swar_row_wide(row: &mut [u8], t: u64) {
+    let w = row.len();
+    let mut i = 0;
+    while i + 8 <= w {
+        let win: &mut [u8; 8] = (&mut row[i..i + 8]).try_into().unwrap();
+        *win = swar_dec_clamp(u64::from_le_bytes(*win), t).to_le_bytes();
+        i += 8;
+    }
+    if i < w {
+        let off = w - 8;
+        let done = i - off; // low bytes already processed: 1..=7
+        let win: &mut [u8; 8] = (&mut row[off..off + 8]).try_into().unwrap();
+        let x = u64::from_le_bytes(*win);
+        let keep = (1u64 << (done * 8)) - 1;
+        *win = ((swar_dec_clamp(x, t) & !keep) | (x & keep)).to_le_bytes();
+    }
+}
+
+/// The SWAR `u64` form of the core: 8-pixel lane words, narrow rows run
+/// one blended window that slides backward at the end of `data`; only a
+/// buffer shorter than 8 bytes falls back to the scalar loop.
+#[inline]
+pub fn decrement_clamp_swar(data: &mut [u8], width: usize, base_row: u16, rect: PatchRect, th: u8) {
+    let w = rect.width();
+    let t = (th as u64).wrapping_mul(L64);
+    for y in rect.y0..=rect.y1 {
+        let start = (y - base_row) as usize * width + rect.x0 as usize;
+        if w >= 8 {
+            swar_row_wide(&mut data[start..start + w], t);
+        } else if start + 8 <= data.len() {
+            let win: &mut [u8; 8] = (&mut data[start..start + 8]).try_into().unwrap();
+            let x = u64::from_le_bytes(*win);
+            let keep = !0u64 << (w * 8); // bytes beyond the rect: unchanged
+            *win = ((swar_dec_clamp(x, t) & !keep) | (x & keep)).to_le_bytes();
+        } else if data.len() >= 8 {
+            // end-of-slice narrow row: slide the window backward so the
+            // vector path still covers it (PR 3 fell back to scalar here)
+            let off = data.len() - 8;
+            let lo = start - off;
+            let hi = lo + w;
+            let win: &mut [u8; 8] = (&mut data[off..off + 8]).try_into().unwrap();
+            let x = u64::from_le_bytes(*win);
+            let hi_mask = if hi >= 8 { !0u64 } else { (1u64 << (hi * 8)) - 1 };
+            let keep = hi_mask & (!0u64 << (lo * 8));
+            *win = ((swar_dec_clamp(x, t) & keep) | (x & !keep)).to_le_bytes();
+        } else {
+            scalar_row(&mut data[start..start + w], th);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lane-mask table shared by the 16/32-byte paths
+// ---------------------------------------------------------------------------
+
+/// `[0u8; 32] ++ [0xFF; 32] ++ [0u8; 32]`: loading `LANES` bytes at offset
+/// `32 - lo` yields a mask selecting lanes `i >= lo`; at `64 - hi`, lanes
+/// `i < hi`. ANDing the two selects exactly `[lo, hi)` with two unaligned
+/// loads — branch-free tail blending.
+static LANE_MASK: [u8; 96] = build_lane_mask();
+
+const fn build_lane_mask() -> [u8; 96] {
+    let mut m = [0u8; 96];
+    let mut i = 32;
+    while i < 64 {
+        m[i] = 0xFF;
+        i += 1;
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// x86_64: SSE2 (baseline) and AVX2 (runtime-detected)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    use super::{decrement_clamp_swar, PatchRect, LANE_MASK};
+
+    /// 16-lane SSE2 decrement/clamp. SSE2 is part of the x86_64 baseline,
+    /// so no feature detection is needed; the `unsafe` blocks are only for
+    /// the raw-pointer loads/stores, which stay inside `data` by the
+    /// window-clamping rule.
+    #[inline]
+    pub fn decrement_clamp_sse2(
+        data: &mut [u8],
+        width: usize,
+        base_row: u16,
+        rect: PatchRect,
+        th: u8,
+    ) {
+        if data.len() < 16 {
+            return decrement_clamp_swar(data, width, base_row, rect, th);
+        }
+        let w = rect.width();
+        // SAFETY: every load/store below is bounded by `data` — full lanes
+        // satisfy i + 16 <= start + w <= data.len(); tail windows clamp
+        // wstart to data.len() - 16.
+        unsafe {
+            let ones = _mm_set1_epi8(1);
+            let sign = _mm_set1_epi8(0x80u8 as i8);
+            // unsigned v > th  <=>  signed (v ^ 0x80) > (th ^ 0x80)
+            let thv = _mm_set1_epi8((th ^ 0x80) as i8);
+            let ptr = data.as_mut_ptr();
+            for y in rect.y0..=rect.y1 {
+                let start = (y - base_row) as usize * width + rect.x0 as usize;
+                let end = start + w;
+                let mut i = start;
+                while i + 16 <= end {
+                    let p = ptr.add(i);
+                    let v = _mm_loadu_si128(p as *const __m128i);
+                    let dec = _mm_subs_epu8(v, ones);
+                    let gt = _mm_cmpgt_epi8(_mm_xor_si128(v, sign), thv);
+                    _mm_storeu_si128(p as *mut __m128i, _mm_and_si128(dec, gt));
+                    i += 16;
+                }
+                if i < end {
+                    let wstart = i.min(data.len() - 16);
+                    let (lo, hi) = (i - wstart, end - wstart);
+                    let p = ptr.add(wstart);
+                    let v = _mm_loadu_si128(p as *const __m128i);
+                    let dec = _mm_subs_epu8(v, ones);
+                    let gt = _mm_cmpgt_epi8(_mm_xor_si128(v, sign), thv);
+                    let r = _mm_and_si128(dec, gt);
+                    let ge = _mm_loadu_si128(LANE_MASK.as_ptr().add(32 - lo) as *const __m128i);
+                    let lt = _mm_loadu_si128(LANE_MASK.as_ptr().add(64 - hi) as *const __m128i);
+                    let m = _mm_and_si128(ge, lt);
+                    let blended = _mm_or_si128(_mm_and_si128(r, m), _mm_andnot_si128(m, v));
+                    _mm_storeu_si128(p as *mut __m128i, blended);
+                }
+            }
+        }
+    }
+
+    /// 32-lane AVX2 decrement/clamp.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (callers check
+    /// `is_x86_feature_detected!("avx2")` first).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn decrement_clamp_avx2(
+        data: &mut [u8],
+        width: usize,
+        base_row: u16,
+        rect: PatchRect,
+        th: u8,
+    ) {
+        if data.len() < 32 {
+            return decrement_clamp_sse2(data, width, base_row, rect, th);
+        }
+        let w = rect.width();
+        let ones = _mm256_set1_epi8(1);
+        let sign = _mm256_set1_epi8(0x80u8 as i8);
+        let thv = _mm256_set1_epi8((th ^ 0x80) as i8);
+        let ptr = data.as_mut_ptr();
+        for y in rect.y0..=rect.y1 {
+            let start = (y - base_row) as usize * width + rect.x0 as usize;
+            let end = start + w;
+            let mut i = start;
+            while i + 32 <= end {
+                let p = ptr.add(i);
+                let v = _mm256_loadu_si256(p as *const __m256i);
+                let dec = _mm256_subs_epu8(v, ones);
+                let gt = _mm256_cmpgt_epi8(_mm256_xor_si256(v, sign), thv);
+                _mm256_storeu_si256(p as *mut __m256i, _mm256_and_si256(dec, gt));
+                i += 32;
+            }
+            if i < end {
+                let wstart = i.min(data.len() - 32);
+                let (lo, hi) = (i - wstart, end - wstart);
+                let p = ptr.add(wstart);
+                let v = _mm256_loadu_si256(p as *const __m256i);
+                let dec = _mm256_subs_epu8(v, ones);
+                let gt = _mm256_cmpgt_epi8(_mm256_xor_si256(v, sign), thv);
+                let r = _mm256_and_si256(dec, gt);
+                let ge = _mm256_loadu_si256(LANE_MASK.as_ptr().add(32 - lo) as *const __m256i);
+                let lt = _mm256_loadu_si256(LANE_MASK.as_ptr().add(64 - hi) as *const __m256i);
+                let m = _mm256_and_si256(ge, lt);
+                let blended = _mm256_or_si256(_mm256_and_si256(r, m), _mm256_andnot_si256(m, v));
+                _mm256_storeu_si256(p as *mut __m256i, blended);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64: NEON (baseline)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use core::arch::aarch64::*;
+
+    use super::{decrement_clamp_swar, PatchRect, LANE_MASK};
+
+    /// 16-lane NEON decrement/clamp. NEON is part of the aarch64 baseline;
+    /// the `unsafe` blocks are only for the raw-pointer loads/stores,
+    /// bounded by the window-clamping rule.
+    #[inline]
+    pub fn decrement_clamp_neon(
+        data: &mut [u8],
+        width: usize,
+        base_row: u16,
+        rect: PatchRect,
+        th: u8,
+    ) {
+        if data.len() < 16 {
+            return decrement_clamp_swar(data, width, base_row, rect, th);
+        }
+        let w = rect.width();
+        // SAFETY: loads/stores bounded by `data` exactly as in the SSE2
+        // path; NEON intrinsics themselves are baseline on aarch64.
+        unsafe {
+            let ones = vdupq_n_u8(1);
+            let thv = vdupq_n_u8(th);
+            let ptr = data.as_mut_ptr();
+            for y in rect.y0..=rect.y1 {
+                let start = (y - base_row) as usize * width + rect.x0 as usize;
+                let end = start + w;
+                let mut i = start;
+                while i + 16 <= end {
+                    let p = ptr.add(i);
+                    let v = vld1q_u8(p);
+                    let r = vandq_u8(vqsubq_u8(v, ones), vcgtq_u8(v, thv));
+                    vst1q_u8(p, r);
+                    i += 16;
+                }
+                if i < end {
+                    let wstart = i.min(data.len() - 16);
+                    let (lo, hi) = (i - wstart, end - wstart);
+                    let p = ptr.add(wstart);
+                    let v = vld1q_u8(p);
+                    let r = vandq_u8(vqsubq_u8(v, ones), vcgtq_u8(v, thv));
+                    let ge = vld1q_u8(LANE_MASK.as_ptr().add(32 - lo));
+                    let lt = vld1q_u8(LANE_MASK.as_ptr().add(64 - hi));
+                    let m = vandq_u8(ge, lt);
+                    vst1q_u8(p, vbslq_u8(m, r, v));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swar_word_matches_scalar_exhaustively() {
+        // every (pixel value, threshold) pair through the 8-lane word,
+        // with a different neighbour value in every other lane to catch
+        // cross-byte borrow/carry contamination
+        for th in 0u16..=255 {
+            let t = (th as u64).wrapping_mul(L64);
+            for base in (0u16..=255).step_by(8) {
+                let lanes: [u8; 8] = std::array::from_fn(|i| (base as usize + i) as u8);
+                let out = swar_dec_clamp(u64::from_le_bytes(lanes), t).to_le_bytes();
+                for (i, &v) in lanes.iter().enumerate() {
+                    let d = v.saturating_sub(1);
+                    let want = if d < th as u8 { 0 } else { d };
+                    assert_eq!(out[i], want, "lane {i} v {v} th {th}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_mask_selects_half_open_ranges() {
+        for lanes in [16usize, 32] {
+            for lo in 0..lanes {
+                for hi in lo + 1..=lanes {
+                    let ge = &LANE_MASK[32 - lo..32 - lo + lanes];
+                    let lt = &LANE_MASK[64 - hi..64 - hi + lanes];
+                    for i in 0..lanes {
+                        let m = ge[i] & lt[i];
+                        let want = if i >= lo && i < hi { 0xFF } else { 0 };
+                        assert_eq!(m, want, "lanes {lanes} lo {lo} hi {hi} i {i}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// The exhaustive alignment × width × threshold sweep, per dispatch
+    /// path: all row widths x rect alignments x rect widths x threshold
+    /// classes, at every vertical position of a 3-row buffer (the last
+    /// row exercises the backward-sliding end-of-slice window) plus the
+    /// full 3-row rect.
+    fn sweep_path(path: KernelPath) {
+        let thresholds = [0u8, 1, 2, 127, 128, 224, 225, 226, 254, 255];
+        for width in 1usize..=40 {
+            let data: Vec<u8> = (0..width * 3).map(|i| (i * 37 + 3) as u8).collect();
+            for x0 in 0..width {
+                for x1 in x0..width {
+                    for (y0, y1) in [(0u16, 0u16), (1, 1), (2, 2), (0, 2)] {
+                        let rect = PatchRect { x0: x0 as u16, x1: x1 as u16, y0, y1 };
+                        for &th in &thresholds {
+                            let mut a = data.clone();
+                            let mut b = data.clone();
+                            decrement_clamp_with(path, &mut a, width, 0, rect, th);
+                            decrement_clamp_scalar(&mut b, width, 0, rect, th);
+                            assert_eq!(a, b, "{path} width {width} rect {rect:?} th {th}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_available_path_matches_scalar_exhaustively() {
+        for path in available_paths() {
+            sweep_path(path);
+        }
+    }
+
+    #[test]
+    fn dispatch_path_matches_scalar_on_band_offsets() {
+        // a band slice starting at sensor row 100: every path must
+        // address rows relative to the base
+        for path in available_paths() {
+            let width = 13usize;
+            let data: Vec<u8> = (0..width * 5).map(|i| (i * 29 + 1) as u8).collect();
+            let rect = PatchRect { x0: 2, x1: 11, y0: 101, y1: 103 };
+            let mut a = data.clone();
+            let mut b = data;
+            decrement_clamp_with(path, &mut a, width, 100, rect, 225);
+            decrement_clamp_scalar(&mut b, width, 100, rect, 225);
+            assert_eq!(a, b, "{path}");
+        }
+    }
+
+    #[test]
+    fn narrow_buffer_degrades_without_touching_out_of_rect_bytes() {
+        // a 4-wide, 3-row buffer (12 bytes: smaller than any vector) —
+        // every path must leave out-of-rect bytes untouched
+        for path in available_paths() {
+            let mut data = vec![255u8; 12];
+            let rect = PatchRect { x0: 1, x1: 2, y0: 11, y1: 11 };
+            decrement_clamp_with(path, &mut data, 4, 10, rect, 225);
+            assert_eq!(data[4], 255, "{path}");
+            assert_eq!(data[5], 254, "{path}");
+            assert_eq!(data[6], 254, "{path}");
+            assert_eq!(data[7], 255, "{path}");
+            assert!(data[..4].iter().all(|&v| v == 255), "{path}");
+            assert!(data[8..].iter().all(|&v| v == 255), "{path}");
+        }
+    }
+
+    #[test]
+    fn selection_is_runnable_and_cached() {
+        let p = active_path();
+        assert!(p.runnable());
+        assert_eq!(p, active_path(), "selection must be stable");
+        assert!(available_paths().contains(&p));
+        // scalar and SWAR are runnable everywhere
+        assert!(KernelPath::Scalar.runnable() && KernelPath::Swar64.runnable());
+    }
+
+    #[test]
+    fn parse_roundtrips_names() {
+        for p in [
+            KernelPath::Scalar,
+            KernelPath::Swar64,
+            KernelPath::Sse2,
+            KernelPath::Avx2,
+            KernelPath::Neon,
+        ] {
+            assert_eq!(KernelPath::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(KernelPath::parse("auto"), None);
+        assert_eq!(KernelPath::parse("swar"), Some(KernelPath::Swar64));
+    }
+}

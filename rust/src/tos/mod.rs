@@ -11,9 +11,11 @@
 //! batch kernel (python tests) are all checked.
 
 pub mod backend;
+pub mod kernel;
 pub mod sharded;
 
 pub use backend::{BackendStats, TosBackend};
+pub use kernel::KernelPath;
 pub use sharded::ShardedTos;
 
 use crate::events::{Event, Resolution};
@@ -217,7 +219,7 @@ impl TosBackend for TosSurface {
     }
 
     fn stats(&self) -> BackendStats {
-        self.stats
+        BackendStats { kernel: kernel::active_path(), ..self.stats }
     }
 
     fn reset(&mut self) {
@@ -396,6 +398,7 @@ mod tests {
         s.update(&Event::on(1, 1, 0));
         s.clear();
         assert_eq!(s.active_pixels(), 0);
-        assert_eq!(TosBackend::stats(&s), BackendStats::default());
+        let fresh = BackendStats { kernel: kernel::active_path(), ..Default::default() };
+        assert_eq!(TosBackend::stats(&s), fresh);
     }
 }

@@ -163,7 +163,7 @@ impl TosBackend for ShardedTos {
     }
 
     fn stats(&self) -> BackendStats {
-        self.stats
+        BackendStats { kernel: super::kernel::active_path(), ..self.stats }
     }
 
     fn reset(&mut self) {
@@ -258,6 +258,8 @@ mod tests {
         sh.process_batch(&stream(Resolution::TEST64, 100, 3));
         sh.reset();
         assert!(sh.data().iter().all(|&v| v == 0));
-        assert_eq!(sh.stats(), BackendStats::default());
+        let fresh =
+            BackendStats { kernel: crate::tos::kernel::active_path(), ..Default::default() };
+        assert_eq!(sh.stats(), fresh);
     }
 }

@@ -1,0 +1,128 @@
+//! Integration coverage for the SIMD kernel dispatch layer
+//! (`nmc_tos::tos::kernel`): every path the host can run is swept
+//! exhaustively against the scalar oracle, all four backends are checked
+//! bit-exact under the startup-selected path, and the `NMC_TOS_KERNEL`
+//! override contract is verified (CI runs this file once per forced path).
+
+use nmc_tos::conventional::ConventionalTos;
+use nmc_tos::events::{Event, Resolution};
+use nmc_tos::nmc::{NmcConfig, NmcMacro};
+use nmc_tos::tos::backend::{decrement_clamp_scalar, PatchRect};
+use nmc_tos::tos::kernel::{active_path, available_paths, decrement_clamp_with, KernelPath};
+use nmc_tos::tos::{ShardedTos, TosBackend, TosConfig, TosSurface};
+use nmc_tos::util::rng::Rng;
+
+/// Exhaustive alignment x width x threshold sweep, one dispatch path at a
+/// time: every rect alignment and width inside row buffers from 1 to 67
+/// pixels wide (crossing the 8/16/32-byte lane widths and their +-1
+/// neighbours), at vertical positions covering the first, middle and last
+/// rows (the last row exercises the backward-sliding end-of-slice
+/// window), against the scalar oracle.
+#[test]
+fn exhaustive_alignment_width_threshold_sweep_per_path() {
+    let thresholds = [0u8, 1, 127, 224, 225, 226, 255];
+    let widths: Vec<usize> =
+        (1..=18).chain([23, 24, 25, 31, 32, 33, 39, 40, 41, 63, 64, 67]).collect();
+    for path in available_paths() {
+        for &width in &widths {
+            let data: Vec<u8> = (0..width * 3).map(|i| (i * 151 + 7) as u8).collect();
+            for x0 in 0..width {
+                for x1 in x0..width {
+                    for (y0, y1) in [(0u16, 0u16), (1, 1), (2, 2), (0, 2)] {
+                        let rect = PatchRect { x0: x0 as u16, x1: x1 as u16, y0, y1 };
+                        for &th in &thresholds {
+                            let mut got = data.clone();
+                            let mut want = data.clone();
+                            decrement_clamp_with(path, &mut got, width, 0, rect, th);
+                            decrement_clamp_scalar(&mut want, width, 0, rect, th);
+                            assert_eq!(
+                                got, want,
+                                "path {path} width {width} rect {rect:?} th {th}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn random_events(res: Resolution, n: usize, seed: u64) -> Vec<Event> {
+    let mut rng = Rng::seed_from(seed);
+    (0..n)
+        .map(|i| {
+            Event::on(
+                rng.below(res.width as u64) as u16,
+                rng.below(res.height as u64) as u16,
+                i as u64,
+            )
+        })
+        .collect()
+}
+
+/// All four backends stay bit-exact against the golden surface under the
+/// dispatched kernel, and each reports the active path in its stats —
+/// with the CI matrix forcing each `NMC_TOS_KERNEL` value in turn, this
+/// covers every dispatch path on every backend.
+#[test]
+fn all_backends_bit_exact_and_report_active_path() {
+    let res = Resolution::TEST64;
+    let cfg = TosConfig::default();
+    let mut events = random_events(res, 3_000, 0xD15);
+    let t0 = events.len() as u64;
+    events.push(Event::on(0, 0, t0 + 1));
+    events.push(Event::on(res.width - 1, res.height - 1, t0 + 2));
+
+    let mut golden = TosSurface::new(res, cfg).unwrap();
+    golden.update_batch(&events);
+
+    let backends: Vec<Box<dyn TosBackend>> = vec![
+        Box::new(TosSurface::new(res, cfg).unwrap()),
+        Box::new(ConventionalTos::new(res, cfg, 1.2).unwrap()),
+        Box::new(NmcMacro::new(res, NmcConfig { tos: cfg, ..NmcConfig::default() }).unwrap()),
+        Box::new(ShardedTos::new(res, cfg, 4).unwrap()),
+    ];
+    for mut b in backends {
+        b.process_batch(&events);
+        assert_eq!(b.tos_view(), golden.data(), "{} diverged", b.name());
+        assert_eq!(b.stats().kernel, active_path(), "{} kernel report", b.name());
+    }
+}
+
+/// The startup selection honours `NMC_TOS_KERNEL` when it names a path
+/// this host can run, and otherwise picks a runnable path on its own.
+/// (The selection is process-wide and latched, so this is the only test
+/// binary assumption about the variable; the CI matrix re-runs the whole
+/// file under each forced value.)
+#[test]
+fn selection_honours_env_override() {
+    let selected = active_path();
+    assert!(selected.runnable(), "selected path must be runnable");
+    assert!(available_paths().contains(&selected));
+    if let Ok(v) = std::env::var("NMC_TOS_KERNEL") {
+        if let Some(forced) = KernelPath::parse(&v) {
+            if forced.runnable() {
+                assert_eq!(selected, forced, "override {v} not honoured");
+            }
+        }
+    }
+}
+
+/// Sharded band slices never let the kernel touch rows outside the band:
+/// run a stream whose patches all straddle band boundaries at every
+/// runnable path's lane width and compare against golden.
+#[test]
+fn band_boundary_patches_exact_under_dispatch() {
+    let res = Resolution::TEST64;
+    let cfg = TosConfig::default();
+    let mut events = Vec::new();
+    for i in 0..400u64 {
+        // hammer rows around the 2-row band boundaries from both sides
+        events.push(Event::on((i % 64) as u16, (1 + (i % 4) * 2) as u16, i));
+    }
+    let mut golden = TosSurface::new(res, cfg).unwrap();
+    golden.update_batch(&events);
+    let mut sh = ShardedTos::new(res, cfg, 32).unwrap();
+    sh.process_batch(&events);
+    assert_eq!(golden.data(), sh.data());
+}

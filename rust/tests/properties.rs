@@ -9,6 +9,7 @@ use nmc_tos::events::{stream, Event, Polarity, Resolution};
 use nmc_tos::nmc::{calib, NmcConfig, NmcMacro};
 use nmc_tos::stcf::{Stcf, StcfConfig};
 use nmc_tos::tos::backend::{decrement_clamp, decrement_clamp_scalar, PatchRect};
+use nmc_tos::tos::kernel::{available_paths, decrement_clamp_with};
 use nmc_tos::tos::{encoding, ShardedTos, TosBackend, TosConfig, TosSurface};
 use nmc_tos::util::proptest::check;
 use nmc_tos::util::rng::Rng;
@@ -151,10 +152,47 @@ fn prop_vector_kernel_equals_scalar() {
         let th = rng.below(256) as u8;
         let rect = PatchRect { x0, x1, y0, y1 };
         let mut a = data.clone();
-        let mut b = data;
+        let mut b = data.clone();
         decrement_clamp(&mut a, width, base_row, rect, th);
         decrement_clamp_scalar(&mut b, width, base_row, rect, th);
         assert_eq!(a, b, "w={width} rows={rows} base={base_row} rect={rect:?} th={th}");
+        // and every explicitly-dispatched path this host can run, not just
+        // the startup selection
+        for path in available_paths() {
+            let mut c = data.clone();
+            decrement_clamp_with(path, &mut c, width, base_row, rect, th);
+            assert_eq!(c, b, "{path}: w={width} base={base_row} rect={rect:?} th={th}");
+        }
+    });
+}
+
+/// PROPERTY: the vectorized masked-lane `Stcf::check` is observationally
+/// identical to the original early-exit nested-loop classifier
+/// (`check_scalar`) on random event streams — same per-event verdicts and
+/// same telemetry — for any radius/support/window draw, including
+/// non-monotone timestamps (future neighbours must still count, as in the
+/// scalar code's saturating subtraction).
+#[test]
+fn prop_stcf_vectorized_equals_scalar() {
+    check(0x57CF2, 20, |rng| {
+        let res = Resolution::TEST64;
+        let cfg = StcfConfig {
+            tw_us: rng.below(20_000),
+            radius: rng.below(4) as u16,
+            support: rng.below(5) as u32,
+            any_polarity: true,
+        };
+        let mut vec = Stcf::new(res, cfg);
+        let mut scl = Stcf::new(res, cfg);
+        let mut events = random_events(rng, 1_500, res);
+        // splice in out-of-order timestamps so "future" neighbours occur
+        for i in (0..events.len()).step_by(97) {
+            events[i].t = rng.below(40_000);
+        }
+        for (i, e) in events.iter().enumerate() {
+            assert_eq!(vec.check(e), scl.check_scalar(e), "event {i} cfg {cfg:?}");
+        }
+        assert_eq!(vec.stats(), scl.stats());
     });
 }
 

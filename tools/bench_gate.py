@@ -1,0 +1,337 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for the `nmc-tos-bench-v1` JSON emitted by
+`cargo bench` (BENCH_tos.json / BENCH_stcf.json / BENCH_e2e.json /
+BENCH_serving.json).
+
+Dependency-free (stdlib only). Two kinds of checks:
+
+* **Ratio metrics** — computed *within* one fresh file, so they are
+  robust to machine speed: the dispatched golden kernel vs the scalar
+  reference loop, the widest SIMD `kernel_*` row vs the `kernel_swar64`
+  row (acceptance floor: >= 1.5x on full runs), and the vectorized STCF
+  classifier vs its scalar reference. Ratios are also diffed against the
+  committed baseline's ratios when one exists.
+* **Tracked absolute rows** — `events_per_sec` of a fixed set of rows
+  diffed against the committed baseline, failing on a regression beyond
+  the tolerance. Absolute comparisons only run when the fresh and
+  baseline files agree on `smoke` and `kernel` (numbers from different
+  run modes or dispatch paths are not comparable).
+
+A machine-readable diff is always written (`--out`, default
+`bench_gate_diff.json`) so CI can upload it as an artifact. Missing
+baseline files are a *pass* with a bootstrap notice: the first
+toolchain-equipped run commits `bench/baseline/` and arms the gate.
+
+Usage:
+    python3 tools/bench_gate.py \
+        --fresh-dir . --baseline-dir bench/baseline \
+        --out bench_gate_diff.json [--tolerance 0.15] [--smoke-tolerance 0.40]
+
+Exit status: 0 = pass (including bootstrap), 1 = regression or floor
+violation, 2 = malformed input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+SCHEMA = "nmc-tos-bench-v1"
+
+BENCH_FILES = [
+    "BENCH_tos.json",
+    "BENCH_stcf.json",
+    "BENCH_e2e.json",
+    "BENCH_serving.json",
+]
+
+# Rows whose absolute events_per_sec is gated against the baseline.
+# Everything else in the files is report-only context in the diff.
+TRACKED_ROWS = {
+    "BENCH_tos.json": [
+        "tos_update/davis240/p7/golden",
+        "tos_update/davis240/p7/scalar_ref",
+        "tos_update/davis240/golden/200k_events",
+        "tos_update/davis240/sharded4/200k_events",
+    ],
+    "BENCH_stcf.json": [
+        "stcf/scattered/r1/200k_events",
+        "stcf/clustered/r1/200k_events",
+    ],
+    "BENCH_e2e.json": [
+        "e2e/no_fbf/100k_events",
+        "e2e/sink_recording/100k_events",
+        "e2e/sink_stats1k/100k_events",
+    ],
+    "BENCH_serving.json": [
+        "serve/golden/4streams/60k_each",
+        "serve/sharded/4streams/60k_each",
+    ],
+}
+
+# Tracked row-name prefixes (rows matching a prefix are gated when
+# present in both files — kernel_* rows depend on the host ISA, so the
+# exact set is not fixed).
+TRACKED_PREFIXES = {
+    "BENCH_tos.json": ["tos_update/davis240/p7/kernel_"],
+}
+
+SIMD_PATHS = ("avx2", "sse2", "neon")
+SIMD_FLOOR = 1.5  # ISSUE 6 acceptance: widest SIMD >= 1.5x swar64 (full runs)
+
+
+def load(path):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"{path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    rows = {r["name"]: float(r["events_per_sec"]) for r in doc.get("rows", [])}
+    return doc, rows
+
+
+def ratio(rows, num, den):
+    """events_per_sec ratio num/den, or None if either row is absent."""
+    if num in rows and den in rows and rows[den] > 0:
+        return rows[num] / rows[den]
+    return None
+
+
+def ratio_metrics(fname, rows):
+    """Within-file ratio metrics for one bench file: {metric: value}."""
+    out = {}
+    if fname == "BENCH_tos.json":
+        r = ratio(rows, "tos_update/davis240/p7/golden", "tos_update/davis240/p7/scalar_ref")
+        if r is not None:
+            out["golden_vs_scalar"] = r
+        swar = rows.get("tos_update/davis240/p7/kernel_swar64")
+        simd = [
+            rows[f"tos_update/davis240/p7/kernel_{p}"]
+            for p in SIMD_PATHS
+            if f"tos_update/davis240/p7/kernel_{p}" in rows
+        ]
+        if swar and simd:
+            out["simd_vs_swar64"] = max(simd) / swar
+    elif fname == "BENCH_stcf.json":
+        pairs = [
+            (n, n.rsplit("/", 1)[0] + "/scalar_ref")
+            for n in rows
+            if n.endswith("/200k_events")
+        ]
+        ratios = [ratio(rows, n, s) for n, s in pairs]
+        ratios = [r for r in ratios if r is not None]
+        if ratios:
+            out["vectorized_vs_scalar_min"] = min(ratios)
+    return out
+
+
+def gate_file(fname, fresh_dir, baseline_dir, tol, smoke_tol):
+    """Gate one bench file; returns (report_dict, failures: [str])."""
+    fresh_path = os.path.join(fresh_dir, fname)
+    base_path = os.path.join(baseline_dir, fname)
+    report = {"file": fname, "status": "pass", "checks": [], "notes": []}
+    failures = []
+
+    if not os.path.exists(fresh_path):
+        report["status"] = "missing-fresh"
+        report["notes"].append(f"{fresh_path} not found — bench did not emit it")
+        failures.append(f"{fname}: fresh results missing")
+        return report, failures
+
+    fresh_doc, fresh_rows = load(fresh_path)
+    report["fresh"] = {
+        "smoke": fresh_doc.get("smoke"),
+        "kernel": fresh_doc.get("kernel"),
+        "rows": len(fresh_rows),
+    }
+    fresh_ratios = ratio_metrics(fname, fresh_rows)
+    report["ratios"] = fresh_ratios
+
+    # Acceptance floor: only meaningful on full (non-smoke) runs — smoke
+    # iteration counts are too small to trust.
+    if fname == "BENCH_tos.json" and not fresh_doc.get("smoke"):
+        simd = fresh_ratios.get("simd_vs_swar64")
+        if simd is not None:
+            ok = simd >= SIMD_FLOOR
+            report["checks"].append(
+                {
+                    "check": "simd_floor",
+                    "metric": "simd_vs_swar64",
+                    "value": simd,
+                    "floor": SIMD_FLOOR,
+                    "ok": ok,
+                }
+            )
+            if not ok:
+                failures.append(
+                    f"{fname}: widest SIMD kernel only {simd:.2f}x swar64 "
+                    f"(floor {SIMD_FLOOR}x)"
+                )
+
+    if not os.path.exists(base_path):
+        report["status"] = "bootstrap"
+        report["notes"].append(
+            f"no baseline at {base_path} — gate passes; commit this run's "
+            f"JSON there to arm it"
+        )
+        return report, failures
+
+    base_doc, base_rows = load(base_path)
+    report["baseline"] = {
+        "smoke": base_doc.get("smoke"),
+        "kernel": base_doc.get("kernel"),
+        "rows": len(base_rows),
+    }
+    base_ratios = ratio_metrics(fname, base_rows)
+
+    effective_tol = smoke_tol if fresh_doc.get("smoke") else tol
+    report["tolerance"] = effective_tol
+
+    comparable = fresh_doc.get("smoke") == base_doc.get("smoke") and fresh_doc.get(
+        "kernel"
+    ) == base_doc.get("kernel")
+    if not comparable:
+        report["notes"].append(
+            "smoke/kernel mismatch vs baseline "
+            f"(fresh smoke={fresh_doc.get('smoke')} kernel={fresh_doc.get('kernel')}, "
+            f"baseline smoke={base_doc.get('smoke')} kernel={base_doc.get('kernel')}) "
+            "— absolute row and ratio diffs are report-only"
+        )
+
+    # Ratio diffs vs baseline (gated only when run modes match).
+    for metric, fresh_v in sorted(fresh_ratios.items()):
+        base_v = base_ratios.get(metric)
+        if base_v is None or base_v <= 0:
+            continue
+        rel = fresh_v / base_v
+        ok = (not comparable) or rel >= 1.0 - effective_tol
+        report["checks"].append(
+            {
+                "check": "ratio",
+                "metric": metric,
+                "fresh": fresh_v,
+                "baseline": base_v,
+                "fresh_vs_baseline": rel,
+                "gated": comparable,
+                "ok": ok,
+            }
+        )
+        if not ok:
+            failures.append(
+                f"{fname}: ratio {metric} regressed {fresh_v:.2f} vs "
+                f"baseline {base_v:.2f} ({(1 - rel) * 100:.0f}% worse, "
+                f"tolerance {effective_tol * 100:.0f}%)"
+            )
+
+    # Tracked absolute rows.
+    tracked = set(TRACKED_ROWS.get(fname, []))
+    for prefix in TRACKED_PREFIXES.get(fname, []):
+        tracked.update(n for n in fresh_rows if n.startswith(prefix))
+    for name in sorted(tracked):
+        fresh_v = fresh_rows.get(name)
+        base_v = base_rows.get(name)
+        if fresh_v is None:
+            report["notes"].append(f"tracked row {name} missing from fresh results")
+            failures.append(f"{fname}: tracked row {name} disappeared")
+            continue
+        if base_v is None or base_v <= 0:
+            report["notes"].append(f"tracked row {name} has no baseline — report-only")
+            continue
+        rel = fresh_v / base_v
+        ok = (not comparable) or rel >= 1.0 - effective_tol
+        report["checks"].append(
+            {
+                "check": "row",
+                "row": name,
+                "fresh_events_per_sec": fresh_v,
+                "baseline_events_per_sec": base_v,
+                "fresh_vs_baseline": rel,
+                "gated": comparable,
+                "ok": ok,
+            }
+        )
+        if not ok:
+            failures.append(
+                f"{fname}: {name} regressed to {rel * 100:.0f}% of baseline "
+                f"({fresh_v / 1e6:.2f}M vs {base_v / 1e6:.2f}M events/s, "
+                f"tolerance {effective_tol * 100:.0f}%)"
+            )
+
+    if failures:
+        report["status"] = "fail"
+    return report, failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh-dir", default=".", help="dir with freshly emitted BENCH_*.json")
+    ap.add_argument(
+        "--baseline-dir", default="bench/baseline", help="dir with committed baseline JSON"
+    )
+    ap.add_argument("--out", default="bench_gate_diff.json", help="diff artifact path")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.15,
+        help="max relative regression on full runs (default 0.15)",
+    )
+    ap.add_argument(
+        "--smoke-tolerance",
+        type=float,
+        default=0.40,
+        help="max relative regression on smoke runs (default 0.40; smoke "
+        "iteration counts are tiny, so the band is wide)",
+    )
+    ap.add_argument(
+        "--files",
+        nargs="*",
+        default=BENCH_FILES,
+        help="bench files to gate (default: all four)",
+    )
+    args = ap.parse_args(argv)
+
+    reports, failures = [], []
+    try:
+        for fname in args.files:
+            rep, fails = gate_file(
+                fname, args.fresh_dir, args.baseline_dir, args.tolerance, args.smoke_tolerance
+            )
+            reports.append(rep)
+            failures.extend(fails)
+    except (ValueError, KeyError, json.JSONDecodeError) as e:
+        print(f"bench_gate: malformed input: {e}", file=sys.stderr)
+        return 2
+
+    diff = {
+        "schema": "nmc-tos-bench-gate-v1",
+        "status": "fail" if failures else "pass",
+        "tolerance": args.tolerance,
+        "smoke_tolerance": args.smoke_tolerance,
+        "failures": failures,
+        "files": reports,
+    }
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(diff, f, indent=2)
+        f.write("\n")
+
+    for rep in reports:
+        print(f"[{rep['status']:>9}] {rep['file']}", end="")
+        if rep.get("ratios"):
+            pretty = ", ".join(f"{k}={v:.2f}x" for k, v in sorted(rep["ratios"].items()))
+            print(f"  ({pretty})", end="")
+        print()
+        for note in rep.get("notes", []):
+            print(f"            - {note}")
+    if failures:
+        print("\nbench_gate: FAIL")
+        for f_ in failures:
+            print(f"  - {f_}")
+        print(f"\ndiff written to {args.out}")
+        return 1
+    print(f"\nbench_gate: pass — diff written to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

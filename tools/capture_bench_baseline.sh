@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Capture a full (non-smoke) bench baseline into bench/baseline/.
+#
+# Run this on the reference machine (or via the `bench-baseline`
+# workflow_dispatch job in CI), review the numbers, then commit the
+# four JSON files. The bench-regression gate (tools/bench_gate.py)
+# stays in bootstrap/pass mode until these files exist.
+#
+# Usage: tools/capture_bench_baseline.sh
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "== full cargo bench (this takes a few minutes) =="
+cargo bench --bench tos_update
+cargo bench --bench stcf_filter
+cargo bench --bench end_to_end
+cargo bench --bench serving
+
+mkdir -p bench/baseline
+for f in BENCH_tos.json BENCH_stcf.json BENCH_e2e.json BENCH_serving.json; do
+    test -s "$f" || { echo "error: $f was not emitted" >&2; exit 1; }
+    cp -v "$f" "bench/baseline/$f"
+done
+
+echo
+echo "== sanity: gate the fresh run against the captured baseline =="
+python3 tools/bench_gate.py --fresh-dir . --baseline-dir bench/baseline \
+    --out bench_gate_diff.json
+
+echo
+echo "Baseline captured. Review bench/baseline/*.json and commit them:"
+echo "    git add bench/baseline && git commit -m 'Capture bench baseline'"
