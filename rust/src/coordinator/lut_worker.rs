@@ -1,0 +1,284 @@
+//! The async-refresh LUT worker: the luvHarris frame-path decoupling as
+//! a reusable, model-checkable protocol.
+//!
+//! [`Pipeline::run_stream_async`](super::Pipeline) used to inline this
+//! machinery; it now lives here so the channel protocol can be loom-model
+//! checked in isolation (see the `loom_tests` module and DESIGN.md
+//! §Correctness tooling). The protocol, unchanged from PR 3/4:
+//!
+//! * **snapshot channel** (depth 1, `try_send`): the event loop *offers*
+//!   TOS snapshots; a busy worker means the offer is dropped, never
+//!   queued — luvHarris "as fast as possible" semantics, the event path
+//!   never blocks on the frame path.
+//! * **double-buffered snapshot scratch**: two owned buffers rotate
+//!   through a recycle channel, so one can sit in the depth-1 channel
+//!   while the worker computes from the other; a full channel skips the
+//!   snapshot copy outright instead of cloning a frame to drop it.
+//! * **LUT + LUT-recycle channels** (unbounded): finished LUTs flow back
+//!   to the event loop, consumed LUT buffers flow forward for reuse —
+//!   the whole refresh round-trip is allocation-free at steady state.
+//!
+//! All channel/thread primitives come from [`crate::util::sync`], so a
+//! `--cfg loom` build checks every interleaving of offer / compute /
+//! pickup / shutdown, including the final drain after `finish`.
+
+use anyhow::Result;
+
+use crate::util::sync::{mpsc, thread};
+
+/// Handle to the background LUT-compute thread plus the event-loop side
+/// of its channel protocol. Built by [`LutWorker::spawn`]; drive it with
+/// [`offer_snapshot`](LutWorker::offer_snapshot) /
+/// [`poll_luts`](LutWorker::poll_luts), and always end with
+/// [`finish`](LutWorker::finish) (dropping the handle without finishing
+/// leaves the thread to exit on its own but loses its error/count).
+pub struct LutWorker {
+    snap_tx: Option<mpsc::SyncSender<Vec<u8>>>,
+    lut_rx: mpsc::Receiver<Vec<f32>>,
+    recycle_rx: mpsc::Receiver<Vec<u8>>,
+    lut_recycle_tx: mpsc::Sender<Vec<f32>>,
+    /// Free snapshot buffers (the double-buffer pool).
+    snap_bufs: Vec<Vec<u8>>,
+    worker: Option<thread::JoinHandle<Result<u64>>>,
+}
+
+impl std::fmt::Debug for LutWorker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LutWorker").field("free_snap_bufs", &self.snap_bufs.len()).finish()
+    }
+}
+
+impl LutWorker {
+    /// Spawn the worker thread. `init` runs *on the worker* and builds
+    /// the compute function (for the real pipeline: load the manifest +
+    /// engine, returning a closure over `HarrisEngine::compute_u8_into`);
+    /// an `init` error surfaces from [`finish`](LutWorker::finish), after
+    /// the event loop completes — matching the old inline behaviour where
+    /// a missing artifact failed the run at join time, not mid-stream.
+    pub fn spawn<C, F>(init: F) -> LutWorker
+    where
+        C: FnMut(&[u8], &mut Vec<f32>) -> Result<()>,
+        F: FnOnce() -> Result<C> + Send + 'static,
+    {
+        let (snap_tx, snap_rx) = mpsc::sync_channel::<Vec<u8>>(1);
+        let (lut_tx, lut_rx) = mpsc::channel::<Vec<f32>>();
+        let (recycle_tx, recycle_rx) = mpsc::channel::<Vec<u8>>();
+        let (lut_recycle_tx, lut_recycle_rx) = mpsc::channel::<Vec<f32>>();
+        let worker = thread::spawn(move || -> Result<u64> {
+            let mut compute = init()?;
+            let mut computed = 0u64;
+            while let Ok(tos) = snap_rx.recv() {
+                // compute into a LUT buffer the event loop has finished
+                // with (empty only for the first refreshes)
+                let mut lut = lut_recycle_rx.try_recv().unwrap_or_default();
+                compute(&tos, &mut lut)?;
+                // hand the snapshot buffer back for reuse; if the event
+                // loop already finished, the buffer just drops
+                let _ = recycle_tx.send(tos);
+                computed += 1;
+                if lut_tx.send(lut).is_err() {
+                    break;
+                }
+            }
+            Ok(computed)
+        });
+        LutWorker {
+            snap_tx: Some(snap_tx),
+            lut_rx,
+            recycle_rx,
+            lut_recycle_tx,
+            snap_bufs: vec![Vec::new(), Vec::new()],
+            worker: Some(worker),
+        }
+    }
+
+    /// Offer a snapshot to the worker: reclaim any buffers the worker
+    /// has finished with, and only if one is free run `fill` on it and
+    /// `try_send`. A full channel (worker busy) or a dead worker hands
+    /// the buffer back to the pool — the offer is dropped, the caller
+    /// never blocks. Returns whether the snapshot reached the channel.
+    pub fn offer_snapshot(&mut self, fill: impl FnOnce(&mut Vec<u8>)) -> bool {
+        while let Ok(buf) = self.recycle_rx.try_recv() {
+            self.snap_bufs.push(buf);
+        }
+        let Some(mut buf) = self.snap_bufs.pop() else {
+            return false;
+        };
+        fill(&mut buf);
+        let tx = self.snap_tx.as_ref().expect("offer after finish");
+        match tx.try_send(buf) {
+            Ok(()) => true,
+            Err(mpsc::TrySendError::Full(buf)) | Err(mpsc::TrySendError::Disconnected(buf)) => {
+                // channel full (offer dropped) or worker exited early
+                // (join surfaces the error); either way keep the buffer
+                self.snap_bufs.push(buf);
+                false
+            }
+        }
+    }
+
+    /// Non-blocking pickup of every LUT the worker has finished: `apply`
+    /// each, then recycle its buffer for the next refresh. Returns how
+    /// many were applied.
+    pub fn poll_luts(&mut self, mut apply: impl FnMut(&[f32])) -> u64 {
+        let mut applied = 0u64;
+        while let Ok(lut) = self.lut_rx.try_recv() {
+            apply(&lut);
+            applied += 1;
+            // return the consumed buffer for the next refresh
+            let _ = self.lut_recycle_tx.send(lut);
+        }
+        applied
+    }
+
+    /// Close the snapshot channel, join the worker, and drain every
+    /// remaining LUT into `apply` (no recycling — nobody left to reuse
+    /// them). Returns `(tail_applied, computed)`: LUTs applied by this
+    /// drain, and the worker's total compute count. Surfaces the
+    /// worker's error (bad artifacts, compute failure) or panic.
+    pub fn finish(mut self, mut apply: impl FnMut(&[f32])) -> Result<(u64, u64)> {
+        drop(self.snap_tx.take()); // worker sees the channel close and exits
+        let worker = self.worker.take().expect("finish called once");
+        let computed = worker.join().map_err(|_| anyhow::anyhow!("LUT worker panicked"))??;
+        let mut tail = 0u64;
+        while let Ok(lut) = self.lut_rx.try_recv() {
+            apply(&lut);
+            tail += 1;
+        }
+        Ok((tail, computed))
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    /// The full offer → compute → pickup → finish round-trip with a
+    /// trivial compute fn, including buffer recycling accounting.
+    #[test]
+    fn round_trip_applies_every_computed_lut() {
+        let mut worker = LutWorker::spawn(|| {
+            Ok(|tos: &[u8], lut: &mut Vec<f32>| {
+                lut.clear();
+                lut.extend(tos.iter().map(|&v| v as f32));
+                Ok(())
+            })
+        });
+        let mut offered = 0u64;
+        for round in 0u8..20 {
+            if worker.offer_snapshot(|buf| {
+                buf.clear();
+                buf.extend_from_slice(&[round, round, round]);
+            }) {
+                offered += 1;
+            }
+            thread::yield_now();
+        }
+        let mut applied = 0u64;
+        for _ in 0..200 {
+            applied += worker.poll_luts(|lut| assert_eq!(lut.len(), 3));
+            thread::yield_now();
+        }
+        let (tail, computed) = worker.finish(|lut| assert_eq!(lut.len(), 3)).unwrap();
+        assert_eq!(computed, offered, "every accepted snapshot is computed");
+        assert_eq!(applied + tail, computed, "every computed LUT is applied");
+    }
+
+    /// An init error (e.g. missing artifacts) surfaces from finish, not
+    /// mid-stream; offers in between are dropped cleanly.
+    #[test]
+    fn init_error_surfaces_at_finish() {
+        let mut worker = LutWorker::spawn(
+            || -> Result<fn(&[u8], &mut Vec<f32>) -> Result<()>> {
+                anyhow::bail!("no artifacts here")
+            },
+        );
+        for _ in 0..4 {
+            let _ = worker.offer_snapshot(|buf| buf.push(1));
+        }
+        let err = worker.finish(|_| {}).unwrap_err();
+        assert!(err.to_string().contains("no artifacts"), "{err:#}");
+    }
+
+    /// A compute error also surfaces at finish.
+    #[test]
+    fn compute_error_surfaces_at_finish() {
+        let mut worker =
+            LutWorker::spawn(|| Ok(|_: &[u8], _: &mut Vec<f32>| anyhow::bail!("engine died")));
+        // keep offering until one lands (the worker may not have started)
+        while !worker.offer_snapshot(|buf| buf.push(1)) {
+            thread::yield_now();
+        }
+        let err = worker.finish(|_| {}).unwrap_err();
+        assert!(err.to_string().contains("engine died"), "{err:#}");
+    }
+}
+
+/// Loom models of the double-buffered snapshot/recycle protocol: offers
+/// racing the worker's recv/compute/recycle cycle, pickup racing the
+/// final drain, and shutdown while a snapshot is in flight. Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_tests`.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+
+    fn model(f: impl Fn() + Sync + Send + 'static) {
+        let mut b = loom::model::Builder::new();
+        if b.preemption_bound.is_none() {
+            b.preemption_bound = Some(3);
+        }
+        b.check(f);
+    }
+
+    /// Under every schedule: no offered buffer is lost or duplicated
+    /// (the pool + channels always account for exactly two), every
+    /// accepted snapshot is computed, and every computed LUT is applied
+    /// either by pickup or by the finish drain — the invariant behind
+    /// the pipeline's `lut_refreshes <= computed` debug assert.
+    #[test]
+    fn loom_offer_compute_pickup_finish_conserves_buffers() {
+        model(|| {
+            let mut worker = LutWorker::spawn(|| {
+                Ok(|tos: &[u8], lut: &mut Vec<f32>| {
+                    lut.clear();
+                    lut.push(tos.len() as f32);
+                    Ok(())
+                })
+            });
+            let mut offered = 0u64;
+            let mut applied = 0u64;
+            for round in 0u8..2 {
+                if worker.offer_snapshot(|buf| {
+                    buf.clear();
+                    buf.push(round);
+                }) {
+                    offered += 1;
+                }
+                applied += worker.poll_luts(|lut| assert_eq!(lut.len(), 1));
+            }
+            let (tail, computed) = worker.finish(|lut| assert_eq!(lut.len(), 1)).unwrap();
+            assert_eq!(computed, offered, "accepted snapshots all computed");
+            assert_eq!(applied + tail, computed, "computed LUTs all applied");
+            assert!(applied + tail <= offered);
+        });
+    }
+
+    /// Shutdown with a snapshot possibly still in the depth-1 channel:
+    /// the worker must drain it (or see the close) and exit; finish must
+    /// never deadlock and the final counts must still balance.
+    #[test]
+    fn loom_finish_races_inflight_snapshot() {
+        model(|| {
+            let mut worker =
+                LutWorker::spawn(|| Ok(|_: &[u8], lut: &mut Vec<f32>| {
+                    lut.clear();
+                    lut.push(0.0);
+                    Ok(())
+                }));
+            let accepted = worker.offer_snapshot(|buf| buf.push(7));
+            let (tail, computed) = worker.finish(|_| {}).unwrap();
+            assert_eq!(computed, accepted as u64);
+            assert!(tail <= computed);
+        });
+    }
+}

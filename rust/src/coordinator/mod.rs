@@ -40,15 +40,16 @@
 //! — the Harris graph was AOT-lowered at build time and runs through the
 //! PJRT CPU client.
 
+pub mod lut_worker;
 pub mod sink;
 
 use std::path::PathBuf;
 use std::str::FromStr;
-use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+pub use lut_worker::LutWorker;
 pub use sink::{Corner, CornerSink, LiveStats, NullSink, RecordingSink};
 
 use crate::conventional::ConventionalTos;
@@ -633,38 +634,16 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
         let dir = self.cfg.artifact_dir.clone().unwrap_or_else(default_artifact_dir);
         let artifact = self.cfg.artifact.clone();
 
-        let (snap_tx, snap_rx) = mpsc::sync_channel::<Vec<u8>>(1);
-        let (lut_tx, lut_rx) = mpsc::channel::<Vec<f32>>();
-        let (recycle_tx, recycle_rx) = mpsc::channel::<Vec<u8>>();
-        let (lut_recycle_tx, lut_recycle_rx) = mpsc::channel::<Vec<f32>>();
-        let worker = std::thread::spawn(move || -> Result<u64> {
+        // The double-buffered snapshot / LUT / recycle channel protocol
+        // lives in [`LutWorker`] (loom-model checked there); the worker
+        // loads its own engine so the event path shares nothing with the
+        // frame path.
+        let mut worker = LutWorker::spawn(move || {
             let manifest = Manifest::load(&dir)?;
             let mut engine = HarrisEngine::load(&manifest, &artifact)?;
-            let mut computed = 0u64;
-            while let Ok(tos) = snap_rx.recv() {
-                // compute into a LUT buffer the event loop has finished
-                // with (empty only for the first refreshes): together
-                // with the snapshot recycle channel this makes the whole
-                // refresh round-trip allocation-free at steady state
-                let mut lut = lut_recycle_rx.try_recv().unwrap_or_default();
-                engine.compute_u8_into(&tos, &mut lut)?;
-                // hand the snapshot buffer back for reuse; if the event
-                // loop already finished, the buffer just drops
-                let _ = recycle_tx.send(tos);
-                computed += 1;
-                if lut_tx.send(lut).is_err() {
-                    break;
-                }
-            }
-            Ok(computed)
+            Ok(move |tos: &[u8], lut: &mut Vec<f32>| engine.compute_u8_into(tos, lut))
         });
 
-        // Double-buffered snapshot scratch: one buffer can sit in the
-        // depth-1 channel while the worker computes from the other. When
-        // both are in flight the offer is skipped outright — previously a
-        // full frame was cloned per offer and dropped whenever the
-        // channel was full.
-        let mut snap_bufs: Vec<Vec<u8>> = vec![Vec::new(), Vec::new()];
         let mut st = StreamState::new(&self.cfg, reserve_hint(source));
         let mut since_snapshot = 0usize;
         let batching = self.backend.prefers_batching();
@@ -705,37 +684,14 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
                     // the detector actually consumed, not what the worker
                     // computed (a final in-flight LUT may arrive after the
                     // last score)
-                    while let Ok(lut) = lut_rx.try_recv() {
-                        self.detector.refresh_lut(&lut);
-                        st.lut_refreshes += 1;
-                        // return the consumed buffer for the next refresh
-                        let _ = lut_recycle_tx.send(lut);
-                    }
+                    st.lut_refreshes += worker.poll_luts(|lut| self.detector.refresh_lut(lut));
                     since_snapshot += 1;
                     if since_snapshot >= offer_every {
                         since_snapshot = 0;
                         flush_pending(&mut self.backend, &mut st.pending);
-                        // drop the offer if the worker is busy (luvHarris
-                        // "as fast as possible" semantics, no backpressure
-                        // on events): reclaim buffers the worker has
-                        // finished with, and only snapshot if one is free
-                        while let Ok(buf) = recycle_rx.try_recv() {
-                            snap_bufs.push(buf);
-                        }
-                        if let Some(mut buf) = snap_bufs.pop() {
-                            self.backend.snapshot_into(&mut buf);
-                            match snap_tx.try_send(buf) {
-                                Ok(()) => {}
-                                Err(mpsc::TrySendError::Full(buf))
-                                | Err(mpsc::TrySendError::Disconnected(buf)) => {
-                                    // channel full (offer dropped) or
-                                    // worker exited early (join surfaces
-                                    // the error); either way keep the
-                                    // buffer
-                                    snap_bufs.push(buf);
-                                }
-                            }
-                        }
+                        // a busy worker drops the offer (luvHarris "as fast
+                        // as possible" semantics, no backpressure on events)
+                        worker.offer_snapshot(|buf| self.backend.snapshot_into(buf));
                     }
 
                     let score = self.detector.score(ev);
@@ -747,15 +703,11 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
         }
         flush_pending(&mut self.backend, &mut st.pending);
 
-        drop(snap_tx);
-        let computed = worker.join().map_err(|_| anyhow::anyhow!("LUT worker panicked"))??;
-        // the worker has exited: drain every remaining LUT into the final
-        // detector state, so each counted refresh was actually applied
-        // (no recycling needed — there is nobody left to reuse them)
-        while let Ok(lut) = lut_rx.try_recv() {
-            self.detector.refresh_lut(&lut);
-            st.lut_refreshes += 1;
-        }
+        // shut the worker down and drain every remaining LUT into the
+        // final detector state, so each counted refresh was actually
+        // applied
+        let (tail, computed) = worker.finish(|lut| self.detector.refresh_lut(lut))?;
+        st.lut_refreshes += tail;
         debug_assert!(st.lut_refreshes <= computed);
 
         Ok(self.report(st, start.elapsed().as_secs_f64()))

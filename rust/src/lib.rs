@@ -69,6 +69,12 @@
 //! PipelineConfig::davis240())` after `make artifacts`.
 
 #![warn(missing_docs)]
+// `unsafe` is denied crate-wide; only `tos::kernel` and `stcf` (the two
+// explicit-SIMD modules) opt back in with `#![allow(unsafe_code)]`, and
+// every block there carries a `// SAFETY:` comment. `tools/lint_gate.py`
+// enforces the allowlist and the comment discipline; `deny` (not
+// `forbid`) is what makes the per-module opt-in possible.
+#![deny(unsafe_code)]
 
 pub mod conventional;
 pub mod util;

@@ -31,6 +31,10 @@
 //! Every command prints the paper-comparable rows and (with `--json PATH`)
 //! dumps machine-readable results.
 
+// the binary has no business doing unsafe work — all SIMD lives behind
+// the library's `tos::kernel` / `stcf` allowlist
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};

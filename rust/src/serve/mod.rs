@@ -39,9 +39,6 @@ pub mod wire;
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::thread;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
@@ -50,6 +47,10 @@ use crate::coordinator::sink::{CornerSink, NullSink};
 use crate::coordinator::{make_backend, make_detector, DynPipeline, PipelineConfig, RunReport};
 use crate::events::source::{EventSource, TcpStreamSource};
 use crate::events::{Event, Resolution};
+// every sync primitive comes from the shim so the loom models below (and
+// in pool.rs) check the exact code production runs — see util::sync docs
+use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::{mpsc, run_isolated, thread, Arc, Mutex};
 
 pub use pool::{EnginePool, PoolStats};
 pub use wire::{Hello, Summary, WireSink};
@@ -322,7 +323,7 @@ fn worker_loop(shared: &Shared, rx: &Mutex<mpsc::Receiver<Session>>) {
         // a panicking session must not take its worker (and a slice of
         // server capacity) down with it: catch the unwind, count it as a
         // failed session, and keep serving
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match session {
+        let outcome = run_isolated(|| match session {
             Session::Tcp(stream) => run_tcp_session(shared, stream),
             Session::Local { stream_id, res, mut source, reply } => {
                 let result = run_session(shared, stream_id, res, &mut source, &mut NullSink);
@@ -338,7 +339,7 @@ fn worker_loop(shared: &Shared, rx: &Mutex<mpsc::Receiver<Session>>) {
                     }
                 }
             }
-        }));
+        });
         shared.active.fetch_sub(1, Ordering::SeqCst);
         match outcome {
             Ok(Ok(())) => {}
@@ -681,5 +682,127 @@ mod tests {
         let mut out = Vec::new();
         while span.next_chunk(&mut out).unwrap() > 0 {}
         assert!((span.span_s() - 2.0).abs() < 1e-9);
+    }
+}
+
+/// Loom models of the server's synchronization protocol: the rendezvous
+/// session handoff, shutdown racing an in-flight session, failure
+/// isolation, and two workers contending for the shared queue. Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_tests`
+/// (see DESIGN.md §Correctness tooling). Every sync primitive these
+/// paths touch — including the shim's own rendezvous channel — comes
+/// from `util::sync`, so loom explores the real lock/wait protocol.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+    use crate::coordinator::DetectorKind;
+
+    /// Bounded loom exploration: `LOOM_MAX_PREEMPTIONS` wins when set
+    /// (the CI lane sets it); otherwise bound preemptions so a local
+    /// `--cfg loom` run finishes in seconds, not hours.
+    fn model(f: impl Fn() + Sync + Send + 'static) {
+        let mut b = loom::model::Builder::new();
+        if b.preemption_bound.is_none() {
+            b.preemption_bound = Some(2);
+        }
+        b.check(f);
+    }
+
+    fn base_cfg() -> PipelineConfig {
+        let mut cfg = PipelineConfig::test64();
+        cfg.detector = DetectorKind::Fast; // engine-less: no artifacts, no FS
+        cfg
+    }
+
+    /// A tiny owned one-chunk source (loom threads need 'static data).
+    struct Burst(Vec<Event>);
+
+    impl EventSource for Burst {
+        fn next_chunk(&mut self, out: &mut Vec<Event>) -> Result<usize> {
+            let n = self.0.len();
+            out.append(&mut self.0);
+            Ok(n)
+        }
+    }
+
+    fn burst(n: u16) -> Box<Burst> {
+        Box::new(Burst((0..n).map(|i| Event::on(i % 8, i % 8, i as u64)).collect()))
+    }
+
+    /// A source that fails on first read (a dropped connection).
+    struct Dying;
+
+    impl EventSource for Dying {
+        fn next_chunk(&mut self, _out: &mut Vec<Event>) -> Result<usize> {
+            anyhow::bail!("simulated connection drop")
+        }
+    }
+
+    /// The core serving interleaving: a rendezvous submit completes only
+    /// when the worker takes the session, shutdown may overtake the
+    /// in-flight session (tx dropped while the worker is mid-run), and
+    /// the reply must still reach the handle afterwards.
+    #[test]
+    fn loom_rendezvous_handoff_then_shutdown_races_inflight_session() {
+        model(|| {
+            let mut cfg = ServeConfig::new(base_cfg());
+            cfg.max_streams = 1;
+            let server = StreamServer::new(cfg).unwrap();
+            let handle = server.submit(1, Resolution::TEST64, burst(3)).unwrap();
+            // shutdown before join: drops the queue while the session may
+            // still be running; must block until the worker drains it
+            let stats = server.shutdown();
+            let report = handle.join().unwrap();
+            assert_eq!(report.events_in, 3);
+            assert_eq!(stats.sessions_accepted, 1);
+            assert_eq!(stats.sessions_completed, 1);
+            assert_eq!(stats.sessions_failed, 0);
+        });
+    }
+
+    /// A failing session must not wedge the worker, leak `active`, or
+    /// poison anything shared; the next session runs normally.
+    #[test]
+    fn loom_failed_session_frees_worker() {
+        model(|| {
+            let mut cfg = ServeConfig::new(base_cfg());
+            cfg.max_streams = 1;
+            let server = StreamServer::new(cfg).unwrap();
+            let bad = server.submit(1, Resolution::TEST64, Box::new(Dying)).unwrap();
+            assert!(bad.join().is_err());
+            let good = server.submit(2, Resolution::TEST64, burst(1)).unwrap();
+            assert_eq!(good.join().unwrap().events_in, 1);
+            let stats = server.shutdown();
+            assert_eq!(stats.sessions_failed, 1);
+            assert_eq!(stats.sessions_completed, 1);
+            assert_eq!(stats.active_check(), 0);
+        });
+    }
+
+    /// Two workers contend for the shared queue receiver: one blocks in
+    /// `recv` *while holding the queue's outer mutex* (the inner condvar
+    /// wait must release only the inner lock), the other blocks on the
+    /// outer mutex. Both sessions must complete under every schedule.
+    #[test]
+    fn loom_two_workers_share_the_queue() {
+        model(|| {
+            let mut cfg = ServeConfig::new(base_cfg());
+            cfg.max_streams = 2;
+            let server = StreamServer::new(cfg).unwrap();
+            let a = server.submit(1, Resolution::TEST64, burst(1)).unwrap();
+            let b = server.submit(2, Resolution::TEST64, burst(2)).unwrap();
+            assert_eq!(a.join().unwrap().events_in, 1);
+            assert_eq!(b.join().unwrap().events_in, 2);
+            let stats = server.shutdown();
+            assert_eq!(stats.sessions_completed, 2);
+        });
+    }
+
+    impl ServerStats {
+        /// Loom-only probe: completed + failed must cover accepted once
+        /// shutdown returns (no session lost in the handoff).
+        fn active_check(&self) -> u64 {
+            self.sessions_accepted - self.sessions_completed - self.sessions_failed
+        }
     }
 }

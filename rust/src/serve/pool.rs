@@ -20,9 +20,12 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::Mutex;
 
 use anyhow::{Context, Result};
+
+// the pool's lock comes from the std/loom shim so the loom models below
+// can check the checkout/checkin protocol — see util::sync docs
+use crate::util::sync::Mutex;
 
 use crate::coordinator::PipelineScratch;
 use crate::events::Resolution;
@@ -173,5 +176,81 @@ mod tests {
         // no meta.json there: a helpful error, not a panic
         assert!(pool.checkout_engine(Resolution::TEST64).is_err());
         assert_eq!(pool.stats().engines_created, 0);
+    }
+}
+
+/// Loom models of the pool's checkout/checkin protocol: concurrent
+/// scratch roundtrips (including the "session failed, buffer still goes
+/// back" path run_session guarantees), a cold engine checkout racing a
+/// stats read (manifest load happens *outside* the lock), and the
+/// manifest double-checked caching dance. Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_tests`.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+    use crate::util::sync::{thread, Arc};
+
+    fn model(f: impl Fn() + Sync + Send + 'static) {
+        let mut b = loom::model::Builder::new();
+        if b.preemption_bound.is_none() {
+            b.preemption_bound = Some(3);
+        }
+        b.check(f);
+    }
+
+    /// Two sessions checking scratch out and back in concurrently — one
+    /// of them "failing" mid-session (checkin still happens, as
+    /// `run_session` does on the error path). Under every schedule the
+    /// pool must end consistent: no lost or duplicated buffers, stats
+    /// lock never deadlocks against the scratch lock path.
+    #[test]
+    fn loom_scratch_checkout_checkin_across_session_failure() {
+        model(|| {
+            let pool = Arc::new(EnginePool::new(None));
+            let res = Resolution::TEST64;
+            let ok = {
+                let pool = Arc::clone(&pool);
+                thread::spawn(move || {
+                    let scratch = pool.checkout_scratch(res);
+                    pool.checkin_scratch(res, scratch);
+                })
+            };
+            let failing = {
+                let pool = Arc::clone(&pool);
+                thread::spawn(move || {
+                    let scratch = pool.checkout_scratch(res);
+                    // the session "fails" here; the buffer still returns
+                    pool.checkin_scratch(res, scratch);
+                    let _ = pool.stats();
+                })
+            };
+            ok.join().unwrap();
+            failing.join().unwrap();
+            // both buffers are back: two checkouts drain the pool exactly
+            let inner = pool.inner.lock().unwrap();
+            assert_eq!(inner.scratch.get(&(res.width, res.height)).map(Vec::len), Some(2));
+        });
+    }
+
+    /// A cold engine checkout (manifest load outside the lock — here it
+    /// errors, no artifacts) racing a stats read must neither deadlock
+    /// nor count a phantom engine.
+    #[test]
+    fn loom_cold_checkout_races_stats() {
+        model(|| {
+            let dir = std::env::temp_dir().join("nmc_tos_loom_empty_dir");
+            std::fs::create_dir_all(&dir).unwrap();
+            let pool = Arc::new(EnginePool::new(Some(dir)));
+            let checkout = {
+                let pool = Arc::clone(&pool);
+                thread::spawn(move || {
+                    assert!(pool.checkout_engine(Resolution::TEST64).is_err());
+                })
+            };
+            let stats = pool.stats();
+            assert_eq!(stats.engines_idle, 0);
+            checkout.join().unwrap();
+            assert_eq!(pool.stats().engines_created, 0);
+        });
     }
 }

@@ -77,31 +77,21 @@ impl ShardedTos {
     /// Apply a batch in stream order, fanned out across the row bands.
     ///
     /// This is the fast path: routing is O(events), then every band walks
-    /// only its own bucket against its own disjoint row slice.
+    /// only its own bucket against its own disjoint row slice. The two
+    /// phases are the free functions [`route_into`] / [`apply_band`], so
+    /// the overlap-region routing protocol can be checked independently
+    /// of rayon (the `loom_tests` module runs `apply_band` on loom
+    /// threads and compares against the sequential golden model).
     pub fn process_batch(&mut self, events: &[Event]) {
         if events.is_empty() {
             return;
         }
-        let half = self.cfg.half();
         let th = self.cfg.threshold;
         let w = self.res.width as usize;
         let rpb = self.rows_per_band;
-        let res = self.res;
 
         // --- route: an event goes to every band its clipped patch touches
-        for bucket in &mut self.buckets {
-            bucket.clear();
-        }
-        let mut pixels = 0u64;
-        for ev in events {
-            let rect = clip_patch(res, ev.x, ev.y, half);
-            pixels += rect.pixels() as u64;
-            let lo = rect.y0 as usize / rpb;
-            let hi = rect.y1 as usize / rpb;
-            for band in lo..=hi {
-                self.buckets[band].push((*ev, rect));
-            }
-        }
+        let pixels = route_into(&mut self.buckets, self.res, self.cfg.half(), rpb, events);
         self.stats.events += events.len() as u64;
         self.stats.pixels += pixels;
 
@@ -110,23 +100,55 @@ impl ShardedTos {
             for (band, (chunk, bucket)) in
                 self.data.chunks_mut(rpb * w).zip(&self.buckets).enumerate()
             {
-                s.spawn(move |_| {
-                    let base = (band * rpb) as u16;
-                    let top = base + (chunk.len() / w) as u16 - 1;
-                    for (ev, rect) in bucket {
-                        let sub = PatchRect {
-                            y0: rect.y0.max(base),
-                            y1: rect.y1.min(top),
-                            ..*rect
-                        };
-                        decrement_clamp(chunk, w, base, sub, th);
-                        if ev.y >= base && ev.y <= top {
-                            chunk[(ev.y - base) as usize * w + ev.x as usize] = 255;
-                        }
-                    }
-                });
+                s.spawn(move |_| apply_band(chunk, w, (band * rpb) as u16, th, bucket));
             }
         });
+    }
+}
+
+/// Routing phase of [`ShardedTos::process_batch`]: clear `buckets` and
+/// push each event (with its pre-clipped patch, so workers don't redo
+/// the clip) into the bucket of *every* band its patch intersects —
+/// the overlap region. Returns the total patch pixels touched (the
+/// [`BackendStats::pixels`] contribution).
+fn route_into(
+    buckets: &mut [Vec<(Event, PatchRect)>],
+    res: Resolution,
+    half: i32,
+    rows_per_band: usize,
+    events: &[Event],
+) -> u64 {
+    for bucket in buckets.iter_mut() {
+        bucket.clear();
+    }
+    let mut pixels = 0u64;
+    for ev in events {
+        let rect = clip_patch(res, ev.x, ev.y, half);
+        pixels += rect.pixels() as u64;
+        let lo = rect.y0 as usize / rows_per_band;
+        let hi = rect.y1 as usize / rows_per_band;
+        for band in lo..=hi {
+            buckets[band].push((*ev, rect));
+        }
+    }
+    pixels
+}
+
+/// Apply phase of [`ShardedTos::process_batch`], for one band: replay
+/// `bucket` in stream order against `chunk` (the band's disjoint row
+/// slice, whose first row is sensor row `base`), decrementing only the
+/// patch rows this band owns and writing the 255 centre only if the
+/// event row falls inside the band. Bands touch disjoint rows, so
+/// running every band concurrently is bit-exact with the sequential
+/// golden model.
+fn apply_band(chunk: &mut [u8], w: usize, base: u16, threshold: u8, bucket: &[(Event, PatchRect)]) {
+    let top = base + (chunk.len() / w) as u16 - 1;
+    for (ev, rect) in bucket {
+        let sub = PatchRect { y0: rect.y0.max(base), y1: rect.y1.min(top), ..*rect };
+        decrement_clamp(chunk, w, base, sub, threshold);
+        if ev.y >= base && ev.y <= top {
+            chunk[(ev.y - base) as usize * w + ev.x as usize] = 255;
+        }
     }
 }
 
@@ -261,5 +283,78 @@ mod tests {
         let fresh =
             BackendStats { kernel: crate::tos::kernel::active_path(), ..Default::default() };
         assert_eq!(sh.stats(), fresh);
+    }
+}
+
+/// Loom model of the overlap-region routing protocol: [`route_into`]
+/// fans events out to every band their patch touches, then each band
+/// applies its bucket on a *loom* thread over a band-owned buffer
+/// (standing in for rayon's disjoint `chunks_mut` slices). Under every
+/// schedule the reassembled surface must equal the sequential golden
+/// model — i.e. band application is truly order-independent because row
+/// ownership is disjoint. Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_tests`.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+    use crate::tos::TosSurface;
+    use crate::util::sync::thread;
+
+    fn model(f: impl Fn() + Sync + Send + 'static) {
+        let mut b = loom::model::Builder::new();
+        if b.preemption_bound.is_none() {
+            b.preemption_bound = Some(3);
+        }
+        b.check(f);
+    }
+
+    /// Two bands, patches straddling the band boundary (overlap-region
+    /// events land in both buckets), centre writes on both sides.
+    #[test]
+    fn loom_band_application_is_schedule_independent() {
+        model(|| {
+            let res = Resolution::TEST64;
+            let cfg = TosConfig::default();
+            let w = res.width as usize;
+            let rpb = res.height as usize / 2; // 2 bands of 32 rows
+            // events hammering the 31/32 boundary plus the corners
+            let events = vec![
+                Event::on(5, 31, 0),
+                Event::on(5, 32, 1),
+                Event::on(5, 30, 2),
+                Event::on(0, 0, 3),
+                Event::on(63, 63, 4),
+                Event::on(5, 33, 5),
+            ];
+
+            let mut buckets: Vec<Vec<(Event, PatchRect)>> = vec![Vec::new(); 2];
+            route_into(&mut buckets, res, cfg.half(), rpb, &events);
+            // the boundary events must be in the overlap region: routed
+            // to both bands, applied by each only within its rows
+            assert!(buckets[0].len() > events.len() / 2 && buckets[1].len() > events.len() / 2);
+
+            // one loom thread per band over a band-owned buffer (the
+            // model-checker stand-in for rayon's disjoint chunks_mut)
+            let th = cfg.threshold;
+            let handles: Vec<_> = buckets
+                .into_iter()
+                .enumerate()
+                .map(|(band, bucket)| {
+                    thread::spawn(move || {
+                        let mut chunk = vec![0u8; rpb * w];
+                        apply_band(&mut chunk, w, (band * rpb) as u16, th, &bucket);
+                        chunk
+                    })
+                })
+                .collect();
+            let mut surface = Vec::with_capacity(res.pixels());
+            for h in handles {
+                surface.extend(h.join().unwrap());
+            }
+
+            let mut golden = TosSurface::new(res, cfg).unwrap();
+            golden.update_batch(&events);
+            assert_eq!(golden.data(), &surface[..]);
+        });
     }
 }

@@ -1,7 +1,9 @@
 //! Small in-tree utilities that replace external crates in this offline
 //! build: a fast deterministic PRNG with Gaussian/Poisson samplers, a JSON
-//! emitter for experiment outputs, and a randomized property-test harness.
+//! emitter for experiment outputs, a randomized property-test harness,
+//! and the std/loom synchronization shim the concurrent layers build on.
 
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod sync;

@@ -1,0 +1,354 @@
+//! Synchronization shim: `std` primitives normally, [`loom`] mock
+//! primitives under `--cfg loom`, so the concurrent layers (`serve`,
+//! `serve::pool`, `coordinator::lut_worker`, `tos::sharded`) can be
+//! model-checked without forking their code.
+//!
+//! Those modules import **only** from here — never `std::sync` /
+//! `std::thread` directly (`tools/lint_gate.py` enforces it). A normal
+//! build re-exports the std types unchanged, so the shim costs nothing;
+//! a `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_tests`
+//! build swaps in `loom`'s instrumented types and the loom models in
+//! each shimmed module explore every interleaving/reordering the memory
+//! model allows (see DESIGN.md §Correctness tooling).
+//!
+//! ## The loom-mode mpsc
+//!
+//! `loom` ships `Mutex`/`Condvar`/atomics/threads but no `mpsc`, and the
+//! serving layer leans on channel semantics that matter: the session
+//! queue is a **rendezvous** `sync_channel(0)` (a send completes only
+//! when a worker takes the session — that is the backpressure contract),
+//! and the LUT worker offers snapshots with `try_send` on a depth-1
+//! channel (busy worker ⇒ offer dropped, never blocked). Under
+//! `cfg(loom)` this module therefore provides its own [`mpsc`] built on
+//! the loom `Mutex` + `Condvar`, implementing the exact std surface the
+//! shimmed modules use (`channel`, `sync_channel` incl. depth 0,
+//! `send`/`try_send`/`recv`/`try_recv`, disconnect errors). The loom
+//! models thus check the channel implementation *and* its callers as one
+//! lock-level protocol — which is the scary part (a worker blocks in
+//! `recv` while holding the queue's outer `Mutex`, relying on the inner
+//! `Condvar` wait to release only the inner lock).
+//!
+//! One documented divergence: with *multiple* threads blocked in a
+//! rendezvous `send` at once, a sender may stay blocked until items
+//! pushed after its own are also consumed (std unblocks each sender as
+//! its own message is taken). The loom models only ever send from one
+//! thread per channel, so no explored schedule hits the divergence.
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex};
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex};
+
+/// Atomic types routed through the shim (`std::sync::atomic` or
+/// `loom::sync::atomic`).
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+}
+
+/// Thread spawn/join routed through the shim (`std::thread` or
+/// `loom::thread`).
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::{spawn, yield_now, JoinHandle};
+
+    #[cfg(loom)]
+    pub use loom::thread::{spawn, yield_now, JoinHandle};
+}
+
+/// Run `f`, isolating panics in production builds
+/// (`std::panic::catch_unwind`) but letting them propagate under loom:
+/// loom uses panics for its own bookkeeping (deadlock detection,
+/// illegal-access reports), and swallowing one inside a model would turn
+/// a found bug into a bogus "session failed" outcome.
+///
+/// Loom models therefore do not exercise the serve layer's
+/// panic-isolation path; that path is covered by
+/// `failed_session_is_counted_and_isolated` under the real scheduler.
+pub fn run_isolated<T>(f: impl FnOnce() -> T) -> std::thread::Result<T> {
+    #[cfg(not(loom))]
+    {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+    }
+    #[cfg(loom)]
+    {
+        Ok(f())
+    }
+}
+
+#[cfg(not(loom))]
+pub use std::sync::mpsc;
+
+/// Loom-mode mpsc: the std channel surface the shimmed modules use,
+/// built on the loom `Mutex` + `Condvar` so every blocking edge is
+/// visible to the model checker. See the module docs for why this exists
+/// and the one rendezvous divergence.
+#[cfg(loom)]
+pub mod mpsc {
+    use std::collections::VecDeque;
+    use std::fmt;
+
+    use super::{Arc, Condvar, Mutex};
+
+    /// `send` on a channel whose receiver is gone (mirrors
+    /// `std::sync::mpsc::SendError`).
+    pub struct SendError<T>(pub T);
+
+    /// `recv` on a channel whose senders are all gone (mirrors
+    /// `std::sync::mpsc::RecvError`).
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub struct RecvError;
+
+    impl fmt::Display for RecvError {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("receiving on an empty and disconnected channel")
+        }
+    }
+
+    impl std::error::Error for RecvError {}
+
+    /// `try_send` outcome (mirrors `std::sync::mpsc::TrySendError`).
+    pub enum TrySendError<T> {
+        /// The channel is at capacity; the value is handed back.
+        Full(T),
+        /// The receiver is gone; the value is handed back.
+        Disconnected(T),
+    }
+
+    /// `try_recv` outcome (mirrors `std::sync::mpsc::TryRecvError`).
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum TryRecvError {
+        /// Nothing queued right now.
+        Empty,
+        /// Nothing queued and every sender is gone.
+        Disconnected,
+    }
+
+    struct State<T> {
+        queue: VecDeque<T>,
+        /// `None` = unbounded, `Some(0)` = rendezvous, `Some(k)` = bounded.
+        cap: Option<usize>,
+        senders: usize,
+        rx_alive: bool,
+        /// Receivers currently blocked in `recv` (0 or 1 — one Receiver).
+        rx_waiting: usize,
+    }
+
+    struct Chan<T> {
+        state: Mutex<State<T>>,
+        cv: Condvar,
+    }
+
+    impl<T> Chan<T> {
+        fn new(cap: Option<usize>) -> Arc<Self> {
+            Arc::new(Chan {
+                state: Mutex::new(State {
+                    queue: VecDeque::new(),
+                    cap,
+                    senders: 1,
+                    rx_alive: true,
+                    rx_waiting: 0,
+                }),
+                cv: Condvar::new(),
+            })
+        }
+    }
+
+    /// Asynchronous (unbounded) sender half.
+    pub struct Sender<T>(Arc<Chan<T>>);
+
+    /// Synchronous (bounded / rendezvous) sender half.
+    pub struct SyncSender<T>(Arc<Chan<T>>);
+
+    /// Receiver half (single consumer; share via an outer `Mutex` as the
+    /// serve worker pool does).
+    pub struct Receiver<T>(Arc<Chan<T>>);
+
+    impl<T> fmt::Debug for Receiver<T> {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("Receiver { .. }")
+        }
+    }
+
+    /// Unbounded channel (mirrors `std::sync::mpsc::channel`).
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let chan = Chan::new(None);
+        (Sender(Arc::clone(&chan)), Receiver(chan))
+    }
+
+    /// Bounded channel; `bound == 0` is a rendezvous channel (mirrors
+    /// `std::sync::mpsc::sync_channel`).
+    pub fn sync_channel<T>(bound: usize) -> (SyncSender<T>, Receiver<T>) {
+        let chan = Chan::new(Some(bound));
+        (SyncSender(Arc::clone(&chan)), Receiver(chan))
+    }
+
+    fn clone_sender<T>(chan: &Arc<Chan<T>>) -> Arc<Chan<T>> {
+        chan.state.lock().unwrap().senders += 1;
+        Arc::clone(chan)
+    }
+
+    fn drop_sender<T>(chan: &Chan<T>) {
+        let mut st = chan.state.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            chan.cv.notify_all();
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            Sender(clone_sender(&self.0))
+        }
+    }
+
+    impl<T> Clone for SyncSender<T> {
+        fn clone(&self) -> Self {
+            SyncSender(clone_sender(&self.0))
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            drop_sender(&self.0);
+        }
+    }
+
+    impl<T> Drop for SyncSender<T> {
+        fn drop(&mut self) {
+            drop_sender(&self.0);
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            let mut st = self.0.state.lock().unwrap();
+            st.rx_alive = false;
+            self.0.cv.notify_all();
+        }
+    }
+
+    impl<T> Sender<T> {
+        /// Queue a value; fails only if the receiver is gone.
+        pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+            let mut st = self.0.state.lock().unwrap();
+            if !st.rx_alive {
+                return Err(SendError(value));
+            }
+            st.queue.push_back(value);
+            self.0.cv.notify_all();
+            Ok(())
+        }
+    }
+
+    impl<T> SyncSender<T> {
+        /// Blocking send: waits for queue space (capacity ≥ 1) or, on a
+        /// rendezvous channel, until a receiver has taken the value.
+        pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+            let cap = {
+                let st = self.0.state.lock().unwrap();
+                st.cap.expect("SyncSender on an unbounded channel")
+            };
+            if cap == 0 {
+                return self.send_rendezvous(value);
+            }
+            let mut st = self.0.state.lock().unwrap();
+            loop {
+                if !st.rx_alive {
+                    return Err(SendError(value));
+                }
+                if st.queue.len() < cap {
+                    st.queue.push_back(value);
+                    self.0.cv.notify_all();
+                    return Ok(());
+                }
+                st = self.0.cv.wait(st).unwrap();
+            }
+        }
+
+        fn send_rendezvous(&self, value: T) -> Result<(), SendError<T>> {
+            let mut st = self.0.state.lock().unwrap();
+            // wait for the single handoff slot
+            while st.rx_alive && !st.queue.is_empty() {
+                st = self.0.cv.wait(st).unwrap();
+            }
+            if !st.rx_alive {
+                return Err(SendError(value));
+            }
+            st.queue.push_back(value);
+            self.0.cv.notify_all();
+            // rendezvous: the send completes only once a receiver took it
+            while st.rx_alive && !st.queue.is_empty() {
+                st = self.0.cv.wait(st).unwrap();
+            }
+            if !st.queue.is_empty() {
+                // receiver died without taking it — hand the value back
+                let value = st.queue.pop_front().expect("nonempty");
+                return Err(SendError(value));
+            }
+            Ok(())
+        }
+
+        /// Non-blocking send: `Full` when at capacity (for rendezvous,
+        /// when no receiver is blocked waiting), `Disconnected` when the
+        /// receiver is gone.
+        pub fn try_send(&self, value: T) -> Result<(), TrySendError<T>> {
+            let mut st = self.0.state.lock().unwrap();
+            if !st.rx_alive {
+                return Err(TrySendError::Disconnected(value));
+            }
+            let cap = st.cap.expect("SyncSender on an unbounded channel");
+            let room = if cap == 0 {
+                st.rx_waiting > 0 && st.queue.is_empty()
+            } else {
+                st.queue.len() < cap
+            };
+            if room {
+                st.queue.push_back(value);
+                self.0.cv.notify_all();
+                Ok(())
+            } else {
+                Err(TrySendError::Full(value))
+            }
+        }
+    }
+
+    impl<T> Receiver<T> {
+        /// Blocking receive; errors once the queue is drained and every
+        /// sender is gone.
+        pub fn recv(&self) -> Result<T, RecvError> {
+            let mut st = self.0.state.lock().unwrap();
+            loop {
+                if let Some(value) = st.queue.pop_front() {
+                    // wake blocked senders (space freed / rendezvous done)
+                    self.0.cv.notify_all();
+                    return Ok(value);
+                }
+                if st.senders == 0 {
+                    return Err(RecvError);
+                }
+                st.rx_waiting += 1;
+                st = self.0.cv.wait(st).unwrap();
+                st.rx_waiting -= 1;
+            }
+        }
+
+        /// Non-blocking receive.
+        pub fn try_recv(&self) -> Result<T, TryRecvError> {
+            let mut st = self.0.state.lock().unwrap();
+            if let Some(value) = st.queue.pop_front() {
+                self.0.cv.notify_all();
+                return Ok(value);
+            }
+            if st.senders == 0 {
+                Err(TryRecvError::Disconnected)
+            } else {
+                Err(TryRecvError::Empty)
+            }
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Positive fixture: everything lint_gate checks, done right. Must pass
+//! when treated as an allowlisted SIMD module.
+
+/// Reads the first byte without a bounds check.
+///
+/// # Safety
+///
+/// `data` must be non-empty; the caller guarantees it.
+pub unsafe fn read_first_unchecked(data: &[u8]) -> u8 {
+    // SAFETY: the caller guarantees `data` is non-empty (this fn's
+    // contract), so reading one byte at the base pointer is in bounds.
+    unsafe { *data.as_ptr() }
+}
+
+/// Safe wrapper: mentions "unsafe {" in a string and a comment, which
+/// the gate's stripper must ignore.
+pub fn read_first(data: &[u8]) -> u8 {
+    assert!(!data.is_empty(), "refusing an unsafe { ... } style read");
+    // not an unsafe block: the word unsafe here lives in a comment
+    // SAFETY: `data` was just checked non-empty.
+    unsafe { read_first_unchecked(data) }
+}

@@ -1,0 +1,7 @@
+//! Negative fixture: an `unsafe` block in an allowlisted module with no
+//! `// SAFETY:` comment above it. lint_gate must flag it (rule 1).
+
+pub fn read_first(data: &[u8]) -> u8 {
+    assert!(!data.is_empty());
+    unsafe { *data.as_ptr() }
+}

@@ -1,0 +1,10 @@
+//! Negative fixture: a wire-decode path sizing an allocation from an
+//! untrusted length with no `ensure!(.. MAX_..)` cap above it. lint_gate
+//! must flag it (rule 4) — a hostile peer could demand gigabytes.
+
+pub fn decode(header: &[u8]) -> Vec<u8> {
+    let count = u32::from_le_bytes([header[0], header[1], header[2], header[3]]) as usize;
+    let mut out = Vec::with_capacity(count);
+    out.resize(count.min(header.len()), 0);
+    out
+}

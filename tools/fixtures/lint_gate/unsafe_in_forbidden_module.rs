@@ -1,0 +1,7 @@
+//! Negative fixture: `unsafe` in a module that is not on the allowlist.
+//! lint_gate must flag it regardless of SAFETY comments (rule 2).
+
+pub fn sneaky(data: &[u8]) -> u8 {
+    // SAFETY: documented, but this module may not contain unsafe at all.
+    unsafe { *data.as_ptr() }
+}

@@ -1,0 +1,10 @@
+//! Negative fixture: a loom-modelled module importing `std::sync`
+//! directly instead of `crate::util::sync`. lint_gate must flag it
+//! (rule 3) — under `--cfg loom` this type would silently escape the
+//! model checker.
+
+use std::sync::Mutex;
+
+pub struct Pool {
+    inner: Mutex<Vec<u32>>,
+}

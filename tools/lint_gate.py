@@ -1,0 +1,333 @@
+#!/usr/bin/env python3
+"""Repo-specific unsafe/concurrency lint gate for the nmc-tos crate.
+
+Dependency-free (stdlib only), same contract as bench_gate.py: run it
+from the repo root, exit 0 = clean, 1 = violations (each printed with
+file:line and a pointed message), 2 = misuse/malformed input.
+
+Four invariants, calibrated to this codebase (see DESIGN.md
+§Correctness tooling):
+
+1. **SAFETY discipline** — every `unsafe {` block in the allowlisted
+   modules carries a `// SAFETY:` comment in the lines immediately above
+   it, and every `unsafe fn` carries a `/// # Safety` doc section.
+2. **Unsafe allowlist** — the `unsafe` keyword appears only in
+   `rust/src/tos/kernel.rs` and `rust/src/stcf/mod.rs` (the two
+   explicit-SIMD modules). The crate root must pin `#![deny(unsafe_code)]`,
+   the binary `#![forbid(unsafe_code)]`, and each allowlisted file must
+   opt back in explicitly with `#![allow(unsafe_code)]`.
+3. **Sync shim discipline** — the loom-modelled concurrent modules
+   (`serve/mod.rs`, `serve/pool.rs`, `coordinator/mod.rs`,
+   `coordinator/lut_worker.rs`, `tos/sharded.rs`) never name
+   `std::sync` / `std::thread` directly; all primitives come from
+   `crate::util::sync` so `--cfg loom` swaps them wholesale.
+4. **Decode bounds** — in the wire-decode files (`serve/wire.rs`,
+   `events/codec.rs`) every length-driven `with_capacity(...)` is
+   preceded, within a few lines, by an `ensure!` against a `MAX_*` cap:
+   untrusted counts must be validated before they size an allocation.
+
+`--self-test` runs the rules against the committed negative fixtures in
+`tools/fixtures/lint_gate/` and verifies each fails with the expected
+pointed message (and that a clean fixture passes).
+
+Usage:
+    python3 tools/lint_gate.py [--root .] [--self-test]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+# --- the repo-specific policy tables ---------------------------------------
+
+# Modules allowed to contain the `unsafe` keyword (rule 2); each must
+# opt in explicitly. Everything else in rust/src is unsafe-free.
+UNSAFE_ALLOWLIST = {
+    "rust/src/tos/kernel.rs",
+    "rust/src/stcf/mod.rs",
+}
+
+# (file, required attribute) pairs pinning the crate-level posture.
+REQUIRED_ATTRS = [
+    ("rust/src/lib.rs", "#![deny(unsafe_code)]"),
+    ("rust/src/main.rs", "#![forbid(unsafe_code)]"),
+    ("rust/src/tos/kernel.rs", "#![allow(unsafe_code)]"),
+    ("rust/src/stcf/mod.rs", "#![allow(unsafe_code)]"),
+]
+
+# Modules whose synchronization must come from crate::util::sync (rule 3).
+SHIMMED = {
+    "rust/src/serve/mod.rs",
+    "rust/src/serve/pool.rs",
+    "rust/src/coordinator/mod.rs",
+    "rust/src/coordinator/lut_worker.rs",
+    "rust/src/tos/sharded.rs",
+}
+
+# Files whose decode paths handle untrusted lengths (rule 4).
+DECODE_FILES = {
+    "rust/src/serve/wire.rs",
+    "rust/src/events/codec.rs",
+}
+
+# How many lines above an `unsafe {` the `// SAFETY:` run may start, and
+# how far above a `with_capacity` its `ensure!` cap check may sit.
+SAFETY_WINDOW = 14
+BOUNDS_WINDOW = 10
+
+UNSAFE_KEYWORD = re.compile(r"\bunsafe\b")
+STD_SYNC = re.compile(r"\bstd\s*::\s*(sync|thread)\b")
+WITH_CAPACITY = re.compile(r"\bwith_capacity\s*\(")
+
+
+def strip_code(text: str) -> list[str]:
+    """Blank out comments and string literals, preserving line structure,
+    so keyword scans don't trip on prose. Handles `//`, nested `/* */`,
+    normal strings with escapes, and raw strings `r"..."`/`r#"..."#`."""
+    out = []
+    i, n = 0, len(text)
+    depth = 0  # block-comment nesting
+    while i < n:
+        c = text[i]
+        if depth > 0:
+            if text.startswith("/*", i):
+                depth += 1
+                i += 2
+            elif text.startswith("*/", i):
+                depth -= 1
+                i += 2
+            else:
+                out.append(c if c == "\n" else " ")
+                i += 1
+            continue
+        if text.startswith("//", i):
+            j = text.find("\n", i)
+            i = n if j == -1 else j
+            continue
+        if text.startswith("/*", i):
+            depth = 1
+            i += 2
+            continue
+        if c == '"' or (c == "r" and i + 1 < n and text[i + 1 : i + 3].lstrip("#").startswith('"')):
+            # string literal (possibly raw); blank to the matching close
+            if c == "r":
+                j = i + 1
+                hashes = 0
+                while j < n and text[j] == "#":
+                    hashes += 1
+                    j += 1
+                close = '"' + "#" * hashes
+                j = text.find(close, j + 1)
+                i = n if j == -1 else j + len(close)
+            else:
+                j = i + 1
+                while j < n:
+                    if text[j] == "\\":
+                        j += 2
+                    elif text[j] == '"':
+                        j += 1
+                        break
+                    else:
+                        j += 1
+                i = j
+            out.append(" ")
+            continue
+        out.append(c)
+        i += 1
+    return "".join(out).split("\n")
+
+
+def check_file(rel: str, text: str) -> list[str]:
+    """All rule violations for one file, as `rel:line: message` strings."""
+    errors = []
+    raw_lines = text.split("\n")
+    code_lines = strip_code(text)
+
+    in_allowlist = rel in UNSAFE_ALLOWLIST
+
+    # --- rules 1 + 2: unsafe keyword placement and discipline ----------
+    for idx, code in enumerate(code_lines):
+        if not UNSAFE_KEYWORD.search(code):
+            continue
+        line_no = idx + 1
+        if not in_allowlist:
+            errors.append(
+                f"{rel}:{line_no}: `unsafe` outside the allowlisted SIMD modules "
+                f"({', '.join(sorted(UNSAFE_ALLOWLIST))}) — move the unsafe code "
+                "behind a safe API in an allowlisted module, or extend the "
+                "allowlist in tools/lint_gate.py with a justification"
+            )
+            continue
+        if re.search(r"\bunsafe\s+(?:extern\s+)?fn\b", code):
+            # an `unsafe fn` must document its contract for callers
+            has_safety_doc = any(
+                re.search(r"#\s*Safety", raw_lines[j])
+                for j in range(max(0, idx - SAFETY_WINDOW), idx)
+            )
+            if not has_safety_doc:
+                errors.append(
+                    f"{rel}:{line_no}: `unsafe fn` without a `/// # Safety` doc "
+                    "section — document the caller contract directly above it"
+                )
+        elif re.search(r"\bunsafe\s*\{", code):
+            has_safety_comment = any(
+                raw_lines[j].lstrip().startswith("// SAFETY:")
+                for j in range(max(0, idx - SAFETY_WINDOW), idx)
+            )
+            if not has_safety_comment:
+                errors.append(
+                    f"{rel}:{line_no}: `unsafe {{` block without a `// SAFETY:` "
+                    "comment in the preceding lines — state why every operation "
+                    "inside the block is sound"
+                )
+        # bare `unsafe` in other positions (e.g. `unsafe impl`) — flag it;
+        # nothing in this crate should need one
+        elif not re.search(r"\bunsafe\b\s*$", code):
+            errors.append(
+                f"{rel}:{line_no}: unexpected `unsafe` form (not a fn or block) — "
+                "this crate's policy covers only `unsafe fn` and `unsafe {{}}`"
+            )
+
+    # --- rule 3: sync-shim discipline ----------------------------------
+    if rel in SHIMMED:
+        for idx, code in enumerate(code_lines):
+            m = STD_SYNC.search(code)
+            if m:
+                errors.append(
+                    f"{rel}:{idx + 1}: direct `std::{m.group(1)}` in a loom-modelled "
+                    "module — import it from `crate::util::sync` instead, so the "
+                    "`--cfg loom` build swaps in the model-checked primitives"
+                )
+
+    # --- rule 4: decode bounds -----------------------------------------
+    if rel in DECODE_FILES:
+        for idx, code in enumerate(code_lines):
+            if not WITH_CAPACITY.search(code):
+                continue
+            # rustfmt may split the ensure! across lines, so scan the
+            # preceding window as one blob for both tokens
+            window = "\n".join(code_lines[max(0, idx - BOUNDS_WINDOW) : idx])
+            guarded = "ensure!" in window and "MAX_" in window
+            if not guarded:
+                errors.append(
+                    f"{rel}:{idx + 1}: `with_capacity` in a wire-decode path with no "
+                    f"`ensure!(.. MAX_..)` cap within {BOUNDS_WINDOW} lines above — "
+                    "an untrusted length must be validated before it sizes an "
+                    "allocation"
+                )
+
+    return errors
+
+
+def check_repo(root: str) -> list[str]:
+    errors = []
+    src_root = os.path.join(root, "rust", "src")
+    if not os.path.isdir(src_root):
+        print(f"lint_gate: no rust/src under {root!r}", file=sys.stderr)
+        sys.exit(2)
+
+    for attr_rel, attr in REQUIRED_ATTRS:
+        path = os.path.join(root, attr_rel)
+        if not os.path.isfile(path):
+            errors.append(f"{attr_rel}:1: file missing but required to carry `{attr}`")
+            continue
+        with open(path, encoding="utf-8") as f:
+            if attr not in f.read():
+                errors.append(
+                    f"{attr_rel}:1: missing `{attr}` — the crate-level unsafe "
+                    "posture must be pinned in the source, not just in CI"
+                )
+
+    for dirpath, _dirnames, filenames in os.walk(src_root):
+        for name in sorted(filenames):
+            if not name.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, name)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            with open(path, encoding="utf-8") as f:
+                errors.extend(check_file(rel, f.read()))
+    return errors
+
+
+# --- self-test against the committed negative fixtures ---------------------
+
+# fixture file -> (rule-path it impersonates, substring the violation must
+# contain; None = must be clean)
+FIXTURES = {
+    "missing_safety_comment.rs": ("rust/src/tos/kernel.rs", "without a `// SAFETY:`"),
+    "unsafe_in_forbidden_module.rs": ("rust/src/serve/mod.rs", "outside the allowlisted"),
+    "unshimmed_std_sync.rs": ("rust/src/serve/pool.rs", "direct `std::sync`"),
+    "unbounded_decode.rs": ("rust/src/serve/wire.rs", "no `ensure!(.. MAX_..)` cap"),
+    "clean.rs": ("rust/src/tos/kernel.rs", None),
+}
+
+
+def self_test(root: str) -> int:
+    fixture_dir = os.path.join(root, "tools", "fixtures", "lint_gate")
+    if not os.path.isdir(fixture_dir):
+        print(f"lint_gate --self-test: no fixtures at {fixture_dir}", file=sys.stderr)
+        return 2
+    failures = 0
+    for name, (impersonate, want) in sorted(FIXTURES.items()):
+        path = os.path.join(fixture_dir, name)
+        if not os.path.isfile(path):
+            print(f"SELF-TEST FAIL {name}: fixture file missing")
+            failures += 1
+            continue
+        with open(path, encoding="utf-8") as f:
+            errors = check_file(impersonate, f.read())
+        if want is None:
+            if errors:
+                print(f"SELF-TEST FAIL {name}: expected clean, got: {errors[0]}")
+                failures += 1
+            else:
+                print(f"self-test ok   {name}: clean as expected")
+        elif not any(want in e for e in errors):
+            got = errors[0] if errors else "(no violations at all)"
+            print(f"SELF-TEST FAIL {name}: expected a violation containing "
+                  f"{want!r}, got: {got}")
+            failures += 1
+        else:
+            print(f"self-test ok   {name}: caught as expected")
+    # the comment/string stripper must not eat real code
+    probe = strip_code('let a = "unsafe {"; // unsafe {\nunsafe { x() }\n')
+    if UNSAFE_KEYWORD.search(probe[0]) or not UNSAFE_KEYWORD.search(probe[1]):
+        print("SELF-TEST FAIL stripper: comment/string stripping is wrong")
+        failures += 1
+    else:
+        print("self-test ok   stripper: strings and comments are blanked")
+    if failures:
+        print(f"lint_gate self-test: {failures} FAILURE(S)")
+        return 1
+    print("lint_gate self-test: all fixtures behave")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=".", help="repo root (default: cwd)")
+    ap.add_argument(
+        "--self-test",
+        action="store_true",
+        help="run the rules against tools/fixtures/lint_gate/ and exit",
+    )
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test(args.root)
+
+    errors = check_repo(args.root)
+    if errors:
+        for e in errors:
+            print(e)
+        print(f"lint_gate: {len(errors)} violation(s)")
+        return 1
+    print("lint_gate: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
