@@ -188,6 +188,13 @@ pub struct PipelineConfig {
     pub eharris_window: usize,
     /// Use the async (threaded) LUT worker instead of inline refresh.
     pub async_refresh: bool,
+    /// Engine-less FBF fallback: when no PJRT engine is available (or
+    /// artifacts are absent), compute the Harris response map with the
+    /// pure-Rust software stencil ([`crate::detectors::harris::response_map_into`])
+    /// on the sync refresh cadence instead of leaving the LUT at zero.
+    /// Slower than the AOT engine — meant for harnesses (the Vdd sweep)
+    /// and CI, not the perf path.
+    pub software_fbf: bool,
     /// Score threshold above which an event is tagged a corner.
     pub corner_threshold: f64,
     /// Record per-event data (`signal_events`, `scores`, `corners`) in
@@ -221,6 +228,7 @@ impl PipelineConfig {
             lut_refresh_events: 2_000,
             eharris_window: 2_000,
             async_refresh: false,
+            software_fbf: false,
             corner_threshold: 0.55,
             record_per_event: true,
             stats_interval_events: None,
@@ -294,6 +302,27 @@ impl RunReport {
     }
 }
 
+/// A load governor polled at source-chunk boundaries: it sees the live
+/// counters and may retarget the backend supply voltage — the hook the
+/// serving layer's adaptive degradation
+/// (`serve::degrade::DegradationPolicy`) plugs into.
+///
+/// Polling happens after [`CornerSink::on_chunk_end`], so a governed
+/// run's sink output up to any boundary is identical to an ungoverned
+/// one with the same voltage trajectory. Plain runs have no governor.
+pub trait Governor {
+    /// Called after each source chunk. Returning `Some(vdd)` retargets
+    /// the backend to that supply voltage (pending batches are flushed
+    /// first, exactly like a DVFS switch).
+    fn on_chunk_end(&mut self, stats: &LiveStats) -> Option<f64>;
+
+    /// Current degradation level (0 = nominal), surfaced on
+    /// [`LiveStats::degrade_level`].
+    fn level(&self) -> u32 {
+        0
+    }
+}
+
 /// The assembled pipeline, generic over backend x detector.
 pub struct Pipeline<B: TosBackend = NmcMacro, D: EventScorer = HarrisDetector> {
     cfg: PipelineConfig,
@@ -302,6 +331,8 @@ pub struct Pipeline<B: TosBackend = NmcMacro, D: EventScorer = HarrisDetector> {
     stcf: Option<Stcf>,
     dvfs: Option<DvfsController>,
     detector: D,
+    /// Chunk-boundary load governor (`None` for plain runs).
+    governor: Option<Box<dyn Governor>>,
     /// Reused FBF buffers (no per-refresh allocation; poolable across
     /// serving sessions via [`Pipeline::into_parts`]).
     scratch: PipelineScratch,
@@ -379,6 +410,12 @@ fn flush_pending<B: TosBackend>(backend: &mut B, pending: &mut Vec<Event>) {
         backend.process_batch(pending);
         pending.clear();
     }
+}
+
+/// Millivolt rendering of a supply voltage for [`LiveStats::vdd_mv`].
+#[inline]
+fn to_mv(vdd: f64) -> u64 {
+    (vdd * 1000.0).round() as u64
 }
 
 /// Build the backend a config asks for (`cfg.backend`).
@@ -478,7 +515,12 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
         let dvfs = cfg.dvfs.map(DvfsController::new);
         scratch.frame.clear();
         scratch.frame.resize(cfg.res.pixels(), 0.0);
-        Ok(Pipeline { cfg, engine, backend, stcf, dvfs, detector, scratch })
+        Ok(Pipeline { cfg, engine, backend, stcf, dvfs, detector, governor: None, scratch })
+    }
+
+    /// Install a load [`Governor`], polled at source-chunk boundaries.
+    pub fn set_governor(&mut self, governor: Box<dyn Governor>) {
+        self.governor = Some(governor);
     }
 
     /// Tear the pipeline down into its poolable parts: the (expensive)
@@ -562,9 +604,11 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
     {
         let start = Instant::now();
         let mut st = StreamState::new(&self.cfg, reserve_hint(source));
+        st.vdd_mv = to_mv(self.dvfs.as_ref().map_or(self.cfg.fixed_vdd, |c| c.operating_point().vdd));
         // without an FBF stage there is no refresh boundary — don't cap
         // the backend batches on a no-op schedule
-        let refresh_enabled = self.engine.is_some() && self.detector.wants_lut();
+        let refresh_enabled =
+            (self.engine.is_some() || self.cfg.software_fbf) && self.detector.wants_lut();
         let batching = self.backend.prefers_batching();
         let mut chunk: Vec<Event> = Vec::new();
 
@@ -575,6 +619,7 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
             }
             for ev in &chunk {
                 st.events_in += 1;
+                st.last_t_us = ev.t;
                 // --- DVFS monitors the *raw* event rate (paper Fig. 2) ---
                 if let Some(ctrl) = &mut self.dvfs {
                     if let Some(op) = ctrl.on_event(ev.t) {
@@ -582,6 +627,7 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
                         flush_pending(&mut self.backend, &mut st.pending);
                         self.backend.set_vdd(op.vdd);
                         st.dvfs_switches += 1;
+                        st.vdd_mv = to_mv(op.vdd);
                     }
                 }
                 // --- STCF denoise ----------------------------------------
@@ -617,6 +663,17 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
                 st.stats_tick(sink)?;
             }
             sink.on_chunk_end(&st.live_stats())?;
+            // --- chunk-boundary load governor (serving layer) ------------
+            if let Some(gov) = self.governor.as_deref_mut() {
+                if let Some(vdd) = gov.on_chunk_end(&st.live_stats()) {
+                    // settle pending updates at the old voltage first,
+                    // exactly like a DVFS switch
+                    flush_pending(&mut self.backend, &mut st.pending);
+                    self.backend.set_vdd(vdd);
+                    st.vdd_mv = to_mv(vdd);
+                }
+                st.degrade_level = gov.level() as u64;
+            }
         }
         flush_pending(&mut self.backend, &mut st.pending);
 
@@ -645,6 +702,7 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
         });
 
         let mut st = StreamState::new(&self.cfg, reserve_hint(source));
+        st.vdd_mv = to_mv(self.dvfs.as_ref().map_or(self.cfg.fixed_vdd, |c| c.operating_point().vdd));
         let mut since_snapshot = 0usize;
         let batching = self.backend.prefers_batching();
         // offer a snapshot at least this often (events); the worker decides
@@ -659,11 +717,13 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
             }
             for ev in &chunk {
                 st.events_in += 1;
+                st.last_t_us = ev.t;
                 if let Some(ctrl) = &mut self.dvfs {
                     if let Some(op) = ctrl.on_event(ev.t) {
                         flush_pending(&mut self.backend, &mut st.pending);
                         self.backend.set_vdd(op.vdd);
                         st.dvfs_switches += 1;
+                        st.vdd_mv = to_mv(op.vdd);
                     }
                 }
                 let signal = match &mut self.stcf {
@@ -700,6 +760,17 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
                 st.stats_tick(sink)?;
             }
             sink.on_chunk_end(&st.live_stats())?;
+            // --- chunk-boundary load governor (serving layer) ------------
+            if let Some(gov) = self.governor.as_deref_mut() {
+                if let Some(vdd) = gov.on_chunk_end(&st.live_stats()) {
+                    // settle pending updates at the old voltage first,
+                    // exactly like a DVFS switch
+                    flush_pending(&mut self.backend, &mut st.pending);
+                    self.backend.set_vdd(vdd);
+                    st.vdd_mv = to_mv(vdd);
+                }
+                st.degrade_level = gov.level() as u64;
+            }
         }
         flush_pending(&mut self.backend, &mut st.pending);
 
@@ -715,24 +786,38 @@ impl<B: TosBackend, D: EventScorer> Pipeline<B, D> {
 
     /// Inline LUT refresh (sync mode). Returns whether a refresh ran.
     fn refresh_lut(&mut self) -> Result<bool> {
-        let Some(engine) = &mut self.engine else {
-            return Ok(false); // engine-less pipelines skip the FBF stage
-        };
         if !self.detector.wants_lut() {
             return Ok(false);
         }
-        // borrow the surface straight into the reusable f32 frame — the
-        // old path cloned a full u8 frame per refresh first
-        for (f, &v) in self.scratch.frame.iter_mut().zip(self.backend.tos_view()) {
-            *f = v as f32;
+        match &mut self.engine {
+            Some(engine) => {
+                // borrow the surface straight into the reusable f32 frame —
+                // the old path cloned a full u8 frame per refresh first
+                for (f, &v) in self.scratch.frame.iter_mut().zip(self.backend.tos_view()) {
+                    *f = v as f32;
+                }
+                // the response map lands in the reusable LUT scratch: the
+                // whole sync refresh is allocation-free after the first
+                // iteration
+                engine
+                    .compute_into(&self.scratch.frame, &mut self.scratch.lut)
+                    .context("FBF Harris refresh")?;
+                self.detector.refresh_lut(&self.scratch.lut);
+                Ok(true)
+            }
+            None if self.cfg.software_fbf => {
+                // engine-less fallback: pure-Rust Harris stencil (the Vdd
+                // sweep / CI path — see [`PipelineConfig::software_fbf`])
+                crate::detectors::harris::response_map_into(
+                    self.backend.tos_view(),
+                    self.cfg.res,
+                    &mut self.scratch.lut,
+                );
+                self.detector.refresh_lut(&self.scratch.lut);
+                Ok(true)
+            }
+            None => Ok(false), // engine-less pipelines skip the FBF stage
         }
-        // the response map lands in the reusable LUT scratch: the whole
-        // sync refresh is allocation-free after the first iteration
-        engine
-            .compute_into(&self.scratch.frame, &mut self.scratch.lut)
-            .context("FBF Harris refresh")?;
-        self.detector.refresh_lut(&self.scratch.lut);
-        Ok(true)
     }
 
     fn report(&self, st: StreamState, wall_s: f64) -> RunReport {
@@ -774,6 +859,13 @@ struct StreamState {
     since_refresh: usize,
     dvfs_switches: u64,
     lut_refreshes: u64,
+    /// Timestamp of the most recent input event (µs).
+    last_t_us: u64,
+    /// Current governor degradation level (0 without a governor).
+    degrade_level: u64,
+    /// Current backend supply voltage (mV), tracking DVFS / governor
+    /// retargets; seeded by the run loops from the starting voltage.
+    vdd_mv: u64,
     /// `on_stats` cadence in input events (`None` = never emit).
     stats_every: Option<u64>,
     /// Input events since the last `on_stats` emission.
@@ -802,6 +894,9 @@ impl StreamState {
             since_refresh: 0,
             dvfs_switches: 0,
             lut_refreshes: 0,
+            last_t_us: 0,
+            degrade_level: 0,
+            vdd_mv: 0,
             stats_every: cfg.stats_interval_events.map(|n| n.max(1)),
             since_stats: 0,
         }
@@ -816,6 +911,9 @@ impl StreamState {
             corners_total: self.corners_total,
             dvfs_switches: self.dvfs_switches,
             lut_refreshes: self.lut_refreshes,
+            last_t_us: self.last_t_us,
+            degrade_level: self.degrade_level,
+            vdd_mv: self.vdd_mv,
         }
     }
 
@@ -1169,6 +1267,74 @@ mod tests {
         )
         .unwrap();
         assert_eq!(sink.ends, 4); // 256 + 256 + 256 + 232
+    }
+
+    #[test]
+    fn governor_retargets_voltage_at_chunk_boundaries() {
+        /// Steps the voltage down once, after the first chunk.
+        struct StepDown {
+            polls: u64,
+        }
+        impl Governor for StepDown {
+            fn on_chunk_end(&mut self, _stats: &LiveStats) -> Option<f64> {
+                self.polls += 1;
+                (self.polls == 1).then_some(0.8)
+            }
+            fn level(&self) -> u32 {
+                1
+            }
+        }
+        #[derive(Default)]
+        struct Ends {
+            seen: Vec<LiveStats>,
+        }
+        impl CornerSink for Ends {
+            fn on_corner(&mut self, _c: &Corner) -> Result<()> {
+                Ok(())
+            }
+            fn on_chunk_end(&mut self, s: &LiveStats) -> Result<()> {
+                self.seen.push(*s);
+                Ok(())
+            }
+        }
+        let mut scene = SceneConfig::test64().build(31);
+        let events = scene.generate(3_000);
+        let mut cfg = PipelineConfig::test64();
+        cfg.dvfs = None;
+        let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
+        pipe.set_governor(Box::new(StepDown { polls: 0 }));
+        let mut sink = Ends::default();
+        pipe.run_stream_with(
+            &mut crate::events::source::SliceSource::new(&events, 1_000),
+            &mut sink,
+        )
+        .unwrap();
+        // the governor runs *after* each on_chunk_end: the first snapshot
+        // still shows nominal, later ones show the retargeted voltage and
+        // the governor's level
+        assert_eq!(sink.seen.len(), 3);
+        assert_eq!((sink.seen[0].vdd_mv, sink.seen[0].degrade_level), (1_200, 0));
+        assert_eq!((sink.seen[1].vdd_mv, sink.seen[1].degrade_level), (800, 1));
+        assert!((pipe.backend().vdd() - 0.8).abs() < 1e-9);
+        // event-time watermark reaches the last event
+        assert_eq!(sink.seen[2].last_t_us, events.last().unwrap().t);
+    }
+
+    #[test]
+    fn software_fbf_refreshes_without_engine() {
+        let mut scene = SceneConfig::test64().build(32);
+        let events = scene.generate(10_000);
+        let mut cfg = PipelineConfig::test64();
+        cfg.dvfs = None;
+        cfg.software_fbf = true;
+        cfg.lut_refresh_events = 500;
+        let mut pipe = Pipeline::from_config_without_engine(cfg).unwrap();
+        let report = pipe.run(&events).unwrap();
+        assert!(report.lut_refreshes > 0, "software FBF must refresh the LUT");
+        assert!(
+            report.final_lut.iter().any(|&v| v > 0.0),
+            "software Harris response must light up on the synthetic shapes"
+        );
     }
 
     #[test]

@@ -88,8 +88,12 @@ pub struct Corner {
 
 /// A live snapshot of the run counters, as of the emitting callback.
 ///
-/// All fields are monotone over a run and match the corresponding
-/// [`RunReport`](super::RunReport) counters at end of stream.
+/// The counter fields are monotone over a run and match the corresponding
+/// [`RunReport`](super::RunReport) counters at end of stream; `last_t_us`,
+/// `degrade_level` and `vdd_mv` are instantaneous state. Every field is
+/// derived from the event stream and pipeline state (never wall clock),
+/// so snapshots emitted at [`on_stats`](CornerSink::on_stats) ticks are
+/// chunking-independent.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct LiveStats {
     /// Events fed in so far (pre-STCF).
@@ -102,6 +106,16 @@ pub struct LiveStats {
     pub dvfs_switches: u64,
     /// Harris LUT refreshes consumed so far.
     pub lut_refreshes: u64,
+    /// Timestamp of the most recent input event (µs; 0 before the first).
+    pub last_t_us: u64,
+    /// Degradation level reported by the session's governor (0 = nominal;
+    /// see `serve::degrade::DegradationPolicy`). Always 0 without one.
+    pub degrade_level: u64,
+    /// Commanded backend supply voltage (mV), seeded from the starting
+    /// operating point and tracking DVFS and governor retargets.
+    /// Voltage-less backends (golden, sharded) ignore the commands but
+    /// the commanded value is still reported.
+    pub vdd_mv: u64,
 }
 
 /// Observer of a pipeline run's results (see the [module docs](self)

@@ -12,9 +12,14 @@
 //!   `driving`, `laser` and `spinner` recordings, used by the DVFS/power
 //!   experiments (Fig. 8, Table I) where only the rate time-series
 //!   matters.
+//!
+//! [`scenarios`] composes the scene generators into an enumerative
+//! {motion x rate x noise x resolution x Vdd} grid for the voltage-fault
+//! and overload robustness harnesses.
 
 pub mod gt;
 pub mod profiles;
+pub mod scenarios;
 pub mod synthetic;
 
 use crate::events::Resolution;

@@ -1,0 +1,283 @@
+//! Enumerative scenario grid for robustness harnesses: the cartesian
+//! product {motion x event rate x noise x resolution x Vdd}, each point a
+//! fully-specified synthetic scene plus an operating voltage.
+//!
+//! The grid drives the two fault-fidelity harnesses:
+//!
+//! * the `vdd-sweep` AUC-vs-voltage reproduction ([`crate::eval`]), which
+//!   holds the scene axes fixed and walks the Vdd axis, and
+//! * the serve-overload integration test, which picks an `Overload` rate
+//!   point to force realtime lag and a `Nominal` one to recover.
+//!
+//! Enumeration order is fixed (resolution, motion, rate, noise, then
+//! Vdd — outermost to innermost), so scenario lists are deterministic and
+//! stable across runs; nothing here consults a clock or ambient RNG.
+
+use crate::events::Resolution;
+
+use super::synthetic::{Scene, SceneConfig};
+
+/// Shape-motion regime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Motion {
+    /// Base translation/rotation rates of the underlying preset.
+    Slow,
+    /// 3x linear speed, 2.5x spin — stresses TOS decay and LUT staleness.
+    Fast,
+}
+
+impl Motion {
+    /// Grid-name fragment.
+    pub fn label(self) -> &'static str {
+        match self {
+            Motion::Slow => "slow",
+            Motion::Fast => "fast",
+        }
+    }
+}
+
+/// Event-rate regime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RateLevel {
+    /// The preset's signal rate.
+    Nominal,
+    /// 4x the preset's signal rate — enough to outrun a realtime budget
+    /// and trip the serving layer's degradation governor.
+    Overload,
+}
+
+impl RateLevel {
+    /// Grid-name fragment.
+    pub fn label(self) -> &'static str {
+        match self {
+            RateLevel::Nominal => "nominal",
+            RateLevel::Overload => "overload",
+        }
+    }
+}
+
+/// Background-activity noise regime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NoiseLevel {
+    /// No background activity (STCF sees pure signal).
+    Clean,
+    /// The preset's background-activity rate.
+    Noisy,
+}
+
+impl NoiseLevel {
+    /// Grid-name fragment.
+    pub fn label(self) -> &'static str {
+        match self {
+            NoiseLevel::Clean => "clean",
+            NoiseLevel::Noisy => "noisy",
+        }
+    }
+}
+
+/// One grid point: a concrete scene plus the supply voltage to run it at.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Scene-axes key, voltage excluded (e.g. `slow-nominal-noisy-64x64`).
+    /// Scenarios sharing a key differ only in `vdd`, so harnesses can
+    /// generate the event stream once per key and replay it per voltage.
+    pub key: String,
+    /// Supply voltage (V) this point runs the backend at.
+    pub vdd: f64,
+    /// Fully-resolved scene parameters.
+    pub scene: SceneConfig,
+}
+
+impl Scenario {
+    /// Full display label including the voltage (`<key>@600mV`).
+    pub fn label(&self) -> String {
+        format!("{}@{}mV", self.key, (self.vdd * 1000.0).round() as u64)
+    }
+
+    /// Instantiate the scene with a seed (see [`SceneConfig::build`]).
+    pub fn build(&self, seed: u64) -> Scene {
+        self.scene.clone().build(seed)
+    }
+}
+
+/// Axis values for the enumerative grid.
+#[derive(Debug, Clone)]
+pub struct ScenarioGrid {
+    /// Motion axis.
+    pub motions: Vec<Motion>,
+    /// Event-rate axis.
+    pub rates: Vec<RateLevel>,
+    /// Noise axis.
+    pub noises: Vec<NoiseLevel>,
+    /// Resolution axis (each maps to a scene preset, see [`base_scene`]).
+    pub resolutions: Vec<Resolution>,
+    /// Supply-voltage axis (V).
+    pub vdds: Vec<f64>,
+}
+
+impl ScenarioGrid {
+    /// The full robustness grid: every axis populated, voltages spanning
+    /// the paper's fault ladder (published-zero 1.2/0.8/0.62 V down to
+    /// the 0.61/0.60 V nonzero-BER points).
+    pub fn full() -> Self {
+        Self {
+            motions: vec![Motion::Slow, Motion::Fast],
+            rates: vec![RateLevel::Nominal, RateLevel::Overload],
+            noises: vec![NoiseLevel::Clean, NoiseLevel::Noisy],
+            resolutions: vec![Resolution::TEST64, Resolution::DAVIS240],
+            vdds: vec![0.60, 0.61, 0.62, 0.8, 1.2],
+        }
+    }
+
+    /// The paper-shaped sweep: one DAVIS240 `shapes_dof`-like scene, the
+    /// five-voltage fault ladder (Fig. 11 / Sec. V-C operating points).
+    pub fn paper() -> Self {
+        Self {
+            motions: vec![Motion::Slow],
+            rates: vec![RateLevel::Nominal],
+            noises: vec![NoiseLevel::Noisy],
+            resolutions: vec![Resolution::DAVIS240],
+            vdds: vec![0.60, 0.61, 0.62, 0.8, 1.2],
+        }
+    }
+
+    /// CI smoke grid: one small scene, four voltages bracketing the
+    /// BER knee — fast enough for a per-push lane.
+    pub fn smoke() -> Self {
+        Self {
+            motions: vec![Motion::Slow],
+            rates: vec![RateLevel::Nominal],
+            noises: vec![NoiseLevel::Noisy],
+            resolutions: vec![Resolution::TEST64],
+            vdds: vec![0.60, 0.61, 0.62, 1.2],
+        }
+    }
+
+    /// Number of grid points.
+    pub fn len(&self) -> usize {
+        self.motions.len()
+            * self.rates.len()
+            * self.noises.len()
+            * self.resolutions.len()
+            * self.vdds.len()
+    }
+
+    /// Whether any axis is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enumerate every grid point in the fixed (resolution, motion, rate,
+    /// noise, Vdd) order.
+    pub fn enumerate(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.len());
+        for &res in &self.resolutions {
+            for &motion in &self.motions {
+                for &rate in &self.rates {
+                    for &noise in &self.noises {
+                        let scene = scene_for(res, motion, rate, noise);
+                        let key = format!(
+                            "{}-{}-{}-{}x{}",
+                            motion.label(),
+                            rate.label(),
+                            noise.label(),
+                            res.width,
+                            res.height
+                        );
+                        for &vdd in &self.vdds {
+                            out.push(Scenario { key: key.clone(), vdd, scene: scene.clone() });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Scene preset for a resolution: `TEST64` -> [`SceneConfig::test64`],
+/// `DAVIS240` -> [`SceneConfig::shapes_dof`]; any other geometry reuses
+/// the test preset with the resolution substituted.
+pub fn base_scene(res: Resolution) -> SceneConfig {
+    if res == Resolution::DAVIS240 {
+        SceneConfig::shapes_dof()
+    } else {
+        SceneConfig { res, ..SceneConfig::test64() }
+    }
+}
+
+/// Apply the motion/rate/noise axes to the resolution's base preset.
+fn scene_for(res: Resolution, motion: Motion, rate: RateLevel, noise: NoiseLevel) -> SceneConfig {
+    let mut scene = base_scene(res);
+    if motion == Motion::Fast {
+        scene.speed = (scene.speed.0 * 3.0, scene.speed.1 * 3.0);
+        scene.omega = (scene.omega.0 * 2.5, scene.omega.1 * 2.5);
+    }
+    if rate == RateLevel::Overload {
+        scene.signal_rate *= 4.0;
+    }
+    if noise == NoiseLevel::Clean {
+        scene.noise_rate = 0.0;
+    }
+    scene
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_grid_has_product_cardinality() {
+        let g = ScenarioGrid::full();
+        let scenarios = g.enumerate();
+        assert_eq!(scenarios.len(), g.len());
+        assert_eq!(scenarios.len(), 2 * 2 * 2 * 2 * 5);
+        assert!(!g.is_empty());
+    }
+
+    #[test]
+    fn labels_are_unique_and_deterministic() {
+        let a: Vec<String> = ScenarioGrid::full().enumerate().iter().map(|s| s.label()).collect();
+        let b: Vec<String> = ScenarioGrid::full().enumerate().iter().map(|s| s.label()).collect();
+        assert_eq!(a, b, "enumeration order is fixed");
+        let mut dedup = a.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), a.len(), "every grid point labels uniquely");
+    }
+
+    #[test]
+    fn axes_change_the_scene() {
+        let base = scene_for(Resolution::TEST64, Motion::Slow, RateLevel::Nominal, NoiseLevel::Noisy);
+        let fast = scene_for(Resolution::TEST64, Motion::Fast, RateLevel::Nominal, NoiseLevel::Noisy);
+        assert!(fast.speed.0 > base.speed.0 && fast.omega.1 > base.omega.1);
+        let over = scene_for(Resolution::TEST64, Motion::Slow, RateLevel::Overload, NoiseLevel::Noisy);
+        assert_eq!(over.signal_rate, base.signal_rate * 4.0);
+        let clean = scene_for(Resolution::TEST64, Motion::Slow, RateLevel::Nominal, NoiseLevel::Clean);
+        assert_eq!(clean.noise_rate, 0.0);
+        assert!(base.noise_rate > 0.0);
+    }
+
+    #[test]
+    fn key_groups_share_the_scene_and_differ_in_vdd() {
+        let scenarios = ScenarioGrid::smoke().enumerate();
+        assert_eq!(scenarios.len(), 4);
+        assert!(scenarios.windows(2).all(|w| w[0].key == w[1].key));
+        let vdds: Vec<f64> = scenarios.iter().map(|s| s.vdd).collect();
+        assert_eq!(vdds, vec![0.60, 0.61, 0.62, 1.2]);
+        // shared key => shared stream: building any two with one seed is
+        // bit-identical
+        let a = scenarios[0].build(11).generate(2_000);
+        let b = scenarios[3].build(11).generate(2_000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn davis240_maps_to_the_shapes_preset() {
+        let s = base_scene(Resolution::DAVIS240);
+        assert_eq!(s.res, Resolution::DAVIS240);
+        assert_eq!(s.shapes, SceneConfig::shapes_dof().shapes);
+        let t = base_scene(Resolution::TEST64);
+        assert_eq!(t.res, Resolution::TEST64);
+    }
+}

@@ -66,6 +66,75 @@ impl HarrisDetector {
     }
 }
 
+/// Harris corner constant `k` used by the software response stencil —
+/// the same value the AOT-lowered FBF graph bakes in.
+const HARRIS_K: f32 = 0.04;
+
+/// Pure-Rust frame-by-frame Harris response map over a TOS snapshot — the
+/// engine-less FBF fallback behind
+/// [`PipelineConfig::software_fbf`](crate::coordinator::PipelineConfig::software_fbf).
+///
+/// Pipeline: 3x3 Sobel gradients -> 3x3 box-summed structure tensor ->
+/// `R = det(M) - k·tr(M)²` -> normalized to `[0, 1]` by the max positive
+/// response (all zeros when the frame has no positive response). The
+/// outermost pixel ring is left at zero (no gradient support there).
+///
+/// This is a harness/CI path, not a perf path: it allocates a scratch
+/// gradient buffer and runs scalar code. The AOT PJRT engine computes the
+/// same quantity; both land in the detector through
+/// [`HarrisDetector::refresh`], so the tag stage cannot tell them apart.
+pub fn response_map_into(tos: &[u8], res: Resolution, out: &mut Vec<f32>) {
+    let (w, h) = (res.width as usize, res.height as usize);
+    assert_eq!(tos.len(), w * h, "TOS size mismatch");
+    out.clear();
+    out.resize(w * h, 0.0);
+    if w < 3 || h < 3 {
+        return;
+    }
+    // 3x3 Sobel gradients, interior pixels only
+    let mut gx = vec![0.0f32; w * h];
+    let mut gy = vec![0.0f32; w * h];
+    let at = |x: usize, y: usize| tos[y * w + x] as f32;
+    for y in 1..h - 1 {
+        for x in 1..w - 1 {
+            let (a, b, c) = (at(x - 1, y - 1), at(x, y - 1), at(x + 1, y - 1));
+            let (d, f) = (at(x - 1, y), at(x + 1, y));
+            let (g, hh, i) = (at(x - 1, y + 1), at(x, y + 1), at(x + 1, y + 1));
+            gx[y * w + x] = (c + 2.0 * f + i) - (a + 2.0 * d + g);
+            gy[y * w + x] = (g + 2.0 * hh + i) - (a + 2.0 * b + c);
+        }
+    }
+    // 3x3-windowed structure tensor -> Harris response; track the max
+    // positive response for normalization
+    let mut max_r = 0.0f32;
+    for y in 1..h - 1 {
+        for x in 1..w - 1 {
+            let (mut sxx, mut syy, mut sxy) = (0.0f32, 0.0, 0.0);
+            for yy in y - 1..=y + 1 {
+                for xx in x - 1..=x + 1 {
+                    let (dx, dy) = (gx[yy * w + xx], gy[yy * w + xx]);
+                    sxx += dx * dx;
+                    syy += dy * dy;
+                    sxy += dx * dy;
+                }
+            }
+            let det = sxx * syy - sxy * sxy;
+            let tr = sxx + syy;
+            let r = det - HARRIS_K * tr * tr;
+            out[y * w + x] = r;
+            max_r = max_r.max(r);
+        }
+    }
+    if max_r <= 0.0 {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        return;
+    }
+    // clamp negatives (edges) to zero, scale peaks into [0, 1]
+    for v in out.iter_mut() {
+        *v = (*v / max_r).max(0.0);
+    }
+}
+
 impl EventScorer for HarrisDetector {
     fn score(&mut self, ev: &Event) -> f64 {
         self.scored += 1;
@@ -145,5 +214,60 @@ mod tests {
     fn refresh_validates_size() {
         let mut d = HarrisDetector::new(Resolution::TEST64);
         d.refresh(&[0.0; 10]);
+    }
+
+    #[test]
+    fn software_response_flat_frame_is_zero() {
+        let res = Resolution::TEST64;
+        let mut out = Vec::new();
+        response_map_into(&vec![255u8; res.pixels()], res, &mut out);
+        assert_eq!(out.len(), res.pixels());
+        assert!(out.iter().all(|&v| v == 0.0), "flat frame has no corners");
+    }
+
+    #[test]
+    fn software_response_peaks_at_square_corners() {
+        // a bright 20x20 square on black: corners must out-score both the
+        // edge midpoints and the flat interior
+        let res = Resolution::TEST64;
+        let w = res.width as usize;
+        let mut tos = vec![0u8; res.pixels()];
+        for y in 20..40 {
+            for x in 20..40 {
+                tos[y * w + x] = 255;
+            }
+        }
+        let mut out = Vec::new();
+        response_map_into(&tos, res, &mut out);
+        assert!(out.iter().all(|&v| (0.0..=1.0).contains(&v)), "normalized range");
+        assert!(out.iter().any(|&v| v == 1.0), "max positive response scales to 1");
+        let near = |cx: usize, cy: usize| -> f32 {
+            let mut best = 0.0f32;
+            for y in cy.saturating_sub(2)..=(cy + 2).min(w - 1) {
+                for x in cx.saturating_sub(2)..=(cx + 2).min(w - 1) {
+                    best = best.max(out[y * w + x]);
+                }
+            }
+            best
+        };
+        let corner = near(20, 20).min(near(39, 20)).min(near(20, 39)).min(near(39, 39));
+        let edge = near(30, 20).max(near(20, 30));
+        let flat = near(30, 30);
+        assert!(corner > 0.5, "square corners must respond strongly ({corner})");
+        assert!(corner > edge, "corner {corner} must beat edge {edge}");
+        assert!(corner > flat, "corner {corner} must beat interior {flat}");
+    }
+
+    #[test]
+    fn software_response_is_deterministic() {
+        let res = Resolution::TEST64;
+        let mut tos = vec![0u8; res.pixels()];
+        for (i, v) in tos.iter_mut().enumerate() {
+            *v = ((i * 2654435761) >> 24) as u8;
+        }
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        response_map_into(&tos, res, &mut a);
+        response_map_into(&tos, res, &mut b);
+        assert_eq!(a, b);
     }
 }

@@ -14,12 +14,23 @@
 //! [`run_stream_with`](crate::coordinator::Pipeline::run_stream_with) —
 //! the evaluation path for streamed runs, which keeps only the
 //! `(score, label)` pairs themselves.
+//!
+//! The [`run_vdd_sweep`] harness composes this machinery into the
+//! end-to-end voltage-fault fidelity experiment: detector quality as a
+//! function of supply voltage with the seeded fault injector live in the
+//! TOS hot path (`nmc-tos vdd-sweep`).
+
+use std::collections::BTreeMap;
 
 use anyhow::Result;
 
 use crate::coordinator::sink::{Corner, CornerSink};
+use crate::coordinator::{BackendKind, DetectorKind, Pipeline, PipelineConfig};
 use crate::datasets::gt::GroundTruth;
-use crate::events::Event;
+use crate::datasets::scenarios::{Scenario, ScenarioGrid};
+use crate::events::{Event, Resolution};
+use crate::nmc::calib;
+use crate::util::json::Json;
 
 /// A [`CornerSink`] that labels every scored signal event against
 /// ground truth as it streams past, accumulating the `(score, label)`
@@ -150,6 +161,264 @@ impl PrCurve {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Voltage-fault fidelity sweep (`nmc-tos vdd-sweep`)
+
+/// Configuration of one [`run_vdd_sweep`] experiment.
+///
+/// The scenario list usually comes from a [`ScenarioGrid`]; scenarios
+/// sharing a [`Scenario::key`] reuse one generated event stream, so the
+/// voltage axis varies *only* the fault map — any quality delta between
+/// two points of a key is attributable to injected read faults alone.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Grid points to run (see [`ScenarioGrid::enumerate`]).
+    pub scenarios: Vec<Scenario>,
+    /// TOS backends to run every scenario under. Only the NMC macro
+    /// models voltage faults; software backends report zero-fault points
+    /// and serve as the error-free reference row.
+    pub backends: Vec<BackendKind>,
+    /// Detector scoring the events.
+    pub detector: DetectorKind,
+    /// Events generated per scenario key.
+    pub events: usize,
+    /// Scene-generation seed (shared by every key).
+    pub scene_seed: u64,
+    /// Fault-map seed handed to the injector ([`PipelineConfig::seed`]).
+    pub fault_seed: u64,
+    /// Ground-truth corner match radius (px).
+    pub radius_px: f32,
+    /// PR-curve threshold count.
+    pub thresholds: usize,
+}
+
+impl SweepConfig {
+    /// The paper-shaped sweep: `shapes_dof`-like DAVIS240 scene, NMC
+    /// backend, luvHarris detector, the five-voltage fault ladder.
+    pub fn paper() -> Self {
+        Self {
+            scenarios: ScenarioGrid::paper().enumerate(),
+            backends: vec![BackendKind::Nmc],
+            detector: DetectorKind::Harris,
+            events: 400_000,
+            scene_seed: 42,
+            fault_seed: 7,
+            radius_px: 3.5,
+            thresholds: 101,
+        }
+    }
+
+    /// CI smoke sweep: one small scene, four voltages around the BER
+    /// knee, few enough events for a per-push lane.
+    pub fn smoke() -> Self {
+        Self {
+            scenarios: ScenarioGrid::smoke().enumerate(),
+            backends: vec![BackendKind::Nmc],
+            detector: DetectorKind::Harris,
+            events: 40_000,
+            scene_seed: 42,
+            fault_seed: 7,
+            radius_px: 4.0,
+            thresholds: 101,
+        }
+    }
+}
+
+/// One (scenario, backend, voltage) measurement of a sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Scenario label including the voltage ([`Scenario::label`]).
+    pub scenario: String,
+    /// Scene key ([`Scenario::key`]) — the group sharing an event stream.
+    pub key: String,
+    /// Backend name the point ran under.
+    pub backend: &'static str,
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// Unclamped model bit-error probability at `vdd`
+    /// ([`calib::bit_error_probability`]).
+    pub model_ber: f64,
+    /// Per-bit fault probability actually injected (0.0 under the
+    /// Monte-Carlo floor — the published-zero voltages).
+    pub injected_p_bit: f64,
+    /// Distinct faulty cells the run touched.
+    pub faulty_cells: u64,
+    /// Bits observed flipped across all reads.
+    pub flipped_bits: u64,
+    /// Word reads performed.
+    pub word_reads: u64,
+    /// Measured read error rate: `flipped_bits / word_reads`.
+    pub read_error_rate: f64,
+    /// PR-AUC against exact corner ground truth.
+    pub auc: f64,
+    /// AUC minus the same (key, backend) group's highest-voltage AUC —
+    /// the paper's dAUC metric.
+    pub auc_delta: f64,
+    /// Corners tagged.
+    pub corners: u64,
+    /// Events surviving STCF.
+    pub events_signal: u64,
+}
+
+/// A finished sweep: points in scenario-list x backend order.
+///
+/// Everything in the report derives from seeds, event content and model
+/// equations — no wall clock, no host state — so rendering
+/// [`SweepReport::to_json`] for the same [`SweepConfig`] is
+/// byte-identical across runs, machines and backends.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    /// Detector name.
+    pub detector: &'static str,
+    /// Events generated per scenario key.
+    pub events_per_scene: usize,
+    /// Scene-generation seed.
+    pub scene_seed: u64,
+    /// Fault-map seed.
+    pub fault_seed: u64,
+    /// Per-(key, backend) baseline AUC (the group's highest-voltage
+    /// point), keyed `"<key>/<backend>"`.
+    pub baselines: BTreeMap<String, f64>,
+    /// All measurements.
+    pub points: Vec<SweepPoint>,
+}
+
+impl SweepReport {
+    /// Render the machine-readable report (deterministic key order and
+    /// float formatting — byte-identical for identical configs).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("harness", Json::Str("vdd-sweep".into())),
+            ("detector", Json::Str(self.detector.into())),
+            ("events_per_scene", Json::Num(self.events_per_scene as f64)),
+            ("scene_seed", Json::Num(self.scene_seed as f64)),
+            ("fault_seed", Json::Num(self.fault_seed as f64)),
+            (
+                "baselines",
+                Json::Obj(
+                    self.baselines
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("scenario", Json::Str(p.scenario.clone())),
+                                ("key", Json::Str(p.key.clone())),
+                                ("backend", Json::Str(p.backend.into())),
+                                ("vdd", Json::Num(p.vdd)),
+                                ("model_ber", Json::Num(p.model_ber)),
+                                ("injected_p_bit", Json::Num(p.injected_p_bit)),
+                                ("faulty_cells", Json::Num(p.faulty_cells as f64)),
+                                ("flipped_bits", Json::Num(p.flipped_bits as f64)),
+                                ("word_reads", Json::Num(p.word_reads as f64)),
+                                ("read_error_rate", Json::Num(p.read_error_rate)),
+                                ("auc", Json::Num(p.auc)),
+                                ("auc_delta", Json::Num(p.auc_delta)),
+                                ("corners", Json::Num(p.corners as f64)),
+                                ("events_signal", Json::Num(p.events_signal as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Run the voltage-fault fidelity sweep: every (scenario, backend) pair
+/// through the full pipeline — STCF, fault-injecting TOS backend pinned
+/// at the scenario's Vdd, software-FBF Harris refresh, per-event scoring
+/// against exact ground truth — reporting BER observables and PR-AUC per
+/// point (the Sec. V-C / Fig. 11 reproduction, generalized to a grid).
+pub fn run_vdd_sweep(cfg: &SweepConfig) -> Result<SweepReport> {
+    anyhow::ensure!(!cfg.scenarios.is_empty(), "vdd sweep needs at least one scenario");
+    anyhow::ensure!(!cfg.backends.is_empty(), "vdd sweep needs at least one backend");
+    // one generated stream per scenario key, shared across its voltages
+    let mut streams: BTreeMap<String, (Vec<Event>, GroundTruth)> = BTreeMap::new();
+    let mut points = Vec::with_capacity(cfg.scenarios.len() * cfg.backends.len());
+    let mut detector_name = "";
+    for scenario in &cfg.scenarios {
+        if !streams.contains_key(&scenario.key) {
+            let (events, gt) = scenario.build(cfg.scene_seed).generate_with_gt(cfg.events);
+            streams.insert(scenario.key.clone(), (events, gt));
+        }
+        let (events, gt) = &streams[&scenario.key];
+        for &backend in &cfg.backends {
+            let mut pcfg = if scenario.scene.res == Resolution::TEST64 {
+                PipelineConfig::test64()
+            } else {
+                PipelineConfig::davis240()
+            };
+            pcfg.res = scenario.scene.res;
+            pcfg.backend = backend;
+            pcfg.detector = cfg.detector;
+            pcfg.dvfs = None; // the voltage axis is the experiment
+            pcfg.fixed_vdd = scenario.vdd;
+            pcfg.inject_errors = true;
+            pcfg.seed = cfg.fault_seed;
+            pcfg.record_per_event = false;
+            pcfg.software_fbf = true; // engine-less FBF keeps the sweep hermetic
+            let mut pipe = Pipeline::from_config_without_engine(pcfg)?;
+            let mut sink = ScoredSink::new(gt, cfg.radius_px);
+            let report = pipe.run_with(events, &mut sink)?;
+            detector_name = report.detector_name;
+            let faults = report.backend.faults;
+            let (injected_p_bit, faulty_cells, flipped_bits, word_reads) = match faults {
+                Some(f) => (f.p_bit, f.faulty_cells, f.flipped_bits, f.word_reads),
+                None => (0.0, 0, 0, 0),
+            };
+            points.push(SweepPoint {
+                scenario: scenario.label(),
+                key: scenario.key.clone(),
+                backend: report.backend_name,
+                vdd: scenario.vdd,
+                model_ber: calib::bit_error_probability(scenario.vdd),
+                injected_p_bit,
+                faulty_cells,
+                flipped_bits,
+                word_reads,
+                read_error_rate: flipped_bits as f64 / word_reads.max(1) as f64,
+                auc: sink.curve(cfg.thresholds).auc(),
+                auc_delta: 0.0, // filled against the group baseline below
+                corners: report.corners_total as u64,
+                events_signal: report.events_signal as u64,
+            });
+        }
+    }
+    // baseline = each (key, backend) group's highest-voltage point
+    let mut baselines: BTreeMap<String, f64> = BTreeMap::new();
+    for p in &points {
+        let group = format!("{}/{}", p.key, p.backend);
+        let slot = baselines.entry(group).or_insert(f64::NEG_INFINITY);
+        let best_vdd = points
+            .iter()
+            .filter(|q| q.key == p.key && q.backend == p.backend)
+            .map(|q| q.vdd)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if (p.vdd - best_vdd).abs() < 1e-12 {
+            *slot = p.auc;
+        }
+    }
+    for p in &mut points {
+        p.auc_delta = p.auc - baselines[&format!("{}/{}", p.key, p.backend)];
+    }
+    Ok(SweepReport {
+        detector: detector_name,
+        events_per_scene: cfg.events,
+        scene_seed: cfg.scene_seed,
+        fault_seed: cfg.fault_seed,
+        baselines,
+        points,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,5 +523,88 @@ mod tests {
             assert_eq!(p.tp + p.fn_, 3, "positives preserved");
             assert!(p.tp + p.fp <= 5);
         }
+    }
+
+    /// Small-but-real smoke sweep shared by the harness tests below.
+    fn tiny_sweep() -> SweepConfig {
+        let mut cfg = SweepConfig::smoke();
+        cfg.events = if cfg!(miri) { 1_500 } else { 25_000 };
+        cfg
+    }
+
+    #[test]
+    fn vdd_sweep_report_is_byte_reproducible() {
+        let cfg = tiny_sweep();
+        let a = run_vdd_sweep(&cfg).unwrap().to_json().render();
+        let b = run_vdd_sweep(&cfg).unwrap().to_json().render();
+        assert_eq!(a, b, "same config must render the same bytes");
+        // the seeds are load-bearing: a different fault seed must show up
+        let mut other = cfg;
+        other.fault_seed += 1;
+        let c = run_vdd_sweep(&other).unwrap().to_json().render();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn vdd_sweep_reproduces_the_paper_curve_shape() {
+        let rep = run_vdd_sweep(&tiny_sweep()).unwrap();
+        assert_eq!(rep.points.len(), 4, "smoke grid: one scene, four voltages");
+        assert_eq!(rep.detector, "luvHarris-LUT");
+        let base = rep.baselines["slow-nominal-noisy-64x64/nmc-tos"];
+        assert!(base > 0.15, "baseline detector must actually detect (AUC {base})");
+        for p in &rep.points {
+            assert!(p.word_reads > 0, "{}: the hot path must count reads", p.scenario);
+            if p.vdd >= 0.62 {
+                // published-zero voltages: the MC floor clamps injection off
+                assert_eq!(p.injected_p_bit, 0.0, "{}", p.scenario);
+                assert_eq!(p.flipped_bits, 0, "{}", p.scenario);
+                assert_eq!(p.faulty_cells, 0, "{}", p.scenario);
+                assert_eq!(p.read_error_rate, 0.0, "{}", p.scenario);
+            } else {
+                // 0.61/0.60 V: small but strictly nonzero error rates
+                assert!(p.injected_p_bit > 0.0, "{}", p.scenario);
+                assert!(p.flipped_bits > 0, "{}", p.scenario);
+                assert!(p.read_error_rate > 0.0, "{}", p.scenario);
+            }
+            assert!(p.model_ber > 0.0, "the unclamped model is never exactly zero");
+            // bounded AUC loss, and faults never *help* beyond noise
+            assert!(p.auc <= base + 0.05, "{}: AUC {} vs base {base}", p.scenario, p.auc);
+            assert!(base - p.auc <= 0.5, "{}: unbounded AUC collapse", p.scenario);
+            assert_eq!(p.auc_delta, p.auc - base);
+        }
+        // fault observables grow monotonically as the voltage drops
+        // (points are enumerated voltage-ascending within the key)
+        for w in rep.points.windows(2) {
+            assert!(w[0].vdd < w[1].vdd);
+            assert!(w[0].faulty_cells >= w[1].faulty_cells, "fault sets nest with Vdd");
+            assert!(w[0].read_error_rate >= w[1].read_error_rate);
+            assert!(w[0].model_ber > w[1].model_ber);
+        }
+        // the baseline row is the highest-voltage point by construction
+        assert_eq!(rep.points.last().unwrap().auc_delta, 0.0);
+    }
+
+    #[test]
+    fn vdd_sweep_software_backend_reports_zero_faults() {
+        // the golden backend has no voltage-fault model: every point of
+        // its row is an error-free reference regardless of Vdd
+        let mut cfg = tiny_sweep();
+        cfg.backends = vec![BackendKind::Golden];
+        let rep = run_vdd_sweep(&cfg).unwrap();
+        for p in &rep.points {
+            assert_eq!(p.flipped_bits, 0, "{}", p.scenario);
+            assert_eq!(p.faulty_cells, 0, "{}", p.scenario);
+            assert_eq!(p.auc_delta, 0.0, "identical stream + no faults = identical AUC");
+        }
+    }
+
+    #[test]
+    fn vdd_sweep_rejects_empty_axes() {
+        let mut cfg = tiny_sweep();
+        cfg.scenarios.clear();
+        assert!(run_vdd_sweep(&cfg).is_err());
+        let mut cfg = tiny_sweep();
+        cfg.backends.clear();
+        assert!(run_vdd_sweep(&cfg).is_err());
     }
 }

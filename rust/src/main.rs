@@ -9,6 +9,10 @@
 //! nmc-tos fig10                      # breakdowns + power vs rate (Fig. 10)
 //! nmc-tos ber    [--reads N]         # Monte-Carlo BER sweep (Sec. V-C)
 //! nmc-tos fig11  [--events N]        # PR curves + AUC deltas (Fig. 11)
+//! nmc-tos vdd-sweep [--smoke] [--events N] [--backends B,B] [--detector D]
+//!                                    # end-to-end BER + PR-AUC vs Vdd with
+//!                                    # seeded fault injection (fidelity
+//!                                    # harness; byte-reproducible report)
 //! nmc-tos run    [--events N] [--async]
 //!                [--backend nmc|conventional|golden|sharded]
 //!                [--detector harris|eharris|fast|arc] [--shards N]
@@ -18,13 +22,16 @@
 //!                                    # stream a recording with bounded memory
 //! nmc-tos serve  [--listen ADDR] [--max-streams N] [--sessions N]
 //!                [--backend B] [--detector D] [--stats-interval N]
+//!                [--degrade] [--degrade-lag S] [--degrade-fallback D]
 //!                                    # multi-stream server over TCP;
-//!                                    # v2 sessions stream corners + stats
+//!                                    # v2+ sessions stream corners + stats;
+//!                                    # --degrade sheds load (Vdd steps,
+//!                                    # detector swap) instead of lagging
 //! nmc-tos feed   --input FILE [--connect ADDR] [--res WxH]
 //!                [--chunk-events N] [--stream-id N]
-//!                [--print-corners] [--wire-version 1|2]
+//!                [--print-corners] [--wire-version 1|2|3]
 //!                                    # stream a recording to a server and
-//!                                    # receive corners live (protocol v2)
+//!                                    # receive corners live (protocol v3)
 //! nmc-tos lut                        # DVFS V/f lookup table
 //! ```
 //!
@@ -102,6 +109,7 @@ fn main() -> Result<()> {
         "fig10" => cmd_fig10(),
         "ber" => cmd_ber(&args),
         "fig11" => cmd_fig11(&args),
+        "vdd-sweep" => cmd_vdd_sweep(&args),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
         "feed" => cmd_feed(&args),
@@ -123,21 +131,27 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "nmc-tos — NMC-TOS full-system reproduction
-commands: fig1b fig8 table1 fig9 fig10 ber fig11 run serve feed lut ablate waveform gen-data
+commands: fig1b fig8 table1 fig9 fig10 ber fig11 vdd-sweep run serve feed lut ablate waveform gen-data
 common flags: --json PATH (dump machine-readable results)
 run flags:    --backend nmc|conventional|golden|sharded  --detector harris|eharris|fast|arc
               --shards N  --events N  --async  --eharris-window N (binary-surface window, default 2000)
               --input FILE (stream a recording, bounded memory)
               --chunk-events N (default 65536)  --no-record (counters only)
+vdd-sweep:    --smoke (small CI grid)  --events N (per scene)  --detector D
+              --backends B,B (default nmc)  --seed N (fault-map seed)
+              end-to-end BER + PR-AUC per voltage; same seeds = same bytes
 serve flags:  --listen ADDR (default 127.0.0.1:7700)  --max-streams N (default 4)
               --sessions N (serve N connections then exit; default: run until killed)
               --backend B  --detector D  --shards N  --eharris-window N
-              --stats-interval N (stream live stats to v2 clients every N events)
+              --stats-interval N (stream live stats to v2+ clients every N events)
+              --degrade (adaptive degradation: shed Vdd steps, then swap to
+              --degrade-fallback D (default fast) when realtime lag exceeds
+              --degrade-lag S (default 0.25); recovery with hysteresis)
 feed flags:   --input FILE (required)  --connect ADDR (default 127.0.0.1:7700)
               --res WxH|davis240|davis346|hd720|test64 (default davis240)
               --chunk-events N (default 16384)  --stream-id N
               --print-corners (print corners as they stream back)
-              --wire-version 1|2 (default 2; 1 = summary-only legacy session)
+              --wire-version 1|2|3 (default 3; 1 = summary-only legacy session)
 see DESIGN.md for the experiment index";
 
 // ---------------------------------------------------------------------------
@@ -464,6 +478,52 @@ fn cmd_fig11(args: &Args) -> Result<Json> {
     Ok(Json::Arr(out))
 }
 
+/// End-to-end voltage-fault fidelity sweep: the seeded fault injector
+/// live in the TOS hot path, detection quality measured per voltage.
+/// Reproduces the paper's curve shape — zero observed errors at and
+/// above 0.62 V, small nonzero BER at 0.61/0.60 V, bounded AUC loss —
+/// and the report renders byte-identically for identical seeds.
+fn cmd_vdd_sweep(args: &Args) -> Result<Json> {
+    use nmc_tos::eval::{run_vdd_sweep, SweepConfig};
+    let mut cfg = if args.flag("smoke") { SweepConfig::smoke() } else { SweepConfig::paper() };
+    cfg.events = args.num("events", cfg.events as f64) as usize;
+    cfg.fault_seed = args.num("seed", cfg.fault_seed as f64) as u64;
+    if let Some(d) = args.get("detector") {
+        cfg.detector = d.parse()?;
+    }
+    if let Some(list) = args.get("backends") {
+        cfg.backends =
+            list.split(',').map(|b| b.parse()).collect::<Result<Vec<_>>>()?;
+    }
+    println!(
+        "== vdd-sweep: {} scenarios x {} backends, {} events/scene (seed {}) ==",
+        cfg.scenarios.len(),
+        cfg.backends.len(),
+        cfg.events,
+        cfg.fault_seed
+    );
+    let rep = run_vdd_sweep(&cfg)?;
+    println!(
+        "{:<34} {:>12} {:>6} {:>10} {:>10} {:>9} {:>7} {:>8}",
+        "scenario", "backend", "Vdd", "model BER", "read err", "faulty", "AUC", "dAUC"
+    );
+    for p in &rep.points {
+        println!(
+            "{:<34} {:>12} {:>6.2} {:>10.2e} {:>10.2e} {:>9} {:>7.3} {:>+8.3}",
+            p.scenario,
+            p.backend,
+            p.vdd,
+            p.model_ber,
+            p.read_error_rate,
+            p.faulty_cells,
+            p.auc,
+            p.auc_delta
+        );
+    }
+    println!("(paper: BER zero at/above 0.62 V, 0.2% @0.61 V, 2.5% @0.60 V; dAUC -0.027)");
+    Ok(rep.to_json())
+}
+
 /// ASCII-render a TOS snapshot (Fig. 11(b) stand-in for headless runs).
 fn render_ascii(tos: &[u8], width: usize, rows_shown: usize) {
     let height = tos.len() / width;
@@ -631,6 +691,21 @@ fn cmd_serve(args: &Args) -> Result<Json> {
     let detector = cfg.detector;
     let mut serve_cfg = ServeConfig::new(cfg);
     serve_cfg.max_streams = args.num("max-streams", 4.0) as usize;
+    if args.flag("degrade") {
+        // adaptive degradation: under realtime lag, step the supply
+        // voltage down (trading read fidelity) and finally swap to the
+        // cheaper fallback detector instead of falling behind
+        let defaults = nmc_tos::serve::DegradeConfig::default();
+        let fallback = match args.get("degrade-fallback") {
+            Some(d) => d.parse()?,
+            None => defaults.fallback,
+        };
+        serve_cfg.degrade = Some(nmc_tos::serve::DegradeConfig {
+            lag_shed_s: args.num("degrade-lag", defaults.lag_shed_s),
+            fallback,
+            ..defaults
+        });
+    }
     let sessions = match args.get("sessions") {
         Some(s) => Some(s.parse::<usize>().context("bad --sessions value")?),
         None => None,
@@ -660,9 +735,13 @@ fn cmd_serve(args: &Args) -> Result<Json> {
     println!("peak concurrency     : {}", stats.peak_concurrent);
     println!("mean ingest rate     : {:.0} keps", stats.events_per_sec() / 1e3);
     println!("worst realtime lag   : {:+.3} s", stats.worst_lag_s);
-    println!("v2 sessions          : {}", stats.sessions_v2);
+    println!("v2+ sessions         : {}", stats.sessions_v2);
     println!("corners streamed     : {}", stats.corners_streamed);
     println!("stats frames sent    : {}", stats.stats_frames);
+    println!("sessions degraded    : {}", stats.sessions_degraded);
+    println!("degrade vdd steps    : {}", stats.degrade_vdd_steps);
+    println!("degrade det. swaps   : {}", stats.degrade_detector_swaps);
+    println!("degrade recoveries   : {}", stats.degrade_recoveries);
     println!(
         "engines compiled/reused: {}/{}",
         stats.pool.engines_created, stats.pool.engines_reused
@@ -680,6 +759,10 @@ fn cmd_serve(args: &Args) -> Result<Json> {
         ("sessions_v2", Json::Num(stats.sessions_v2 as f64)),
         ("corners_streamed", Json::Num(stats.corners_streamed as f64)),
         ("stats_frames", Json::Num(stats.stats_frames as f64)),
+        ("sessions_degraded", Json::Num(stats.sessions_degraded as f64)),
+        ("degrade_vdd_steps", Json::Num(stats.degrade_vdd_steps as f64)),
+        ("degrade_detector_swaps", Json::Num(stats.degrade_detector_swaps as f64)),
+        ("degrade_recoveries", Json::Num(stats.degrade_recoveries as f64)),
         ("engines_created", Json::Num(stats.pool.engines_created as f64)),
         ("engines_reused", Json::Num(stats.pool.engines_reused as f64)),
     ]))
@@ -708,10 +791,21 @@ impl CornerSink for FeedSink {
 
     fn on_stats(&mut self, s: &LiveStats) -> Result<()> {
         self.stats_frames += 1;
-        // stderr so piped corner output stays clean
+        // stderr so piped corner output stays clean; the v3 fields
+        // (voltage, degradation level) are zero on v2 sessions
         eprintln!(
-            "stats: {} in / {} signal / {} corners / {} dvfs switches / {} lut refreshes",
-            s.events_in, s.events_signal, s.corners_total, s.dvfs_switches, s.lut_refreshes
+            "stats: {} in / {} signal / {} corners / {} dvfs switches / {} lut refreshes / {} mV{}",
+            s.events_in,
+            s.events_signal,
+            s.corners_total,
+            s.dvfs_switches,
+            s.lut_refreshes,
+            s.vdd_mv,
+            if s.degrade_level > 0 {
+                format!(" / degraded L{}", s.degrade_level)
+            } else {
+                String::new()
+            }
         );
         Ok(())
     }
@@ -732,14 +826,15 @@ fn cmd_feed(args: &Args) -> Result<Json> {
     let stream_id = args.num("stream-id", 0.0) as u32;
     let res = parse_res(args.get("res").unwrap_or("davis240"))?;
     let version = match args.get("wire-version") {
-        None => wire::WIRE_V2,
-        // strict parse: a typo must not silently fall back to v2
-        Some(s) => s.parse::<u8>().with_context(|| format!("bad --wire-version `{s}` (1|2)"))?,
+        None => wire::WIRE_V3,
+        // strict parse: a typo must not silently fall back to the default
+        Some(s) => s.parse::<u8>().with_context(|| format!("bad --wire-version `{s}` (1|2|3)"))?,
     };
     let hello = match version {
         1 => Hello::v1(stream_id, res),
         2 => Hello::v2(stream_id, res),
-        other => bail!("--wire-version {other} is not a protocol this client speaks (1|2)"),
+        3 => Hello::v3(stream_id, res),
+        other => bail!("--wire-version {other} is not a protocol this client speaks (1|2|3)"),
     };
 
     let mut source = nmc_tos::events::source::open(std::path::Path::new(input), chunk)?;

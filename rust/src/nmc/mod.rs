@@ -230,14 +230,18 @@ impl TosBackend for NmcMacro {
             busy_ns: s.busy_ns,
             energy_pj: s.energy_pj,
             flipped_bits: s.flipped_bits,
-            // error injection forces the gate-level per-pixel walk, which
-            // is a scalar datapath; otherwise the macro's functional step
-            // runs the process-wide kernel
-            kernel: if self.injector.is_some() {
-                crate::tos::KernelPath::Scalar
-            } else {
-                crate::tos::kernel::active_path()
-            },
+            // the fault-aware fast path rides the same SIMD kernel as the
+            // error-free one, so the macro always reports the process-wide
+            // selection; the active fault mode is explicit in `faults`
+            kernel: crate::tos::kernel::active_path(),
+            faults: self.injector.as_ref().map(|inj| crate::tos::FaultInfo {
+                vdd: inj.vdd(),
+                seed: inj.seed(),
+                p_bit: inj.p_bit(),
+                faulty_cells: inj.faulty_cells(),
+                flipped_bits: inj.flipped_bits,
+                word_reads: inj.word_reads,
+            }),
         }
     }
 
@@ -300,6 +304,55 @@ mod tests {
         mac.reset();
         assert_eq!(mac.stats().events, 0);
         assert!(mac.snapshot_u8().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn dvfs_retarget_switches_fault_map_deterministically() {
+        // a mid-run DVFS retarget must swap the fault map to the new
+        // voltage deterministically: the post-retarget surface equals the
+        // surface of a macro that ran the same tail at that voltage from
+        // a matching pre-state, and BackendStats::faults tracks the move
+        use crate::tos::TosBackend as _;
+        let res = Resolution::TEST64;
+        let cfg = NmcConfig { inject_errors: true, seed: 77, ..Default::default() };
+        let mk = || NmcMacro::new(res, cfg).unwrap();
+        let events: Vec<Event> = (0..600u64)
+            .map(|i| Event::on((i * 13 % 64) as u16, (i * 7 % 64) as u16, i))
+            .collect();
+
+        let mut a = mk();
+        let mut b = mk();
+        for e in &events[..300] {
+            a.process(e);
+            b.process(e);
+        }
+        // nominal so far: no faults, and the fault mode is reported
+        let fa = TosBackend::stats(&a).faults.expect("injection on");
+        assert_eq!(fa.seed, 77);
+        assert_eq!((fa.p_bit, fa.flipped_bits), (0.0, 0));
+        assert!((fa.vdd - 1.2).abs() < 1e-12);
+        assert_eq!(TosBackend::stats(&a).kernel, crate::tos::kernel::active_path());
+
+        a.set_vdd(0.6);
+        b.set_vdd(0.6);
+        for e in &events[300..] {
+            a.process(e);
+            b.process(e);
+        }
+        // deterministic: both instances saw the same fault map post-switch
+        assert_eq!(a.snapshot_u8(), b.snapshot_u8());
+        let fa = TosBackend::stats(&a).faults.unwrap();
+        let fb = TosBackend::stats(&b).faults.unwrap();
+        assert_eq!(fa, fb);
+        assert!((fa.vdd - 0.6).abs() < 1e-12);
+        assert!(fa.p_bit > 0.02);
+        assert!(fa.faulty_cells > 0);
+        assert!(fa.flipped_bits > 0, "expected corrupted reads at 0.6 V");
+
+        // retargeting back up re-derives the nominal (empty) fault map
+        a.set_vdd(1.2);
+        let fa = TosBackend::stats(&a).faults.unwrap();
+        assert_eq!((fa.p_bit, fa.faulty_cells), (0.0, 0));
     }
 
     #[test]

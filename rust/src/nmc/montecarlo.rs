@@ -78,8 +78,12 @@ pub fn ber_sweep(voltages: &[f64], reads: u64, seed: u64) -> Vec<BerPoint> {
 /// faulty bit reads *stuck* at a (deterministic) random value.
 #[derive(Debug, Clone)]
 pub struct ErrorInjector {
-    /// Per-bit fault probability at the current voltage.
+    /// Per-bit fault probability at the current voltage, floored to
+    /// exactly 0 below [`calib::BER_MC_FLOOR`] (the paper's MC table
+    /// reports "0" at and above 0.62 V).
     p_bit: f64,
+    /// Supply voltage the current fault map was derived for.
+    vdd: f64,
     seed: u64,
     /// Precomputed per-cell fault map at the current voltage:
     /// `(mask, stuck)` per cell — faulty bits in `mask` read as the
@@ -87,6 +91,9 @@ pub struct ErrorInjector {
     /// turns the hot-path corrupt() into two byte ops
     /// (EXPERIMENTS.md §Perf iteration 7).
     map: Vec<(u8, u8)>,
+    /// Cells with at least one faulty bit in the sized portion of the
+    /// map (kept in sync by `rebuild_map` and on-demand growth).
+    faulty_cells: u64,
     /// Total corrupted word reads so far (telemetry).
     pub flipped_bits: u64,
     /// Total word reads seen (telemetry).
@@ -101,13 +108,27 @@ fn mix(mut z: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// [`calib::bit_error_probability`] with the Monte-Carlo floor applied:
+/// probabilities below [`calib::BER_MC_FLOOR`] inject as exactly zero.
+#[inline]
+fn injected_p_bit(vdd: f64) -> f64 {
+    let p = calib::bit_error_probability(vdd);
+    if p < calib::BER_MC_FLOOR {
+        0.0
+    } else {
+        p
+    }
+}
+
 impl ErrorInjector {
     /// Injector at a fixed supply voltage covering `n_cells` pixels.
     pub fn new_sized(vdd: f64, seed: u64, n_cells: usize) -> Self {
         let mut inj = Self {
-            p_bit: calib::bit_error_probability(vdd),
+            p_bit: injected_p_bit(vdd),
+            vdd,
             seed,
             map: Vec::new(),
+            faulty_cells: 0,
             flipped_bits: 0,
             word_reads: 0,
         };
@@ -139,8 +160,10 @@ impl ErrorInjector {
     fn rebuild_map(&mut self, n_cells: usize) {
         self.map.clear();
         self.map.reserve(n_cells);
+        self.faulty_cells = 0;
         for cell in 0..n_cells {
             let f = self.cell_faults(cell);
+            self.faulty_cells += (f.0 != 0) as u64;
             self.map.push(f);
         }
     }
@@ -149,15 +172,52 @@ impl ErrorInjector {
     /// is fixed silicon; only the margin threshold moves, so the map is
     /// re-derived for the new threshold).
     pub fn set_vdd(&mut self, vdd: f64) {
-        self.p_bit = calib::bit_error_probability(vdd);
+        self.p_bit = injected_p_bit(vdd);
+        self.vdd = vdd;
         let n = self.map.len();
         self.rebuild_map(n);
     }
 
-    /// Current per-bit fault probability.
+    /// Current per-bit fault probability (floored below
+    /// [`calib::BER_MC_FLOOR`]).
     #[inline]
     pub fn p_bit(&self) -> f64 {
         self.p_bit
+    }
+
+    /// Supply voltage the current fault map was derived for.
+    #[inline]
+    pub fn vdd(&self) -> f64 {
+        self.vdd
+    }
+
+    /// Seed the fault map derives from.
+    #[inline]
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Cells with at least one faulty bit at the current voltage (within
+    /// the sized fault map).
+    #[inline]
+    pub fn faulty_cells(&self) -> u64 {
+        self.faulty_cells
+    }
+
+    /// The `(mask, stuck)` fault pair of one cell, growing the map on
+    /// demand. Unlike [`ErrorInjector::corrupt`] this does *not* count a
+    /// word read — callers doing their own bulk accounting (the
+    /// fault-aware fast path) use it to apply faults in place.
+    #[inline]
+    pub fn cell_fault(&mut self, cell: usize) -> (u8, u8) {
+        if cell >= self.map.len() {
+            for c in self.map.len()..=cell {
+                let f = self.cell_faults(c);
+                self.faulty_cells += (f.0 != 0) as u64;
+                self.map.push(f);
+            }
+        }
+        self.map[cell]
     }
 
     /// Corrupt the 5-bit word read from cell index `cell` (a stable
@@ -168,14 +228,8 @@ impl ErrorInjector {
         if self.p_bit <= 0.0 {
             return word;
         }
-        if cell >= self.map.len() {
-            // grow on demand (tests); system paths size the map up front
-            for c in self.map.len()..=cell {
-                let f = self.cell_faults(c);
-                self.map.push(f);
-            }
-        }
-        let (mask, stuck) = self.map[cell];
+        // grow on demand (tests); system paths size the map up front
+        let (mask, stuck) = self.cell_fault(cell);
         let out = (word & !mask) | (stuck & mask);
         if out != word {
             self.flipped_bits += 1;
@@ -278,7 +332,46 @@ mod tests {
     fn injector_voltage_retarget() {
         let mut inj = ErrorInjector::new(1.2, 3);
         assert_eq!(inj.p_bit(), inj.p_bit().max(0.0)); // ~0
+        assert!((inj.vdd() - 1.2).abs() < 1e-12);
         inj.set_vdd(0.6);
         assert!(inj.p_bit() > 0.02);
+        assert!((inj.vdd() - 0.6).abs() < 1e-12);
+        assert_eq!(inj.seed(), 3);
+    }
+
+    #[test]
+    fn injector_floors_published_zero_voltages() {
+        // the paper's MC table says BER = 0 at and above 0.62 V: the
+        // injector must be exactly transparent there even though the
+        // analytic tail is still (barely) positive
+        for &v in &[0.62, 0.65, 1.2] {
+            let mut inj = ErrorInjector::new_sized(v, 21, 50_000);
+            assert_eq!(inj.p_bit(), 0.0, "p_bit not floored at {v} V");
+            assert_eq!(inj.faulty_cells(), 0, "faulty cells at {v} V");
+            for cell in 0..50_000usize {
+                assert_eq!(inj.corrupt(0x15, cell), 0x15);
+            }
+            assert_eq!(inj.flipped_bits, 0);
+        }
+        // just below the knee, faults appear
+        let inj = ErrorInjector::new_sized(0.61, 21, 50_000);
+        assert!(inj.p_bit() > 0.0);
+        assert!(inj.faulty_cells() > 0);
+    }
+
+    #[test]
+    fn cell_fault_agrees_with_corrupt() {
+        let mut a = ErrorInjector::new(0.6, 29);
+        let mut b = ErrorInjector::new(0.6, 29);
+        for cell in 0..5_000usize {
+            let (mask, stuck) = a.cell_fault(cell);
+            let want = (0x0Au8 & !mask) | (stuck & mask);
+            assert_eq!(b.corrupt(0x0A, cell), want, "cell {cell}");
+        }
+        // cell_fault does not count reads; corrupt does
+        assert_eq!(a.word_reads, 0);
+        assert_eq!(b.word_reads, 5_000);
+        // both grew the same map with the same faulty-cell census
+        assert_eq!(a.faulty_cells(), b.faulty_cells());
     }
 }

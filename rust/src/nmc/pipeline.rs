@@ -7,7 +7,7 @@
 //! *energy* of the traversal come from [`super::timing`] / [`super::energy`].
 
 use crate::events::Event;
-use crate::tos::backend::{clip_patch, decrement_clamp};
+use crate::tos::backend::{clip_patch, decrement_clamp, PatchRect};
 use crate::tos::encoding;
 
 use super::cmp::compare_geq;
@@ -73,15 +73,19 @@ pub struct PatchCost {
 /// 8-bit domain, `>= 225`); `pipelined` selects the Fig. 4(b) schedule;
 /// `injector` (if any) corrupts every word read per the BER model.
 ///
-/// Without an injector the per-pixel gate-level walk is skipped entirely:
-/// the functional outcome of an error-free patch update is exactly
-/// Algorithm 1 on the decoded 8-bit mirror (the gate-level datapath is
-/// bit-exact against the golden model, a property-test invariant), and the
-/// [`PatchCost`] depends only on the clipped rect's geometry — so the fast
-/// path runs the shared SIMD kernel on the mirror and resyncs the 5-bit
-/// words ([`encoding::store`]). Monte-Carlo runs (`injector` present)
-/// still take [`process_event_gate_level`], whose per-read corruption
-/// hooks the simulated bitcells.
+/// The per-pixel gate-level walk is skipped on every path: the functional
+/// outcome of an error-free patch update is exactly Algorithm 1 on the
+/// decoded 8-bit mirror (the gate-level datapath is bit-exact against the
+/// golden model, a property-test invariant), and the [`PatchCost`] depends
+/// only on the clipped rect's geometry — so the fast path runs the shared
+/// SIMD kernel on the mirror and resyncs the 5-bit words
+/// ([`encoding::store`]). With an injector attached, faults are applied
+/// *after* the kernel by patching only the cells the static fault map
+/// marks faulty (the per-pixel write-back is independent, so correcting
+/// the sparse faulty subset reproduces the gate walk bit-exactly —
+/// including the `flipped_bits`/`word_reads` telemetry; pinned by
+/// `faulty_fast_path_equals_gate_level` below).
+/// [`process_event_gate_level`] survives as the reference datapath.
 #[allow(clippy::too_many_arguments)]
 pub fn process_event(
     array: &mut TypeAArray,
@@ -95,31 +99,125 @@ pub fn process_event(
     table: Option<&WbTable>,
 ) -> PatchCost {
     debug_assert!(threshold >= 225, "5-bit datapath requires TH >= 225");
-    if injector.is_none() {
-        let res = array.grid().res;
-        let half = (patch as i32 - 1) / 2;
-        let rect = clip_patch(res, ev.x, ev.y, half);
-        let (words, decoded, width) = array.split_mut();
-        decrement_clamp(decoded, width, 0, rect, threshold);
-        decoded[ev.y as usize * width + ev.x as usize] = 255;
-        for y in rect.y0..=rect.y1 {
-            let row = y as usize * width;
-            for i in row + rect.x0 as usize..=row + rect.x1 as usize {
-                words[i] = encoding::store(decoded[i]);
-            }
+    let rect = match injector {
+        None => fast_update(array, ev, patch, threshold),
+        Some(inj) if inj.p_bit() <= 0.0 => {
+            // every cell of the patch is read once (MO phase) even when no
+            // fault can fire — keep the read telemetry gate-accurate
+            let rect = fast_update(array, ev, patch, threshold);
+            inj.word_reads += rect.pixels() as u64;
+            rect
         }
-        return cost_of(rect.height(), rect.pixels(), pipelined, timing, energy);
+        Some(inj) => fast_update_faulty(array, ev, patch, threshold, inj, table),
+    };
+    cost_of(rect.height(), rect.pixels(), pipelined, timing, energy)
+}
+
+/// The error-free Algorithm-1 fast-path body: SIMD decrement/clamp over
+/// the decoded mirror, centre write, 5-bit word resync. Returns the
+/// clipped rect for costing.
+#[inline]
+fn fast_update(array: &mut TypeAArray, ev: &Event, patch: u16, threshold: u8) -> PatchRect {
+    let res = array.grid().res;
+    let half = (patch as i32 - 1) / 2;
+    let rect = clip_patch(res, ev.x, ev.y, half);
+    let (words, decoded, width) = array.split_mut();
+    decrement_clamp(decoded, width, 0, rect, threshold);
+    decoded[ev.y as usize * width + ev.x as usize] = 255;
+    for y in rect.y0..=rect.y1 {
+        let row = y as usize * width;
+        for i in row + rect.x0 as usize..=row + rect.x1 as usize {
+            words[i] = encoding::store(decoded[i]);
+        }
     }
-    process_event_gate_level(
-        array, ev, patch, threshold, pipelined, timing, energy, injector, table,
-    )
+    rect
+}
+
+/// The fault-aware fast path: run the SIMD kernel on the decoded mirror,
+/// then overwrite the (sparse) faulty cells with the gate-level outcome
+/// of their corrupted reads.
+///
+/// Correctness argument: each patch pixel is read once and written at
+/// most once per event, so pixels are independent — non-faulty cells get
+/// exactly the kernel result (bit-exact vs the gate walk, pinned by
+/// `fast_path_equals_gate_level`), and faulty cells get the gate
+/// semantics recomputed here from the *pre-update* word, which `words[]`
+/// still holds because the kernel only touches the decoded mirror before
+/// resync. Telemetry parity: the gate walk calls `corrupt` once per
+/// pixel, so `word_reads` advances by the patch size and `flipped_bits`
+/// by the number of cells whose corrupted read differs — both reproduced
+/// exactly.
+fn fast_update_faulty(
+    array: &mut TypeAArray,
+    ev: &Event,
+    patch: u16,
+    threshold: u8,
+    inj: &mut ErrorInjector,
+    table: Option<&WbTable>,
+) -> PatchRect {
+    let owned_table;
+    let table = match table {
+        Some(t) => t,
+        None => {
+            owned_table = WbTable::build(threshold);
+            &owned_table
+        }
+    };
+    let res = array.grid().res;
+    let half = (patch as i32 - 1) / 2;
+    let rect = clip_patch(res, ev.x, ev.y, half);
+    let (words, decoded, width) = array.split_mut();
+    decrement_clamp(decoded, width, 0, rect, threshold);
+    let centre = ev.y as usize * width + ev.x as usize;
+    decoded[centre] = 255;
+    inj.word_reads += rect.pixels() as u64;
+    for y in rect.y0..=rect.y1 {
+        let row = y as usize * width;
+        for i in row + rect.x0 as usize..=row + rect.x1 as usize {
+            let (mask, stuck) = inj.cell_fault(i);
+            if mask == 0 {
+                continue;
+            }
+            let raw = words[i];
+            let stored = (raw & !mask) | (stuck & mask);
+            if stored != raw {
+                inj.flipped_bits += 1;
+            }
+            // the WR phase ignores the corrupted read for the centre
+            // (driven to 0x1F) and for an erased cell (write disabled —
+            // error containment, paper Sec. V-C)
+            if i == centre || raw == 0 {
+                continue;
+            }
+            decoded[i] = if stored == 0 {
+                // corrupted to all-zeros: MOL wraps, WR erases (no 255 wrap)
+                0
+            } else {
+                match table.lookup(stored) {
+                    Some(bits) => encoding::load(bits),
+                    // write-back disabled: the cell keeps its stored word
+                    None => encoding::load(raw),
+                }
+            };
+        }
+    }
+    for y in rect.y0..=rect.y1 {
+        let row = y as usize * width;
+        for i in row + rect.x0 as usize..=row + rect.x1 as usize {
+            words[i] = encoding::store(decoded[i]);
+        }
+    }
+    rect
 }
 
 /// The reference per-pixel gate-level walk (MO -> CMP -> WR phase per
-/// pixel, paper Fig. 7). [`process_event`] routes here whenever an
-/// [`ErrorInjector`] is attached; the error-free fast path is checked
-/// bit-exact against this walk by `fast_path_equals_gate_level` below and
-/// by the backend property tests.
+/// pixel, paper Fig. 7). No production path routes here anymore — the
+/// fast path handles both the error-free and the fault-injected cases —
+/// but it remains the oracle: `fast_path_equals_gate_level` and
+/// `faulty_fast_path_equals_gate_level` below pin the fast paths
+/// bit-exact (surfaces, words, costs, and injector telemetry) against
+/// this walk, and the backend property tests pin it against the golden
+/// model.
 #[allow(clippy::too_many_arguments)]
 pub fn process_event_gate_level(
     array: &mut TypeAArray,
@@ -330,6 +428,47 @@ mod tests {
         let (words, decoded, _) = fast.split_mut();
         for (i, (&w, &d)) in words.iter().zip(decoded.iter()).enumerate() {
             assert_eq!(w, crate::tos::encoding::store(d), "pixel {i}");
+        }
+    }
+
+    #[test]
+    fn faulty_fast_path_equals_gate_level() {
+        // with an injector attached the fast path must reproduce the
+        // gate-level walk bit-exactly: surface, 5-bit words, cost record,
+        // AND the injector telemetry (flipped_bits / word_reads)
+        let res = Resolution::TEST64;
+        let cfg = TosConfig::default();
+        let table = WbTable::build(cfg.threshold);
+        for vdd in [0.60, 0.61, 0.62] {
+            let timing = TimingModel::at(vdd);
+            let energy = EnergyModel::at(vdd);
+            let mut fast = TypeAArray::new(res);
+            let mut gate = TypeAArray::new(res);
+            let mut inj_fast = ErrorInjector::new_sized(vdd, 13, res.pixels());
+            let mut inj_gate = ErrorInjector::new_sized(vdd, 13, res.pixels());
+            let n: u64 = if cfg!(miri) { 200 } else { 2000 };
+            for i in 0..n {
+                let e = Event::on((i * 17 % 64) as u16, (i * 29 % 64) as u16, i);
+                let a = process_event(
+                    &mut fast, &e, cfg.patch, cfg.threshold, true, &timing, &energy,
+                    Some(&mut inj_fast), Some(&table),
+                );
+                let b = process_event_gate_level(
+                    &mut gate, &e, cfg.patch, cfg.threshold, true, &timing, &energy,
+                    Some(&mut inj_gate), Some(&table),
+                );
+                assert_eq!(a, b, "vdd {vdd}: cost diverged at event {i}");
+            }
+            assert_eq!(fast.snapshot_u8(), gate.snapshot_u8(), "vdd {vdd}: surface");
+            assert_eq!(inj_fast.flipped_bits, inj_gate.flipped_bits, "vdd {vdd}: flips");
+            assert_eq!(inj_fast.word_reads, inj_gate.word_reads, "vdd {vdd}: reads");
+            if vdd < 0.615 {
+                assert!(inj_fast.flipped_bits > 0, "vdd {vdd}: no faults fired");
+            }
+            let (fw, fd, _) = fast.split_mut();
+            let (gw, gd, _) = gate.split_mut();
+            assert_eq!(fw, gw, "vdd {vdd}: words");
+            assert_eq!(fd, gd, "vdd {vdd}: mirrors");
         }
     }
 

@@ -1,0 +1,459 @@
+//! Adaptive degradation for served streams: shed load *gracefully*
+//! before dropping a session.
+//!
+//! A live event stream has a real-time contract — fall behind the sensor
+//! and the backlog grows without bound. When a serving worker cannot
+//! keep up (overload spike, noisy scene, slow disk), the conventional
+//! answers are to drop events or drop the session. This module does what
+//! the paper's DVFS story suggests instead: spend *fidelity* before
+//! availability. The [`DegradationPolicy`] watches the session's
+//! real-time lag at every source-chunk boundary (the coordinator's
+//! [`Governor`] hook) and, when the lag crosses the shed threshold,
+//! degrades in small steps:
+//!
+//! 1. **Voltage step-down** — retarget the backend supply toward
+//!    `vdd_min_v` one [`DegradeConfig::vdd_step_v`] at a time. On the
+//!    NMC backend this trades read-fidelity (the seeded fault map — see
+//!    `nmc::montecarlo`) for energy, exactly the paper's Vdd/BER
+//!    trade-off, while every result stays deterministically derived from
+//!    `(seed, vdd)`.
+//! 2. **Detector swap** — once at the voltage floor, switch the session
+//!    to the cheaper [`DegradeConfig::fallback`] detector via
+//!    [`SwitchableDetector`]; while swapped the FBF/LUT refresh stage is
+//!    shed too ([`SwitchableDetector::wants_lut`] turns false). The
+//!    swapped-in SAE detector starts cold and warms its surface from the
+//!    events it scores.
+//!
+//! Recovery is the exact mirror with hysteresis: only after
+//! [`DegradeConfig::recover_polls`] consecutive calm polls (lag below
+//! `lag_recover_s`, which is well below `lag_shed_s`) does the policy
+//! undo one move — detector first, then voltage — one move per poll, so
+//! a marginal session cannot oscillate. A full return to nominal counts
+//! one recovery.
+//!
+//! All shared state is `Rc<Cell<_>>`-grade: the policy, the switchable
+//! detector and the session runner all live on one worker thread, so no
+//! sync primitives are needed (and none are used — this module stays out
+//! of the loom-shimmed set). Wall-clock time is intentionally part of
+//! the model: degradation reacts to *real* lag, so governed sessions are
+//! not bit-reproducible across machines — which is why the policy only
+//! exists in `serve` and the deterministic harnesses (`run`, `eval`,
+//! `vdd-sweep`) never install one.
+
+use std::cell::Cell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::coordinator::sink::LiveStats;
+use crate::coordinator::{DetectorKind, Governor};
+use crate::detectors::EventScorer;
+use crate::events::Event;
+
+/// Degradation thresholds and steps (`serve --degrade*` flags).
+#[derive(Debug, Clone)]
+pub struct DegradeConfig {
+    /// Real-time lag (s) above which the policy sheds one step per poll.
+    pub lag_shed_s: f64,
+    /// Lag (s) below which a poll counts as calm; must be well under
+    /// `lag_shed_s` (the hysteresis band).
+    pub lag_recover_s: f64,
+    /// Consecutive calm polls required before each recovery move.
+    pub recover_polls: u32,
+    /// Polls to skip between consecutive shed moves, letting the
+    /// previous step take effect before judging it insufficient.
+    pub cooldown_polls: u32,
+    /// Supply-voltage decrement per shed step (V).
+    pub vdd_step_v: f64,
+    /// Voltage floor (V); at the floor the next shed move is the
+    /// detector swap.
+    pub vdd_min_v: f64,
+    /// Cheaper detector swapped in at the final degradation step.
+    pub fallback: DetectorKind,
+}
+
+impl Default for DegradeConfig {
+    fn default() -> Self {
+        Self {
+            lag_shed_s: 0.25,
+            lag_recover_s: 0.05,
+            recover_polls: 2,
+            cooldown_polls: 1,
+            vdd_step_v: 0.2,
+            vdd_min_v: 0.6,
+            fallback: DetectorKind::Fast,
+        }
+    }
+}
+
+/// Single-threaded state shared between a session's
+/// [`DegradationPolicy`], its [`SwitchableDetector`], and the session
+/// runner (which folds the counters into `ServerStats` at session end).
+#[derive(Debug, Default)]
+pub struct DegradeShared {
+    /// Voltage step-downs performed.
+    vdd_steps: Cell<u64>,
+    /// Detector swaps to the fallback performed.
+    detector_swaps: Cell<u64>,
+    /// Full recoveries back to nominal.
+    recoveries: Cell<u64>,
+    /// Route scores to the fallback detector?
+    use_cheap: Cell<bool>,
+    /// Active degradation moves (0 = nominal).
+    level: Cell<u32>,
+    /// Did this session ever degrade?
+    was_degraded: Cell<bool>,
+}
+
+impl DegradeShared {
+    /// Voltage step-downs performed over the session.
+    pub fn vdd_steps(&self) -> u64 {
+        self.vdd_steps.get()
+    }
+
+    /// Detector swaps performed over the session.
+    pub fn detector_swaps(&self) -> u64 {
+        self.detector_swaps.get()
+    }
+
+    /// Full recoveries to nominal over the session.
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries.get()
+    }
+
+    /// Current degradation level (0 = nominal).
+    pub fn level(&self) -> u32 {
+        self.level.get()
+    }
+
+    /// Did the session degrade at least once?
+    pub fn was_degraded(&self) -> bool {
+        self.was_degraded.get()
+    }
+}
+
+/// The per-session load governor: watches real-time lag at chunk
+/// boundaries and walks the degradation ladder described in the
+/// [module docs](self).
+#[derive(Debug)]
+pub struct DegradationPolicy {
+    cfg: DegradeConfig,
+    shared: Rc<DegradeShared>,
+    /// Voltage to recover back up to.
+    nominal_vdd: f64,
+    /// Voltage currently commanded.
+    current_vdd: f64,
+    /// Wall-clock and event-time origin, fixed at the first poll.
+    start: Option<(Instant, u64)>,
+    /// Consecutive calm polls seen.
+    calm: u32,
+    /// Polls left before the next shed move is allowed.
+    cooldown: u32,
+}
+
+impl DegradationPolicy {
+    /// A policy starting nominal at `nominal_vdd`, publishing through
+    /// `shared` (hand clones of it to the [`SwitchableDetector`] and the
+    /// session runner).
+    pub fn new(cfg: DegradeConfig, shared: Rc<DegradeShared>, nominal_vdd: f64) -> Self {
+        Self {
+            cfg,
+            shared,
+            nominal_vdd,
+            current_vdd: nominal_vdd,
+            start: None,
+            calm: 0,
+            cooldown: 0,
+        }
+    }
+
+    /// One decision of the state machine against a measured lag — pure
+    /// (no clocks), so every transition is unit-testable. Returns the
+    /// voltage to retarget to, if this decision moves the voltage.
+    pub fn step(&mut self, lag_s: f64) -> Option<f64> {
+        if lag_s > self.cfg.lag_shed_s {
+            self.calm = 0;
+            if self.cooldown > 0 {
+                self.cooldown -= 1;
+                return None;
+            }
+            self.cooldown = self.cfg.cooldown_polls;
+            return self.shed();
+        }
+        if lag_s < self.cfg.lag_recover_s {
+            self.cooldown = 0;
+            if self.shared.level.get() == 0 {
+                return None;
+            }
+            self.calm += 1;
+            if self.calm >= self.cfg.recover_polls {
+                return self.recover();
+            }
+        } else {
+            // inside the hysteresis band: hold position
+            self.calm = 0;
+        }
+        None
+    }
+
+    /// Apply one shed move: voltage down until the floor, then the
+    /// detector swap; beyond that there is nothing left to shed.
+    fn shed(&mut self) -> Option<f64> {
+        let bump = |c: &Cell<u64>| c.set(c.get() + 1);
+        if self.current_vdd > self.cfg.vdd_min_v + 1e-9 {
+            self.current_vdd =
+                (self.current_vdd - self.cfg.vdd_step_v).max(self.cfg.vdd_min_v);
+            bump(&self.shared.vdd_steps);
+            self.mark_shed();
+            return Some(self.current_vdd);
+        }
+        if !self.shared.use_cheap.get() {
+            self.shared.use_cheap.set(true);
+            bump(&self.shared.detector_swaps);
+            self.mark_shed();
+        }
+        None
+    }
+
+    fn mark_shed(&mut self) {
+        self.shared.level.set(self.shared.level.get() + 1);
+        self.shared.was_degraded.set(true);
+        self.calm = 0;
+    }
+
+    /// Undo one move (detector first, then voltage); a full return to
+    /// nominal counts one recovery.
+    fn recover(&mut self) -> Option<f64> {
+        let retarget = if self.shared.use_cheap.get() {
+            self.shared.use_cheap.set(false);
+            None
+        } else {
+            self.current_vdd = (self.current_vdd + self.cfg.vdd_step_v).min(self.nominal_vdd);
+            Some(self.current_vdd)
+        };
+        let level = self.shared.level.get().saturating_sub(1);
+        self.shared.level.set(level);
+        self.calm = 0;
+        if level == 0 {
+            self.shared.recoveries.set(self.shared.recoveries.get() + 1);
+        }
+        retarget
+    }
+}
+
+impl Governor for DegradationPolicy {
+    fn on_chunk_end(&mut self, stats: &LiveStats) -> Option<f64> {
+        let now = Instant::now();
+        // the first poll fixes both clocks' origin, so lag compares the
+        // wall time spent to the event time covered *since then*
+        let (wall0, t0) = *self.start.get_or_insert((now, stats.last_t_us));
+        let wall_s = now.duration_since(wall0).as_secs_f64();
+        let span_s = stats.last_t_us.saturating_sub(t0) as f64 * 1e-6;
+        self.step(wall_s - span_s)
+    }
+
+    fn level(&self) -> u32 {
+        self.shared.level.get()
+    }
+}
+
+/// An [`EventScorer`] that routes between the session's primary detector
+/// and the cheaper fallback under the policy's control. Both detectors
+/// see *every* event they are asked to score (no replay on swap): the
+/// fallback starts cold when swapped in and warms its SAE from the
+/// events it scores — a few-ms accuracy dip, which is the accepted price
+/// of keeping the session alive.
+///
+/// While degraded, [`wants_lut`](EventScorer::wants_lut) reports `false`
+/// so the coordinator sheds the FBF refresh work too; LUT refreshes that
+/// do run always land in the primary detector, which resumes with a
+/// current-enough LUT on swap-back.
+pub struct SwitchableDetector {
+    primary: Box<dyn EventScorer>,
+    fallback: Box<dyn EventScorer>,
+    shared: Rc<DegradeShared>,
+}
+
+impl std::fmt::Debug for SwitchableDetector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SwitchableDetector")
+            .field("primary", &self.primary.name())
+            .field("fallback", &self.fallback.name())
+            .field("degraded", &self.shared.use_cheap.get())
+            .finish()
+    }
+}
+
+impl SwitchableDetector {
+    /// Wrap `primary` with a cold `fallback`, both controlled through
+    /// the policy's `shared` state.
+    pub fn new(
+        primary: Box<dyn EventScorer>,
+        fallback: Box<dyn EventScorer>,
+        shared: Rc<DegradeShared>,
+    ) -> Self {
+        Self { primary, fallback, shared }
+    }
+}
+
+impl EventScorer for SwitchableDetector {
+    fn score(&mut self, ev: &Event) -> f64 {
+        if self.shared.use_cheap.get() {
+            self.fallback.score(ev)
+        } else {
+            self.primary.score(ev)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        if self.shared.use_cheap.get() {
+            self.fallback.name()
+        } else {
+            self.primary.name()
+        }
+    }
+
+    fn ops_per_event(&self) -> f64 {
+        if self.shared.use_cheap.get() {
+            self.fallback.ops_per_event()
+        } else {
+            self.primary.ops_per_event()
+        }
+    }
+
+    fn wants_lut(&self) -> bool {
+        // degraded sessions shed the FBF refresh stage along with the
+        // primary detector
+        self.primary.wants_lut() && !self.shared.use_cheap.get()
+    }
+
+    fn refresh_lut(&mut self, lut: &[f32]) {
+        self.primary.refresh_lut(lut);
+    }
+
+    fn lut(&self) -> Option<&[f32]> {
+        self.primary.lut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::make_detector;
+    use crate::coordinator::PipelineConfig;
+
+    fn policy(cfg: DegradeConfig) -> (DegradationPolicy, Rc<DegradeShared>) {
+        let shared = Rc::new(DegradeShared::default());
+        (DegradationPolicy::new(cfg, Rc::clone(&shared), 1.2), shared)
+    }
+
+    fn fast_cfg() -> DegradeConfig {
+        // no cooldown / single-poll recovery: each step() is one move
+        DegradeConfig { cooldown_polls: 0, recover_polls: 1, ..DegradeConfig::default() }
+    }
+
+    #[test]
+    fn sheds_voltage_then_detector_then_nothing() {
+        let (mut p, s) = policy(fast_cfg());
+        // 1.2 -> 1.0 -> 0.8 -> 0.6, each one poll
+        assert_eq!(p.step(1.0), Some(1.0));
+        assert_eq!(p.step(1.0), Some(0.8));
+        assert_eq!(p.step(1.0), Some(0.6));
+        assert_eq!(s.vdd_steps(), 3);
+        assert!(!s.use_cheap.get());
+        // at the floor: swap the detector...
+        assert_eq!(p.step(1.0), None);
+        assert!(s.use_cheap.get());
+        assert_eq!(s.detector_swaps(), 1);
+        assert_eq!(s.level(), 4);
+        // ...and with nothing left to shed, further overload is a no-op
+        assert_eq!(p.step(1.0), None);
+        assert_eq!(s.level(), 4);
+        assert_eq!(s.detector_swaps(), 1);
+        assert!(s.was_degraded());
+    }
+
+    #[test]
+    fn cooldown_spaces_shed_moves() {
+        let (mut p, s) = policy(DegradeConfig { cooldown_polls: 2, ..fast_cfg() });
+        assert_eq!(p.step(1.0), Some(1.0));
+        // two polls of cooldown absorb the continuing overload
+        assert_eq!(p.step(1.0), None);
+        assert_eq!(p.step(1.0), None);
+        assert_eq!(p.step(1.0), Some(0.8));
+        assert_eq!(s.vdd_steps(), 2);
+    }
+
+    #[test]
+    fn recovery_mirrors_with_hysteresis() {
+        let (mut p, s) = policy(DegradeConfig { recover_polls: 2, ..fast_cfg() });
+        // degrade fully: 3 voltage steps + swap
+        for _ in 0..4 {
+            p.step(1.0);
+        }
+        assert_eq!(s.level(), 4);
+        // lag inside the hysteresis band: hold, no recovery
+        assert_eq!(p.step(0.1), None);
+        assert_eq!(s.level(), 4);
+        // two calm polls per move: detector swaps back first (no
+        // voltage change)...
+        assert_eq!(p.step(0.0), None);
+        assert_eq!(p.step(0.0), None);
+        assert!(!s.use_cheap.get());
+        assert_eq!(s.level(), 3);
+        // ...then the voltage walks back up
+        assert_eq!(p.step(0.0), None);
+        assert_eq!(p.step(0.0), Some(0.8));
+        assert_eq!(p.step(0.0), None);
+        assert_eq!(p.step(0.0), Some(1.0));
+        assert_eq!(p.step(0.0), None);
+        assert_eq!(p.step(0.0), Some(1.2));
+        assert_eq!(s.level(), 0);
+        assert_eq!(s.recoveries(), 1);
+        // nominal and calm: nothing to do
+        assert_eq!(p.step(0.0), None);
+        assert_eq!(s.recoveries(), 1);
+    }
+
+    #[test]
+    fn overload_resets_calm_progress() {
+        let (mut p, s) = policy(DegradeConfig { recover_polls: 2, ..fast_cfg() });
+        p.step(1.0); // one voltage step down
+        assert_eq!(s.level(), 1);
+        assert_eq!(p.step(0.0), None); // calm 1/2
+        p.step(1.0); // overload again: calm resets, another step sheds
+        assert_eq!(s.level(), 2);
+        assert_eq!(p.step(0.0), None); // calm 1/2 (fresh count)
+        assert_eq!(p.step(0.0), Some(1.0)); // calm 2/2 -> recover one
+        assert_eq!(s.level(), 1);
+    }
+
+    #[test]
+    fn switchable_detector_routes_and_sheds_lut() {
+        let cfg = PipelineConfig::test64();
+        let primary = make_detector(&cfg); // harris: wants_lut
+        let mut fcfg = cfg.clone();
+        fcfg.detector = DetectorKind::Fast;
+        let fallback = make_detector(&fcfg);
+        let shared = Rc::new(DegradeShared::default());
+        let mut sw = SwitchableDetector::new(primary, fallback, Rc::clone(&shared));
+
+        assert_eq!(sw.name(), "luvHarris-LUT");
+        assert!(sw.wants_lut());
+        // a refreshed LUT scores through the primary
+        let res = cfg.res;
+        let mut lut = vec![0.0f32; res.pixels()];
+        lut[res.index(5, 5)] = 0.9;
+        sw.refresh_lut(&lut);
+        assert!((sw.score(&Event::on(5, 5, 0)) - 0.9).abs() < 1e-6);
+
+        // degraded: routes to the fallback, sheds the LUT stage, but the
+        // primary's LUT survives for swap-back
+        shared.use_cheap.set(true);
+        assert_eq!(sw.name(), "eFAST");
+        assert!(!sw.wants_lut());
+        let _ = sw.score(&Event::on(5, 5, 1));
+        shared.use_cheap.set(false);
+        assert!(sw.wants_lut());
+        assert!((sw.score(&Event::on(5, 5, 2)) - 0.9).abs() < 1e-6);
+    }
+}

@@ -34,6 +34,7 @@
 //! its worker moves on to the next session, and nothing shared is
 //! poisoned.
 
+pub mod degrade;
 pub mod pool;
 pub mod wire;
 
@@ -52,6 +53,7 @@ use crate::events::{Event, Resolution};
 use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use crate::util::sync::{mpsc, run_isolated, thread, Arc, Mutex};
 
+pub use degrade::{DegradationPolicy, DegradeConfig, SwitchableDetector};
 pub use pool::{EnginePool, PoolStats};
 pub use wire::{Hello, Summary, WireSink};
 
@@ -80,6 +82,16 @@ pub struct ServeConfig {
     /// connections would pin every worker forever. `None` blocks
     /// indefinitely (trusted peers only).
     pub io_timeout: Option<Duration>,
+    /// Adaptive degradation under overload (`None` = off). When set,
+    /// every session gets a [`degrade::DegradationPolicy`] watching its
+    /// real-time lag at chunk boundaries, stepping the backend voltage
+    /// down and finally swapping to the cheaper fallback detector
+    /// before the session would have to be dropped; rate-driven DVFS is
+    /// disabled for governed sessions (the governor owns the voltage
+    /// knob). Degradation state streams to v3 clients on every stats
+    /// frame and aggregates into the `degrade_*` [`ServerStats`]
+    /// counters.
+    pub degrade: Option<degrade::DegradeConfig>,
 }
 
 impl ServeConfig {
@@ -91,6 +103,7 @@ impl ServeConfig {
             max_streams: 4,
             keep_reports: false,
             io_timeout: Some(Duration::from_secs(30)),
+            degrade: None,
         }
     }
 }
@@ -124,14 +137,23 @@ pub struct ServerStats {
     /// a live sensor; negative = processed faster than real time. 0
     /// until the first session completes.
     pub worst_lag_s: f64,
-    /// Completed TCP sessions that negotiated protocol v2 (streamed
-    /// results).
+    /// Completed TCP sessions that negotiated protocol v2 or newer
+    /// (streamed results).
     pub sessions_v2: u64,
     /// Corners streamed to v2 clients in `CornerBatch` messages.
     pub corners_streamed: u64,
     /// Live `Stats` messages sent to v2 clients
     /// (`--stats-interval` cadence).
     pub stats_frames: u64,
+    /// Degradation voltage step-downs across sessions
+    /// ([`ServeConfig::degrade`]).
+    pub degrade_vdd_steps: u64,
+    /// Degradation detector swaps to the fallback across sessions.
+    pub degrade_detector_swaps: u64,
+    /// Sessions that degraded and fully recovered to nominal.
+    pub degrade_recoveries: u64,
+    /// Sessions that degraded at least once.
+    pub sessions_degraded: u64,
     /// Engine-pool counters (cold compiles vs pooled reuses).
     pub pool: PoolStats,
 }
@@ -394,12 +416,13 @@ fn run_tcp_session(shared: &Shared, stream: TcpStream) -> Result<()> {
 
     let framed: TcpStreamSource = crate::events::source::FramedStreamSource::new(reader);
     let mut source = BoundsCheckedSource { inner: framed, res: hello.res };
-    if hello.version >= wire::WIRE_V2 {
-        // v2: a WireSink rides the pipeline, streaming corner batches at
-        // chunk boundaries and stats at the configured interval; the
+    let negotiated = hello.version.min(wire::WIRE_VERSION);
+    if negotiated >= wire::WIRE_V2 {
+        // v2/v3: a WireSink rides the pipeline, streaming corner batches
+        // at chunk boundaries and stats at the configured interval; the
         // tagged summary goes through the same writer so ordering holds
         let writer = BufWriter::new(stream.try_clone().context("cloning connection")?);
-        let mut sink = WireSink::new(writer);
+        let mut sink = WireSink::new(writer, negotiated);
         let (report, lag_s) =
             run_session(shared, hello.stream_id, hello.res, &mut source, &mut sink)?;
         let (corners_streamed, stats_frames) =
@@ -436,9 +459,27 @@ fn run_session<S: EventSource + ?Sized>(
     // sync refresh only: the async worker loads a private engine, which
     // would bypass the pool and double-load artifacts per session
     cfg.async_refresh = false;
+    if shared.cfg.degrade.is_some() {
+        // the degradation governor owns the voltage knob — rate-driven
+        // DVFS would fight its retargets
+        cfg.dvfs = None;
+    }
 
     let backend = make_backend(&cfg).with_context(|| format!("stream {stream_id}: backend"))?;
-    let detector = make_detector(&cfg);
+    let mut detector = make_detector(&cfg);
+    // degradation: wrap the detector so the governor can swap it for the
+    // cheaper fallback mid-stream; the Rc'd state stays on this worker
+    let degrade_state = if let Some(dc) = &shared.cfg.degrade {
+        let state = std::rc::Rc::new(degrade::DegradeShared::default());
+        let mut fcfg = cfg.clone();
+        fcfg.detector = dc.fallback;
+        let fallback = make_detector(&fcfg);
+        detector =
+            Box::new(SwitchableDetector::new(detector, fallback, std::rc::Rc::clone(&state)));
+        Some(state)
+    } else {
+        None
+    };
     let engine = if detector.wants_lut() {
         match shared.pool.checkout_engine(res) {
             Ok(engine) => Some(engine),
@@ -457,7 +498,15 @@ fn run_session<S: EventSource + ?Sized>(
     };
     let scratch = shared.pool.checkout_scratch(res);
 
+    let nominal_vdd = cfg.fixed_vdd;
     let mut pipe = DynPipeline::with_parts_and_scratch(cfg, backend, detector, engine, scratch)?;
+    if let (Some(dc), Some(state)) = (&shared.cfg.degrade, &degrade_state) {
+        pipe.set_governor(Box::new(DegradationPolicy::new(
+            dc.clone(),
+            std::rc::Rc::clone(state),
+            nominal_vdd,
+        )));
+    }
     let mut tracked = SpanSource::new(source);
     let result = pipe.run_stream_with(&mut tracked, sink);
     let span_s = tracked.span_s();
@@ -468,6 +517,16 @@ fn run_session<S: EventSource + ?Sized>(
         shared.pool.checkin_engine(engine);
     }
     shared.pool.checkin_scratch(res, scratch);
+
+    // fold the session's degradation activity into the aggregate
+    // counters (success or failure — shed work happened either way)
+    if let Some(state) = &degrade_state {
+        let mut stats = shared.stats.lock().unwrap();
+        stats.degrade_vdd_steps += state.vdd_steps();
+        stats.degrade_detector_swaps += state.detector_swaps();
+        stats.degrade_recoveries += state.recoveries();
+        stats.sessions_degraded += state.was_degraded() as u64;
+    }
 
     let report = result.with_context(|| format!("stream {stream_id}"))?;
     let lag_s = report.wall_s - span_s;

@@ -34,6 +34,13 @@
 //!                    'R' Summary       the v1 summary block, verbatim
 //! ```
 //!
+//! **v3 sessions** are v2 with three more u64 fields appended to every
+//! `Stats` message — `last_t_us`, `degrade_level`, `vdd_mv` — so a
+//! client can watch the server's adaptive degradation (voltage
+//! step-downs, detector swaps — see `serve::degrade`) live per session.
+//! Everything else is byte-identical to v2, and v2 clients keep
+//! receiving the 5-field stats message.
+//!
 //! All integers little-endian. Corner scores travel as raw `f64` bits,
 //! so a v2 client reassembles corners **bit-identical** to what a
 //! sequential `run_stream` with a
@@ -74,8 +81,11 @@ pub const WIRE_V1: u8 = 1;
 /// Protocol v2: v1 plus server→client `CornerBatch`/`Stats` messages
 /// interleaved while the stream runs.
 pub const WIRE_V2: u8 = 2;
+/// Protocol v3: v2 with the session's degradation state (`last_t_us`,
+/// `degrade_level`, `vdd_mv`) appended to every `Stats` message.
+pub const WIRE_V3: u8 = 3;
 /// Newest protocol version this build speaks (what negotiation caps at).
-pub const WIRE_VERSION: u8 = WIRE_V2;
+pub const WIRE_VERSION: u8 = WIRE_V3;
 
 /// Ack status: session accepted.
 pub const ACK_OK: u8 = 0;
@@ -127,6 +137,11 @@ impl Hello {
     /// A v2 session with streamed corners and stats.
     pub fn v2(stream_id: u32, res: Resolution) -> Self {
         Self { stream_id, res, version: WIRE_V2 }
+    }
+
+    /// A v3 session: v2 plus degradation state on every stats message.
+    pub fn v3(stream_id: u32, res: Resolution) -> Self {
+        Self { stream_id, res, version: WIRE_V3 }
     }
 }
 
@@ -347,11 +362,17 @@ pub fn write_corner_batch<W: Write>(w: &mut W, corners: &[Corner]) -> Result<()>
     Ok(())
 }
 
-/// Write one v2 `Stats` message.
-pub fn write_stats_msg<W: Write>(w: &mut W, s: &LiveStats) -> Result<()> {
+/// Write one `Stats` message; `version` selects the field set (v3
+/// appends `last_t_us`, `degrade_level`, `vdd_mv`).
+pub fn write_stats_msg<W: Write>(w: &mut W, s: &LiveStats, version: u8) -> Result<()> {
     w.write_all(&[MSG_STATS])?;
     for v in [s.events_in, s.events_signal, s.corners_total, s.dvfs_switches, s.lut_refreshes] {
         w.write_all(&v.to_le_bytes())?;
+    }
+    if version >= WIRE_V3 {
+        for v in [s.last_t_us, s.degrade_level, s.vdd_mv] {
+            w.write_all(&v.to_le_bytes())?;
+        }
     }
     Ok(())
 }
@@ -367,8 +388,11 @@ pub enum ServerMsg {
     Summary(Summary),
 }
 
-/// Read the next tagged server→client message of a v2 session.
-pub fn read_server_msg<R: Read>(r: &mut R) -> Result<ServerMsg> {
+/// Read the next tagged server→client message of a v2/v3 session;
+/// `version` is the session's negotiated protocol version (it sets the
+/// `Stats` field count — a v2 decode leaves the v3-only [`LiveStats`]
+/// fields at zero).
+pub fn read_server_msg<R: Read>(r: &mut R, version: u8) -> Result<ServerMsg> {
     let mut kind = [0u8; 1];
     read_exact_or_closed(r, &mut kind, "waiting for the next server message")?;
     match kind[0] {
@@ -404,13 +428,20 @@ pub fn read_server_msg<R: Read>(r: &mut R) -> Result<ServerMsg> {
                 read_exact_or_closed(r, &mut b, "reading a stats message")?;
                 Ok(u64::from_le_bytes(b))
             };
-            Ok(ServerMsg::Stats(LiveStats {
+            let mut s = LiveStats {
                 events_in: field()?,
                 events_signal: field()?,
                 corners_total: field()?,
                 dvfs_switches: field()?,
                 lut_refreshes: field()?,
-            }))
+                ..LiveStats::default()
+            };
+            if version >= WIRE_V3 {
+                s.last_t_us = field()?;
+                s.degrade_level = field()?;
+                s.vdd_mv = field()?;
+            }
+            Ok(ServerMsg::Stats(s))
         }
         MSG_SUMMARY => Ok(ServerMsg::Summary(read_summary(r)?)),
         other => bail!("unknown server message kind {other:#04x}"),
@@ -448,15 +479,18 @@ fn read_exact_or_closed<R: Read>(r: &mut R, buf: &mut [u8], what: &str) -> Resul
 #[derive(Debug)]
 pub struct WireSink<W: Write> {
     w: W,
+    /// Negotiated session protocol version (selects the stats field set).
+    version: u8,
     batch: Vec<Corner>,
     corners_sent: u64,
     stats_sent: u64,
 }
 
 impl<W: Write> WireSink<W> {
-    /// A sink encoding onto `w` (wrap sockets in a `BufWriter`).
-    pub fn new(w: W) -> Self {
-        Self { w, batch: Vec::new(), corners_sent: 0, stats_sent: 0 }
+    /// A sink encoding onto `w` (wrap sockets in a `BufWriter`) speaking
+    /// the session's negotiated protocol `version` (≥ [`WIRE_V2`]).
+    pub fn new(w: W, version: u8) -> Self {
+        Self { w, version, batch: Vec::new(), corners_sent: 0, stats_sent: 0 }
     }
 
     /// Corners encoded so far (including the buffered, unflushed tail).
@@ -502,7 +536,7 @@ impl<W: Write> CornerSink for WireSink<W> {
         // corners first, so a stats snapshot never counts corners the
         // client has not yet been sent
         self.flush_batch()?;
-        write_stats_msg(&mut self.w, stats)?;
+        write_stats_msg(&mut self.w, stats, self.version)?;
         self.w.flush()?;
         self.stats_sent += 1;
         Ok(())
@@ -596,7 +630,7 @@ where
     std::thread::scope(|scope| {
         let recv = scope.spawn(move || -> Result<Summary> {
             let result: Result<Summary> = (|| loop {
-                match read_server_msg(&mut r)? {
+                match read_server_msg(&mut r, negotiated)? {
                     ServerMsg::Corners(batch) => {
                         for c in &batch {
                             sink.on_corner(c)?;
@@ -636,7 +670,11 @@ mod tests {
 
     #[test]
     fn hello_roundtrip_both_versions() {
-        for hello in [Hello::v1(42, Resolution::DAVIS240), Hello::v2(43, Resolution::TEST64)] {
+        for hello in [
+            Hello::v1(42, Resolution::DAVIS240),
+            Hello::v2(43, Resolution::TEST64),
+            Hello::v3(44, Resolution::TEST64),
+        ] {
             let mut buf = Vec::new();
             write_hello(&mut buf, &hello).unwrap();
             assert_eq!(read_hello(&mut &buf[..]).unwrap(), hello);
@@ -651,7 +689,7 @@ mod tests {
         write_hello(&mut buf, &Hello::v1(0, Resolution::TEST64)).unwrap();
         buf[8] = 9;
         assert!(read_hello(&mut &buf[..]).is_err());
-        let bad = Hello { stream_id: 0, res: Resolution::TEST64, version: 3 };
+        let bad = Hello { stream_id: 0, res: Resolution::TEST64, version: 4 };
         assert!(write_hello(&mut Vec::new(), &bad).is_err());
         // degenerate resolution
         let mut buf = Vec::new();
@@ -695,6 +733,14 @@ mod tests {
         // is a protocol violation
         let buf = [ACK_OK, 3u8];
         assert!(read_ack_negotiated(&mut &buf[..], WIRE_V2).is_err());
+
+        // a v3 hello against this build negotiates v3
+        let mut buf = Vec::new();
+        write_ack_for(&mut buf, ACK_OK, WIRE_V3).unwrap();
+        assert_eq!(read_ack_negotiated(&mut &buf[..], WIRE_V3).unwrap(), WIRE_V3);
+        // ...and a v2 server answering a v3 hello negotiates down to v2
+        let buf = [ACK_OK, WIRE_V2];
+        assert_eq!(read_ack_negotiated(&mut &buf[..], WIRE_V3).unwrap(), WIRE_V2);
     }
 
     #[test]
@@ -734,7 +780,7 @@ mod tests {
         ];
         let mut buf = Vec::new();
         write_corner_batch(&mut buf, &corners).unwrap();
-        match read_server_msg(&mut &buf[..]).unwrap() {
+        match read_server_msg(&mut &buf[..], WIRE_V3).unwrap() {
             ServerMsg::Corners(got) => {
                 assert_eq!(got.len(), corners.len());
                 for (g, w) in got.iter().zip(&corners) {
@@ -755,21 +801,33 @@ mod tests {
             corners_total: 3,
             dvfs_switches: 1,
             lut_refreshes: 2,
+            last_t_us: 1_234_567,
+            degrade_level: 2,
+            vdd_mv: 800,
         };
+        // v3 carries every field
         let mut buf = Vec::new();
-        write_stats_msg(&mut buf, &s).unwrap();
-        assert_eq!(read_server_msg(&mut &buf[..]).unwrap(), ServerMsg::Stats(s));
+        write_stats_msg(&mut buf, &s, WIRE_V3).unwrap();
+        assert_eq!(buf.len(), 1 + 8 * 8);
+        assert_eq!(read_server_msg(&mut &buf[..], WIRE_V3).unwrap(), ServerMsg::Stats(s));
+        // a v2 session stays byte-compatible: 5 fields on the wire, the
+        // v3-only fields decode as zero
+        let mut buf = Vec::new();
+        write_stats_msg(&mut buf, &s, WIRE_V2).unwrap();
+        assert_eq!(buf.len(), 1 + 5 * 8);
+        let want = LiveStats { last_t_us: 0, degrade_level: 0, vdd_mv: 0, ..s };
+        assert_eq!(read_server_msg(&mut &buf[..], WIRE_V2).unwrap(), ServerMsg::Stats(want));
     }
 
     #[test]
     fn server_msg_rejects_garbage() {
         // unknown kind byte
-        assert!(read_server_msg(&mut &[0xFFu8, 0, 0][..]).is_err());
+        assert!(read_server_msg(&mut &[0xFFu8, 0, 0][..], WIRE_V3).is_err());
         // corner batch with a count beyond the cap must error before
         // allocating
         let mut buf = vec![MSG_CORNERS];
         buf.extend_from_slice(&(u32::MAX).to_le_bytes());
-        assert!(read_server_msg(&mut &buf[..]).is_err());
+        assert!(read_server_msg(&mut &buf[..], WIRE_V3).is_err());
         // oversized batch refused at write time too
         let big = vec![Corner { seq: 0, ev: Event::on(0, 0, 0), score: 0.0 }; MAX_CORNER_BATCH + 1];
         assert!(write_corner_batch(&mut Vec::new(), &big).is_err());
@@ -779,7 +837,7 @@ mod tests {
     fn wire_sink_batches_per_chunk_and_orders_stats_after_corners() {
         let mut buf = Vec::new();
         {
-            let mut sink = WireSink::new(&mut buf);
+            let mut sink = WireSink::new(&mut buf, WIRE_V3);
             let c = |seq| Corner { seq, ev: Event::on(1, 1, seq), score: 1.0 };
             sink.on_corner(&c(0)).unwrap();
             sink.on_corner(&c(1)).unwrap();
@@ -794,16 +852,16 @@ mod tests {
             assert_eq!((corners, stats_n), (3, 1));
         }
         let mut r = &buf[..];
-        match read_server_msg(&mut r).unwrap() {
+        match read_server_msg(&mut r, WIRE_V3).unwrap() {
             ServerMsg::Corners(b) => assert_eq!(b.len(), 2),
             other => panic!("expected first batch, got {other:?}"),
         }
-        match read_server_msg(&mut r).unwrap() {
+        match read_server_msg(&mut r, WIRE_V3).unwrap() {
             ServerMsg::Corners(b) => assert_eq!(b.len(), 1),
             other => panic!("expected second batch, got {other:?}"),
         }
-        assert!(matches!(read_server_msg(&mut r).unwrap(), ServerMsg::Stats(_)));
-        match read_server_msg(&mut r).unwrap() {
+        assert!(matches!(read_server_msg(&mut r, WIRE_V3).unwrap(), ServerMsg::Stats(_)));
+        match read_server_msg(&mut r, WIRE_V3).unwrap() {
             ServerMsg::Summary(s) => assert_eq!(s.stream_id, 5),
             other => panic!("expected summary, got {other:?}"),
         }

@@ -39,11 +39,34 @@ pub struct BackendStats {
     /// Bits corrupted by Monte-Carlo read-error injection (NMC only).
     pub flipped_bits: u64,
     /// The decrement/clamp kernel the dispatcher selected at startup
-    /// ([`crate::tos::kernel::active_path`]). The NMC macro reports
-    /// [`KernelPath::Scalar`] while Monte-Carlo error injection forces its
-    /// gate-level per-pixel walk; every other backend reports the
-    /// process-wide selection (override with `NMC_TOS_KERNEL`).
+    /// ([`crate::tos::kernel::active_path`]). Every backend — including
+    /// the NMC macro under fault injection, whose fault-aware fast path
+    /// rides the same kernel — reports the process-wide selection
+    /// (override with `NMC_TOS_KERNEL`).
     pub kernel: KernelPath,
+    /// Voltage-fault injection state (`None` = injection off). Only the
+    /// NMC macro models read faults; every other backend reports `None`.
+    pub faults: Option<FaultInfo>,
+}
+
+/// Snapshot of an active voltage-fault injector, surfaced through
+/// [`BackendStats::faults`] so experiment harnesses and the serving layer
+/// can see the fault mode a run actually executed under.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultInfo {
+    /// Supply voltage the current fault map was derived for.
+    pub vdd: f64,
+    /// Seed the static per-cell fault map derives from.
+    pub seed: u64,
+    /// Per-bit fault probability at `vdd` (0 at and above the paper's
+    /// published-zero voltages — see `nmc::calib::BER_MC_FLOOR`).
+    pub p_bit: f64,
+    /// Cells with at least one faulty bit at `vdd`.
+    pub faulty_cells: u64,
+    /// Corrupted word reads so far.
+    pub flipped_bits: u64,
+    /// Total word reads so far.
+    pub word_reads: u64,
 }
 
 /// A TOS implementation the coordinator can drive.

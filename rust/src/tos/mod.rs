@@ -14,7 +14,7 @@ pub mod backend;
 pub mod kernel;
 pub mod sharded;
 
-pub use backend::{BackendStats, TosBackend};
+pub use backend::{BackendStats, FaultInfo, TosBackend};
 pub use kernel::KernelPath;
 pub use sharded::ShardedTos;
 

@@ -1,0 +1,181 @@
+//! Adaptive degradation under overload: a served stream whose event
+//! timestamps outrun realtime must make the server *shed* work — step the
+//! supply voltage down, then swap to the cheaper fallback detector —
+//! instead of lagging or dropping events, and must climb back to the
+//! nominal operating point once the input calms down. The whole episode
+//! is observable in the per-session v3 stats frames and the aggregate
+//! [`ServerStats`] counters, and no event is ever lost.
+//!
+//! Engine-less (eHarris primary / eFAST fallback), so this runs without
+//! `make artifacts`. The spike scene comes from the enumerative scenario
+//! grid's `Overload` rate point; timestamps are then compressed so the
+//! "camera" bursts far beyond what any realtime budget can absorb —
+//! keeping the lag signal machine-independent.
+
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+
+use nmc_tos::coordinator::sink::{Corner, CornerSink, LiveStats};
+use nmc_tos::coordinator::{BackendKind, DetectorKind, PipelineConfig};
+use nmc_tos::datasets::scenarios::{Motion, NoiseLevel, RateLevel, ScenarioGrid};
+use nmc_tos::events::source::SliceSource;
+use nmc_tos::events::{Event, Resolution};
+use nmc_tos::serve::wire::{self, Hello};
+use nmc_tos::serve::{DegradeConfig, ServeConfig, StreamServer};
+
+/// Spike length (events) and the event-time span they are squeezed into.
+const SPIKE_EVENTS: usize = 400_000;
+const SPIKE_SPAN_US: u64 = 5_000;
+/// Calm tail: sparse events whose timestamps sprint ahead of the wall
+/// clock, driving the measured lag strongly negative.
+const TAIL_EVENTS: usize = 100_000;
+const TAIL_GAP_US: u64 = 2_000;
+
+/// Client-side collector for v3 streamed results.
+#[derive(Default)]
+struct Collect {
+    corners: u64,
+    stats: Vec<LiveStats>,
+}
+
+impl CornerSink for Collect {
+    fn on_corner(&mut self, _c: &Corner) -> anyhow::Result<()> {
+        self.corners += 1;
+        Ok(())
+    }
+    fn on_stats(&mut self, s: &LiveStats) -> anyhow::Result<()> {
+        self.stats.push(*s);
+        Ok(())
+    }
+}
+
+/// Overload burst followed by a calm tail, from the scenario grid.
+fn overload_then_calm() -> Vec<Event> {
+    let grid = ScenarioGrid {
+        motions: vec![Motion::Fast],
+        rates: vec![RateLevel::Overload],
+        noises: vec![NoiseLevel::Noisy],
+        resolutions: vec![Resolution::TEST64],
+        vdds: vec![1.2],
+    };
+    let scenario = &grid.enumerate()[0];
+    let mut events = scenario.build(7).generate(SPIKE_EVENTS + TAIL_EVENTS);
+    // spike: the first SPIKE_EVENTS all inside SPIKE_SPAN_US of event
+    // time — far more work per event-second than realtime allows
+    for (i, e) in events[..SPIKE_EVENTS].iter_mut().enumerate() {
+        e.t = i as u64 * SPIKE_SPAN_US / SPIKE_EVENTS as u64;
+    }
+    // tail: sparse events, each TAIL_GAP_US apart — event time races
+    // ahead of the wall clock, so every governor poll reads as calm
+    for (i, e) in events[SPIKE_EVENTS..].iter_mut().enumerate() {
+        e.t = 2 * SPIKE_SPAN_US + i as u64 * TAIL_GAP_US;
+    }
+    events
+}
+
+#[test]
+fn overload_degrades_sheds_and_recovers_without_drops() {
+    let mut cfg = PipelineConfig::test64();
+    cfg.backend = BackendKind::Nmc;
+    cfg.detector = DetectorKind::EHarris; // real per-event cost to shed
+    cfg.record_per_event = false;
+    cfg.stats_interval_events = Some(25_000);
+    let mut serve_cfg = ServeConfig::new(cfg);
+    serve_cfg.max_streams = 1;
+    // tight thresholds so the compressed spike trips degradation on any
+    // machine: the spike freezes event time, so lag is pure wall time
+    serve_cfg.degrade = Some(DegradeConfig {
+        lag_shed_s: 0.02,
+        lag_recover_s: 0.005,
+        fallback: DetectorKind::Fast,
+        ..DegradeConfig::default()
+    });
+
+    let server = StreamServer::new(serve_cfg).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let client = thread::spawn(move || {
+        let events = overload_then_calm();
+        let conn = TcpStream::connect(addr).unwrap();
+        // small frames => many governor polls during both phases
+        let mut src = SliceSource::new(&events, 2_048);
+        let mut sink = Collect::default();
+        let summary =
+            wire::feed_with_sink(conn, Hello::v3(1, Resolution::TEST64), &mut src, &mut sink)
+                .unwrap();
+        (summary, sink)
+    });
+    server.serve(&listener, Some(1)).unwrap();
+    let (summary, got) = client.join().unwrap();
+    let stats = server.shutdown();
+
+    // zero drops: every event fed came back accounted for, and every
+    // tagged corner was streamed to the client
+    let total = (SPIKE_EVENTS + TAIL_EVENTS) as u64;
+    assert_eq!(summary.events_in, total, "no event may be dropped under overload");
+    assert_eq!(got.corners, summary.corners_total);
+    assert_eq!(stats.sessions_completed, 1);
+    assert_eq!(stats.sessions_failed, 0);
+
+    // the session visibly degraded: all three voltage steps down to the
+    // 0.6 V floor, then the detector swap, then a full recovery
+    assert_eq!(stats.sessions_degraded, 1);
+    assert!(stats.degrade_vdd_steps >= 3, "vdd steps {}", stats.degrade_vdd_steps);
+    assert!(stats.degrade_detector_swaps >= 1, "swaps {}", stats.degrade_detector_swaps);
+    assert!(stats.degrade_recoveries >= 1, "recoveries {}", stats.degrade_recoveries);
+
+    // the episode is visible on the wire: some v3 stats frame shows a
+    // degraded level at a reduced voltage...
+    assert_eq!(got.stats.len() as u64, total / 25_000);
+    assert!(
+        got.stats.iter().any(|s| s.degrade_level > 0 && s.vdd_mv < 1_200),
+        "no stats frame showed the degraded state"
+    );
+    assert!(
+        got.stats.iter().any(|s| s.vdd_mv == 600),
+        "the shed ladder must reach the 0.6 V floor"
+    );
+    // ...and the calm tail ends back at the nominal operating point
+    let last = got.stats.last().unwrap();
+    assert_eq!(last.degrade_level, 0, "recovery must complete during the calm tail");
+    assert_eq!(last.vdd_mv, 1_200, "voltage must return to nominal");
+    assert_eq!(last.events_in, total);
+}
+
+#[test]
+fn calm_streams_never_degrade() {
+    // the same server config fed a stream whose event time tracks far
+    // ahead of the wall clock must never shed anything
+    let mut cfg = PipelineConfig::test64();
+    cfg.backend = BackendKind::Nmc;
+    cfg.detector = DetectorKind::Fast;
+    cfg.record_per_event = false;
+    let mut serve_cfg = ServeConfig::new(cfg);
+    serve_cfg.degrade = Some(DegradeConfig::default());
+
+    let server = StreamServer::new(serve_cfg).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let client = thread::spawn(move || {
+        // a nominal-rate scenario stream: ~8k events spanning seconds of
+        // event time, processed in milliseconds of wall time
+        let grid = ScenarioGrid::smoke();
+        let events = grid.enumerate()[0].build(9).generate(8_000);
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut src = SliceSource::new(&events, 512);
+        let mut sink = Collect::default();
+        wire::feed_with_sink(conn, Hello::v3(2, Resolution::TEST64), &mut src, &mut sink).unwrap()
+    });
+    server.serve(&listener, Some(1)).unwrap();
+    let summary = client.join().unwrap();
+    let stats = server.shutdown();
+
+    assert_eq!(summary.events_in, 8_000);
+    assert_eq!(stats.sessions_completed, 1);
+    assert_eq!(stats.sessions_degraded, 0);
+    assert_eq!(stats.degrade_vdd_steps, 0);
+    assert_eq!(stats.degrade_detector_swaps, 0);
+    assert_eq!(stats.degrade_recoveries, 0);
+}

@@ -128,6 +128,81 @@ fn scene_source_streams_through_pipeline() {
 }
 
 #[test]
+fn injected_faults_stream_bit_identically_at_any_chunk_size() {
+    // the voltage-fault fast path is seeded and static per (seed, vdd,
+    // cell): streamed ingestion at awkward chunk sizes must reproduce the
+    // load-all run bit-for-bit — surface, scores, corners AND the fault
+    // telemetry — at both published-nonzero BER voltages
+    let events = SceneConfig::test64().build(88).generate(9_000);
+    for vdd in [0.61, 0.60] {
+        let mk_cfg = || {
+            let mut cfg = PipelineConfig::test64();
+            cfg.backend = BackendKind::Nmc;
+            cfg.detector = DetectorKind::Fast;
+            cfg.dvfs = None;
+            cfg.fixed_vdd = vdd;
+            cfg.inject_errors = true;
+            cfg.seed = 0xFA_17;
+            cfg
+        };
+        let mut pipe = Pipeline::from_config_without_engine(mk_cfg()).unwrap();
+        let want = pipe.run(&events).unwrap();
+        let want_faults = want.backend.faults.expect("NMC run with injection reports faults");
+        assert!(want_faults.flipped_bits > 0, "vdd {vdd}: faults must actually fire");
+
+        for chunk in [97usize, 1_024, 8_999] {
+            let mut pipe = Pipeline::from_config_without_engine(mk_cfg()).unwrap();
+            let got = pipe.run_stream(&mut SliceSource::new(&events, chunk)).unwrap();
+            assert_eq!(want.final_tos, got.final_tos, "vdd {vdd} chunk {chunk}: surface");
+            assert_eq!(want.scores, got.scores, "vdd {vdd} chunk {chunk}: scores");
+            assert_eq!(want.corners, got.corners, "vdd {vdd} chunk {chunk}: corners");
+            let got_faults = got.backend.faults.unwrap();
+            assert_eq!(want_faults, got_faults, "vdd {vdd} chunk {chunk}: fault telemetry");
+        }
+    }
+}
+
+#[test]
+fn fault_sets_nest_monotonically_with_voltage() {
+    // the fault map derives per (seed, cell, bit) with a threshold test
+    // against p_bit(vdd), so the faulty-cell set at a higher voltage is a
+    // subset of the set at any lower voltage — observable end-to-end as a
+    // monotone faulty-cell count over the same event stream, collapsing
+    // to exactly zero at the published-zero voltages
+    let events = SceneConfig::test64().build(99).generate(8_000);
+    let run_at = |vdd: f64| {
+        let mut cfg = PipelineConfig::test64();
+        cfg.backend = BackendKind::Nmc;
+        cfg.detector = DetectorKind::Fast;
+        cfg.dvfs = None;
+        cfg.fixed_vdd = vdd;
+        cfg.inject_errors = true;
+        cfg.seed = 0xD1CE;
+        let mut pipe = Pipeline::from_config_without_engine(cfg).unwrap();
+        let report = pipe.run(&events).unwrap();
+        report.backend.faults.expect("NMC run with injection reports faults")
+    };
+    let ladder: Vec<_> = [0.58, 0.60, 0.61, 0.62, 0.8, 1.2].iter().map(|&v| run_at(v)).collect();
+    for w in ladder.windows(2) {
+        assert!(
+            w[0].faulty_cells >= w[1].faulty_cells,
+            "fault sets must nest: {} cells @{} V vs {} cells @{} V",
+            w[0].faulty_cells,
+            w[0].vdd,
+            w[1].faulty_cells,
+            w[1].vdd
+        );
+        // same events => identical read traffic regardless of voltage
+        assert_eq!(w[0].word_reads, w[1].word_reads);
+    }
+    assert!(ladder[0].faulty_cells > ladder[2].faulty_cells, "0.58 V strictly worse than 0.61 V");
+    for f in &ladder[3..] {
+        assert_eq!(f.faulty_cells, 0, "published-zero voltage {} V", f.vdd);
+        assert_eq!(f.flipped_bits, 0);
+    }
+}
+
+#[test]
 fn chunk_boundaries_do_not_leak_into_batch_flush_state() {
     // a chunk size below BACKEND_BATCH_MAX must not change when the
     // sharded backend's pending buffer flushes
