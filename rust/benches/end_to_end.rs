@@ -45,6 +45,25 @@ fn main() {
         });
     }
 
+    // streamed real-format ingestion: the same events encoded as an
+    // AEDAT4 container and decoded packet-by-packet on the hot path —
+    // against stream_chunk above, this prices the format decoder itself
+    {
+        let mut aedat = Vec::new();
+        nmc_tos::events::codec::aedat4::write_aedat4(&mut aedat, &events, Resolution::DAVIS240)
+            .unwrap();
+        let mut cfg = PipelineConfig::davis240();
+        cfg.lut_refresh_events = usize::MAX;
+        cfg.record_per_event = false;
+        let mut pipe = Pipeline::new_without_engine(cfg).unwrap();
+        h.run("e2e/stream_aedat4/100k_events", 1, 5, events.len() as f64, || {
+            let mut src =
+                nmc_tos::events::codec::aedat4::Aedat4StreamSource::new(&aedat[..]).unwrap();
+            let r = pipe.run_stream(&mut src).unwrap();
+            std::hint::black_box(r.events_signal);
+        });
+    }
+
     // sink-based results path: an external RecordingSink (full per-event
     // recording through the observer API) and a stats-emitting run —
     // both against the counters-only rows above, so the sink dispatch

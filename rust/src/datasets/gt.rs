@@ -10,6 +10,23 @@
 
 use crate::events::Event;
 
+/// Anything that can answer "is `(x, y)` at time `t` a true corner?".
+///
+/// Implemented by the synthetic scenes' exact [`GroundTruth`] and by the
+/// file-backed [`CornerLabels`](super::public::CornerLabels) of real
+/// public recordings, so the evaluation machinery
+/// ([`ScoredSink`](crate::eval::ScoredSink)) scores both the same way.
+pub trait CornerOracle {
+    /// Is there a true corner within `radius_px` of `(x, y)` at time `t`?
+    fn is_corner(&self, x: f32, y: f32, t: u64, radius_px: f32) -> bool;
+}
+
+impl CornerOracle for GroundTruth {
+    fn is_corner(&self, x: f32, y: f32, t: u64, radius_px: f32) -> bool {
+        self.near_corner(x, y, t, radius_px)
+    }
+}
+
 /// One corner's trajectory: time-ordered (t_us, x, y) samples.
 #[derive(Debug, Clone, Default)]
 pub struct CornerTrack {

@@ -19,6 +19,7 @@
 
 pub mod gt;
 pub mod profiles;
+pub mod public;
 pub mod scenarios;
 pub mod synthetic;
 

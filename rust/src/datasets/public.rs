@@ -1,0 +1,359 @@
+//! Public-dataset harness: real recordings + file-backed corner labels.
+//!
+//! The synthetic scenes in [`super::synthetic`] know their exact ground
+//! truth; real recordings (`shapes_6dof`, Prophesee CD streams, ...)
+//! instead ship with hand-labelled corner annotations in a sidecar text
+//! file.  This module provides:
+//!
+//! * [`CornerLabels`] — sparse `(t, x, y)` corner annotations loaded from
+//!   a text file, answering [`CornerOracle`] queries with a ±2 ms time
+//!   window (the same slack [`GroundTruth`](super::gt::GroundTruth)
+//!   hardcodes for its interpolated tracks).
+//! * [`Manifest`] / [`PublicDataset`] — a JSON manifest declaring which
+//!   recordings to evaluate, their geometry, and where the files live.
+//!   **No network code**: a manifest may carry a `url` per dataset, but it
+//!   is only echoed in the error message when the file is missing, as a
+//!   manual-download hint.  Everything the harness reads comes from disk.
+//!
+//! Manifest format (paths are resolved relative to the manifest file):
+//!
+//! ```json
+//! {
+//!   "datasets": [
+//!     {
+//!       "name": "fixture-aedat4",
+//!       "recording": "../events.aedat4",
+//!       "ground_truth": "corners_gt.txt",
+//!       "width": 64,
+//!       "height": 64,
+//!       "url": "https://example.org/events.aedat4"
+//!     }
+//!   ]
+//! }
+//! ```
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::gt::CornerOracle;
+use crate::events::Resolution;
+use crate::util::json::Json;
+
+/// Time window (µs) around each label within which an event counts as
+/// "at" that corner.  Matches the 2 ms slack `GroundTruth::near_corner`
+/// hardcodes for synthetic tracks.
+pub const LABEL_SLACK_US: u64 = 2_000;
+
+/// Sparse corner annotations: parallel `(t_us, x, y)` columns sorted by
+/// time.  Loaded from a text file with one `t_seconds x y` triple per
+/// line (`#`-prefixed lines and blank lines are comments).
+#[derive(Debug, Clone, Default)]
+pub struct CornerLabels {
+    t_us: Vec<u64>,
+    x: Vec<f32>,
+    y: Vec<f32>,
+}
+
+impl CornerLabels {
+    /// Parse labels from text.  Input need not be time-sorted; labels are
+    /// stably sorted by timestamp after parsing.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut rows: Vec<(u64, f32, f32)> = Vec::new();
+        for (idx, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_ascii_whitespace();
+            let (ts, xs, ys) = match (it.next(), it.next(), it.next()) {
+                (Some(t), Some(x), Some(y)) => (t, x, y),
+                _ => bail!("label line {}: expected `t_seconds x y`, got {:?}", idx + 1, line),
+            };
+            ensure!(
+                it.next().is_none(),
+                "label line {}: trailing fields after `t_seconds x y`",
+                idx + 1
+            );
+            let t_s: f64 = ts
+                .parse()
+                .with_context(|| format!("label line {}: bad timestamp {:?}", idx + 1, ts))?;
+            ensure!(
+                t_s.is_finite() && t_s >= 0.0,
+                "label line {}: timestamp {} out of range",
+                idx + 1,
+                t_s
+            );
+            let x: f32 = xs
+                .parse()
+                .with_context(|| format!("label line {}: bad x {:?}", idx + 1, xs))?;
+            let y: f32 = ys
+                .parse()
+                .with_context(|| format!("label line {}: bad y {:?}", idx + 1, ys))?;
+            ensure!(
+                x.is_finite() && y.is_finite(),
+                "label line {}: non-finite coordinates",
+                idx + 1
+            );
+            rows.push(((t_s * 1e6).round() as u64, x, y));
+        }
+        rows.sort_by_key(|r| r.0);
+        let mut out = CornerLabels::default();
+        for (t, x, y) in rows {
+            out.t_us.push(t);
+            out.x.push(x);
+            out.y.push(y);
+        }
+        Ok(out)
+    }
+
+    /// Load labels from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading corner labels {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing corner labels {}", path.display()))
+    }
+
+    /// Number of labels.
+    pub fn len(&self) -> usize {
+        self.t_us.len()
+    }
+
+    /// True when there are no labels at all.
+    pub fn is_empty(&self) -> bool {
+        self.t_us.is_empty()
+    }
+}
+
+impl CornerOracle for CornerLabels {
+    fn is_corner(&self, x: f32, y: f32, t: u64, radius_px: f32) -> bool {
+        let r2 = radius_px * radius_px;
+        let lo_t = t.saturating_sub(LABEL_SLACK_US);
+        let hi_t = t.saturating_add(LABEL_SLACK_US);
+        let lo = self.t_us.partition_point(|&lt| lt < lo_t);
+        for i in lo..self.t_us.len() {
+            if self.t_us[i] > hi_t {
+                break;
+            }
+            let dx = self.x[i] - x;
+            let dy = self.y[i] - y;
+            if dx * dx + dy * dy <= r2 {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// One manifest entry: a recording plus its corner labels and geometry.
+#[derive(Debug, Clone)]
+pub struct PublicDataset {
+    /// Unique short name, used as the report key.
+    pub name: String,
+    /// Event recording (any format `source::open` can sniff).
+    pub recording: PathBuf,
+    /// Corner-label sidecar (see [`CornerLabels::parse`]).
+    pub ground_truth: PathBuf,
+    /// Declared sensor geometry.
+    pub res: Resolution,
+    /// Optional download hint, echoed when files are missing.  Never
+    /// fetched by this crate.
+    pub url: Option<String>,
+}
+
+impl PublicDataset {
+    /// Verify both files exist on disk.  This harness performs no
+    /// downloads; the error names the missing file and, when the manifest
+    /// provides one, the URL to fetch it from manually.
+    pub fn ensure_local(&self) -> Result<()> {
+        for (what, path) in [("recording", &self.recording), ("ground truth", &self.ground_truth)]
+        {
+            if !path.is_file() {
+                let hint = match &self.url {
+                    Some(u) => format!(" (download it manually, e.g. from {u})"),
+                    None => String::new(),
+                };
+                bail!(
+                    "dataset {:?}: {} file {} not found{}",
+                    self.name,
+                    what,
+                    path.display(),
+                    hint
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A parsed dataset manifest: the evaluation set, sorted by name.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// Declared datasets, sorted by `name` (names are unique).
+    pub datasets: Vec<PublicDataset>,
+}
+
+impl Manifest {
+    /// Parse a manifest from JSON text; relative paths are resolved
+    /// against `base_dir` (normally the manifest's directory).
+    pub fn parse(text: &str, base_dir: &Path) -> Result<Self> {
+        let json = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest JSON: {e}"))?;
+        let arr = json
+            .get("datasets")
+            .and_then(Json::as_arr)
+            .context("manifest: missing `datasets` array")?;
+        ensure!(!arr.is_empty(), "manifest: `datasets` is empty");
+        let mut datasets = Vec::new();
+        for (i, d) in arr.iter().enumerate() {
+            let field = |k: &str| -> Result<&str> {
+                d.get(k)
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("manifest dataset {i}: missing string `{k}`"))
+            };
+            let dim = |k: &str| -> Result<u16> {
+                let v = d
+                    .get(k)
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("manifest dataset {i}: missing number `{k}`"))?;
+                ensure!(
+                    v.fract() == 0.0 && v >= 1.0 && v <= u16::MAX as f64,
+                    "manifest dataset {i}: `{k}` = {v} is not a sensor dimension"
+                );
+                Ok(v as u16)
+            };
+            let name = field("name")?.to_string();
+            ensure!(!name.is_empty(), "manifest dataset {i}: empty `name`");
+            datasets.push(PublicDataset {
+                name,
+                recording: base_dir.join(field("recording")?),
+                ground_truth: base_dir.join(field("ground_truth")?),
+                res: Resolution::new(dim("width")?, dim("height")?),
+                url: d.get("url").and_then(Json::as_str).map(str::to_string),
+            });
+        }
+        datasets.sort_by(|a, b| a.name.cmp(&b.name));
+        for w in datasets.windows(2) {
+            ensure!(w[0].name != w[1].name, "manifest: duplicate dataset name {:?}", w[0].name);
+        }
+        Ok(Manifest { datasets })
+    }
+
+    /// Load and parse a manifest file; relative paths inside it are
+    /// resolved against the manifest's own directory.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading dataset manifest {}", path.display()))?;
+        let base = path.parent().unwrap_or_else(|| Path::new("."));
+        Self::parse(&text, base).with_context(|| format!("parsing manifest {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_parse_sort_and_skip_comments() {
+        let text = "# corner labels\n\n0.002 10.0 5.0\n0.001 3.5 4.5\n";
+        let l = CornerLabels::parse(text).unwrap();
+        assert_eq!(l.len(), 2);
+        assert_eq!(l.t_us, vec![1_000, 2_000]);
+        assert_eq!(l.x, vec![3.5, 10.0]);
+    }
+
+    #[test]
+    fn labels_reject_malformed_lines() {
+        let e = CornerLabels::parse("0.1 1.0\n").unwrap_err().to_string();
+        assert!(e.contains("line 1"), "{e}");
+        let e = CornerLabels::parse("ok\n0.1 1 2 3\n").map(|_| ()).unwrap_err();
+        let e = format!("{e:#}");
+        assert!(e.contains("line 1"), "{e}");
+        let e = CornerLabels::parse("0.1 nope 2\n").map(|_| ()).unwrap_err();
+        assert!(format!("{e:#}").contains("bad x"));
+        let e = CornerLabels::parse("-0.1 1 2\n").map(|_| ()).unwrap_err();
+        assert!(format!("{e:#}").contains("out of range"));
+    }
+
+    #[test]
+    fn oracle_window_and_radius() {
+        let l = CornerLabels::parse("0.010 20.0 20.0\n").unwrap();
+        // Inside radius, inside the ±2 ms window.
+        assert!(l.is_corner(20.5, 20.0, 10_000, 1.0));
+        assert!(l.is_corner(20.0, 20.0, 10_000 + LABEL_SLACK_US, 1.0));
+        assert!(l.is_corner(20.0, 20.0, 10_000 - LABEL_SLACK_US, 1.0));
+        // Just outside the window.
+        assert!(!l.is_corner(20.0, 20.0, 10_000 + LABEL_SLACK_US + 1, 1.0));
+        assert!(!l.is_corner(20.0, 20.0, 10_000 - LABEL_SLACK_US - 1, 1.0));
+        // Outside the radius.
+        assert!(!l.is_corner(25.0, 20.0, 10_000, 1.0));
+        assert!(l.is_corner(25.0, 20.0, 10_000, 5.0));
+        // Empty oracle says no.
+        assert!(!CornerLabels::default().is_corner(0.0, 0.0, 0, 100.0));
+    }
+
+    fn manifest_text() -> &'static str {
+        r#"{
+          "datasets": [
+            {"name": "b", "recording": "rec/b.raw", "ground_truth": "b_gt.txt",
+             "width": 640, "height": 480, "url": "https://example.org/b.raw"},
+            {"name": "a", "recording": "a.aedat4", "ground_truth": "a_gt.txt",
+             "width": 64, "height": 64}
+          ]
+        }"#
+    }
+
+    #[test]
+    fn manifest_parses_sorts_and_joins_paths() {
+        let m = Manifest::parse(manifest_text(), Path::new("/data")).unwrap();
+        assert_eq!(m.datasets.len(), 2);
+        assert_eq!(m.datasets[0].name, "a");
+        assert_eq!(m.datasets[1].name, "b");
+        assert_eq!(m.datasets[0].recording, Path::new("/data/a.aedat4"));
+        assert_eq!(m.datasets[1].ground_truth, Path::new("/data/b_gt.txt"));
+        assert_eq!(m.datasets[1].res, Resolution::new(640, 480));
+        assert_eq!(m.datasets[1].url.as_deref(), Some("https://example.org/b.raw"));
+        assert!(m.datasets[0].url.is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_bad_shapes() {
+        let base = Path::new(".");
+        let e = Manifest::parse("{}", base).map(|_| ()).unwrap_err();
+        assert!(format!("{e:#}").contains("datasets"));
+        let e = Manifest::parse(r#"{"datasets": []}"#, base).map(|_| ()).unwrap_err();
+        assert!(format!("{e:#}").contains("empty"));
+        let dup = r#"{"datasets": [
+            {"name": "x", "recording": "r", "ground_truth": "g", "width": 2, "height": 2},
+            {"name": "x", "recording": "r", "ground_truth": "g", "width": 2, "height": 2}
+        ]}"#;
+        let e = Manifest::parse(dup, base).map(|_| ()).unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate"));
+        let bad_dim = r#"{"datasets": [
+            {"name": "x", "recording": "r", "ground_truth": "g", "width": 0, "height": 2}
+        ]}"#;
+        let e = Manifest::parse(bad_dim, base).map(|_| ()).unwrap_err();
+        assert!(format!("{e:#}").contains("width"));
+        let frac = r#"{"datasets": [
+            {"name": "x", "recording": "r", "ground_truth": "g", "width": 2.5, "height": 2}
+        ]}"#;
+        assert!(Manifest::parse(frac, base).is_err());
+    }
+
+    #[test]
+    fn ensure_local_reports_missing_with_url_hint() {
+        let ds = PublicDataset {
+            name: "ghost".into(),
+            recording: PathBuf::from("/nonexistent/ghost.raw"),
+            ground_truth: PathBuf::from("/nonexistent/ghost_gt.txt"),
+            res: Resolution::TEST64,
+            url: Some("https://example.org/ghost.raw".into()),
+        };
+        let e = ds.ensure_local().unwrap_err().to_string();
+        assert!(e.contains("ghost.raw"), "{e}");
+        assert!(e.contains("https://example.org/ghost.raw"), "{e}");
+        let no_url = PublicDataset { url: None, ..ds };
+        let e = no_url.ensure_local().unwrap_err().to_string();
+        assert!(!e.contains("download"), "{e}");
+    }
+}

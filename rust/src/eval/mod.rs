@@ -15,19 +15,27 @@
 //! the evaluation path for streamed runs, which keeps only the
 //! `(score, label)` pairs themselves.
 //!
-//! The [`run_vdd_sweep`] harness composes this machinery into the
-//! end-to-end voltage-fault fidelity experiment: detector quality as a
-//! function of supply voltage with the seeded fault injector live in the
-//! TOS hot path (`nmc-tos vdd-sweep`).
+//! Two harnesses compose this machinery into end-to-end experiments:
+//!
+//! * [`run_vdd_sweep`] — voltage-fault fidelity: detector quality as a
+//!   function of supply voltage with the seeded fault injector live in
+//!   the TOS hot path (`nmc-tos vdd-sweep`).
+//! * [`run_dataset_eval`] — real-recording quality: every manifest
+//!   dataset streamed through the sniffing decoders
+//!   (AEDAT4/EVT2/EVT3/binary/text) and scored against file-backed
+//!   corner labels (`nmc-tos dataset-eval`).
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 use anyhow::Result;
 
 use crate::coordinator::sink::{Corner, CornerSink};
 use crate::coordinator::{BackendKind, DetectorKind, Pipeline, PipelineConfig};
-use crate::datasets::gt::GroundTruth;
+use crate::datasets::gt::{CornerOracle, GroundTruth};
+use crate::datasets::public::{CornerLabels, Manifest};
 use crate::datasets::scenarios::{Scenario, ScenarioGrid};
+use crate::events::source::{self, TakeSource, DEFAULT_CHUNK_EVENTS};
 use crate::events::{Event, Resolution};
 use crate::nmc::calib;
 use crate::util::json::Json;
@@ -40,17 +48,23 @@ use crate::util::json::Json;
 /// Labelling order and values are identical to
 /// [`RunReport::scored_events`](crate::coordinator::RunReport::scored_events)
 /// on the same run, so both evaluation paths produce the same curve.
+///
+/// Generic over the [`CornerOracle`] supplying labels: the synthetic
+/// scenes' exact [`GroundTruth`] (the default, so existing call sites
+/// read unchanged) or the file-backed
+/// [`CornerLabels`](crate::datasets::public::CornerLabels) of a real
+/// recording.
 #[derive(Debug)]
-pub struct ScoredSink<'a> {
-    gt: &'a GroundTruth,
+pub struct ScoredSink<'a, O: CornerOracle + ?Sized = GroundTruth> {
+    gt: &'a O,
     radius_px: f32,
     /// Accumulated `(score, is_true_corner)` pairs, in stream order.
     pub scored: Vec<(f64, bool)>,
 }
 
-impl<'a> ScoredSink<'a> {
+impl<'a, O: CornerOracle + ?Sized> ScoredSink<'a, O> {
     /// Label against `gt` with the paper's match radius (px).
-    pub fn new(gt: &'a GroundTruth, radius_px: f32) -> Self {
+    pub fn new(gt: &'a O, radius_px: f32) -> Self {
         Self { gt, radius_px, scored: Vec::new() }
     }
 
@@ -60,13 +74,13 @@ impl<'a> ScoredSink<'a> {
     }
 }
 
-impl CornerSink for ScoredSink<'_> {
+impl<O: CornerOracle + ?Sized> CornerSink for ScoredSink<'_, O> {
     fn on_corner(&mut self, _corner: &Corner) -> Result<()> {
         Ok(()) // the per-score callback below already saw this event
     }
 
     fn on_score(&mut self, _seq: u64, ev: &Event, score: f64) -> Result<()> {
-        let label = self.gt.near_corner(ev.x as f32, ev.y as f32, ev.t, self.radius_px);
+        let label = self.gt.is_corner(ev.x as f32, ev.y as f32, ev.t, self.radius_px);
         self.scored.push((score, label));
         Ok(())
     }
@@ -419,6 +433,236 @@ pub fn run_vdd_sweep(cfg: &SweepConfig) -> Result<SweepReport> {
     })
 }
 
+// ---------------------------------------------------------------------------
+// Public-dataset AUC harness (`nmc-tos dataset-eval`)
+
+/// Configuration of one [`run_dataset_eval`] experiment: which manifest
+/// to read and which detector x backend grid to score every declared
+/// recording under.
+#[derive(Debug, Clone)]
+pub struct DatasetEvalConfig {
+    /// Dataset manifest path (see
+    /// [`Manifest`](crate::datasets::public::Manifest) for the format).
+    pub manifest: PathBuf,
+    /// Backends to run every dataset under.
+    pub backends: Vec<BackendKind>,
+    /// Detectors to run every dataset under.
+    pub detectors: Vec<DetectorKind>,
+    /// Corner-label match radius (px).
+    pub radius_px: f32,
+    /// PR-curve threshold count.
+    pub thresholds: usize,
+    /// Streaming chunk size fed to the format decoders.
+    pub chunk_events: usize,
+    /// Optional cap on events read per recording (`None` = whole file).
+    pub max_events: Option<usize>,
+    /// Harris LUT refresh period (signal events) for the software-FBF
+    /// pipeline the harness runs.
+    pub lut_refresh_events: usize,
+}
+
+impl DatasetEvalConfig {
+    /// The full evaluation: NMC backend, luvHarris detector, whole
+    /// recordings, paper match radius.
+    pub fn new(manifest: impl Into<PathBuf>) -> Self {
+        Self {
+            manifest: manifest.into(),
+            backends: vec![BackendKind::Nmc],
+            detectors: vec![DetectorKind::Harris],
+            radius_px: 3.5,
+            thresholds: 101,
+            chunk_events: DEFAULT_CHUNK_EVENTS,
+            max_events: None,
+            lut_refresh_events: 2_000,
+        }
+    }
+
+    /// CI smoke preset: two backends x two detectors, small chunks (so
+    /// the streamed decoders refill repeatedly even on tiny fixtures), a
+    /// hard event cap, and a fast LUT refresh.
+    pub fn smoke(manifest: impl Into<PathBuf>) -> Self {
+        Self {
+            manifest: manifest.into(),
+            backends: vec![BackendKind::Golden, BackendKind::Nmc],
+            detectors: vec![DetectorKind::Harris, DetectorKind::Fast],
+            radius_px: 4.0,
+            thresholds: 101,
+            chunk_events: 4096,
+            max_events: Some(50_000),
+            lut_refresh_events: 500,
+        }
+    }
+}
+
+/// One (dataset, backend, detector) measurement.
+#[derive(Debug, Clone)]
+pub struct DatasetEvalPoint {
+    /// Dataset name from the manifest.
+    pub dataset: String,
+    /// Backend name the point ran under.
+    pub backend: &'static str,
+    /// Detector name the point ran under.
+    pub detector: &'static str,
+    /// Events decoded from the recording (post `max_events` cap).
+    pub events_in: u64,
+    /// Events surviving STCF.
+    pub events_signal: u64,
+    /// Corners tagged.
+    pub corners: u64,
+    /// `(score, label)` pairs accumulated (== `events_signal`).
+    pub scored: u64,
+    /// Pairs labelled true-corner by the ground-truth oracle.
+    pub positives: u64,
+    /// PR-AUC against the file-backed labels.
+    pub auc: f64,
+    /// Best F1 over the same curve.
+    pub best_f1: f64,
+}
+
+/// A finished dataset evaluation: points in dataset x backend x detector
+/// order (datasets already name-sorted by the manifest parser).
+///
+/// Like [`SweepReport`], everything derives from file content and
+/// configuration — no wall clock, no host state — so
+/// [`DatasetEvalReport::to_json`] renders byte-identically across repeat
+/// runs of the same config (the CI `dataset-smoke` lane `cmp`s two runs).
+#[derive(Debug, Clone)]
+pub struct DatasetEvalReport {
+    /// Corner-label match radius (px).
+    pub radius_px: f32,
+    /// PR-curve threshold count.
+    pub thresholds: usize,
+    /// Event cap per recording, if any.
+    pub max_events: Option<usize>,
+    /// Ground-truth label count per dataset name.
+    pub labels: BTreeMap<String, u64>,
+    /// All measurements.
+    pub points: Vec<DatasetEvalPoint>,
+}
+
+impl DatasetEvalReport {
+    /// Render the machine-readable report (deterministic key order and
+    /// float formatting — byte-identical for identical configs).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("harness", Json::Str("dataset-eval".into())),
+            ("radius_px", Json::Num(self.radius_px as f64)),
+            ("thresholds", Json::Num(self.thresholds as f64)),
+            (
+                "max_events",
+                match self.max_events {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "labels",
+                Json::Obj(
+                    self.labels.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect(),
+                ),
+            ),
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("dataset", Json::Str(p.dataset.clone())),
+                                ("backend", Json::Str(p.backend.into())),
+                                ("detector", Json::Str(p.detector.into())),
+                                ("events_in", Json::Num(p.events_in as f64)),
+                                ("events_signal", Json::Num(p.events_signal as f64)),
+                                ("corners", Json::Num(p.corners as f64)),
+                                ("scored", Json::Num(p.scored as f64)),
+                                ("positives", Json::Num(p.positives as f64)),
+                                ("auc", Json::Num(p.auc)),
+                                ("best_f1", Json::Num(p.best_f1)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Score real recordings against their corner-label sidecars: for every
+/// manifest dataset x backend x detector, stream the recording through
+/// the full pipeline (format sniffed by
+/// [`source::open`](crate::events::source::open)) with a [`ScoredSink`]
+/// labelling each surviving event against the dataset's
+/// [`CornerLabels`], and report PR-AUC per point.
+///
+/// No faults are injected and DVFS is off: this harness measures
+/// detector quality on real data, not voltage response — compose with
+/// [`run_vdd_sweep`] for that axis.
+pub fn run_dataset_eval(cfg: &DatasetEvalConfig) -> Result<DatasetEvalReport> {
+    anyhow::ensure!(!cfg.backends.is_empty(), "dataset eval needs at least one backend");
+    anyhow::ensure!(!cfg.detectors.is_empty(), "dataset eval needs at least one detector");
+    let manifest = Manifest::load(&cfg.manifest)?;
+    let mut labels_per_ds: BTreeMap<String, u64> = BTreeMap::new();
+    let mut points = Vec::new();
+    for ds in &manifest.datasets {
+        ds.ensure_local()?;
+        let labels = CornerLabels::load(&ds.ground_truth)?;
+        anyhow::ensure!(
+            !labels.is_empty(),
+            "dataset {:?}: ground truth {} has no labels",
+            ds.name,
+            ds.ground_truth.display()
+        );
+        labels_per_ds.insert(ds.name.clone(), labels.len() as u64);
+        for &backend in &cfg.backends {
+            for &detector in &cfg.detectors {
+                let mut pcfg = if ds.res == Resolution::TEST64 {
+                    PipelineConfig::test64()
+                } else {
+                    PipelineConfig::davis240()
+                };
+                pcfg.res = ds.res;
+                pcfg.backend = backend;
+                pcfg.detector = detector;
+                pcfg.dvfs = None;
+                pcfg.inject_errors = false;
+                pcfg.record_per_event = false;
+                pcfg.software_fbf = true; // engine-less: hermetic + deterministic
+                pcfg.lut_refresh_events = cfg.lut_refresh_events;
+                let mut pipe = Pipeline::from_config_without_engine(pcfg)?;
+                let mut sink = ScoredSink::new(&labels, cfg.radius_px);
+                let mut src = source::open(&ds.recording, cfg.chunk_events)?;
+                let report = match cfg.max_events {
+                    Some(cap) => {
+                        pipe.run_stream_with(&mut TakeSource::new(src, cap), &mut sink)?
+                    }
+                    None => pipe.run_stream_with(&mut src, &mut sink)?,
+                };
+                let positives = sink.scored.iter().filter(|(_, l)| *l).count() as u64;
+                let curve = sink.curve(cfg.thresholds);
+                points.push(DatasetEvalPoint {
+                    dataset: ds.name.clone(),
+                    backend: report.backend_name,
+                    detector: report.detector_name,
+                    events_in: report.events_in as u64,
+                    events_signal: report.events_signal as u64,
+                    corners: report.corners_total as u64,
+                    scored: sink.scored.len() as u64,
+                    positives,
+                    auc: curve.auc(),
+                    best_f1: curve.best_f1(),
+                });
+            }
+        }
+    }
+    Ok(DatasetEvalReport {
+        radius_px: cfg.radius_px,
+        thresholds: cfg.thresholds,
+        max_events: cfg.max_events,
+        labels: labels_per_ds,
+        points,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -606,5 +850,79 @@ mod tests {
         let mut cfg = tiny_sweep();
         cfg.backends.clear();
         assert!(run_vdd_sweep(&cfg).is_err());
+    }
+
+    #[test]
+    fn dataset_eval_rejects_empty_axes_and_missing_manifest() {
+        let mut cfg = DatasetEvalConfig::new("/nonexistent/manifest.json");
+        cfg.backends.clear();
+        assert!(run_dataset_eval(&cfg).is_err());
+        let mut cfg = DatasetEvalConfig::new("/nonexistent/manifest.json");
+        cfg.detectors.clear();
+        assert!(run_dataset_eval(&cfg).is_err());
+        let cfg = DatasetEvalConfig::new("/nonexistent/manifest.json");
+        let e = format!("{:#}", run_dataset_eval(&cfg).map(|_| ()).unwrap_err());
+        assert!(e.contains("manifest"), "{e}");
+    }
+
+    #[test]
+    fn dataset_eval_scores_a_recording_and_renders_reproducibly() {
+        use crate::datasets::synthetic::SceneConfig;
+        use std::fmt::Write as _;
+        use std::fs;
+
+        // Build a real dataset on disk: a synthetic scene dumped as a
+        // text recording, its vertex tracks dumped as a label sidecar.
+        let dir = std::env::temp_dir()
+            .join(format!("nmc-tos-dataset-eval-{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let mut scene = SceneConfig::test64().build(9);
+        let n = if cfg!(miri) { 800 } else { 8_000 };
+        let (events, gt) = scene.generate_with_gt(n);
+        let mut rec = Vec::new();
+        crate::events::codec::write_text(&mut rec, &events).unwrap();
+        fs::write(dir.join("rec.txt"), &rec).unwrap();
+        let mut gt_txt = String::from("# corner labels\n");
+        let mut n_labels = 0u64;
+        for tr in &gt.tracks {
+            for i in 0..tr.t_us.len() {
+                writeln!(
+                    gt_txt,
+                    "{:.6} {:.3} {:.3}",
+                    tr.t_us[i] as f64 * 1e-6,
+                    tr.x[i],
+                    tr.y[i]
+                )
+                .unwrap();
+                n_labels += 1;
+            }
+        }
+        fs::write(dir.join("gt.txt"), gt_txt).unwrap();
+        let manifest = concat!(
+            r#"{"datasets": [{"name": "synthetic-test64", "recording": "rec.txt","#,
+            r#" "ground_truth": "gt.txt", "width": 64, "height": 64}]}"#,
+        );
+        let mpath = dir.join("manifest.json");
+        fs::write(&mpath, manifest).unwrap();
+
+        let cfg = DatasetEvalConfig::smoke(&mpath);
+        let rep = run_dataset_eval(&cfg).unwrap();
+        assert_eq!(rep.points.len(), 4, "1 dataset x 2 backends x 2 detectors");
+        assert_eq!(rep.labels["synthetic-test64"], n_labels);
+        for p in &rep.points {
+            assert_eq!(p.dataset, "synthetic-test64");
+            assert!(p.events_in > 0);
+            assert_eq!(p.scored, p.events_signal, "one pair per surviving event");
+            assert!(p.positives > 0, "{}/{}: labels must match events", p.backend, p.detector);
+            assert!(p.positives <= p.scored);
+            assert!(p.auc.is_finite() && p.auc >= 0.0 && p.auc <= 1.0);
+            assert!(p.best_f1 > 0.0, "recall reaches 1 at the lowest threshold");
+        }
+        // Byte-reproducible across repeat runs, like the vdd-sweep report.
+        let a = rep.to_json().render();
+        let b = run_dataset_eval(&cfg).unwrap().to_json().render();
+        assert_eq!(a, b);
+        assert!(a.contains("\"harness\":\"dataset-eval\""));
+        fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,11 +1,15 @@
-//! Binary + text codecs for event streams.
+//! Binary + text codecs for event streams, plus the real camera-dump
+//! formats in the [`aedat4`] and [`evt`] submodules.
 //!
 //! * **Binary**: a fixed 13-byte little-endian record
 //!   `x:u16 | y:u16 | t:u64 | p:u8` with an `"NMCTOSEV"` + version header —
-//!   a stand-in for AEDAT/EVT that keeps dataset files self-describing.
+//!   the crate's own self-describing dataset container.
 //! * **Text**: `t x y p` per line (the format used by the Mueggler et al.
 //!   event-camera dataset the paper evaluates on), for interop with
 //!   published tooling.
+//! * **[`aedat4`]**: the DV / iniVation AEDAT4 packet container
+//!   (uncompressed subset).
+//! * **[`evt`]**: Prophesee EVT2/EVT3 raw word streams.
 //!
 //! Both codecs decode **incrementally** through the streaming sources
 //! ([`BinaryStreamSource`], [`TextStreamSource`], see
@@ -14,6 +18,9 @@
 //! clean error instead of a huge preallocation — and the load-all
 //! [`read_binary`]/[`read_text`] helpers are thin collectors over the
 //! same decoders.
+
+pub mod aedat4;
+pub mod evt;
 
 use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
 
@@ -26,9 +33,10 @@ pub(crate) const MAGIC: &[u8; 8] = b"NMCTOSEV";
 const VERSION: u8 = 1;
 const RECORD_BYTES: usize = 13;
 
-/// Upper bound on events decoded per binary chunk (~52 MiB of records):
-/// keeps the record buffer bounded whatever chunk size a caller asks for.
-const MAX_CHUNK_EVENTS: usize = 1 << 22;
+/// Upper bound on events decoded per chunk (~52 MiB of binary records):
+/// keeps decode buffers bounded whatever chunk size a caller asks for —
+/// shared by every streaming decoder in this module tree.
+pub(crate) const MAX_CHUNK_EVENTS: usize = 1 << 22;
 
 /// Write a stream of events in the binary container format.
 pub fn write_binary<W: Write>(w: W, events: &[Event]) -> Result<()> {

@@ -1,0 +1,874 @@
+//! Prophesee EVT2 / EVT3 raw-stream decoder (and test/bench encoders).
+//!
+//! Real Prophesee recordings (`.raw`) are an ASCII `%` header followed by
+//! a dense little-endian word stream: 16-bit words for EVT3, 32-bit for
+//! EVT2. Timestamps are reconstructed from a running time base
+//! (`TIME_HIGH`, extended in software past its field width) plus per-event
+//! low bits, and EVT3 additionally compresses bursts as vectorized
+//! `VECT_BASE_X` + `VECT_12`/`VECT_8` validity masks.
+//!
+//! [`EvtStreamSource`] decodes both flavors incrementally behind
+//! [`EventSource`] with a fixed read buffer — memory stays O(chunk)
+//! regardless of recording length — and treats the stream as untrusted
+//! input: reserved word types, coordinates outside the declared geometry,
+//! CD events before a time base exists, `VECT` words without a base,
+//! `TIME_HIGH` rollback, and a recording that ends mid-word are all
+//! byte-offset-bearing errors, never panics or huge allocations.
+//!
+//! Time-base extension: a `TIME_HIGH` value lower than the previous one
+//! is accepted as the 2^24 µs (EVT3) / 2^34 µs (EVT2) counter wrapping
+//! only when the step back spans at least half the field's range — the
+//! shape a real sensor produces, since it emits `TIME_HIGH` periodically
+//! as gradual increments. A short step back is a rollback error: the
+//! encoder-side fault would otherwise silently reorder time. (A stream
+//! that legitimately teleports forward across the wrap boundary without
+//! intermediate `TIME_HIGH` words is indistinguishable from a rollback
+//! and is rejected the same way.)
+
+use std::io::{self, BufWriter, Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::super::source::{DEFAULT_CHUNK_EVENTS, EventSource};
+use super::super::{Event, Polarity, Resolution};
+use super::MAX_CHUNK_EVENTS;
+
+/// Cap on one `%` header line (a hostile header must not buffer unbounded).
+const MAX_HEADER_LINE: usize = 4096;
+/// Cap on the whole `%` header.
+const MAX_HEADER_BYTES: usize = 64 << 10;
+/// Fixed body read-buffer size.
+const READ_BUF_BYTES: usize = 64 << 10;
+/// EVT coordinate fields are 11 bits wide.
+const MAX_EVT_DIM: u32 = 1 << 11;
+
+/// Which Prophesee word format a stream carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvtFlavor {
+    /// 32-bit words, one CD event per word (Gen3-era).
+    Evt2,
+    /// 16-bit words with vectorized CD bursts (Gen4/IMX636-era).
+    Evt3,
+}
+
+impl EvtFlavor {
+    /// Bytes per word in the body stream.
+    #[inline]
+    fn word_bytes(self) -> usize {
+        match self {
+            EvtFlavor::Evt2 => 4,
+            EvtFlavor::Evt3 => 2,
+        }
+    }
+
+    /// Name used in error messages.
+    fn name(self) -> &'static str {
+        match self {
+            EvtFlavor::Evt2 => "EVT2",
+            EvtFlavor::Evt3 => "EVT3",
+        }
+    }
+}
+
+/// Incremental decoder for Prophesee EVT2/EVT3 `.raw` streams.
+///
+/// The constructor consumes the ASCII `%` header (flavor + geometry are
+/// mandatory — a stream with neither a `% evt` / `% format` line nor a
+/// geometry is rejected, as is the EVT2.1 flavor we do not support) and
+/// the body then decodes word-at-a-time through a fixed 64 KiB buffer.
+pub struct EvtStreamSource<R: Read> {
+    r: R,
+    flavor: EvtFlavor,
+    res: Resolution,
+    chunk_events: usize,
+    buf: Vec<u8>,
+    start: usize,
+    end: usize,
+    /// Absolute byte offset (from file start) of `buf[start]`.
+    offset: u64,
+    done: bool,
+    /// Software-extended TIME_HIGH (full value, not just the field bits);
+    /// `None` until the first TIME_HIGH word — CD events before that have
+    /// no time base and are rejected.
+    time_high: Option<u64>,
+    /// Last TIME_LOW value (EVT3); 0 until the first TIME_LOW word.
+    time_low: u64,
+    /// Current row set by EVT_ADDR_Y (EVT3); CD words before any row are
+    /// rejected.
+    row: Option<u16>,
+    /// Pending VECT_BASE_X state: (next x, polarity), advanced by each
+    /// VECT_12/VECT_8 word.
+    vect: Option<(u64, Polarity)>,
+}
+
+impl<R: Read> EvtStreamSource<R> {
+    /// Parse the `%` header and set up chunked body decoding.
+    pub fn new(inner: R, chunk_events: usize) -> Result<Self> {
+        let mut r = inner;
+        let mut flavor: Option<EvtFlavor> = None;
+        let mut width: Option<u32> = None;
+        let mut height: Option<u32> = None;
+        let mut header_bytes = 0u64;
+        let mut pending: Option<u8> = None;
+        let mut line = Vec::new();
+        loop {
+            let Some(b) = read_byte(&mut r).context("reading EVT header")? else { break };
+            if b != b'%' {
+                // first body byte — remember it, the header (if any) is over
+                pending = Some(b);
+                break;
+            }
+            header_bytes += 1;
+            line.clear();
+            loop {
+                let Some(b) = read_byte(&mut r).context("reading EVT header")? else { break };
+                header_bytes += 1;
+                if b == b'\n' {
+                    break;
+                }
+                ensure!(
+                    line.len() < MAX_HEADER_LINE,
+                    "EVT header line exceeds the {MAX_HEADER_LINE}-byte cap"
+                );
+                line.push(b);
+            }
+            ensure!(
+                header_bytes <= MAX_HEADER_BYTES as u64,
+                "EVT header exceeds the {MAX_HEADER_BYTES}-byte cap"
+            );
+            let text = String::from_utf8_lossy(&line);
+            if parse_header_line(text.trim(), &mut flavor, &mut width, &mut height)? {
+                break; // "% end" terminates the header explicitly
+            }
+        }
+        let flavor = flavor.context(
+            "EVT header declares no format: need a '% evt 2.0' / '% evt 3.0' or '% format' line",
+        )?;
+        let (width, height) = match (width, height) {
+            (Some(w), Some(h)) => (w, h),
+            _ => bail!(
+                "{} header declares no geometry: need a '% geometry WxH' line \
+                 (or width=/height= in '% format')",
+                flavor.name()
+            ),
+        };
+        for (what, v) in [("width", width), ("height", height)] {
+            ensure!(
+                v > 0 && v <= MAX_EVT_DIM,
+                "{} geometry {what} {v} outside the 11-bit coordinate range 1..={MAX_EVT_DIM}",
+                flavor.name()
+            );
+        }
+        let res = Resolution::new(width as u16, height as u16);
+        let mut buf = vec![0u8; READ_BUF_BYTES];
+        let mut end = 0usize;
+        if let Some(b) = pending {
+            buf[0] = b;
+            end = 1;
+        }
+        Ok(Self {
+            r,
+            flavor,
+            res,
+            chunk_events: chunk_events.clamp(1, MAX_CHUNK_EVENTS),
+            buf,
+            start: 0,
+            end,
+            offset: header_bytes,
+            done: false,
+            time_high: None,
+            time_low: 0,
+            row: None,
+            vect: None,
+        })
+    }
+
+    /// Which word format the header declared.
+    pub fn flavor(&self) -> EvtFlavor {
+        self.flavor
+    }
+
+    /// Sensor geometry the header declared.
+    pub fn resolution(&self) -> Resolution {
+        self.res
+    }
+
+    /// Refill the body buffer; `Ok(false)` means EOF with nothing read.
+    fn refill(&mut self) -> Result<bool> {
+        if self.start > 0 {
+            self.buf.copy_within(self.start..self.end, 0);
+            self.end -= self.start;
+            self.start = 0;
+        }
+        loop {
+            match self.r.read(&mut self.buf[self.end..]) {
+                Ok(0) => return Ok(false),
+                Ok(n) => {
+                    self.end += n;
+                    return Ok(true);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    return Err(anyhow::Error::new(e).with_context(|| {
+                        format!(
+                            "reading {} body at byte offset {}",
+                            self.flavor.name(),
+                            self.offset + (self.end - self.start) as u64
+                        )
+                    }))
+                }
+            }
+        }
+    }
+
+    /// Extend the running TIME_HIGH by a new raw field value: forward is
+    /// forward, a step back of at least half the field range is the
+    /// counter wrapping, anything else is a rollback error.
+    fn advance_time_high(&mut self, v: u64, bits: u32, off: u64) -> Result<()> {
+        let mask = (1u64 << bits) - 1;
+        self.time_high = Some(match self.time_high {
+            None => v,
+            Some(cur) => {
+                let cur_lo = cur & mask;
+                let base = cur & !mask;
+                if v >= cur_lo {
+                    base | v
+                } else if cur_lo - v >= (mask + 1) / 2 {
+                    (base + mask + 1) | v
+                } else {
+                    bail!(
+                        "{}: TIME_HIGH rollback (0x{cur_lo:X} -> 0x{v:X}) at byte offset {off} \
+                         — timestamps would go backwards",
+                        self.flavor.name()
+                    )
+                }
+            }
+        });
+        Ok(())
+    }
+
+    /// Decode one EVT3 16-bit word; returns how many events it emitted.
+    fn word_evt3(&mut self, w: u16, off: u64, out: &mut Vec<Event>) -> Result<usize> {
+        let typ = w >> 12;
+        let v = (w & 0x0FFF) as u64;
+        match typ {
+            0x0 => {
+                // EVT_ADDR_Y (bit 11 is the master/slave system flag)
+                let y = w & 0x07FF;
+                ensure!(
+                    (y as u32) < self.res.height as u32,
+                    "EVT3: y {y} outside the declared {}x{} geometry at byte offset {off}",
+                    self.res.width,
+                    self.res.height
+                );
+                self.row = Some(y);
+            }
+            0x2 => {
+                // EVT_ADDR_X: one CD event
+                let x = w & 0x07FF;
+                let p = Polarity::from_bit(((w >> 11) & 1) as u8);
+                let t = self.evt3_timestamp(off)?;
+                ensure!(
+                    (x as u32) < self.res.width as u32,
+                    "EVT3: x {x} outside the declared {}x{} geometry at byte offset {off}",
+                    self.res.width,
+                    self.res.height
+                );
+                let y = self.row.with_context(|| {
+                    format!("EVT3: CD event before any EVT_ADDR_Y at byte offset {off}")
+                })?;
+                out.push(Event::new(x, y, t, p));
+                return Ok(1);
+            }
+            0x3 => {
+                // VECT_BASE_X: arm the vectorized burst
+                let x = (w & 0x07FF) as u64;
+                let p = Polarity::from_bit(((w >> 11) & 1) as u8);
+                self.vect = Some((x, p));
+            }
+            0x4 | 0x5 => {
+                // VECT_12 / VECT_8 validity mask
+                let nbits = if typ == 0x4 { 12u64 } else { 8 };
+                let (base, p) = self.vect.with_context(|| {
+                    format!(
+                        "EVT3: VECT_{nbits} without a preceding VECT_BASE_X at byte offset {off}"
+                    )
+                })?;
+                let t = self.evt3_timestamp(off)?;
+                let y = self.row.with_context(|| {
+                    format!("EVT3: CD event before any EVT_ADDR_Y at byte offset {off}")
+                })?;
+                let mut emitted = 0usize;
+                for b in 0..nbits {
+                    if v & (1 << b) != 0 {
+                        let x = base + b;
+                        ensure!(
+                            x < self.res.width as u64,
+                            "EVT3: vectorized x {x} outside the declared {}x{} geometry \
+                             at byte offset {off}",
+                            self.res.width,
+                            self.res.height
+                        );
+                        out.push(Event::new(x as u16, y, t, p));
+                        emitted += 1;
+                    }
+                }
+                self.vect = Some((base + nbits, p));
+                return Ok(emitted);
+            }
+            0x6 => self.time_low = v,
+            0x8 => self.advance_time_high(v, 12, off)?,
+            // CONTINUED_4 / EXT_TRIGGER / OTHERS / CONTINUED_12: valid
+            // words we carry no payload for — skipped, not errors
+            0x7 | 0xA | 0xE | 0xF => {}
+            _ => bail!("EVT3: reserved word type 0x{typ:X} (word 0x{w:04X}) at byte offset {off}"),
+        }
+        Ok(0)
+    }
+
+    /// Current EVT3 timestamp, requiring a time base to exist.
+    fn evt3_timestamp(&self, off: u64) -> Result<u64> {
+        let th = self.time_high.with_context(|| {
+            format!("EVT3: CD event before any TIME_HIGH at byte offset {off}")
+        })?;
+        Ok((th << 12) | self.time_low)
+    }
+
+    /// Decode one EVT2 32-bit word; returns how many events it emitted.
+    fn word_evt2(&mut self, w: u32, off: u64, out: &mut Vec<Event>) -> Result<usize> {
+        let typ = w >> 28;
+        match typ {
+            0x0 | 0x1 => {
+                // CD_OFF / CD_ON
+                let th = self.time_high.with_context(|| {
+                    format!("EVT2: CD event before any TIME_HIGH at byte offset {off}")
+                })?;
+                let ts_lsb = ((w >> 22) & 0x3F) as u64;
+                let x = ((w >> 11) & 0x07FF) as u16;
+                let y = (w & 0x07FF) as u16;
+                for (what, v, dim) in
+                    [("x", x, self.res.width as u32), ("y", y, self.res.height as u32)]
+                {
+                    ensure!(
+                        (v as u32) < dim,
+                        "EVT2: {what} {v} outside the declared {}x{} geometry at byte offset {off}",
+                        self.res.width,
+                        self.res.height
+                    );
+                }
+                out.push(Event::new(x, y, (th << 6) | ts_lsb, Polarity::from_bit(typ as u8)));
+                return Ok(1);
+            }
+            0x8 => self.advance_time_high((w & 0x0FFF_FFFF) as u64, 28, off)?,
+            // EXT_TRIGGER / OTHERS / CONTINUED: skipped, not errors
+            0xA | 0xE | 0xF => {}
+            _ => bail!("EVT2: reserved word type 0x{typ:X} (word 0x{w:08X}) at byte offset {off}"),
+        }
+        Ok(0)
+    }
+}
+
+/// Read one byte, retrying on `Interrupted`; `Ok(None)` at EOF.
+fn read_byte<R: Read>(r: &mut R) -> io::Result<Option<u8>> {
+    let mut b = [0u8; 1];
+    loop {
+        match r.read(&mut b) {
+            Ok(0) => return Ok(None),
+            Ok(_) => return Ok(Some(b[0])),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Process one header line (leading `%` stripped, trimmed). Returns
+/// `Ok(true)` when the line is `end` (header explicitly terminated).
+fn parse_header_line(
+    text: &str,
+    flavor: &mut Option<EvtFlavor>,
+    width: &mut Option<u32>,
+    height: &mut Option<u32>,
+) -> Result<bool> {
+    if text == "end" {
+        return Ok(true);
+    }
+    if let Some(ver) = text.strip_prefix("evt ") {
+        *flavor = Some(match ver.trim() {
+            "2.0" => EvtFlavor::Evt2,
+            "3.0" => EvtFlavor::Evt3,
+            other => bail!("unsupported EVT version {other:?} (only 2.0 and 3.0)"),
+        });
+    } else if let Some(fmt) = text.strip_prefix("format ") {
+        let mut parts = fmt.split(';');
+        let kind = parts.next().unwrap_or("").trim();
+        *flavor = Some(match kind {
+            "EVT2" | "EVT2.0" => EvtFlavor::Evt2,
+            "EVT3" | "EVT3.0" => EvtFlavor::Evt3,
+            other => bail!("unsupported EVT format {other:?} (only EVT2 and EVT3)"),
+        });
+        for kv in parts {
+            let kv = kv.trim();
+            if let Some(v) = kv.strip_prefix("width=") {
+                *width = Some(v.parse().with_context(|| format!("bad header {kv:?}"))?);
+            } else if let Some(v) = kv.strip_prefix("height=") {
+                *height = Some(v.parse().with_context(|| format!("bad header {kv:?}"))?);
+            }
+        }
+    } else if let Some(geo) = text.strip_prefix("geometry ") {
+        let geo = geo.trim();
+        let (w, h) = geo
+            .split_once('x')
+            .or_else(|| geo.split_once('X'))
+            .with_context(|| format!("bad header geometry {geo:?} (want WxH)"))?;
+        *width = Some(w.trim().parse().with_context(|| format!("bad header geometry {geo:?}"))?);
+        *height = Some(h.trim().parse().with_context(|| format!("bad header geometry {geo:?}"))?);
+    }
+    // every other % line (serial, integrator name, date...) is ignored
+    Ok(false)
+}
+
+impl<R: Read> EventSource for EvtStreamSource<R> {
+    fn next_chunk(&mut self, out: &mut Vec<Event>) -> Result<usize> {
+        if self.done {
+            return Ok(0);
+        }
+        let ws = self.flavor.word_bytes();
+        let mut appended = 0usize;
+        // vectorized words may overshoot the chunk target by up to 11
+        // events; chunks concatenate, so the overshoot is harmless
+        while appended < self.chunk_events {
+            if self.end - self.start < ws {
+                if self.refill()? {
+                    continue;
+                }
+                let rem = self.end - self.start;
+                if rem == 0 {
+                    self.done = true;
+                    break;
+                }
+                bail!(
+                    "{}: recording ends mid-word — {rem} trailing byte(s) at byte offset {}",
+                    self.flavor.name(),
+                    self.offset
+                );
+            }
+            let off = self.offset;
+            let s = self.start;
+            self.start += ws;
+            self.offset += ws as u64;
+            appended += match self.flavor {
+                EvtFlavor::Evt3 => {
+                    let w = u16::from_le_bytes([self.buf[s], self.buf[s + 1]]);
+                    self.word_evt3(w, off, out)?
+                }
+                EvtFlavor::Evt2 => {
+                    let w = u32::from_le_bytes([
+                        self.buf[s],
+                        self.buf[s + 1],
+                        self.buf[s + 2],
+                        self.buf[s + 3],
+                    ]);
+                    self.word_evt2(w, off, out)?
+                }
+            };
+        }
+        Ok(appended)
+    }
+}
+
+/// Write events as an EVT3 `.raw` stream (header + 16-bit words).
+///
+/// Test/bench encoder for the decoder above: emits `TIME_HIGH` stepped
+/// one value at a time (the gradual shape [`EvtStreamSource`] requires
+/// across the 2^24 µs wrap), `TIME_LOW`/`EVT_ADDR_Y` only on change, and
+/// one `EVT_ADDR_X` per event. Events must be time-sorted, start below
+/// 2^24 µs (so the decoder's time base anchors unambiguously) and fit
+/// the geometry.
+pub fn write_evt3<W: Write>(w: W, events: &[Event], res: Resolution) -> Result<()> {
+    ensure!(
+        (res.width as u32) <= MAX_EVT_DIM && (res.height as u32) <= MAX_EVT_DIM,
+        "EVT3 coordinates are 11-bit: {}x{} does not fit",
+        res.width,
+        res.height
+    );
+    if let Some(first) = events.first() {
+        ensure!(
+            first.t < 1 << 24,
+            "EVT3 writer: first timestamp {} µs must lie below 2^24 µs",
+            first.t
+        );
+    }
+    let mut w = BufWriter::new(w);
+    write!(
+        w,
+        "% evt 3.0\n% format EVT3;height={};width={}\n% geometry {}x{}\n% end\n",
+        res.height, res.width, res.width, res.height
+    )?;
+    let mut high: Option<u64> = None;
+    let mut low: Option<u64> = None;
+    let mut row: Option<u16> = None;
+    let mut last_t = 0u64;
+    for e in events {
+        ensure!(e.t >= last_t, "EVT3 writer requires time-sorted events ({} after {})", e.t, last_t);
+        last_t = e.t;
+        ensure!(
+            (e.x as u32) < res.width as u32 && (e.y as u32) < res.height as u32,
+            "event ({}, {}) outside the {}x{} geometry",
+            e.x,
+            e.y,
+            res.width,
+            res.height
+        );
+        let h = e.t >> 12;
+        match high {
+            None => {
+                w.write_all(&(((0x8u16) << 12) | (h & 0xFFF) as u16).to_le_bytes())?;
+                high = Some(h);
+            }
+            Some(mut cur) => {
+                while cur < h {
+                    cur += 1;
+                    w.write_all(&(((0x8u16) << 12) | (cur & 0xFFF) as u16).to_le_bytes())?;
+                }
+                high = Some(h);
+            }
+        }
+        let lo = e.t & 0xFFF;
+        if low != Some(lo) {
+            w.write_all(&(((0x6u16) << 12) | lo as u16).to_le_bytes())?;
+            low = Some(lo);
+        }
+        if row != Some(e.y) {
+            w.write_all(&e.y.to_le_bytes())?; // type 0x0 = EVT_ADDR_Y
+            row = Some(e.y);
+        }
+        w.write_all(&(((0x2u16) << 12) | ((e.p.bit() as u16) << 11) | e.x).to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write events as an EVT2 `.raw` stream (header + 32-bit words).
+///
+/// Test/bench encoder: one `TIME_HIGH` word whenever `t >> 6` changes,
+/// then one CD word per event. Timestamps must be sorted and below
+/// 2^34 µs (so the 28-bit `TIME_HIGH` field never wraps — the decoder's
+/// wrap path is exercised with hand-built words instead).
+pub fn write_evt2<W: Write>(w: W, events: &[Event], res: Resolution) -> Result<()> {
+    ensure!(
+        (res.width as u32) <= MAX_EVT_DIM && (res.height as u32) <= MAX_EVT_DIM,
+        "EVT2 coordinates are 11-bit: {}x{} does not fit",
+        res.width,
+        res.height
+    );
+    let mut w = BufWriter::new(w);
+    write!(
+        w,
+        "% evt 2.0\n% format EVT2;height={};width={}\n% geometry {}x{}\n% end\n",
+        res.height, res.width, res.width, res.height
+    )?;
+    let mut high: Option<u64> = None;
+    let mut last_t = 0u64;
+    for e in events {
+        ensure!(e.t >= last_t, "EVT2 writer requires time-sorted events ({} after {})", e.t, last_t);
+        last_t = e.t;
+        ensure!(e.t < 1 << 34, "EVT2 writer caps timestamps below 2^34 µs (got {})", e.t);
+        ensure!(
+            (e.x as u32) < res.width as u32 && (e.y as u32) < res.height as u32,
+            "event ({}, {}) outside the {}x{} geometry",
+            e.x,
+            e.y,
+            res.width,
+            res.height
+        );
+        let h = e.t >> 6;
+        if high != Some(h) {
+            w.write_all(&(((0x8u32) << 28) | (h as u32 & 0x0FFF_FFFF)).to_le_bytes())?;
+            high = Some(h);
+        }
+        let cd = ((e.p.bit() as u32) << 28)
+            | (((e.t & 0x3F) as u32) << 22)
+            | ((e.x as u32) << 11)
+            | e.y as u32;
+        w.write_all(&cd.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load-all convenience over [`EvtStreamSource`] (either flavor).
+pub fn read_evt<R: Read>(r: R) -> Result<Vec<Event>> {
+    let mut src = EvtStreamSource::new(r, DEFAULT_CHUNK_EVENTS)?;
+    let mut events = Vec::new();
+    while src.next_chunk(&mut events)? > 0 {}
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RES: Resolution = Resolution::TEST64;
+
+    fn sample() -> Vec<Event> {
+        vec![
+            Event::on(1, 2, 100),
+            Event::off(3, 2, 150),
+            Event::on(63, 63, 4_000),
+            Event::off(0, 0, 5_000),
+            Event::on(10, 20, 1_000_000),
+        ]
+    }
+
+    fn drain(src: &mut impl EventSource) -> Vec<Event> {
+        let mut out = Vec::new();
+        while src.next_chunk(&mut out).unwrap() > 0 {}
+        out
+    }
+
+    /// EVT3 header + raw words, for hand-built corruption streams.
+    fn evt3_stream(words: &[u16]) -> Vec<u8> {
+        let mut buf = b"% evt 3.0\n% geometry 64x64\n% end\n".to_vec();
+        for w in words {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+        buf
+    }
+
+    /// EVT2 header + raw words.
+    fn evt2_stream(words: &[u32]) -> Vec<u8> {
+        let mut buf = b"% evt 2.0\n% geometry 64x64\n% end\n".to_vec();
+        for w in words {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+        buf
+    }
+
+    #[test]
+    fn evt3_roundtrip() {
+        let mut buf = Vec::new();
+        write_evt3(&mut buf, &sample(), RES).unwrap();
+        assert_eq!(read_evt(&buf[..]).unwrap(), sample());
+    }
+
+    #[test]
+    fn evt2_roundtrip() {
+        let mut buf = Vec::new();
+        write_evt2(&mut buf, &sample(), RES).unwrap();
+        assert_eq!(read_evt(&buf[..]).unwrap(), sample());
+    }
+
+    #[test]
+    fn evt3_roundtrip_across_the_2_24_wrap() {
+        // timestamps straddling 2^24 µs force the stepped TIME_HIGH
+        // sequence through its 12-bit wrap; the decoder must resync
+        let events: Vec<Event> = (0..64u64)
+            .map(|i| Event::on((i % 60) as u16, 5, 16_770_000 + i * 1_000))
+            .collect();
+        assert!(events.first().unwrap().t < 1 << 24 && events.last().unwrap().t > 1 << 24);
+        let mut buf = Vec::new();
+        write_evt3(&mut buf, &events, RES).unwrap();
+        assert_eq!(read_evt(&buf[..]).unwrap(), events);
+    }
+
+    #[test]
+    fn evt_chunked_decode_equals_load_all() {
+        let events: Vec<Event> =
+            (0..500u64).map(|i| Event::on((i % 64) as u16, (i % 48) as u16, i * 7)).collect();
+        let mut evt3 = Vec::new();
+        write_evt3(&mut evt3, &events, RES).unwrap();
+        let mut evt2 = Vec::new();
+        write_evt2(&mut evt2, &events, RES).unwrap();
+        for chunk in [1usize, 7, 64, 10_000] {
+            let mut src = EvtStreamSource::new(&evt3[..], chunk).unwrap();
+            assert_eq!(src.flavor(), EvtFlavor::Evt3);
+            assert_eq!(src.resolution(), RES);
+            assert_eq!(drain(&mut src), events, "evt3 chunk {chunk}");
+            let mut src = EvtStreamSource::new(&evt2[..], chunk).unwrap();
+            assert_eq!(src.flavor(), EvtFlavor::Evt2);
+            assert_eq!(drain(&mut src), events, "evt2 chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn evt3_vect_words_decode() {
+        // VECT_BASE_X at x=10 pol ON, VECT_12 mask 0b1010_0000_0101,
+        // then VECT_8 mask 0b0000_0011 continuing at base+12
+        let words = [
+            0x8000 | 1,          // TIME_HIGH = 1
+            0x6000 | 5,          // TIME_LOW = 5
+            0x0000 | 7,          // EVT_ADDR_Y = 7
+            0x3000 | 0x800 | 10, // VECT_BASE_X x=10 pol=1
+            0x4000 | 0xA05,      // VECT_12: bits 0,2,9,11
+            0x5000 | 0x003,      // VECT_8: bits 0,1 at base 22
+        ];
+        let got = read_evt(&evt3_stream(&words)[..]).unwrap();
+        let t = (1u64 << 12) | 5;
+        let want: Vec<Event> =
+            [10u16, 12, 19, 21, 22, 23].iter().map(|&x| Event::on(x, 7, t)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn evt3_rejects_cd_without_time_base_or_row() {
+        // CD before any TIME_HIGH
+        let err = read_evt(&evt3_stream(&[0x0000 | 7, 0x2000 | 3])[..]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("before any TIME_HIGH") && msg.contains("offset"), "{msg}");
+
+        // CD before any EVT_ADDR_Y
+        let err = read_evt(&evt3_stream(&[0x8000 | 1, 0x2000 | 3])[..]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("before any EVT_ADDR_Y"), "{msg}");
+    }
+
+    #[test]
+    fn evt3_rejects_vect_without_base() {
+        let words = [0x8000 | 1, 0x0000 | 7, 0x4000 | 0xFFF];
+        let err = read_evt(&evt3_stream(&words)[..]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("without a preceding VECT_BASE_X"), "{msg}");
+    }
+
+    #[test]
+    fn evt3_rejects_time_high_rollback_but_accepts_wrap() {
+        // small step back: rollback error with the offset
+        let err = read_evt(&evt3_stream(&[0x8000 | 100, 0x8000 | 99])[..]).unwrap_err();
+        let msg = format!("{err:#}");
+        // header "% evt 3.0\n% geometry 64x64\n% end\n" is 33 bytes, so
+        // the offending second word sits at byte offset 35
+        assert!(msg.contains("rollback") && msg.contains("offset 35"), "{msg}");
+
+        // step back across at least half the range: legitimate 12-bit wrap
+        let words = [0x8000 | 0xFFE, 0x8000 | 0xFFF, 0x8000 | 0x000, 0x0000 | 1, 0x2000 | 1];
+        let got = read_evt(&evt3_stream(&words)[..]).unwrap();
+        assert_eq!(got, vec![Event::off(1, 1, 0x1000u64 << 12)]);
+    }
+
+    #[test]
+    fn evt3_rejects_reserved_word_and_out_of_range_coords() {
+        let err = read_evt(&evt3_stream(&[0x9000])[..]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("reserved word type 0x9") && msg.contains("offset"), "{msg}");
+
+        // y = 70 outside 64x64
+        let err = read_evt(&evt3_stream(&[0x8000 | 1, 0x0000 | 70])[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("outside the declared 64x64 geometry"), "{err:#}");
+
+        // x = 70 outside 64x64
+        let err = read_evt(&evt3_stream(&[0x8000 | 1, 0x0000 | 7, 0x2000 | 70])[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("outside the declared 64x64 geometry"), "{err:#}");
+
+        // vectorized run walking past the right edge
+        let words = [0x8000 | 1, 0x0000 | 7, 0x3000 | 60, 0x4000 | 0xFFF];
+        let err = read_evt(&evt3_stream(&words)[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("vectorized x 64 outside"), "{err:#}");
+    }
+
+    #[test]
+    fn evt_rejects_mid_word_eof() {
+        let mut buf = evt3_stream(&[0x8000 | 1]);
+        buf.push(0xAB); // one dangling byte of a 2-byte word
+        let err = read_evt(&buf[..]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("ends mid-word") && msg.contains("1 trailing byte"), "{msg}");
+
+        let mut buf = evt2_stream(&[(0x8u32) << 28]);
+        buf.extend_from_slice(&[1, 2, 3]); // 3 dangling bytes of a 4-byte word
+        let err = read_evt(&buf[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("3 trailing byte(s)"), "{err:#}");
+    }
+
+    #[test]
+    fn evt2_rejects_cd_without_time_base_rollback_and_reserved() {
+        let cd = |x: u32, y: u32| (0x1u32 << 28) | (x << 11) | y;
+        let err = read_evt(&evt2_stream(&[cd(1, 1)])[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("EVT2: CD event before any TIME_HIGH"), "{err:#}");
+
+        let th = |v: u32| (0x8u32 << 28) | v;
+        let err = read_evt(&evt2_stream(&[th(100), th(99)])[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("rollback"), "{err:#}");
+
+        let err = read_evt(&evt2_stream(&[0x2u32 << 28])[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("reserved word type 0x2"), "{err:#}");
+
+        // out-of-range x against the declared geometry
+        let err = read_evt(&evt2_stream(&[th(1), cd(70, 1)])[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("x 70 outside the declared 64x64"), "{err:#}");
+    }
+
+    #[test]
+    fn evt2_wrap_accepted() {
+        // 28-bit TIME_HIGH stepping 0xFFFFFFF -> 0x0000000 is the counter
+        // wrapping: decoded time keeps increasing
+        let th = |v: u32| (0x8u32 << 28) | v;
+        let cd = |x: u32, y: u32| (0x1u32 << 28) | (x << 11) | y;
+        let words = [th(0x0FFF_FFFE), th(0x0FFF_FFFF), th(0x0000_0000), cd(1, 2)];
+        let got = read_evt(&evt2_stream(&words)[..]).unwrap();
+        assert_eq!(got, vec![Event::on(1, 2, (1u64 << 28) << 6)]);
+    }
+
+    #[test]
+    fn evt_header_validation() {
+        // missing geometry
+        let err = read_evt(&b"% evt 3.0\n% end\n"[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("declares no geometry"), "{err:#}");
+
+        // missing format entirely (body starts immediately)
+        let err = read_evt(&b"\x01\x02"[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("declares no format"), "{err:#}");
+
+        // EVT2.1 is explicitly unsupported
+        let err = read_evt(&b"% format EVT2.1;height=64;width=64\n% end\n"[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported EVT format"), "{err:#}");
+        let err = read_evt(&b"% evt 2.1\n% geometry 64x64\n% end\n"[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported EVT version"), "{err:#}");
+
+        // geometry outside the 11-bit coordinate fields
+        let err = read_evt(&b"% evt 3.0\n% geometry 4096x64\n% end\n"[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("11-bit coordinate range"), "{err:#}");
+
+        // format line carrying the geometry is sufficient on its own
+        let src =
+            EvtStreamSource::new(&b"% format EVT3;height=48;width=32\n% end\n"[..], 64).unwrap();
+        assert_eq!(src.resolution(), Resolution::new(32, 48));
+
+        // unknown % lines are ignored, header without % end still parses
+        let evs = read_evt(&b"% evt 3.0\n% camera serial 0042\n% geometry 64x64\n"[..]).unwrap();
+        assert!(evs.is_empty());
+    }
+
+    #[test]
+    fn evt_header_caps_are_enforced() {
+        // one absurdly long % line must not buffer unbounded
+        let mut buf = b"% ".to_vec();
+        buf.extend(std::iter::repeat(b'a').take(MAX_HEADER_LINE + 10));
+        buf.push(b'\n');
+        let err = EvtStreamSource::new(&buf[..], 64).map(|_| ()).unwrap_err();
+        assert!(format!("{err:#}").contains("header line exceeds"), "{err:#}");
+    }
+
+    #[test]
+    fn evt_writers_reject_bad_input() {
+        // unsorted
+        let evs = vec![Event::on(1, 1, 100), Event::on(1, 1, 50)];
+        assert!(write_evt3(&mut Vec::new(), &evs, RES).is_err());
+        assert!(write_evt2(&mut Vec::new(), &evs, RES).is_err());
+        // outside geometry
+        let evs = vec![Event::on(64, 1, 100)];
+        assert!(write_evt3(&mut Vec::new(), &evs, RES).is_err());
+        assert!(write_evt2(&mut Vec::new(), &evs, RES).is_err());
+        // EVT3 first timestamp past the 24-bit time base
+        let evs = vec![Event::on(1, 1, 1 << 24)];
+        assert!(write_evt3(&mut Vec::new(), &evs, RES).is_err());
+        // EVT2 timestamp past 2^34
+        let evs = vec![Event::on(1, 1, 1 << 34)];
+        assert!(write_evt2(&mut Vec::new(), &evs, RES).is_err());
+    }
+
+    #[test]
+    fn empty_body_decodes_to_nothing() {
+        assert!(read_evt(&evt3_stream(&[])[..]).unwrap().is_empty());
+        assert!(read_evt(&evt2_stream(&[])[..]).unwrap().is_empty());
+    }
+}

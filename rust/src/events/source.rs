@@ -24,6 +24,13 @@
 //!   ([`TcpStreamSource`] is the `TcpStream` instantiation the serving
 //!   layer hands to each session; see `serve::wire` for the framing
 //!   contract).
+//! * [`codec::aedat4::Aedat4StreamSource`](super::codec::aedat4::Aedat4StreamSource)
+//!   — real DV/iniVation AEDAT4 camera recordings, one container packet
+//!   per chunk.
+//! * [`codec::evt::EvtStreamSource`](super::codec::evt::EvtStreamSource)
+//!   — real Prophesee EVT2/EVT3 `.raw` word streams.
+//! * [`TakeSource`] — an adapter capping any source at N total events
+//!   (`--events` on real recordings, the dataset-eval smoke cap).
 //!
 //! [`open`] sniffs a file's container format and returns the right
 //! decoder behind a `Box<dyn EventSource + Send>`.
@@ -215,17 +222,80 @@ impl<R: Read> EventSource for FramedStreamSource<R> {
     }
 }
 
+/// An [`EventSource`] adapter that stops after `max_events` total events.
+///
+/// Used to cap runs over long real recordings (`--events` on the CLI,
+/// the dataset-eval `--smoke` cap): the chunk that crosses the cap is
+/// truncated, so exactly `max_events` events flow downstream (fewer if
+/// the underlying stream is shorter).
+pub struct TakeSource<S> {
+    inner: S,
+    remaining: usize,
+}
+
+impl<S: EventSource> TakeSource<S> {
+    /// Cap `inner` at `max_events` total events.
+    pub fn new(inner: S, max_events: usize) -> Self {
+        Self { inner, remaining: max_events }
+    }
+}
+
+impl<S: EventSource> EventSource for TakeSource<S> {
+    fn next_chunk(&mut self, out: &mut Vec<Event>) -> Result<usize> {
+        if self.remaining == 0 {
+            return Ok(0);
+        }
+        let appended = self.inner.next_chunk(out)?;
+        if appended > self.remaining {
+            // truncate the overshoot: the cap is exact
+            out.truncate(out.len() - (appended - self.remaining));
+            let taken = self.remaining;
+            self.remaining = 0;
+            return Ok(taken);
+        }
+        self.remaining -= appended;
+        Ok(appended)
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        match self.inner.size_hint() {
+            Some(n) => Some(n.min(self.remaining)),
+            None => Some(self.remaining),
+        }
+    }
+}
+
+/// Bytes probed by [`open`] to sniff the container format.
+const SNIFF_BYTES: usize = 16;
+
 /// Open an event file as a streaming source, sniffing the container
-/// format: the binary magic selects the binary decoder, anything else is
-/// treated as `t x y p` text.
+/// format from its first bytes. Precedence:
+///
+/// 1. `#!AEDAT` — an AEDAT container; decoded as AEDAT4 (other AEDAT
+///    versions get a clear "not supported" error, not a text misparse).
+/// 2. `%` — a Prophesee EVT2/EVT3 `.raw` header.
+/// 3. The `NMCTOSEV` magic — the crate's binary container.
+/// 4. Anything else — `t x y p` text (the only headerless format, so it
+///    must come last).
+///
+/// For AEDAT4 the chunk size is packet-defined and `chunk_events` is
+/// ignored; the other decoders honor it.
 pub fn open(path: &Path, chunk_events: usize) -> Result<Box<dyn EventSource + Send>> {
     // probe and decode through one handle (rewound in between), so the
     // sniffed format always matches the file actually decoded
     let mut file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
-    let mut probe = Vec::with_capacity(MAGIC.len());
-    (&mut file).take(MAGIC.len() as u64).read_to_end(&mut probe)?;
+    let mut probe = Vec::new();
+    (&mut file).take(SNIFF_BYTES as u64).read_to_end(&mut probe)?;
     file.rewind()?;
-    if probe == MAGIC {
+    if probe.starts_with(super::codec::aedat4::AEDAT_SNIFF) {
+        let src = super::codec::aedat4::Aedat4StreamSource::new(file)
+            .with_context(|| format!("opening {} as AEDAT4", path.display()))?;
+        Ok(Box::new(src))
+    } else if probe.first() == Some(&b'%') {
+        let src = super::codec::evt::EvtStreamSource::new(file, chunk_events)
+            .with_context(|| format!("opening {} as Prophesee EVT", path.display()))?;
+        Ok(Box::new(src))
+    } else if probe.starts_with(MAGIC) {
         Ok(Box::new(BinaryStreamSource::new(file, chunk_events)?))
     } else {
         Ok(Box::new(TextStreamSource::new(file, chunk_events)))
@@ -294,6 +364,70 @@ mod tests {
         std::fs::write(&txt, &buf).unwrap();
         let mut src = open(&txt, 64).unwrap();
         assert_eq!(drain(&mut src), evs);
+    }
+
+    #[test]
+    fn open_sniffs_aedat4_and_evt() {
+        let evs = ramp(300);
+        let dir = std::env::temp_dir().join("nmc_tos_source_open_real");
+        std::fs::create_dir_all(&dir).unwrap();
+        let res = crate::events::Resolution::new(50, 40);
+
+        let aedat = dir.join("events.aedat4");
+        let mut buf = Vec::new();
+        crate::events::codec::aedat4::write_aedat4(&mut buf, &evs, res).unwrap();
+        std::fs::write(&aedat, &buf).unwrap();
+        let mut src = open(&aedat, 64).unwrap();
+        assert_eq!(drain(&mut src), evs);
+
+        let evt3 = dir.join("events_evt3.raw");
+        let mut buf = Vec::new();
+        crate::events::codec::evt::write_evt3(&mut buf, &evs, res).unwrap();
+        std::fs::write(&evt3, &buf).unwrap();
+        let mut src = open(&evt3, 64).unwrap();
+        assert_eq!(drain(&mut src), evs);
+
+        let evt2 = dir.join("events_evt2.raw");
+        let mut buf = Vec::new();
+        crate::events::codec::evt::write_evt2(&mut buf, &evs, res).unwrap();
+        std::fs::write(&evt2, &buf).unwrap();
+        let mut src = open(&evt2, 64).unwrap();
+        assert_eq!(drain(&mut src), evs);
+    }
+
+    #[test]
+    fn open_reports_unsupported_aedat_versions() {
+        // an AEDAT2/3 file must route to the AEDAT decoder's clear error,
+        // not fall through to a garbage text parse
+        let dir = std::env::temp_dir().join("nmc_tos_source_open_real");
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = dir.join("old.aedat");
+        std::fs::write(&old, b"#!AEDAT3.1\r\n0 1 2 3\n").unwrap();
+        let err = open(&old, 64).map(|_| ()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("as AEDAT4") && msg.contains("unsupported AEDAT"), "{msg}");
+    }
+
+    #[test]
+    fn take_source_caps_total_events() {
+        let evs = ramp(100);
+        // cap below the stream length, not a multiple of the chunk size
+        let mut src = TakeSource::new(SliceSource::new(&evs, 32), 70);
+        assert_eq!(src.size_hint(), Some(70));
+        let got = drain(&mut src);
+        assert_eq!(got, evs[..70]);
+        assert_eq!(src.size_hint(), Some(0));
+
+        // cap above the stream length: passthrough
+        let mut src = TakeSource::new(SliceSource::new(&evs, 32), 1000);
+        assert_eq!(src.size_hint(), Some(100));
+        assert_eq!(drain(&mut src), evs);
+
+        // zero cap: immediately exhausted
+        let mut src = TakeSource::new(SliceSource::new(&evs, 32), 0);
+        let mut out = Vec::new();
+        assert_eq!(src.next_chunk(&mut out).unwrap(), 0);
+        assert!(out.is_empty());
     }
 
     /// Frame a slice of events as one length-prefixed container.

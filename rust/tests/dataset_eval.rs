@@ -1,0 +1,108 @@
+//! The public-dataset AUC harness against the checked-in fixture
+//! manifest: three datasets that are the *same* canonical recording in
+//! three formats (AEDAT4/EVT2/EVT3), so every (backend, detector) cell
+//! must score identically across them — and the rendered report must be
+//! byte-identical across repeat runs (the property the CI `dataset-smoke`
+//! lane checks by `cmp`-ing two binary invocations).
+
+use std::path::{Path, PathBuf};
+
+use nmc_tos::eval::{run_dataset_eval, DatasetEvalConfig};
+
+fn manifest() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/datasets/manifest.json")
+}
+
+#[test]
+fn smoke_eval_scores_the_fixture_manifest_deterministically() {
+    let mut cfg = DatasetEvalConfig::smoke(manifest());
+    if cfg!(miri) {
+        cfg.max_events = Some(300);
+    }
+    let rep = run_dataset_eval(&cfg).unwrap();
+
+    // 3 datasets x 2 backends x 2 detectors, all sharing one label file
+    assert_eq!(rep.points.len(), 12);
+    assert_eq!(rep.labels.len(), 3);
+    let n_labels = rep.labels["fixture-aedat4"];
+    assert!(n_labels > 0);
+    assert!(rep.labels.values().all(|&n| n == n_labels));
+
+    for p in &rep.points {
+        assert!(p.events_in > 0, "{}/{}/{}", p.dataset, p.backend, p.detector);
+        assert_eq!(p.scored, p.events_signal, "one (score, label) pair per signal event");
+        assert!(
+            p.positives > 0,
+            "{}/{}/{}: the fixture labels must match fixture events",
+            p.dataset,
+            p.backend,
+            p.detector
+        );
+        assert!(p.auc.is_finite() && (0.0..=1.0).contains(&p.auc));
+        assert!(p.best_f1 > 0.0);
+    }
+
+    // cross-format agreement: the three datasets decode to the same
+    // stream, so each (backend, detector) cell is bit-identical across
+    // them — AUC included
+    for a in &rep.points {
+        for b in rep.points.iter().filter(|b| {
+            b.dataset != a.dataset && b.backend == a.backend && b.detector == a.detector
+        }) {
+            let cell = format!("{}/{} ({} vs {})", a.backend, a.detector, a.dataset, b.dataset);
+            assert_eq!(a.events_in, b.events_in, "{cell}: events_in");
+            assert_eq!(a.events_signal, b.events_signal, "{cell}: events_signal");
+            assert_eq!(a.corners, b.corners, "{cell}: corners");
+            assert_eq!(a.positives, b.positives, "{cell}: positives");
+            assert_eq!(a.auc.to_bits(), b.auc.to_bits(), "{cell}: AUC");
+            assert_eq!(a.best_f1.to_bits(), b.best_f1.to_bits(), "{cell}: best F1");
+        }
+    }
+
+    // the determinism bar: repeat runs render the same bytes
+    let a = rep.to_json().render();
+    let b = run_dataset_eval(&cfg).unwrap().to_json().render();
+    assert_eq!(a, b, "repeat runs must render byte-identically");
+    assert!(a.contains("\"harness\":\"dataset-eval\""));
+}
+
+#[test]
+fn full_preset_runs_the_fixture_manifest_end_to_end() {
+    // the non-smoke preset (whole recordings, default chunking) over the
+    // same manifest: 3 datasets x nmc x harris
+    let mut cfg = DatasetEvalConfig::new(manifest());
+    if cfg!(miri) {
+        cfg.max_events = Some(300);
+    }
+    let rep = run_dataset_eval(&cfg).unwrap();
+    assert_eq!(rep.points.len(), 3);
+    for p in &rep.points {
+        assert_eq!(p.backend, "nmc-tos");
+        if !cfg!(miri) {
+            assert_eq!(p.events_in, 1260, "whole fixture recording, uncapped");
+        }
+        assert!(p.positives > 0);
+    }
+}
+
+#[test]
+fn chunk_size_does_not_change_the_report() {
+    // streamed decode at any chunk size is bit-identical, so the report
+    // must be too — the EVT sources re-chunk, AEDAT4 ignores it
+    let mk = |chunk: usize| {
+        let mut cfg = DatasetEvalConfig::smoke(manifest());
+        cfg.chunk_events = chunk;
+        if cfg!(miri) {
+            cfg.max_events = Some(300);
+            cfg.backends.truncate(1);
+            cfg.detectors.truncate(1);
+        }
+        cfg
+    };
+    let want = run_dataset_eval(&mk(4096)).unwrap().to_json().render();
+    let chunks: &[usize] = if cfg!(miri) { &[13] } else { &[1, 13, 100_000] };
+    for &chunk in chunks {
+        let got = run_dataset_eval(&mk(chunk)).unwrap().to_json().render();
+        assert_eq!(want, got, "chunk {chunk} changed the report bytes");
+    }
+}

@@ -71,6 +71,8 @@ SHIMMED = {
 DECODE_FILES = {
     "rust/src/serve/wire.rs",
     "rust/src/events/codec.rs",
+    "rust/src/events/codec/aedat4.rs",
+    "rust/src/events/codec/evt.rs",
 }
 
 # How many lines above an `unsafe {` the `// SAFETY:` run may start, and

@@ -1,0 +1,469 @@
+#!/usr/bin/env python3
+"""Generate the golden camera-format fixtures under rust/tests/fixtures/.
+
+One canonical 64x64 event stream is encoded into three real camera
+container formats — AEDAT4, Prophesee EVT3, Prophesee EVT2 — plus the
+two checked-in expected dumps (text + NMCTOSEV binary) that the Rust
+conformance tests compare decoded streams against byte-for-byte, a
+ground-truth corner-label file, and the dataset-eval manifest.
+
+The script is deterministic (own LCG, no `random`, no clock) and
+self-verifying: it re-decodes every encoded fixture with independent
+Python decoders that mirror the Rust decoder semantics and asserts the
+result equals the canonical stream, so a bug in an encoder cannot be
+silently frozen into the golden files.
+
+Stream design notes:
+
+* Timestamps span 16.70 s .. 16.85 s so the EVT3 24-bit time base
+  (TIME_HIGH<<12 | TIME_LOW) crosses its 2^24 = 16_777_216 us wraparound
+  naturally — the committed EVT3 fixture exercises the resync path.
+* Two moving corner trajectories emit 6-event bursts every 2 ms
+  (spatio-temporally clustered so the STCF filter passes them), plus a
+  horizontal 14-pixel run at a shared timestamp every 10 ms (encoded as
+  EVT3 VECT_BASE_X + VECT_12/VECT_8 words), plus LCG noise events.
+* All coordinates fit the 64x64 TEST64 geometry and the EVT 11-bit
+  coordinate fields; every file stays well under 100 KB.
+
+Usage: python3 tools/make_codec_fixtures.py  (from the repo root)
+"""
+
+import json
+import os
+import struct
+import sys
+
+FIXDIR = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "fixtures")
+
+WIDTH = 64
+HEIGHT = 64
+T0 = 16_700_000  # us — 77_216 us below the EVT3 2^24 wrap
+STEP_US = 2_000
+STEPS = 75  # last step at 16_848_000 us, past the wrap
+
+
+# ---------------------------------------------------------------------------
+# canonical stream
+# ---------------------------------------------------------------------------
+
+
+class Lcg:
+    """Deterministic 64-bit LCG (constants from Knuth MMIX)."""
+
+    def __init__(self, seed):
+        self.s = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next(self):
+        self.s = (self.s * 6364136223846793005 + 1442695040888963407) & 0xFFFFFFFFFFFFFFFF
+        return self.s >> 33
+
+
+def corner_pos(step):
+    """Float positions of the two synthetic corners at a step."""
+    f = step / (STEPS - 1)
+    ax = 8.0 + 40.0 * f
+    ay = 8.0 + 40.0 * f
+    bx = 50.0 - 40.0 * f
+    by = 10.0 + 40.0 * f
+    return (ax, ay), (bx, by)
+
+
+def build_canonical():
+    """Canonical event list [(t_us, x, y, p)] sorted by t (stable)."""
+    rng = Lcg(0x5EED_CAFE)
+    events = []
+    gt_lines = []
+    burst = [(0, 0), (1, 0), (0, 1), (1, 1), (-1, 0), (0, -1)]
+    for k in range(STEPS):
+        t_k = T0 + k * STEP_US
+        (ax, ay), (bx, by) = corner_pos(k)
+        gt_lines.append((t_k, ax, ay))
+        gt_lines.append((t_k, bx, by))
+        for cx, cy in ((ax, ay), (bx, by)):
+            for j, (dx, dy) in enumerate(burst):
+                x = int(round(cx)) + dx
+                y = int(round(cy)) + dy
+                if 0 <= x < WIDTH and 0 <= y < HEIGHT:
+                    events.append((t_k + j * 37, x, y, j % 2))
+        if k % 5 == 0:
+            # horizontal run: EVT3 VECT material (same t, y, p; x ascending)
+            t_run = t_k + 1_000
+            for x in range(20, 34):
+                events.append((t_run, x, 32, 1))
+        for _ in range(2):
+            x = rng.next() % WIDTH
+            y = rng.next() % HEIGHT
+            dt = rng.next() % STEP_US
+            p = rng.next() % 2
+            events.append((t_k + dt, x, y, p))
+    events.sort(key=lambda e: e[0])  # Python sort is stable
+    return events, gt_lines
+
+
+# ---------------------------------------------------------------------------
+# expected dumps (must match the Rust codecs byte-for-byte)
+# ---------------------------------------------------------------------------
+
+
+def write_expected_txt(path, events):
+    # mirrors codec::write_text: "{t_s:.6} {x} {y} {p}\n" with t_s = t_us * 1e-6
+    with open(path, "w", newline="\n") as f:
+        for t, x, y, p in events:
+            f.write("%.6f %d %d %d\n" % (t * 1e-6, x, y, p))
+
+
+def write_expected_bin(path, events):
+    # mirrors codec::write_binary: NMCTOSEV + version + u64 count + 13B records
+    with open(path, "wb") as f:
+        f.write(b"NMCTOSEV")
+        f.write(bytes([1]))
+        f.write(struct.pack("<Q", len(events)))
+        for t, x, y, p in events:
+            f.write(struct.pack("<HHQB", x, y, t, p))
+
+
+# ---------------------------------------------------------------------------
+# AEDAT4 encoder (uncompressed subset the Rust decoder accepts)
+# ---------------------------------------------------------------------------
+
+AEDAT4_MAGIC = b"#!AEDAT4.0\r\n"
+PACKET_EVENTS = 512
+
+
+def aedat4_ioheader():
+    xml = (
+        '<dv version="2.0"><node name="outInfo">'
+        '<node name="0"><attr key="compression" type="string">NONE</attr>'
+        '<node name="info"><attr key="sizeX" type="int">%d</attr>'
+        '<attr key="sizeY" type="int">%d</attr></node></node></node></dv>'
+        % (WIDTH, HEIGHT)
+    )
+    blob = struct.pack("<I", 8) + b"IOHE" + xml.encode()
+    return struct.pack("<i", len(blob)) + blob
+
+
+def aedat4_event_packet(events):
+    """One EVTS flatbuffer payload for <= PACKET_EVENTS events."""
+    body = bytearray()
+    body += struct.pack("<I", 16)  # root table offset
+    body += b"EVTS"  # file identifier
+    body += struct.pack("<HHH", 6, 8, 4)  # vtable: vsize, tsize, field0 off
+    body += b"\x00\x00"  # pad to 16
+    body += struct.pack("<i", 8)  # table soffset -> vtable at 8
+    body += struct.pack("<I", 4)  # field 0: vector offset (from here)
+    body += struct.pack("<I", len(events))  # vector length
+    for t, x, y, p in events:
+        body += struct.pack("<qhhB3x", t, x, y, p)
+    return bytes(body)
+
+
+def write_aedat4(path, events):
+    with open(path, "wb") as f:
+        f.write(AEDAT4_MAGIC)
+        f.write(aedat4_ioheader())
+        for i in range(0, len(events), PACKET_EVENTS):
+            payload = aedat4_event_packet(events[i : i + PACKET_EVENTS])
+            f.write(struct.pack("<ii", 0, len(payload)))
+            f.write(payload)
+
+
+def decode_aedat4(path):
+    """Independent verify-decoder mirroring the Rust AEDAT4 semantics."""
+    data = open(path, "rb").read()
+    assert data[:12] == AEDAT4_MAGIC, "bad AEDAT4 magic"
+    hdr_len = struct.unpack_from("<i", data, 12)[0]
+    assert 0 <= hdr_len <= len(data) - 16
+    pos = 16 + hdr_len
+    out = []
+    while pos < len(data):
+        _stream_id, size = struct.unpack_from("<ii", data, pos)
+        pos += 8
+        assert 0 < size <= len(data) - pos, "truncated packet"
+        payload = data[pos : pos + size]
+        pos += size
+        if payload[4:8] != b"EVTS":
+            continue
+        root = struct.unpack_from("<I", payload, 0)[0]
+        soff = struct.unpack_from("<i", payload, root)[0]
+        vt = root - soff
+        vsize, _tsize, f0 = struct.unpack_from("<HHH", payload, vt)
+        if vsize < 6 or f0 == 0:
+            continue
+        voff = struct.unpack_from("<I", payload, root + f0)[0]
+        vec = root + f0 + voff
+        count = struct.unpack_from("<I", payload, vec)[0]
+        for i in range(count):
+            t, x, y, p = struct.unpack_from("<qhhB", payload, vec + 4 + 16 * i)
+            assert t >= 0 and 0 <= x < WIDTH and 0 <= y < HEIGHT
+            out.append((t, x, y, 1 if p else 0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# EVT3 encoder (16-bit LE words)
+# ---------------------------------------------------------------------------
+
+EVT3_HEADER = (
+    "% evt 3.0\n"
+    "% format EVT3;height={h};width={w}\n"
+    "% geometry {w}x{h}\n"
+    "% end\n"
+).format(w=WIDTH, h=HEIGHT)
+
+
+def encode_evt3(events):
+    words = []
+    high = None  # full (unwrapped) TIME_HIGH value
+    low = None
+    y_state = None
+    i = 0
+    while i < len(events):
+        t, x, y, p = events[i]
+        h = t >> 12
+        if high is None:
+            high = h
+            words.append((0x8 << 12) | (h & 0xFFF))
+        while high < h:
+            # step one TIME_HIGH at a time so wraparound appears as the
+            # gradual increments a real sensor emits
+            high += 1
+            words.append((0x8 << 12) | (high & 0xFFF))
+        lo = t & 0xFFF
+        if low != lo:
+            low = lo
+            words.append((0x6 << 12) | lo)
+        if y_state != y:
+            y_state = y
+            words.append((0x0 << 12) | y)
+        # run-detect: same (t, y, p), x ascending by 1 -> VECT encoding
+        j = i + 1
+        while j < len(events):
+            t2, x2, y2, p2 = events[j]
+            if t2 == t and y2 == y and p2 == p and x2 == events[j - 1][1] + 1:
+                j += 1
+            else:
+                break
+        run = j - i
+        if run >= 5:
+            words.append((0x3 << 12) | (p << 11) | x)
+            n = run
+            while n >= 12:
+                words.append((0x4 << 12) | 0xFFF)
+                n -= 12
+            if n > 8:
+                words.append((0x4 << 12) | ((1 << n) - 1))
+            elif n > 0:
+                words.append((0x5 << 12) | ((1 << n) - 1))
+            i = j
+        else:
+            words.append((0x2 << 12) | (p << 11) | x)
+            i += 1
+    return EVT3_HEADER.encode() + b"".join(struct.pack("<H", w) for w in words)
+
+
+def decode_evt3(path):
+    """Independent verify-decoder mirroring the Rust EVT3 semantics."""
+    data = open(path, "rb").read()
+    pos = data.index(b"% end\n") + len("% end\n")
+    high = None  # full extended TIME_HIGH
+    low = 0
+    y = None
+    vect_base = None
+    vect_pol = 0
+    out = []
+    assert (len(data) - pos) % 2 == 0, "mid-word EOF"
+    for off in range(pos, len(data), 2):
+        w = struct.unpack_from("<H", data, off)[0]
+        typ = w >> 12
+        v = w & 0xFFF
+        if typ == 0x8:
+            if high is None:
+                high = v
+            else:
+                cur_lo = high & 0xFFF
+                base = high & ~0xFFF
+                if v >= cur_lo:
+                    high = base | v
+                elif cur_lo - v >= 0x800:
+                    high = (base + 0x1000) | v
+                else:
+                    raise AssertionError("TIME_HIGH rollback in fixture")
+        elif typ == 0x6:
+            low = v
+        elif typ == 0x0:
+            y = v & 0x7FF
+        elif typ == 0x2:
+            assert high is not None and y is not None
+            out.append(((high << 12) | low, v & 0x7FF, y, (v >> 11) & 1))
+        elif typ == 0x3:
+            vect_base = v & 0x7FF
+            vect_pol = (v >> 11) & 1
+        elif typ in (0x4, 0x5):
+            assert vect_base is not None and high is not None and y is not None
+            nbits = 12 if typ == 0x4 else 8
+            for b in range(nbits):
+                if v & (1 << b):
+                    out.append(((high << 12) | low, vect_base + b, y, vect_pol))
+            vect_base += nbits
+        else:
+            raise AssertionError("unexpected word type 0x%X in fixture" % typ)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# EVT2 encoder (32-bit LE words)
+# ---------------------------------------------------------------------------
+
+EVT2_HEADER = (
+    "% evt 2.0\n"
+    "% format EVT2;height={h};width={w}\n"
+    "% geometry {w}x{h}\n"
+    "% end\n"
+).format(w=WIDTH, h=HEIGHT)
+
+
+def encode_evt2(events):
+    words = []
+    high = None  # t >> 6
+    for t, x, y, p in events:
+        assert t < (1 << 34), "EVT2 writer avoids TIME_HIGH wrap"
+        h = t >> 6
+        if high != h:
+            high = h
+            words.append((0x8 << 28) | (h & 0x0FFFFFFF))
+        typ = 0x1 if p else 0x0
+        words.append((typ << 28) | ((t & 0x3F) << 22) | (x << 11) | y)
+    return EVT2_HEADER.encode() + b"".join(struct.pack("<I", w) for w in words)
+
+
+def decode_evt2(path):
+    """Independent verify-decoder mirroring the Rust EVT2 semantics."""
+    data = open(path, "rb").read()
+    pos = data.index(b"% end\n") + len("% end\n")
+    high = None
+    out = []
+    assert (len(data) - pos) % 4 == 0, "mid-word EOF"
+    for off in range(pos, len(data), 4):
+        w = struct.unpack_from("<I", data, off)[0]
+        typ = w >> 28
+        if typ == 0x8:
+            v = w & 0x0FFFFFFF
+            if high is None:
+                high = v
+            else:
+                cur_lo = high & 0x0FFFFFFF
+                base = high & ~0x0FFFFFFF
+                if v >= cur_lo:
+                    high = base | v
+                elif cur_lo - v >= (1 << 27):
+                    high = (base + (1 << 28)) | v
+                else:
+                    raise AssertionError("EVT2 TIME_HIGH rollback in fixture")
+        elif typ in (0x0, 0x1):
+            assert high is not None
+            ts_lsb = (w >> 22) & 0x3F
+            x = (w >> 11) & 0x7FF
+            y = w & 0x7FF
+            assert x < WIDTH and y < HEIGHT
+            out.append(((high << 6) | ts_lsb, x, y, typ))
+        else:
+            raise AssertionError("unexpected word type 0x%X in fixture" % typ)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ground truth + manifest
+# ---------------------------------------------------------------------------
+
+
+def write_gt(path, gt_lines):
+    with open(path, "w", newline="\n") as f:
+        f.write("# t_seconds x y — synthetic corner trajectories (fixture)\n")
+        for t, x, y in gt_lines:
+            f.write("%.6f %.2f %.2f\n" % (t * 1e-6, x, y))
+
+
+def write_manifest(path):
+    manifest = {
+        "datasets": [
+            {
+                "name": "fixture-aedat4",
+                "recording": "../events.aedat4",
+                "ground_truth": "corners_gt.txt",
+                "width": WIDTH,
+                "height": HEIGHT,
+            },
+            {
+                "name": "fixture-evt2",
+                "recording": "../events_evt2.raw",
+                "ground_truth": "corners_gt.txt",
+                "width": WIDTH,
+                "height": HEIGHT,
+            },
+            {
+                "name": "fixture-evt3",
+                "recording": "../events_evt3.raw",
+                "ground_truth": "corners_gt.txt",
+                "width": WIDTH,
+                "height": HEIGHT,
+            },
+        ]
+    }
+    with open(path, "w", newline="\n") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+# ---------------------------------------------------------------------------
+
+
+def main():
+    events, gt_lines = build_canonical()
+    wrap = sum(1 for t, _, _, _ in events if t >= 1 << 24)
+    assert 0 < wrap < len(events), "stream must straddle the EVT3 2^24 wrap"
+
+    fixdir = os.path.normpath(FIXDIR)
+    os.makedirs(os.path.join(fixdir, "expected"), exist_ok=True)
+    os.makedirs(os.path.join(fixdir, "datasets"), exist_ok=True)
+
+    write_expected_txt(os.path.join(fixdir, "expected", "events.txt"), events)
+    write_expected_bin(os.path.join(fixdir, "expected", "events.bin"), events)
+    write_aedat4(os.path.join(fixdir, "events.aedat4"), events)
+    with open(os.path.join(fixdir, "events_evt3.raw"), "wb") as f:
+        f.write(encode_evt3(events))
+    with open(os.path.join(fixdir, "events_evt2.raw"), "wb") as f:
+        f.write(encode_evt2(events))
+    write_gt(os.path.join(fixdir, "datasets", "corners_gt.txt"), gt_lines)
+    write_manifest(os.path.join(fixdir, "datasets", "manifest.json"))
+
+    # self-check: every encoding must decode back to the canonical stream
+    for name, decoded in (
+        ("aedat4", decode_aedat4(os.path.join(fixdir, "events.aedat4"))),
+        ("evt3", decode_evt3(os.path.join(fixdir, "events_evt3.raw"))),
+        ("evt2", decode_evt2(os.path.join(fixdir, "events_evt2.raw"))),
+    ):
+        assert decoded == events, "%s re-decode diverged (%d vs %d events)" % (
+            name,
+            len(decoded),
+            len(events),
+        )
+
+    print("canonical events: %d (t %d..%d us, %d past 2^24)" % (
+        len(events), events[0][0], events[-1][0], wrap))
+    for rel in (
+        "events.aedat4",
+        "events_evt3.raw",
+        "events_evt2.raw",
+        "expected/events.txt",
+        "expected/events.bin",
+        "datasets/corners_gt.txt",
+        "datasets/manifest.json",
+    ):
+        sz = os.path.getsize(os.path.join(fixdir, rel))
+        assert sz < 100_000, "%s too big: %d" % (rel, sz)
+        print("  %-28s %6d bytes" % (rel, sz))
+    print("all fixtures verified against the canonical stream")
+
+
+if __name__ == "__main__":
+    sys.exit(main())
