@@ -19,6 +19,41 @@
 //! [`read_binary`]/[`read_text`] helpers are thin collectors over the
 //! same decoders.
 
+// Untrusted-input decode surface: promoted `clippy::pedantic` tier
+// (ISSUE 10), same policy as `eval` — every allow is a deliberate,
+// reasoned opt-out and the `-D warnings` clippy lane keeps the rest at
+// zero. See `eval/mod.rs` for the rationale of the shared entries.
+#![warn(clippy::pedantic)]
+#![allow(
+    // wire fields widen/narrow with `as` against validated bounds; the
+    // record layout fixes the ranges (x,y:u16 t:u64 p:u8)
+    clippy::cast_precision_loss,
+    clippy::cast_possible_truncation,
+    clippy::cast_sign_loss,
+    clippy::cast_lossless,
+    clippy::missing_errors_doc,
+    clippy::missing_panics_doc,
+    clippy::must_use_candidate,
+    clippy::module_name_repetitions,
+    clippy::doc_markdown,
+    clippy::wildcard_imports,
+    clippy::similar_names,
+    clippy::too_many_lines,
+    clippy::semicolon_if_nothing_returned,
+    clippy::uninlined_format_args,
+    clippy::items_after_statements,
+    clippy::unreadable_literal,
+    clippy::match_same_arms,
+    clippy::single_match_else,
+    clippy::if_not_else,
+    clippy::redundant_closure_for_method_calls,
+    clippy::map_unwrap_or,
+    clippy::explicit_iter_loop,
+    clippy::manual_let_else,
+    clippy::ignored_unit_patterns,
+    clippy::missing_fields_in_debug
+)]
+
 pub mod aedat4;
 pub mod evt;
 
@@ -59,6 +94,7 @@ fn decode_record(rec: &[u8]) -> Event {
     Event {
         x: u16::from_le_bytes([rec[0], rec[1]]),
         y: u16::from_le_bytes([rec[2], rec[3]]),
+        // nmc-analyze: allow(error-discipline) -- rec[4..12] is exactly 8 bytes, so the slice-to-array try_into is infallible
         t: u64::from_le_bytes(rec[4..12].try_into().unwrap()),
         p: Polarity::from_bit(rec[12]),
     }
@@ -168,6 +204,7 @@ pub(crate) fn decode_container(data: &[u8], out: &mut Vec<Event>) -> Result<usiz
     ensure!(data.len() >= HEADER_BYTES, "truncated container header");
     ensure!(&data[..8] == MAGIC, "bad magic: {:?}", &data[..8]);
     ensure!(data[8] == VERSION, "unsupported version {}", data[8]);
+    // nmc-analyze: allow(error-discipline) -- data.len() >= HEADER_BYTES was just ensured and 9..17 is exactly 8 bytes, so this cannot fail
     let declared = u64::from_le_bytes(data[9..HEADER_BYTES].try_into().unwrap());
     let body = &data[HEADER_BYTES..];
     let records = body.len() / RECORD_BYTES;

@@ -71,9 +71,10 @@
 #![warn(missing_docs)]
 // `unsafe` is denied crate-wide; only `tos::kernel` and `stcf` (the two
 // explicit-SIMD modules) opt back in with `#![allow(unsafe_code)]`, and
-// every block there carries a `// SAFETY:` comment. `tools/lint_gate.py`
-// enforces the allowlist and the comment discipline; `deny` (not
-// `forbid`) is what makes the per-module opt-in possible.
+// every block there carries a `// SAFETY:` comment. The nmc-analyze
+// gate (`python3 tools/analyze`) enforces the allowlist and the comment
+// discipline; `deny` (not `forbid`) is what makes the per-module
+// opt-in possible.
 #![deny(unsafe_code)]
 
 pub mod conventional;
@@ -90,6 +91,7 @@ pub mod runtime;
 pub mod serve;
 pub mod stcf;
 pub mod tos;
+pub mod verify;
 
 /// Convenient glob-import of the most used types.
 pub mod prelude {

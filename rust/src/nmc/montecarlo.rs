@@ -108,16 +108,46 @@ fn mix(mut z: u64) -> u64 {
     z ^ (z >> 31)
 }
 
-/// [`calib::bit_error_probability`] with the Monte-Carlo floor applied:
-/// probabilities below [`calib::BER_MC_FLOOR`] inject as exactly zero.
+/// The Monte-Carlo floor rule on a raw per-bit probability: values below
+/// [`calib::BER_MC_FLOOR`] inject as exactly `0.0` (not merely "small" —
+/// the vdd-sweep report schema relies on the nominal region being
+/// bit-clean). Split from [`injected_p_bit`] so the floor semantics are
+/// provable in isolation (`verify::floor_clamp_is_exact_zero`) without
+/// dragging in the transcendental BER curve.
 #[inline]
-fn injected_p_bit(vdd: f64) -> f64 {
-    let p = calib::bit_error_probability(vdd);
+pub(crate) fn clamp_p_to_floor(p: f64) -> f64 {
     if p < calib::BER_MC_FLOOR {
         0.0
     } else {
         p
     }
+}
+
+/// [`calib::bit_error_probability`] with the Monte-Carlo floor applied.
+#[inline]
+fn injected_p_bit(vdd: f64) -> f64 {
+    clamp_p_to_floor(calib::bit_error_probability(vdd))
+}
+
+/// Derive the (mask, stuck) pair of one cell from the seed and a per-bit
+/// fault probability. The per-bit uniform draw depends only on
+/// `(seed, cell, bit)` — never on `p_bit` — which is what makes fault
+/// sets *nested* across voltages: lowering Vdd only raises the threshold
+/// the same fixed draws are compared against
+/// (`verify::fault_sets_nest_monotonically_in_p`).
+#[inline]
+pub(crate) fn cell_faults_at(seed: u64, cell: usize, p_bit: f64) -> (u8, u8) {
+    let mut mask = 0u8;
+    let mut stuck = 0u8;
+    for bit in 0..calib::BITS_PER_WORD {
+        let h = mix(seed ^ ((cell as u64) << 3) ^ bit as u64);
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u < p_bit {
+            mask |= 1 << bit;
+            stuck |= (((h >> 7) & 1) as u8) << bit;
+        }
+    }
+    (mask, stuck)
 }
 
 impl ErrorInjector {
@@ -144,17 +174,7 @@ impl ErrorInjector {
 
     /// Derive the (mask, stuck) pair of one cell at the current threshold.
     fn cell_faults(&self, cell: usize) -> (u8, u8) {
-        let mut mask = 0u8;
-        let mut stuck = 0u8;
-        for bit in 0..calib::BITS_PER_WORD {
-            let h = mix(self.seed ^ ((cell as u64) << 3) ^ bit as u64);
-            let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
-            if u < self.p_bit {
-                mask |= 1 << bit;
-                stuck |= (((h >> 7) & 1) as u8) << bit;
-            }
-        }
-        (mask, stuck)
+        cell_faults_at(self.seed, cell, self.p_bit)
     }
 
     fn rebuild_map(&mut self, n_cells: usize) {

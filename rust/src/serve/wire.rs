@@ -409,6 +409,7 @@ pub fn read_server_msg<R: Read>(r: &mut R, version: u8) -> Result<ServerMsg> {
             let mut rec = [0u8; CORNER_RECORD_BYTES];
             for _ in 0..count {
                 read_exact_or_closed(r, &mut rec, "reading a corner batch")?;
+                // nmc-analyze: allow(error-discipline, next=9) -- every try_into below slices a fixed range of the [u8; CORNER_RECORD_BYTES] buffer, so the conversions are infallible
                 corners.push(Corner {
                     seq: u64::from_le_bytes(rec[0..8].try_into().unwrap()),
                     ev: Event {

@@ -28,7 +28,7 @@
 //! sum, matching the TOS kernel's `cfg(miri)` policy.
 
 // One of the two modules allowed to use `unsafe` (with `tos::kernel`);
-// the crate root carries `#![deny(unsafe_code)]` and `tools/lint_gate.py`
+// the crate root carries `#![deny(unsafe_code)]` and the nmc-analyze gate
 // pins the allowlist. Every block below carries a `// SAFETY:` run.
 #![allow(unsafe_code)]
 

@@ -45,7 +45,7 @@
 
 // This module and `stcf` are the only places in the crate allowed to use
 // `unsafe` (the crate root carries `#![deny(unsafe_code)]`, and
-// `tools/lint_gate.py` pins the allowlist); every block below carries a
+// the nmc-analyze `unsafe-allowlist` rule pins the allowlist); every block below carries a
 // `// SAFETY:` justification, enforced by the same gate.
 #![allow(unsafe_code)]
 
@@ -176,10 +176,20 @@ static ACTIVE: OnceLock<KernelPath> = OnceLock::new();
 /// and cached for the process lifetime — per-call dispatch is one
 /// predictable load + match.
 pub fn active_path() -> KernelPath {
-    *ACTIVE.get_or_init(|| match std::env::var("NMC_TOS_KERNEL") {
-        Ok(v) => KernelPath::parse(&v).filter(KernelPath::runnable).unwrap_or_else(detect),
-        Err(_) => detect(),
-    })
+    // Kani models neither environment reads nor feature detection; its
+    // harnesses pin the portable SWAR path (and drive the others through
+    // `decrement_clamp_with` explicitly).
+    #[cfg(kani)]
+    {
+        KernelPath::Swar64
+    }
+    #[cfg(not(kani))]
+    {
+        *ACTIVE.get_or_init(|| match std::env::var("NMC_TOS_KERNEL") {
+            Ok(v) => KernelPath::parse(&v).filter(KernelPath::runnable).unwrap_or_else(detect),
+            Err(_) => detect(),
+        })
+    }
 }
 
 /// The shared Algorithm-1 decrement/clamp core over `rect`, restricted to

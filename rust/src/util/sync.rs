@@ -4,7 +4,7 @@
 //! model-checked without forking their code.
 //!
 //! Those modules import **only** from here — never `std::sync` /
-//! `std::thread` directly (`tools/lint_gate.py` enforces it). A normal
+//! `std::thread` directly (the `sync-shim` rule of `tools/analyze` enforces it). A normal
 //! build re-exports the std types unchanged, so the shim costs nothing;
 //! a `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_tests`
 //! build swaps in `loom`'s instrumented types and the loom models in

@@ -1,0 +1,213 @@
+//! Kani bounded proof harnesses for the bit-level kernels.
+//!
+//! Everything here is `#[cfg(kani)]`: under a plain `cargo check`/`cargo
+//! build` this module compiles to its documentation and nothing else, so
+//! it can live in-tree without a dependency. Under `cargo kani` (the CI
+//! `kani` job, best-effort) each `#[kani::proof]` function is a bounded
+//! model check: every value produced by `kani::any()` is symbolic, so a
+//! passing harness is a proof over *all* inputs within the stated bounds
+//! — not a sampled property test.
+//!
+//! What is proven, and how it complements the runtime suites:
+//!
+//! - **`swar_decrement_clamp_equals_scalar`** — the SWAR kernel equals
+//!   the scalar oracle for every buffer content, width, rect, base row
+//!   and threshold up to the bounds. The proptest sweeps in
+//!   `tos::kernel` sample this space; the harness closes it.
+//! - **`narrow_window_never_touches_outside_rect`** — the backward-
+//!   sliding narrow-row window (widths < 8, the `LANE_MASK` blend) never
+//!   *writes* outside the rect, and Kani's built-in checks prove it
+//!   never *reads* out of bounds either — the exact hazard the
+//!   window-rebase trick courts.
+//! - **`stcf_check_matches_scalar_oracle`** — `Stcf::check` (branch-free
+//!   counting) and `Stcf::check_scalar` (early-exit loop) agree on the
+//!   verdict, the stats, and — via a second probe event — the timestamp
+//!   map, for symbolic event histories on a small sensor.
+//! - **`fault_sets_nest_monotonically_in_p`** — for any two fault
+//!   probabilities `p1 <= p2`, a cell's fault mask at `p1` is a subset
+//!   of its mask at `p2`, and stuck values agree on the common bits.
+//!   Since `calib::bit_error_probability` is monotone decreasing in Vdd
+//!   (pinned by the runtime test `ber_monotone_in_vdd` — the curve
+//!   itself is transcendental, outside Kani's reach), this is exactly
+//!   "lowering Vdd only ever adds faults, never moves or removes one".
+//! - **`floor_clamp_is_exact_zero`** — the Monte-Carlo floor maps every
+//!   probability below `calib::BER_MC_FLOOR` to *exactly* `0.0` and is
+//!   the identity above it: the nominal-voltage region of a vdd-sweep
+//!   report is bit-clean by construction, not by luck.
+//!
+//! Bounds are deliberately small (buffers ≤ 24 bytes, 3×3 sensors):
+//! the kernels branch on alignment and width, not on magnitude, so a
+//! proof over every alignment/width class at small size is the claim
+//! that matters. Widening a bound only grows solver time.
+
+#[cfg(kani)]
+mod harnesses {
+    use crate::events::{Event, Polarity, Resolution};
+    use crate::nmc::calib;
+    use crate::nmc::montecarlo::{cell_faults_at, clamp_p_to_floor};
+    use crate::stcf::{Stcf, StcfConfig};
+    use crate::tos::backend::PatchRect;
+    use crate::tos::kernel::{decrement_clamp_with, KernelPath};
+
+    /// A symbolic in-bounds rect over `width` columns and rows
+    /// `base_row .. base_row + rows`, matching the `decrement_clamp`
+    /// contract (rect pre-clipped, `data` holds `rows` rows from
+    /// `base_row`).
+    fn any_rect(width: usize, rows: usize, base_row: u16) -> PatchRect {
+        let x0: u16 = kani::any();
+        let x1: u16 = kani::any();
+        let y0: u16 = kani::any();
+        let y1: u16 = kani::any();
+        kani::assume(x0 <= x1 && (x1 as usize) < width);
+        kani::assume(y0 >= base_row && y0 <= y1);
+        kani::assume(((y1 - base_row) as usize) < rows);
+        PatchRect { x0, x1, y0, y1 }
+    }
+
+    /// SWAR == scalar for all data, widths 1..=10, 1-2 rows, all rects,
+    /// thresholds and base rows. Covers all three SWAR branches: the
+    /// wide row path (w >= 8 with the re-based overlap window), the
+    /// masked 8-byte window, and the backward-sliding narrow window.
+    #[kani::proof]
+    #[kani::unwind(24)]
+    fn swar_decrement_clamp_equals_scalar() {
+        const MAX_W: usize = 10;
+        const MAX_ROWS: usize = 2;
+        let width: usize = kani::any();
+        let rows: usize = kani::any();
+        kani::assume(width >= 1 && width <= MAX_W);
+        kani::assume(rows >= 1 && rows <= MAX_ROWS);
+        let len = width * rows;
+
+        let base_row: u16 = kani::any();
+        kani::assume(base_row <= 3);
+        let rect = any_rect(width, rows, base_row);
+        let th: u8 = kani::any();
+
+        let seed: [u8; MAX_W * MAX_ROWS] = kani::any();
+        let mut swar = seed;
+        let mut scalar = seed;
+
+        decrement_clamp_with(KernelPath::Swar64, &mut swar[..len], width, base_row, rect, th);
+        decrement_clamp_with(KernelPath::Scalar, &mut scalar[..len], width, base_row, rect, th);
+        assert_eq!(swar, scalar);
+    }
+
+    /// The narrow-row backward-sliding window (widths < 8 over a buffer
+    /// long enough to rebase into neighbouring rows) writes only inside
+    /// the rect. Out-of-bounds *reads* are caught by Kani's intrinsic
+    /// memory checks on the same run.
+    #[kani::proof]
+    #[kani::unwind(24)]
+    fn narrow_window_never_touches_outside_rect() {
+        const MAX_W: usize = 7;
+        const MAX_ROWS: usize = 3;
+        let width: usize = kani::any();
+        let rows: usize = kani::any();
+        kani::assume(width >= 1 && width < 8);
+        kani::assume(rows >= 2 && rows <= MAX_ROWS);
+        let len = width * rows;
+        kani::assume(len >= 8); // forces the backward-sliding branch
+
+        let rect = any_rect(width, rows, 0);
+        let th: u8 = kani::any();
+
+        let seed: [u8; MAX_W * MAX_ROWS] = kani::any();
+        let mut data = seed;
+        decrement_clamp_with(KernelPath::Swar64, &mut data[..len], width, 0, rect, th);
+
+        let mut i = 0;
+        while i < len {
+            let (x, y) = (i % width, i / width);
+            let inside = x >= rect.x0 as usize
+                && x <= rect.x1 as usize
+                && y >= rect.y0 as usize
+                && y <= rect.y1 as usize;
+            if !inside {
+                assert_eq!(data[i], seed[i], "narrow window leaked outside the rect");
+            }
+            i += 1;
+        }
+    }
+
+    /// An event on a small sensor with a representable `t + 1` (both
+    /// classifiers store `t + 1` in the timestamp map; `u64::MAX` would
+    /// overflow in either, so it is outside the filter's domain).
+    fn any_event(res: Resolution) -> Event {
+        let x: u16 = kani::any();
+        let y: u16 = kani::any();
+        let t: u64 = kani::any();
+        kani::assume(x < res.width && y < res.height);
+        kani::assume(t < u64::MAX);
+        let p = if kani::any() { Polarity::On } else { Polarity::Off };
+        Event::new(x, y, t, p)
+    }
+
+    /// Vectorized STCF == scalar oracle: same verdicts, same stats, and
+    /// (observed through a second probe) the same timestamp map, for a
+    /// symbolic seeded history on a 3x3 sensor.
+    #[kani::proof]
+    #[kani::unwind(16)]
+    fn stcf_check_matches_scalar_oracle() {
+        let res = Resolution::new(3, 3);
+        let tw_us: u64 = kani::any();
+        let support: u32 = kani::any();
+        kani::assume(support >= 1 && support <= 3);
+        let cfg = StcfConfig { tw_us, radius: 1, support, any_polarity: true };
+
+        // symbolic prior history, applied once and cloned so both
+        // classifiers start from the identical state
+        let mut seeded = Stcf::new(res, cfg);
+        seeded.check(&any_event(res));
+        let mut vectorized = seeded.clone();
+        let mut oracle = seeded;
+
+        let probe = any_event(res);
+        assert_eq!(vectorized.check(&probe), oracle.check_scalar(&probe));
+        assert_eq!(vectorized.stats(), oracle.stats());
+
+        // a second probe observes any timestamp-map divergence the first
+        // comparison could have missed
+        let probe2 = any_event(res);
+        assert_eq!(vectorized.check(&probe2), oracle.check_scalar(&probe2));
+        assert_eq!(vectorized.stats(), oracle.stats());
+    }
+
+    /// Fault-set nesting: for `p1 <= p2` the mask at `p1` is a subset of
+    /// the mask at `p2`, stuck bits only appear under the mask, and the
+    /// stuck values agree wherever both masks fault. With the BER curve
+    /// monotone decreasing in Vdd, this is voltage-nesting of fault maps.
+    #[kani::proof]
+    #[kani::unwind(8)]
+    fn fault_sets_nest_monotonically_in_p() {
+        let p1: f64 = kani::any();
+        let p2: f64 = kani::any();
+        kani::assume(p1 >= 0.0 && p2 >= 0.0); // excludes NaN too
+        kani::assume(p1 <= p2 && p2 <= 1.0);
+        let seed: u64 = kani::any();
+        let cell: usize = kani::any();
+        kani::assume(cell <= u32::MAX as usize);
+
+        let (m1, s1) = cell_faults_at(seed, cell, p1);
+        let (m2, s2) = cell_faults_at(seed, cell, p2);
+
+        assert_eq!(m1 & !m2, 0, "raising p removed a fault");
+        assert_eq!(s1 & !m1, 0, "stuck bit outside the p1 mask");
+        assert_eq!(s2 & !m2, 0, "stuck bit outside the p2 mask");
+        assert_eq!(s1 & m1, s2 & m1, "a shared fault changed its stuck value");
+    }
+
+    /// The Monte-Carlo floor is exact: below `BER_MC_FLOOR` the injected
+    /// probability is literally `0.0`; at or above it, untouched.
+    #[kani::proof]
+    fn floor_clamp_is_exact_zero() {
+        let p: f64 = kani::any();
+        kani::assume(p >= 0.0); // excludes NaN
+        let c = clamp_p_to_floor(p);
+        if p < calib::BER_MC_FLOOR {
+            assert!(c == 0.0);
+        } else {
+            assert!(c == p);
+        }
+    }
+}

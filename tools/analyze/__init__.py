@@ -1,0 +1,15 @@
+"""nmc-analyze — repo-wide invariant analyzer for the nmc-tos crate.
+
+Successor of tools/lint_gate.py (PR 7): the four original invariants are
+ported as registered rules and joined by the repo-specific determinism,
+oracle-coverage, error-discipline, wire-tag, doc-drift and
+suppression-hygiene rules. Stdlib-only; run as `python3 tools/analyze`
+from the repo root.
+
+See tools/analyze/core.py for the engine (file scanning, suppression
+syntax, JSON findings schema) and tools/analyze/rules.py for the rule
+catalog. DESIGN.md §Correctness tooling documents every rule with its
+rationale and suppression policy.
+"""
+
+SCHEMA = "nmc-analyze-v1"

@@ -1,0 +1,98 @@
+"""CLI of nmc-analyze. Run from the repo root:
+
+    python3 tools/analyze                 # scan the repo, exit 1 on findings
+    python3 tools/analyze --self-test     # run the fixture suite, exit 1 on failure
+    python3 tools/analyze --json out.json # also write the findings JSON
+    python3 tools/analyze --summary s.md  # also write the per-rule GFM table
+    python3 tools/analyze --rule <id>     # run a single rule (debugging)
+
+Exit codes: 0 clean, 1 unsuppressed findings / self-test failure, 2 misuse.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import core
+import rules  # noqa: F401  -- import populates core.REGISTRY
+import selftest
+
+
+def main(argv: list[str]) -> int:
+    parser = argparse.ArgumentParser(
+        prog="nmc-analyze", description="repo-wide invariant analyzer"
+    )
+    parser.add_argument(
+        "--root",
+        default=os.getcwd(),
+        help="repo root to scan (default: cwd)",
+    )
+    parser.add_argument(
+        "--self-test",
+        action="store_true",
+        help="run the per-rule fixture suite and schema regression test",
+    )
+    parser.add_argument("--json", metavar="PATH", help="write findings JSON here")
+    parser.add_argument(
+        "--summary", metavar="PATH", help="write the per-rule markdown table here"
+    )
+    parser.add_argument(
+        "--rule", metavar="ID", help="run only this rule (plus suppression handling)"
+    )
+    args = parser.parse_args(argv)
+
+    if args.rule and args.rule not in core.rule_ids():
+        print(
+            f"nmc-analyze: unknown rule `{args.rule}`; registered: "
+            + ", ".join(sorted(core.rule_ids())),
+            file=sys.stderr,
+        )
+        return 2
+
+    if args.self_test:
+        return selftest.run(args.root)
+
+    files = core.collect_files(args.root)
+    if not files:
+        print(
+            f"nmc-analyze: nothing to scan under {args.root} "
+            f"(expected {', '.join(core.SCAN_DIRS)})",
+            file=sys.stderr,
+        )
+        return 2
+
+    findings = core.run_rules(files, only=args.rule)
+    report = core.report_json(findings)
+    if args.json:
+        core.write_json(args.json, report)
+    if args.summary:
+        with open(args.summary, "w", encoding="utf-8") as f:
+            f.write(core.summary_table(findings))
+
+    live = [f for f in findings if not f.suppressed]
+    for f in findings:
+        if f.suppressed:
+            continue
+        print(f.render())
+    n_sup = sum(1 for f in findings if f.suppressed)
+    scope = f"rule `{args.rule}`" if args.rule else f"{len(core.REGISTRY)} rules"
+    if live:
+        print(
+            f"nmc-analyze: {len(live)} finding(s) from {scope} "
+            f"over {len(files)} files ({n_sup} suppressed)",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"nmc-analyze: clean — {scope} over {len(files)} files "
+        f"({n_sup} suppressed finding(s))"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,398 @@
+"""Engine of nmc-analyze: file scanning, Rust source stripping, the
+inline-suppression syntax, the rule registry, and the JSON findings
+schema.
+
+Dependency-free (stdlib only). The contract mirrors bench_gate.py and
+the old lint_gate.py: exit 0 = clean, 1 = unsuppressed findings (each
+printed with file:line and a pointed message), 2 = misuse.
+
+## Suppression syntax
+
+A finding is suppressed by a justified inline comment on the same line
+or on a line above it:
+
+    // nmc-analyze: allow(<rule-id>[, next=N]) -- <justification>
+
+The suppression covers its own line plus the next N lines (default 1).
+The justification after `--` is mandatory and must say *why* the code
+is sound, not just restate the rule; a suppression with a missing or
+trivial justification, naming an unknown rule, or matching no finding
+is itself reported by the `suppression-hygiene` rule.
+
+## Findings JSON (schema nmc-analyze-v1)
+
+    {
+      "schema": "nmc-analyze-v1",
+      "rules":    [{"id", "summary"}...],
+      "findings": [{"rule", "file", "line", "message",
+                    "suppressed", "justification"}...],
+      "counts":   {"<rule-id>": {"found": N, "suppressed": M}, ...},
+      "clean":    bool   # no unsuppressed findings
+    }
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from dataclasses import dataclass, field
+
+SCHEMA = "nmc-analyze-v1"
+
+# Files the repo scan feeds to the rules. Fixture trees under
+# tools/fixtures/analyze/<rule>/{positive,negative}/ mirror the same
+# layout, so the self-test loads them with this same walker.
+SCAN_DIRS = ("rust/src", "rust/tests", "rust/benches")
+SCAN_FILES = ("README.md", "DESIGN.md", "deny.toml")
+
+MIN_JUSTIFICATION_CHARS = 12
+
+SUPPRESS_RE = re.compile(
+    r"//\s*nmc-analyze:\s*allow\(\s*([a-z0-9-]+)\s*"
+    r"(?:,\s*next\s*=\s*(\d+)\s*)?\)\s*(?:--\s*(.*?))?\s*$"
+)
+
+
+@dataclass
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    file: str
+    line: int
+    message: str
+    suppressed: bool = False
+    justification: str | None = None
+
+    def render(self) -> str:
+        tag = " [suppressed]" if self.suppressed else ""
+        return f"{self.file}:{self.line}: [{self.rule}]{tag} {self.message}"
+
+    def to_json(self) -> dict:
+        return {
+            "rule": self.rule,
+            "file": self.file,
+            "line": self.line,
+            "message": self.message,
+            "suppressed": self.suppressed,
+            "justification": self.justification,
+        }
+
+
+@dataclass
+class Suppression:
+    """A parsed `// nmc-analyze: allow(...)` comment."""
+
+    file: str
+    line: int  # 1-based line the comment sits on
+    rule: str
+    span: int  # lines covered below the comment line
+    justification: str
+    used: bool = False
+
+    def covers(self, line: int) -> bool:
+        return self.line <= line <= self.line + self.span
+
+
+@dataclass
+class Rule:
+    """A registered invariant: id, one-line summary, and a checker taking
+    the full file map (so cross-file rules see tests and docs)."""
+
+    id: str
+    summary: str
+    check: object  # callable(files: dict[str, str], ctx: Context) -> list[Finding]
+
+
+@dataclass
+class Context:
+    """Per-run caches shared by the rules."""
+
+    files: dict  # rel path -> text
+    _stripped: dict = field(default_factory=dict)
+    _test_start: dict = field(default_factory=dict)
+
+    def stripped(self, rel: str) -> list[str]:
+        """Code lines of `rel` with comments/strings blanked."""
+        if rel not in self._stripped:
+            self._stripped[rel] = strip_code(self.files[rel])
+        return self._stripped[rel]
+
+    def raw_lines(self, rel: str) -> list[str]:
+        return self.files[rel].split("\n")
+
+    def test_start(self, rel: str) -> int:
+        """0-based index of the first `#[cfg(test)]` line (everything from
+        there to EOF is treated as test code), or len(lines) if none.
+        Matches this repo's layout: unit tests sit in one trailing
+        `#[cfg(test)] mod tests` block."""
+        if rel not in self._test_start:
+            lines = self.raw_lines(rel)
+            start = len(lines)
+            for i, ln in enumerate(lines):
+                if "#[cfg(test)]" in ln:
+                    start = i
+                    break
+            self._test_start[rel] = start
+        return self._test_start[rel]
+
+    def in_test(self, rel: str, idx: int) -> bool:
+        """Is 0-based line `idx` inside the trailing test region?"""
+        return idx >= self.test_start(rel)
+
+
+REGISTRY: list[Rule] = []
+
+
+def rule(rule_id: str, summary: str):
+    """Decorator registering a checker in the rule registry."""
+
+    def wrap(fn):
+        REGISTRY.append(Rule(rule_id, summary, fn))
+        return fn
+
+    return wrap
+
+
+def rule_ids() -> set[str]:
+    return {r.id for r in REGISTRY}
+
+
+# --- Rust source stripping (carried over from lint_gate.py) ----------------
+
+
+def strip_code(text: str) -> list[str]:
+    """Blank out comments and string literals, preserving line structure,
+    so keyword scans don't trip on prose. Handles `//`, nested `/* */`,
+    normal strings with escapes, and raw strings `r"..."`/`r#"..."#`."""
+    out = []
+    i, n = 0, len(text)
+    depth = 0  # block-comment nesting
+    while i < n:
+        c = text[i]
+        if depth > 0:
+            if text.startswith("/*", i):
+                depth += 1
+                i += 2
+            elif text.startswith("*/", i):
+                depth -= 1
+                i += 2
+            else:
+                out.append(c if c == "\n" else " ")
+                i += 1
+            continue
+        if text.startswith("//", i):
+            j = text.find("\n", i)
+            i = n if j == -1 else j
+            continue
+        if text.startswith("/*", i):
+            depth = 1
+            i += 2
+            continue
+        if c == '"' or (c == "r" and i + 1 < n and text[i + 1 : i + 3].lstrip("#").startswith('"')):
+            # string literal (possibly raw); blank to the matching close,
+            # preserving interior newlines so line numbers stay aligned
+            start = i
+            if c == "r":
+                j = i + 1
+                hashes = 0
+                while j < n and text[j] == "#":
+                    hashes += 1
+                    j += 1
+                close = '"' + "#" * hashes
+                j = text.find(close, j + 1)
+                i = n if j == -1 else j + len(close)
+            else:
+                j = i + 1
+                while j < n:
+                    if text[j] == "\\":
+                        j += 2
+                    elif text[j] == '"':
+                        j += 1
+                        break
+                    else:
+                        j += 1
+                i = min(j, n)
+            out.extend("\n" if ch == "\n" else " " for ch in text[start:i])
+            continue
+        out.append(c)
+        i += 1
+    return "".join(out).split("\n")
+
+
+# --- file collection --------------------------------------------------------
+
+
+def collect_files(root: str) -> dict:
+    """The file map a scan feeds to the rules: all tracked Rust sources
+    plus the docs and the cargo-deny config, keyed by /-separated paths
+    relative to `root`."""
+    files = {}
+    for d in SCAN_DIRS:
+        top = os.path.join(root, d)
+        if not os.path.isdir(top):
+            continue
+        for dirpath, _dirnames, filenames in os.walk(top):
+            for name in sorted(filenames):
+                if not name.endswith(".rs"):
+                    continue
+                path = os.path.join(dirpath, name)
+                rel = os.path.relpath(path, root).replace(os.sep, "/")
+                with open(path, encoding="utf-8") as f:
+                    files[rel] = f.read()
+    for rel in SCAN_FILES:
+        path = os.path.join(root, rel)
+        if os.path.isfile(path):
+            with open(path, encoding="utf-8") as f:
+                files[rel] = f.read()
+    return files
+
+
+# --- suppression handling ---------------------------------------------------
+
+
+def collect_suppressions(files: dict) -> list[Suppression]:
+    sups = []
+    for rel, text in files.items():
+        if not rel.endswith((".rs", ".toml")):
+            continue
+        comment = "#" if rel.endswith(".toml") else "//"
+        for idx, line in enumerate(text.split("\n")):
+            m = SUPPRESS_RE.search(line.replace("# nmc-analyze", "// nmc-analyze", 1)
+                                   if comment == "#" else line)
+            if not m:
+                continue
+            sups.append(
+                Suppression(
+                    file=rel,
+                    line=idx + 1,
+                    rule=m.group(1),
+                    span=int(m.group(2)) if m.group(2) else 1,
+                    justification=(m.group(3) or "").strip(),
+                )
+            )
+    return sups
+
+
+def apply_suppressions(findings: list[Finding], sups: list[Suppression]) -> None:
+    """Mark findings covered by a valid, justified suppression for their
+    rule. Invalid suppressions never suppress (they are reported by the
+    suppression-hygiene rule instead)."""
+    by_file: dict = {}
+    for s in sups:
+        if len(s.justification) >= MIN_JUSTIFICATION_CHARS and s.rule in rule_ids():
+            by_file.setdefault(s.file, []).append(s)
+    for f in findings:
+        for s in by_file.get(f.file, ()):
+            if s.rule == f.rule and s.covers(f.line):
+                f.suppressed = True
+                f.justification = s.justification
+                s.used = True
+                break
+
+
+def hygiene_findings(sups: list[Suppression]) -> list[Finding]:
+    """The suppression-hygiene meta-rule: every suppression must name a
+    registered rule, carry a real justification, and actually cover a
+    finding (stale allows rot into blanket exemptions)."""
+    out = []
+    known = rule_ids()
+    for s in sups:
+        if s.rule not in known:
+            out.append(
+                Finding(
+                    "suppression-hygiene",
+                    s.file,
+                    s.line,
+                    f"suppression names unknown rule `{s.rule}` — registered rules: "
+                    + ", ".join(sorted(known)),
+                )
+            )
+        elif len(s.justification) < MIN_JUSTIFICATION_CHARS:
+            out.append(
+                Finding(
+                    "suppression-hygiene",
+                    s.file,
+                    s.line,
+                    "suppression without a justification — append "
+                    "`-- <why this specific code is sound>` "
+                    f"(>= {MIN_JUSTIFICATION_CHARS} chars)",
+                )
+            )
+        elif not s.used:
+            out.append(
+                Finding(
+                    "suppression-hygiene",
+                    s.file,
+                    s.line,
+                    f"unused suppression for `{s.rule}` — the rule reports nothing "
+                    "here; delete the stale allow",
+                )
+            )
+    return out
+
+
+# --- the run ----------------------------------------------------------------
+
+
+def run_rules(files: dict, only: str | None = None) -> list[Finding]:
+    """Run the registry (or one rule) over a file map, apply suppressions,
+    and append the hygiene meta-findings. Returns all findings, suppressed
+    ones included (the JSON report keeps them for audit)."""
+    ctx = Context(files=files)
+    findings: list[Finding] = []
+    for r in REGISTRY:
+        if r.id == "suppression-hygiene":
+            continue  # runs last, below, over the suppression table
+        if only is not None and r.id != only:
+            continue
+        findings.extend(r.check(files, ctx))
+    sups = collect_suppressions(files)
+    apply_suppressions(findings, sups)
+    if only is None or only == "suppression-hygiene":
+        findings.extend(hygiene_findings(sups))
+    findings.sort(key=lambda f: (f.file, f.line, f.rule))
+    return findings
+
+
+def counts_by_rule(findings: list[Finding]) -> dict:
+    counts = {r.id: {"found": 0, "suppressed": 0} for r in REGISTRY}
+    for f in findings:
+        c = counts.setdefault(f.rule, {"found": 0, "suppressed": 0})
+        c["found"] += 1
+        if f.suppressed:
+            c["suppressed"] += 1
+    return counts
+
+
+def report_json(findings: list[Finding]) -> dict:
+    counts = counts_by_rule(findings)
+    return {
+        "schema": SCHEMA,
+        "rules": [{"id": r.id, "summary": r.summary} for r in REGISTRY],
+        "findings": [f.to_json() for f in findings],
+        "counts": counts,
+        "clean": all(f.suppressed for f in findings),
+    }
+
+
+def summary_table(findings: list[Finding]) -> str:
+    """Per-rule GitHub-flavored markdown summary (the CI step summary)."""
+    counts = counts_by_rule(findings)
+    lines = [
+        "| rule | findings | suppressed | status |",
+        "|---|---:|---:|---|",
+    ]
+    for r in REGISTRY:
+        c = counts[r.id]
+        live = c["found"] - c["suppressed"]
+        status = "clean" if live == 0 else f"**{live} open**"
+        lines.append(f"| `{r.id}` | {c['found']} | {c['suppressed']} | {status} |")
+    return "\n".join(lines) + "\n"
+
+
+def write_json(path: str, payload: dict) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=2, sort_keys=False)
+        f.write("\n")

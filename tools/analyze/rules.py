@@ -1,0 +1,642 @@
+"""The rule catalog of nmc-analyze.
+
+Four rules are ported from tools/lint_gate.py (PR 7); the rest encode
+the invariants behind the repo's headline claims — byte-identical
+reports, bit-exact vector kernels, panic-free untrusted-input decoding,
+single-sourced wire tags, and docs that match the binary. DESIGN.md
+§Correctness tooling is the prose catalog (ID, invariant, rationale,
+suppression policy); this file is the executable one.
+
+Every checker takes the full file map so cross-file rules (oracle
+coverage, doc drift) can see tests and docs. Scope tables below are
+calibrated to this codebase on purpose — an analyzer that guesses scopes
+generically would either miss these files or drown in false positives.
+"""
+
+from __future__ import annotations
+
+import re
+
+from core import Context, Finding, rule
+
+# --- policy tables (carried over from lint_gate.py, plus the new scopes) ----
+
+# Modules allowed to contain the `unsafe` keyword; each must opt in
+# explicitly. Everything else in rust/src is unsafe-free.
+UNSAFE_ALLOWLIST = {
+    "rust/src/tos/kernel.rs",
+    "rust/src/stcf/mod.rs",
+}
+
+# (file, required attribute) pairs pinning the crate-level posture.
+REQUIRED_ATTRS = [
+    ("rust/src/lib.rs", "#![deny(unsafe_code)]"),
+    ("rust/src/main.rs", "#![forbid(unsafe_code)]"),
+    ("rust/src/tos/kernel.rs", "#![allow(unsafe_code)]"),
+    ("rust/src/stcf/mod.rs", "#![allow(unsafe_code)]"),
+]
+
+# Modules whose synchronization must come from crate::util::sync.
+SHIMMED = {
+    "rust/src/serve/mod.rs",
+    "rust/src/serve/pool.rs",
+    "rust/src/coordinator/mod.rs",
+    "rust/src/coordinator/lut_worker.rs",
+    "rust/src/tos/sharded.rs",
+}
+
+# Files whose decode paths handle untrusted lengths.
+DECODE_FILES = {
+    "rust/src/serve/wire.rs",
+    "rust/src/events/codec.rs",
+    "rust/src/events/codec/aedat4.rs",
+    "rust/src/events/codec/evt.rs",
+}
+
+# Modules that emit the byte-identical JSON reports (vdd-sweep,
+# dataset-eval, fig harnesses) or the machine-readable bench JSON.
+DETERMINISM_PREFIXES = ("rust/src/eval/", "rust/src/datasets/", "rust/benches/")
+
+# The bench harness measures wall time by design; `Instant::now` is its
+# measurement primitive, not a determinism leak. Report modules get the
+# stricter set.
+WALL_CLOCK_EXEMPT_PREFIXES = ("rust/benches/",)
+
+# Modules that decode bytes an attacker controls: a panic here is a
+# remote DoS, so the error path must be Result all the way down.
+ERROR_DISCIPLINE_FILES = {
+    "rust/src/serve/wire.rs",
+    "rust/src/events/codec.rs",
+    "rust/src/events/codec/aedat4.rs",
+    "rust/src/events/codec/evt.rs",
+    "rust/src/datasets/public.rs",
+}
+
+WIRE_FILE = "rust/src/serve/wire.rs"
+
+SAFETY_WINDOW = 14
+BOUNDS_WINDOW = 10
+
+UNSAFE_KEYWORD = re.compile(r"\bunsafe\b")
+STD_SYNC = re.compile(r"\bstd\s*::\s*(sync|thread)\b")
+WITH_CAPACITY = re.compile(r"\bwith_capacity\s*\(")
+FN_DEF = re.compile(r"\bfn\s+([A-Za-z0-9_]+)")
+SIMD_NAME = re.compile(r"(swar|sse2|avx2|neon|simd)", re.IGNORECASE)
+PANIC_FAMILY = re.compile(r"\.unwrap\s*\(\)|\.expect\s*\(|\bpanic!\s*[({]|\bunreachable!\s*[({]|\btodo!\s*[({]|\bunimplemented!\s*[({]")
+UNTRUSTED_INDEX = re.compile(
+    r"\w+\s*\[[^\]\[]*\b(count|len|size|num|off|offset|idx|pos)[a-z0-9_]*\b[^\]\[]*\]"
+)
+TAG_BYTE_LITERAL = re.compile(r"\bb'[^']+'")
+TAG_CONST_DEF = re.compile(r"\bconst\s+((?:MSG|ACK|WIRE_V)[A-Z0-9_]*|[A-Z0-9_]*MAGIC)\s*:")
+CLI_FLAG_LOOKUP = re.compile(r"args\s*\.\s*(?:get|num|flag)\s*\(\s*\"([a-z0-9-]+)\"")
+# only actual environment reads: a bare NMC_* identifier is usually a
+# Rust const (e.g. NMC_MIN_THRESHOLD), not a knob
+ENV_VAR = re.compile(r"env::var(?:_os)?\s*\(\s*\"(NMC_[A-Z][A-Z0-9_]*)\"")
+FLOAT_FMT_UNSTABLE = re.compile(r"\{[^{}]*:[^{}]*(?:\.\*|\.[a-z_]+\$|[eE]\})")
+
+
+# --- ported rule 1: SAFETY-comment discipline -------------------------------
+
+
+@rule(
+    "unsafe-safety-comment",
+    "every `unsafe {}` carries `// SAFETY:` and every `unsafe fn` a `/// # Safety` section",
+)
+def check_safety_comments(files: dict, ctx: Context) -> list[Finding]:
+    out = []
+    for rel in sorted(files):
+        if rel not in UNSAFE_ALLOWLIST:
+            continue
+        raw = ctx.raw_lines(rel)
+        for idx, code in enumerate(ctx.stripped(rel)):
+            if not UNSAFE_KEYWORD.search(code):
+                continue
+            if re.search(r"\bunsafe\s+(?:extern\s+)?fn\b", code):
+                has_doc = any(
+                    re.search(r"#\s*Safety", raw[j])
+                    for j in range(max(0, idx - SAFETY_WINDOW), idx)
+                )
+                if not has_doc:
+                    out.append(
+                        Finding(
+                            "unsafe-safety-comment",
+                            rel,
+                            idx + 1,
+                            "`unsafe fn` without a `/// # Safety` doc section — "
+                            "document the caller contract directly above it",
+                        )
+                    )
+            elif re.search(r"\bunsafe\s*\{", code):
+                has_comment = any(
+                    raw[j].lstrip().startswith("// SAFETY:")
+                    for j in range(max(0, idx - SAFETY_WINDOW), idx)
+                )
+                if not has_comment:
+                    out.append(
+                        Finding(
+                            "unsafe-safety-comment",
+                            rel,
+                            idx + 1,
+                            "`unsafe {` block without a `// SAFETY:` comment in the "
+                            "preceding lines — state why every operation inside the "
+                            "block is sound",
+                        )
+                    )
+            elif not re.search(r"\bunsafe\b\s*$", code):
+                out.append(
+                    Finding(
+                        "unsafe-safety-comment",
+                        rel,
+                        idx + 1,
+                        "unexpected `unsafe` form (not a fn or block) — this crate's "
+                        "policy covers only `unsafe fn` and `unsafe {}`",
+                    )
+                )
+    return out
+
+
+# --- ported rule 2: unsafe allowlist + crate posture ------------------------
+
+
+@rule(
+    "unsafe-allowlist",
+    "`unsafe` only in the two SIMD modules; lib/main pin deny/forbid(unsafe_code)",
+)
+def check_unsafe_allowlist(files: dict, ctx: Context) -> list[Finding]:
+    out = []
+    for rel, attr in REQUIRED_ATTRS:
+        if rel not in files:
+            # fixture mini-trees carry only the files under test; the repo
+            # scan always has all four
+            continue
+        if attr not in files[rel]:
+            out.append(
+                Finding(
+                    "unsafe-allowlist",
+                    rel,
+                    1,
+                    f"missing `{attr}` — the crate-level unsafe posture must be "
+                    "pinned in the source, not just in CI",
+                )
+            )
+    for rel in sorted(files):
+        if not rel.startswith("rust/src/") or rel in UNSAFE_ALLOWLIST:
+            continue
+        for idx, code in enumerate(ctx.stripped(rel)):
+            if UNSAFE_KEYWORD.search(code):
+                out.append(
+                    Finding(
+                        "unsafe-allowlist",
+                        rel,
+                        idx + 1,
+                        "`unsafe` outside the allowlisted SIMD modules "
+                        f"({', '.join(sorted(UNSAFE_ALLOWLIST))}) — move the unsafe "
+                        "code behind a safe API in an allowlisted module, or extend "
+                        "the allowlist in tools/analyze/rules.py with a justification",
+                    )
+                )
+    return out
+
+
+# --- ported rule 3: sync-shim discipline ------------------------------------
+
+
+@rule(
+    "sync-shim",
+    "loom-modelled modules import synchronization only from crate::util::sync",
+)
+def check_sync_shim(files: dict, ctx: Context) -> list[Finding]:
+    out = []
+    for rel in sorted(files):
+        if rel not in SHIMMED:
+            continue
+        for idx, code in enumerate(ctx.stripped(rel)):
+            m = STD_SYNC.search(code)
+            if m:
+                out.append(
+                    Finding(
+                        "sync-shim",
+                        rel,
+                        idx + 1,
+                        f"direct `std::{m.group(1)}` in a loom-modelled module — "
+                        "import it from `crate::util::sync` instead, so the "
+                        "`--cfg loom` build swaps in the model-checked primitives",
+                    )
+                )
+    return out
+
+
+# --- ported rule 4: decode bounds -------------------------------------------
+
+
+@rule(
+    "decode-bounds",
+    "untrusted lengths pass an `ensure!(.. MAX_..)` cap before sizing any allocation",
+)
+def check_decode_bounds(files: dict, ctx: Context) -> list[Finding]:
+    out = []
+    for rel in sorted(files):
+        if rel not in DECODE_FILES:
+            continue
+        code_lines = ctx.stripped(rel)
+        for idx, code in enumerate(code_lines):
+            if not WITH_CAPACITY.search(code):
+                continue
+            window = "\n".join(code_lines[max(0, idx - BOUNDS_WINDOW) : idx])
+            if not ("ensure!" in window and "MAX_" in window):
+                out.append(
+                    Finding(
+                        "decode-bounds",
+                        rel,
+                        idx + 1,
+                        "`with_capacity` in a wire-decode path with no "
+                        f"`ensure!(.. MAX_..)` cap within {BOUNDS_WINDOW} lines above "
+                        "— an untrusted length must be validated before it sizes an "
+                        "allocation",
+                    )
+                )
+    return out
+
+
+# --- new rule R1: report determinism ----------------------------------------
+
+
+@rule(
+    "report-determinism",
+    "report-emitting modules use no HashMap/HashSet/SystemTime/wall-clock "
+    "or unstable float formatting",
+)
+def check_report_determinism(files: dict, ctx: Context) -> list[Finding]:
+    out = []
+    for rel in sorted(files):
+        if not rel.startswith(DETERMINISM_PREFIXES) or not rel.endswith(".rs"):
+            continue
+        wall_clock_ok = rel.startswith(WALL_CLOCK_EXEMPT_PREFIXES)
+        for idx, code in enumerate(ctx.stripped(rel)):
+            if ctx.in_test(rel, idx):
+                break
+            if re.search(r"\bHash(Map|Set)\b", code):
+                out.append(
+                    Finding(
+                        "report-determinism",
+                        rel,
+                        idx + 1,
+                        "HashMap/HashSet in a byte-identical-report module — "
+                        "iteration order is randomized per process, which breaks "
+                        "the `cmp`-gated determinism contract; use BTreeMap/BTreeSet",
+                    )
+                )
+            if "SystemTime" in code or (not wall_clock_ok and "Instant::now" in code):
+                out.append(
+                    Finding(
+                        "report-determinism",
+                        rel,
+                        idx + 1,
+                        "wall-clock read in a deterministic-report module — reports "
+                        "must be byte-identical across runs, so no timestamps may "
+                        "reach them (the bench harness alone measures time)",
+                    )
+                )
+        # format specs live inside string literals, so scan raw lines
+        for idx, line in enumerate(ctx.raw_lines(rel)):
+            if ctx.in_test(rel, idx):
+                break
+            if FLOAT_FMT_UNSTABLE.search(line):
+                out.append(
+                    Finding(
+                        "report-determinism",
+                        rel,
+                        idx + 1,
+                        "dynamic-precision or scientific float formatting in a "
+                        "report module — render numbers through `util::json::Json` "
+                        "(shortest-roundtrip, byte-stable) or a fixed `{:.N}` spec",
+                    )
+                )
+    return out
+
+
+# --- new rule R2: oracle coverage -------------------------------------------
+
+
+@rule(
+    "oracle-coverage",
+    "every SIMD/SWAR kernel has a `_scalar` oracle, is wired into dispatch, "
+    "and the oracle is exercised by tests",
+)
+def check_oracle_coverage(files: dict, ctx: Context) -> list[Finding]:
+    out = []
+    # all test text: trailing #[cfg(test)] regions plus rust/tests/
+    test_blobs = []
+    for rel, text in files.items():
+        if rel.startswith("rust/tests/"):
+            test_blobs.append(text)
+        elif rel.endswith(".rs"):
+            start = ctx.test_start(rel)
+            lines = ctx.raw_lines(rel)
+            if start < len(lines):
+                test_blobs.append("\n".join(lines[start:]))
+    test_text = "\n".join(test_blobs)
+
+    for rel in sorted(files):
+        if rel not in UNSAFE_ALLOWLIST:
+            continue
+        code_lines = ctx.stripped(rel)
+        defs: dict = {}  # fn name -> 1-based def line (non-test only)
+        for idx, code in enumerate(code_lines):
+            if ctx.in_test(rel, idx):
+                break
+            m = FN_DEF.search(code)
+            if m and m.group(1) not in defs:
+                defs[m.group(1)] = idx + 1
+        simd_fns = {n: ln for n, ln in defs.items() if SIMD_NAME.search(n)}
+        scalar_fns = {n: ln for n, ln in defs.items() if n.endswith("_scalar")}
+        if not simd_fns:
+            continue
+        if not scalar_fns:
+            out.append(
+                Finding(
+                    "oracle-coverage",
+                    rel,
+                    min(simd_fns.values()),
+                    "SIMD/SWAR kernels with no `*_scalar` oracle in the module — "
+                    "keep the scalar reference form as the bit-exactness oracle "
+                    "every vector path is tested against",
+                )
+            )
+        body = "\n".join(code_lines)
+        for name, ln in sorted(simd_fns.items(), key=lambda kv: kv[1]):
+            refs = len(re.findall(rf"\b{re.escape(name)}\b", body + "\n" + test_text))
+            if refs <= 1:  # only its own definition
+                out.append(
+                    Finding(
+                        "oracle-coverage",
+                        rel,
+                        ln,
+                        f"vector kernel `{name}` is never referenced outside its "
+                        "definition — wire it into the dispatch layer and the "
+                        "per-path equivalence tests, or delete it",
+                    )
+                )
+        for name, ln in sorted(scalar_fns.items(), key=lambda kv: kv[1]):
+            if not re.search(rf"\b{re.escape(name)}\b", test_text):
+                out.append(
+                    Finding(
+                        "oracle-coverage",
+                        rel,
+                        ln,
+                        f"scalar oracle `{name}` is not referenced by any test — "
+                        "an oracle nothing compares against proves nothing; add "
+                        "the vector-vs-scalar equivalence test",
+                    )
+                )
+    return out
+
+
+# --- new rule R3: error discipline ------------------------------------------
+
+
+@rule(
+    "error-discipline",
+    "no unwrap/expect/panic!/untrusted indexing in the untrusted-input decode modules",
+)
+def check_error_discipline(files: dict, ctx: Context) -> list[Finding]:
+    out = []
+    for rel in sorted(files):
+        if rel not in ERROR_DISCIPLINE_FILES:
+            continue
+        code_lines = ctx.stripped(rel)
+        for idx, code in enumerate(code_lines):
+            if ctx.in_test(rel, idx):
+                break
+            m = PANIC_FAMILY.search(code)
+            if m:
+                out.append(
+                    Finding(
+                        "error-discipline",
+                        rel,
+                        idx + 1,
+                        f"`{m.group(0).strip()}` in an untrusted-input decode module "
+                        "— a panic on attacker-controlled bytes is a remote DoS; "
+                        "return the error (`ensure!`/`bail!`/`?`) instead",
+                    )
+                )
+            mi = UNTRUSTED_INDEX.search(code)
+            if mi:
+                window = "\n".join(code_lines[max(0, idx - 8) : idx + 1])
+                evidence = (
+                    "ensure!" in window
+                    or ".get(" in window
+                    or ".min(" in window
+                    or "checked_" in window
+                )
+                if not evidence:
+                    out.append(
+                        Finding(
+                            "error-discipline",
+                            rel,
+                            idx + 1,
+                            f"indexing by a length-like value (`{mi.group(0).strip()}`) "
+                            "with no bounds evidence (`ensure!`/`.get(`/`.min(`/"
+                            "`checked_*`) in the preceding lines — an untrusted "
+                            "offset must be validated before it indexes a buffer",
+                        )
+                    )
+    return out
+
+
+# --- new rule R4: wire-tag single-source ------------------------------------
+
+
+@rule(
+    "wire-tag-const",
+    "every wire tag/magic/version byte is a named const referenced by both "
+    "encode and decode sides",
+)
+def check_wire_tag_const(files: dict, ctx: Context) -> list[Finding]:
+    out = []
+    for rel in sorted(files):
+        # the repo has one wire module; fixtures impersonate the same path
+        if rel != WIRE_FILE:
+            continue
+        code_lines = ctx.stripped(rel)
+        consts: dict = {}
+        for idx, code in enumerate(code_lines):
+            if ctx.in_test(rel, idx):
+                break
+            m = TAG_CONST_DEF.search(code)
+            if m:
+                consts[m.group(1)] = idx + 1
+            if TAG_CONST_DEF.search(code) is None and TAG_BYTE_LITERAL.search(code):
+                out.append(
+                    Finding(
+                        "wire-tag-const",
+                        rel,
+                        idx + 1,
+                        f"raw byte literal `{TAG_BYTE_LITERAL.search(code).group(0)}` "
+                        "in the wire module — name it as a `const` so encode and "
+                        "decode share one definition (a drifting tag is a silent "
+                        "protocol fork)",
+                    )
+                )
+        # count references across ALL non-test code: one side of a tag
+        # exchange may live in serve/mod.rs or the coordinator, not in
+        # the wire module itself
+        blobs = []
+        for other in sorted(files):
+            if not other.endswith(".rs"):
+                continue
+            blobs.append("\n".join(ctx.stripped(other)[: ctx.test_start(other)]))
+        body = "\n".join(blobs)
+        for name, ln in sorted(consts.items(), key=lambda kv: kv[1]):
+            refs = len(re.findall(rf"\b{re.escape(name)}\b", body)) - 1
+            if refs < 2:
+                out.append(
+                    Finding(
+                        "wire-tag-const",
+                        rel,
+                        ln,
+                        f"wire const `{name}` referenced {refs} time(s) outside its "
+                        "definition in non-test code — a protocol tag must be used "
+                        "by both the encode and decode sides (>= 2 references), or "
+                        "deleted",
+                    )
+                )
+    return out
+
+
+# --- new rule R5: doc drift -------------------------------------------------
+
+
+@rule(
+    "doc-drift",
+    "every CLI flag is documented in README.md and every NMC_* env var in DESIGN.md",
+)
+def check_doc_drift(files: dict, ctx: Context) -> list[Finding]:
+    out = []
+    main = "rust/src/main.rs"
+    readme = files.get("README.md", "")
+    design = files.get("DESIGN.md", "")
+    if main in files and "README.md" in files:
+        lines = ctx.stripped(main)
+        seen = set()
+        for idx, code in enumerate(lines):
+            for m in CLI_FLAG_LOOKUP.finditer(ctx.raw_lines(main)[idx]):
+                flag = m.group(1)
+                if flag in seen:
+                    continue
+                seen.add(flag)
+                if f"--{flag}" not in readme:
+                    out.append(
+                        Finding(
+                            "doc-drift",
+                            main,
+                            idx + 1,
+                            f"CLI flag `--{flag}` is parsed here but never appears "
+                            "in README.md — document it (README is the user-facing "
+                            "flag reference; DESIGN.md mirrors the full index)",
+                        )
+                    )
+    if "DESIGN.md" in files:
+        seen = set()
+        for rel in sorted(files):
+            if not (rel.startswith("rust/") and rel.endswith(".rs")):
+                continue
+            for idx, line in enumerate(ctx.raw_lines(rel)):
+                for m in ENV_VAR.finditer(line):
+                    var = m.group(1)
+                    if var in seen:
+                        continue
+                    seen.add(var)
+                    if var not in design:
+                        out.append(
+                            Finding(
+                                "doc-drift",
+                                rel,
+                                idx + 1,
+                                f"env var `{var}` is read here but never documented "
+                                "in DESIGN.md — every NMC_* knob must be in the "
+                                "design doc's env-var table",
+                            )
+                        )
+    return out
+
+
+# --- new rule R6: cargo-deny ignore justification ---------------------------
+
+
+@rule(
+    "deny-ignore-justification",
+    "deny.toml advisories are version-2 checked and every ignored RUSTSEC id "
+    "carries a reason",
+)
+def check_deny_ignores(files: dict, ctx: Context) -> list[Finding]:
+    out = []
+    rel = "deny.toml"
+    if rel not in files:
+        return out
+    text = files[rel]
+    lines = text.split("\n")
+    if "[advisories]" not in text:
+        out.append(
+            Finding(
+                "deny-ignore-justification",
+                rel,
+                1,
+                "deny.toml has no `[advisories]` section — the RUSTSEC audit "
+                "lane must be configured, not implicit",
+            )
+        )
+        return out
+    in_adv = False
+    in_ignore_list = False
+    for idx, line in enumerate(lines):
+        stripped = line.strip()
+        if stripped.startswith("["):
+            in_adv = stripped == "[advisories]"
+            in_ignore_list = False
+            continue
+        if not in_adv:
+            continue
+        if re.match(r"ignore\s*=", stripped):
+            in_ignore_list = "]" not in stripped
+            # entries inline on the same line as `ignore = [ ... ]`
+            entries = re.findall(r'"(RUSTSEC-[0-9-]+)"', stripped)
+        elif in_ignore_list:
+            in_ignore_list = "]" not in stripped
+            entries = re.findall(r'"(RUSTSEC-[0-9-]+)"', stripped)
+        else:
+            continue
+        for adv_id in entries:
+            has_reason = (
+                re.search(r'reason\s*=\s*"[^"]{12,}"', line)
+                or re.search(r"#\s*\S.{11,}", line)
+                or (idx > 0 and re.search(r"^\s*#\s*\S.{11,}", lines[idx - 1]))
+            )
+            if not has_reason:
+                out.append(
+                    Finding(
+                        "deny-ignore-justification",
+                        rel,
+                        idx + 1,
+                        f"advisory `{adv_id}` is ignored without a justification — "
+                        'use `{ id = "...", reason = "why this is unreachable/'
+                        'pending" }` or a comment, same policy as analyzer '
+                        "suppressions",
+                    )
+                )
+    return out
+
+
+# --- the suppression-hygiene meta-rule (checked by the engine) --------------
+
+
+@rule(
+    "suppression-hygiene",
+    "every `nmc-analyze: allow(...)` names a real rule, justifies itself, "
+    "and covers an actual finding",
+)
+def check_suppression_hygiene(files: dict, ctx: Context) -> list[Finding]:
+    # The engine computes these findings after applying suppressions
+    # (core.hygiene_findings); registering the rule here gives it an ID,
+    # a summary row, and a fixture slot like every other rule.
+    return []

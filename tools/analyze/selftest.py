@@ -1,0 +1,238 @@
+"""Self-test of nmc-analyze: engine unit checks plus the per-rule
+fixture suite under tools/fixtures/analyze/.
+
+Every registered rule must ship one positive fixture tree (the rule
+fires, unsuppressed) and one negative tree (a full-registry run is
+completely clean — negatives double as false-positive regression nets).
+Fixture trees are mini repos: the same walker that scans the real repo
+loads them, so path-scoped rules see the paths they key on.
+
+Also pins the findings-JSON schema (nmc-analyze-v1): key sets of the
+report, finding, rule and count objects are asserted exactly, so a
+schema change must touch this file and announce itself in review.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import core
+
+FIXTURES = os.path.join("tools", "fixtures", "analyze")
+
+# Key sets pinned by the schema regression test. Extending the schema is
+# fine — do it by bumping core.SCHEMA and updating these sets in the
+# same change.
+REPORT_KEYS = {"schema", "rules", "findings", "counts", "clean"}
+FINDING_KEYS = {"rule", "file", "line", "message", "suppressed", "justification"}
+RULE_KEYS = {"id", "summary"}
+COUNT_KEYS = {"found", "suppressed"}
+
+
+class Failure(Exception):
+    pass
+
+
+def check(cond: bool, what: str) -> None:
+    if not cond:
+        raise Failure(what)
+
+
+# --- engine unit checks -----------------------------------------------------
+
+
+def test_stripper() -> None:
+    lines = core.strip_code('let x = 1; // unsafe in a comment\nlet s = "unsafe";')
+    check("unsafe" not in lines[0], "line comment not blanked")
+    check("unsafe" not in lines[1], "string literal not blanked")
+    check("let x = 1;" in lines[0], "code before comment lost")
+
+    lines = core.strip_code("a /* one /* two */ still comment */ b\nc")
+    check("still" not in lines[0], "nested block comment not blanked")
+    check(lines[0].startswith("a ") and lines[0].rstrip().endswith("b"), "code around block comment lost")
+    check(lines[1] == "c", "line structure not preserved across block comment")
+
+    lines = core.strip_code('let r = r#"unsafe " quote"#; tail')
+    check("unsafe" not in lines[0], "raw string not blanked")
+    check("tail" in lines[0], "code after raw string lost")
+
+    lines = core.strip_code('let e = "esc \\" unsafe"; tail')
+    check("unsafe" not in lines[0], "escaped-quote string not blanked")
+    check("tail" in lines[0], "code after escaped string lost")
+
+    check(
+        len(core.strip_code("a\n/*\nmulti\n*/\nb")) == 5,
+        "stripping changed the line count",
+    )
+    check(
+        len(core.strip_code('let s = "line one \\\n    line two";\nafter')) == 3,
+        "multi-line string literal collapsed line numbering",
+    )
+    check(
+        len(core.strip_code('let r = r#"raw\nspans\nlines"#;\nafter')) == 4,
+        "multi-line raw string collapsed line numbering",
+    )
+
+
+def test_suppressions() -> None:
+    shim_line = "use std::sync::Mutex;"
+
+    def pool(text: str) -> dict:
+        return {"rust/src/serve/pool.rs": text}
+
+    # unsuppressed baseline
+    fs = core.run_rules(pool(shim_line))
+    check(
+        any(f.rule == "sync-shim" and not f.suppressed for f in fs),
+        "baseline sync-shim finding missing",
+    )
+
+    # same-line, justified -> suppressed, and hygiene stays quiet
+    fs = core.run_rules(
+        pool(shim_line + " // nmc-analyze: allow(sync-shim) -- fixture exercises the engine")
+    )
+    check(
+        all(f.suppressed for f in fs if f.rule == "sync-shim"),
+        "same-line justified suppression did not suppress",
+    )
+    check(
+        not any(f.rule == "suppression-hygiene" for f in fs),
+        "used justified suppression flagged by hygiene",
+    )
+
+    # comment-above with next=2 covers two lines below
+    fs = core.run_rules(
+        pool(
+            "// nmc-analyze: allow(sync-shim, next=2) -- fixture exercises span cover\n"
+            "\n" + shim_line
+        )
+    )
+    check(
+        all(f.suppressed for f in fs if f.rule == "sync-shim"),
+        "next=2 span did not cover line+2",
+    )
+
+    # default span (1) does NOT reach line+2
+    fs = core.run_rules(
+        pool(
+            "// nmc-analyze: allow(sync-shim) -- fixture exercises default span\n"
+            "\n" + shim_line
+        )
+    )
+    check(
+        any(f.rule == "sync-shim" and not f.suppressed for f in fs),
+        "default span wrongly covered line+2",
+    )
+    check(
+        any(f.rule == "suppression-hygiene" and "unused" in f.message for f in fs),
+        "out-of-span suppression not reported unused",
+    )
+
+    # missing justification -> finding stays live + hygiene fires
+    fs = core.run_rules(pool(shim_line + " // nmc-analyze: allow(sync-shim)"))
+    check(
+        any(f.rule == "sync-shim" and not f.suppressed for f in fs),
+        "unjustified suppression suppressed a finding",
+    )
+    check(
+        any(f.rule == "suppression-hygiene" and "justification" in f.message for f in fs),
+        "unjustified suppression not reported",
+    )
+
+    # unknown rule -> hygiene fires, nothing suppressed
+    fs = core.run_rules(
+        pool(shim_line + " // nmc-analyze: allow(not-a-rule) -- long enough reason here")
+    )
+    check(
+        any(f.rule == "suppression-hygiene" and "unknown rule" in f.message for f in fs),
+        "unknown-rule suppression not reported",
+    )
+    check(
+        any(f.rule == "sync-shim" and not f.suppressed for f in fs),
+        "unknown-rule suppression suppressed a finding",
+    )
+
+
+def test_schema(root: str) -> None:
+    # the suppression-hygiene negative tree carries a real suppressed
+    # finding, so every schema field is exercised with live data
+    tree = os.path.join(root, FIXTURES, "suppression-hygiene", "negative")
+    files = core.collect_files(tree)
+    check(bool(files), "schema fixture tree is empty")
+    findings = core.run_rules(files)
+    report = json.loads(json.dumps(core.report_json(findings)))
+
+    check(set(report) == REPORT_KEYS, f"report keys drifted: {sorted(report)}")
+    check(report["schema"] == core.SCHEMA, "schema id drifted")
+    check(report["clean"] is True, "schema fixture tree is not clean")
+    check(len(report["rules"]) >= 9, "fewer than 9 registered rules")
+    for r in report["rules"]:
+        check(set(r) == RULE_KEYS, f"rule keys drifted: {sorted(r)}")
+    check(bool(report["findings"]), "schema fixture produced no findings")
+    for f in report["findings"]:
+        check(set(f) == FINDING_KEYS, f"finding keys drifted: {sorted(f)}")
+        check(isinstance(f["line"], int) and f["line"] >= 1, "finding line not 1-based int")
+    check(set(report["counts"]) == core.rule_ids(), "counts keys != registered rules")
+    for c in report["counts"].values():
+        check(set(c) == COUNT_KEYS, f"count keys drifted: {sorted(c)}")
+
+    table = core.summary_table(findings)
+    check(table.startswith("| rule |"), "summary table header drifted")
+    check(all(f"`{rid}`" in table for rid in core.rule_ids()), "summary table misses a rule")
+
+
+# --- the fixture suite ------------------------------------------------------
+
+
+def run_fixture(root: str, rule_id: str, kind: str) -> None:
+    tree = os.path.join(root, FIXTURES, rule_id, kind)
+    check(os.path.isdir(tree), f"missing fixture tree {tree}")
+    files = core.collect_files(tree)
+    check(bool(files), f"fixture tree {tree} is empty")
+    findings = core.run_rules(files)
+    live = [f for f in findings if not f.suppressed]
+    if kind == "positive":
+        check(
+            any(f.rule == rule_id for f in live),
+            f"positive fixture for `{rule_id}` produced no unsuppressed "
+            f"{rule_id} finding (got: {[f.render() for f in live] or 'clean'})",
+        )
+    else:
+        check(
+            not live,
+            f"negative fixture for `{rule_id}` is not clean: "
+            + "; ".join(f.render() for f in live),
+        )
+
+
+def run(root: str) -> int:
+    failures = []
+    unit_tests = [
+        ("stripper", lambda: test_stripper()),
+        ("suppressions", lambda: test_suppressions()),
+        ("json-schema", lambda: test_schema(root)),
+    ]
+    results = []
+    for name, fn in unit_tests:
+        try:
+            fn()
+            results.append(f"  ok  engine::{name}")
+        except Failure as e:
+            failures.append(f"engine::{name}: {e}")
+            results.append(f"FAIL  engine::{name}: {e}")
+    for rule in core.REGISTRY:
+        for kind in ("positive", "negative"):
+            try:
+                run_fixture(root, rule.id, kind)
+                results.append(f"  ok  {rule.id}::{kind}")
+            except Failure as e:
+                failures.append(f"{rule.id}::{kind}: {e}")
+                results.append(f"FAIL  {rule.id}::{kind}: {e}")
+    print("\n".join(results))
+    n = len(results)
+    if failures:
+        print(f"nmc-analyze --self-test: {len(failures)}/{n} checks FAILED")
+        return 1
+    print(f"nmc-analyze --self-test: {n} checks passed ({len(core.REGISTRY)} rules, all with fixtures)")
+    return 0

@@ -1,0 +1,5 @@
+const MAX_EVENTS: usize = 1024;
+pub fn decode(n: usize) -> crate::Result<Vec<u8>> {
+    ensure!(n <= MAX_EVENTS, "chunk too large");
+    Ok(Vec::with_capacity(n))
+}

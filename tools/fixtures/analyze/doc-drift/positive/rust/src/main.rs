@@ -1,0 +1,6 @@
+#![forbid(unsafe_code)]
+fn main() {
+    let args = parse();
+    let _ = args.get("scene");
+    let _ = std::env::var("NMC_FIXTURE_KNOB");
+}

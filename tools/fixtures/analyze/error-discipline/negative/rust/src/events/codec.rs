@@ -1,0 +1,9 @@
+pub fn decode(rec: &[u8]) -> crate::Result<u32> {
+    ensure!(rec.len() >= 5, "short record");
+    let count = rec[0] as usize;
+    ensure!(count < rec.len(), "count out of range");
+    let b = rec.get(1..5).ok_or(crate::Error::Truncated)?;
+    let v = u32::from_le_bytes(b.try_into().map_err(|_| crate::Error::Truncated)?);
+    let _ = rec[count];
+    Ok(v)
+}

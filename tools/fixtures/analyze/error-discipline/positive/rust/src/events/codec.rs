@@ -1,0 +1,6 @@
+pub fn decode(rec: &[u8]) -> u32 {
+    let count = rec[0] as usize;
+    let v = u32::from_le_bytes(rec[1..5].try_into().unwrap());
+    let _ = rec[count];
+    v
+}

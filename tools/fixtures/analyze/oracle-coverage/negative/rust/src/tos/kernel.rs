@@ -1,0 +1,24 @@
+#![allow(unsafe_code)]
+pub fn decrement_clamp(data: &mut [u8]) {
+    decrement_clamp_swar(data);
+}
+pub fn decrement_clamp_swar(data: &mut [u8]) {
+    decrement_clamp_scalar(data);
+}
+pub fn decrement_clamp_scalar(data: &mut [u8]) {
+    for b in data.iter_mut() {
+        *b = b.saturating_sub(1);
+    }
+}
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[test]
+    fn swar_matches_oracle() {
+        let mut a = [3u8; 4];
+        let mut b = a;
+        decrement_clamp_swar(&mut a);
+        decrement_clamp_scalar(&mut b);
+        assert_eq!(a, b);
+    }
+}

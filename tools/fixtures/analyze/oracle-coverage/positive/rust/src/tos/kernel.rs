@@ -1,0 +1,6 @@
+#![allow(unsafe_code)]
+pub fn decrement_clamp_swar(data: &mut [u8]) {
+    for b in data.iter_mut() {
+        *b = b.saturating_sub(1);
+    }
+}

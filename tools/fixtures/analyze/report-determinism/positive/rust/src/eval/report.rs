@@ -1,0 +1,4 @@
+use std::collections::HashMap;
+pub fn tally() -> HashMap<String, u32> {
+    HashMap::new()
+}

@@ -1,0 +1,5 @@
+// nmc-analyze: allow(sync-shim) -- fixture: exercises the suppression machinery end to end
+use std::sync::Mutex;
+pub struct Pool {
+    inner: Mutex<u32>,
+}

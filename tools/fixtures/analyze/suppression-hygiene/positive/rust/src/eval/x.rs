@@ -1,0 +1,2 @@
+// nmc-analyze: allow(no-such-rule) -- this rule id does not exist
+pub fn f() {}

@@ -1,0 +1,4 @@
+use crate::util::sync::Mutex;
+pub struct Pool {
+    inner: Mutex<u32>,
+}

@@ -1,0 +1,4 @@
+use std::sync::Mutex;
+pub struct Pool {
+    inner: Mutex<u32>,
+}

@@ -1,0 +1,3 @@
+#![deny(unsafe_code)]
+pub mod tos;
+pub mod stcf;

@@ -1,0 +1,2 @@
+#![allow(unsafe_code)]
+pub struct Stcf;

@@ -1,0 +1,6 @@
+#![allow(unsafe_code)]
+pub fn decrement(data: &mut [u8]) {
+    for b in data.iter_mut() {
+        *b = b.saturating_sub(1);
+    }
+}

@@ -1,0 +1,4 @@
+pub fn naughty(p: *mut u8) {
+    // SAFETY: comments do not make this module allowlisted
+    unsafe { p.write(0) }
+}

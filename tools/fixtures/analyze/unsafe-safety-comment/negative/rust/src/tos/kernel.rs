@@ -1,0 +1,9 @@
+#![allow(unsafe_code)]
+/// Writes a zero through `p`.
+///
+/// # Safety
+/// `p` must be valid for a one-byte write.
+pub unsafe fn helper(p: *mut u8) {
+    // SAFETY: the caller contract above guarantees `p` is writable.
+    unsafe { p.write(0) }
+}

@@ -1,0 +1,4 @@
+#![allow(unsafe_code)]
+pub fn helper(x: &mut [u8]) {
+    unsafe { core::ptr::write(x.as_mut_ptr(), 0) }
+}

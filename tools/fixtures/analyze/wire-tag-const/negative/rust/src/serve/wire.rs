@@ -1,0 +1,7 @@
+pub const MSG_CORNERS: u8 = b'C';
+pub fn encode(out: &mut Vec<u8>) {
+    out.push(MSG_CORNERS);
+}
+pub fn decode(tag: u8) -> bool {
+    tag == MSG_CORNERS
+}

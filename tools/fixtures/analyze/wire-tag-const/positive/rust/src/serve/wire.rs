@@ -1,0 +1,5 @@
+pub const MSG_CORNERS: u8 = b'C';
+pub fn encode(out: &mut Vec<u8>) {
+    out.push(b'S');
+    out.push(MSG_CORNERS);
+}
